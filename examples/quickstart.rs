@@ -1,0 +1,72 @@
+//! Quickstart: load the AOT artifacts, run ALiBi attention three ways
+//! (dense bias / FlashBias factored / in-kernel JIT), verify they agree,
+//! and print timing + the bias-storage saving.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use flashbias::benchkit::{bench_artifact, bias_input_bytes, Table};
+use flashbias::bias::{Alibi, ExactBias};
+use flashbias::decompose;
+use flashbias::iomodel::{self, Geometry};
+use flashbias::runtime::Runtime;
+use flashbias::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open_default()?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts: {}", rt.names().len());
+
+    // --- 1. correctness: the three ALiBi encodings agree -----------------
+    let run = |name: &str| -> anyhow::Result<flashbias::tensor::Tensor> {
+        let out = rt.load(name)?.run(&rt.example_inputs(name)?)?;
+        Ok(out[0].as_f32().unwrap().clone())
+    };
+    let dense = run("causal_alibi_dense_n256")?;
+    let fact = run("causal_alibi_factored_n256")?;
+    let jit = run("causal_alibi_jit_n256")?;
+    println!(
+        "\nALiBi encodings agree: dense↔factored rel={:.2e}, \
+         dense↔jit rel={:.2e}",
+        fact.rel_err(&dense),
+        jit.rel_err(&dense)
+    );
+    assert!(fact.rel_err(&dense) < 1e-3);
+    assert!(jit.rel_err(&dense) < 1e-3);
+
+    // --- 2. the decomposition itself (Example 3.4) -----------------------
+    let alibi = Alibi::new(256, 256, 0.25);
+    let factors = decompose::from_exact(&alibi);
+    println!(
+        "\nExample 3.4: ALiBi rank = {}, reconstruction err = {:.2e}",
+        factors.rank, factors.rel_err
+    );
+    println!(
+        "bias storage: dense {} -> factored {} ({}x smaller)",
+        human_bytes(alibi.dense().size_bytes() as u64),
+        human_bytes(factors.size_bytes() as u64),
+        alibi.dense().size_bytes() / factors.size_bytes()
+    );
+
+    // --- 3. measured timing ----------------------------------------------
+    let mut table = Table::new("quickstart timing (N=256, H=8, C=64)");
+    for name in ["causal_pure_n256", "causal_alibi_dense_n256",
+                 "causal_alibi_factored_n256", "causal_alibi_jit_n256"] {
+        let mut row = bench_artifact(&rt, name, 2, 10);
+        row.note = format!(
+            "bias-input bytes: {}",
+            human_bytes(bias_input_bytes(&rt, name))
+        );
+        table.row(row);
+    }
+    drop(table);
+
+    // --- 4. the theory (Example 3.9) --------------------------------------
+    let g = Geometry::square(16384, 64, 64, 100 * 1024 / 2);
+    println!(
+        "\nExample 3.9 (N=16384, C=R=64, S=100KB fp16): \
+         model predicts FlashBias IO {:.1}x smaller than dense-bias",
+        iomodel::flash_dense_bias_io(&g) / iomodel::flashbias_io(&g)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

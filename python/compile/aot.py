@@ -1,0 +1,158 @@
+"""AOT lowering driver: python runs ONCE here, never on the request path.
+
+For every artifact declared in ``model.py`` this script:
+
+1. builds the jax function + concrete example inputs,
+2. lowers ``jax.jit(fn)`` to StableHLO and converts it to **HLO text**
+   (the interchange format — the image's xla_extension 0.5.1 rejects
+   jax≥0.5 serialized protos with 64-bit instruction ids; the text parser
+   reassigns ids, see /opt/xla-example/README.md),
+3. dumps every example input as a raw little-endian binary so the rust
+   runtime can execute the artifact without knowing the model structure,
+4. compiles + runs the lowered computation on XLA:CPU and dumps the
+   outputs — the rust integration tests replay the artifact and require
+   bit-identical results,
+5. writes ``artifacts/manifest.json`` describing all of it.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--no-outputs]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_registry
+
+DTYPE_NAMES = {
+    np.dtype(np.float32): "f32",
+    np.dtype(np.int32): "i32",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side always unwraps a tuple, see load_hlo.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def dump_array(arr: np.ndarray, path: Path) -> dict:
+    arr = np.ascontiguousarray(arr)
+    if arr.dtype not in DTYPE_NAMES:
+        raise ValueError(f"unsupported dtype {arr.dtype} for {path}")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_bytes(arr.tobytes())
+    return {
+        "shape": list(arr.shape),
+        "dtype": DTYPE_NAMES[arr.dtype],
+    }
+
+
+def build_one(name: str, builder, out_dir: Path, run_outputs: bool) -> dict:
+    t0 = time.time()
+    fn, example_inputs, meta = builder()
+    example_inputs = [np.asarray(a) for a in example_inputs]
+    specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_inputs
+    ]
+    # keep_unused=True: the manifest promises one HLO parameter per input,
+    # even for inputs a variant does not read (e.g. dense-bias tables in a
+    # factored variant) — the rust loader feeds them all.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    hlo_text = to_hlo_text(lowered)
+    hlo_rel = f"hlo/{name}.hlo.txt"
+    hlo_path = out_dir / hlo_rel
+    hlo_path.parent.mkdir(parents=True, exist_ok=True)
+    hlo_path.write_text(hlo_text)
+
+    inputs_meta = []
+    for i, arr in enumerate(example_inputs):
+        rel = f"inputs/{name}/{i}.bin"
+        info = dump_array(arr, out_dir / rel)
+        info["file"] = rel
+        inputs_meta.append(info)
+
+    outputs_meta = []
+    if run_outputs:
+        compiled = lowered.compile()
+        outs = compiled(*example_inputs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        for i, arr in enumerate(outs):
+            arr = np.asarray(arr)
+            rel = f"outputs/{name}/{i}.bin"
+            info = dump_array(arr, out_dir / rel)
+            info["file"] = rel
+            outputs_meta.append(info)
+
+    dt = time.time() - t0
+    print(f"  {name}: hlo {len(hlo_text) // 1024}KB, "
+          f"{len(inputs_meta)} inputs, {len(outputs_meta)} outputs "
+          f"[{dt:.1f}s]", flush=True)
+    return {
+        "name": name,
+        "hlo": hlo_rel,
+        "inputs": inputs_meta,
+        "outputs": outputs_meta,
+        "meta": meta,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="regex over artifact names (overrides DEFAULT_SET)")
+    ap.add_argument("--no-outputs", action="store_true",
+                    help="skip running the computations for expected outputs")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    registry = model_registry.registry()
+    if args.only:
+        pat = re.compile(args.only)
+        names = [n for n in registry if pat.search(n)]
+    else:
+        names = [n for n in model_registry.DEFAULT_SET if n in registry]
+    missing = [n for n in model_registry.DEFAULT_SET if n not in registry]
+    if missing:
+        print(f"WARNING: DEFAULT_SET names missing from registry: {missing}")
+
+    print(f"lowering {len(names)} artifacts -> {out_dir}")
+    entries = []
+    t0 = time.time()
+    for name in names:
+        entries.append(
+            build_one(name, registry[name], out_dir, not args.no_outputs)
+        )
+
+    manifest = {
+        "format": 1,
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # stamp for make dependency tracking
+    (out_dir / ".stamp").write_text(str(time.time()))
+    print(f"done: {len(entries)} artifacts in {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

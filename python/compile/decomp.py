@@ -1,0 +1,293 @@
+"""Bias decomposition library (build-time, Python side).
+
+Three instantiations of Table 1:
+
+* **Exact** — closed-form factor functions φ_q, φ_k for ALiBi
+  (Example 3.4), 3D spatial distance (Example 3.5, incl. the learnable-α
+  weighted variant of §4.4), and the cos multiplicative bias
+  (Example I.1).
+* **SVD** — truncated SVD of a fixed (learned-parameter) bias matrix,
+  with energy-targeted rank selection (Remark 3.8 / Figures 6, 8, 9).
+* **Neural** — token-wise MLP factor functions φ̂_q,θ1 / φ̂_k,θ2 trained
+  with Adam against Eq. (5), used for dynamic biases (AlphaFold-style
+  pair bias, gravity, spherical distance — Appendix G).
+
+The rust layer has mirrored implementations (``rust/src/bias``,
+``rust/src/decompose``); the pytest suite pins both against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Exact decompositions
+# --------------------------------------------------------------------------
+
+
+def alibi_slopes(num_heads: int) -> np.ndarray:
+    """Geometric head slopes from the ALiBi paper: 2^(-8h/H)."""
+    return np.asarray(
+        [2.0 ** (-8.0 * (h + 1) / num_heads) for h in range(num_heads)],
+        np.float32,
+    )
+
+
+def alibi_bias(n: int, m: int, slope: float) -> jnp.ndarray:
+    """Dense ALiBi bias slope·(j − i) (pre-causal-mask, Example 3.4)."""
+    i = jnp.arange(n, dtype=jnp.float32)[:, None]
+    j = jnp.arange(m, dtype=jnp.float32)[None, :]
+    return slope * (j - i)
+
+
+def alibi_factors(n: int, m: int, slope: float):
+    """Example 3.4: φ_q(i) = [slope·(−i), slope], φ_k(j) = [1, j]  (R = 2)."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    j = jnp.arange(m, dtype=jnp.float32)
+    phi_q = jnp.stack([-slope * i, jnp.full_like(i, slope)], axis=-1)
+    phi_k = jnp.stack([jnp.ones_like(j), j], axis=-1)
+    return phi_q, phi_k
+
+
+def spatial_bias(xq: jnp.ndarray, xk: jnp.ndarray,
+                 alpha: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Dense −α_i·‖x_i − x_j‖² bias (Example 3.5 / §4.4 PDE solver).
+
+    The paper uses the squared distance with a per-query learnable weight
+    α_i (adaptive-mesh approximation); sign convention: closer points get
+    larger bias, so we negate.
+    """
+    d2 = ((xq[:, None, :] - xk[None, :, :]) ** 2).sum(-1)
+    if alpha is not None:
+        d2 = alpha[:, None] * d2
+    return -d2
+
+
+def spatial_factors(xq: jnp.ndarray, xk: jnp.ndarray,
+                    alpha: jnp.ndarray | None = None):
+    """Example 3.5 exact factorization, R = 3·dim (9 for 3D).
+
+    −α_i‖x_i − x_j‖² = Σ_d  α_i·(−x_id²)·1 + α_i·(−1)·x_jd² + α_i·2x_id·x_jd
+    φ_q rows absorb α_i so the weighted variant stays rank-9.
+    """
+    dim = xq.shape[-1]
+    n, m = xq.shape[0], xk.shape[0]
+    a = jnp.ones((n,), xq.dtype) if alpha is None else alpha
+    cols_q, cols_k = [], []
+    for d in range(dim):
+        xd_q, xd_k = xq[:, d], xk[:, d]
+        cols_q += [-a * xd_q**2, -a, 2.0 * a * xd_q]
+        cols_k += [jnp.ones((m,), xk.dtype), xd_k**2, xd_k]
+    return jnp.stack(cols_q, -1), jnp.stack(cols_k, -1)
+
+
+def cos_mult_bias(n: int, m: int) -> jnp.ndarray:
+    """Example I.1: multiplicative bias b_ij = cos(i − j)."""
+    i = jnp.arange(n, dtype=jnp.float32)[:, None]
+    j = jnp.arange(m, dtype=jnp.float32)[None, :]
+    return jnp.cos(i - j)
+
+
+def cos_mult_factors(n: int, m: int):
+    """cos(i−j) = cos i cos j + sin i sin j  (R = 2)."""
+    i = jnp.arange(n, dtype=jnp.float32)
+    j = jnp.arange(m, dtype=jnp.float32)
+    return (
+        jnp.stack([jnp.cos(i), jnp.sin(i)], -1),
+        jnp.stack([jnp.cos(j), jnp.sin(j)], -1),
+    )
+
+
+# --------------------------------------------------------------------------
+# Dense generators used only as neural-decomposition targets (Appendix G)
+# --------------------------------------------------------------------------
+
+
+def gravity_bias(xq: jnp.ndarray, xk: jnp.ndarray,
+                 eps: float = 0.01) -> jnp.ndarray:
+    """Appendix G Eq. (13): 1/(‖x_i − x_j‖² + eps·diag-stabilizer)."""
+    d2 = ((xq[:, None, :] - xk[None, :, :]) ** 2).sum(-1)
+    return 1.0 / (d2 + eps)
+
+
+def spherical_bias(xq: jnp.ndarray, xk: jnp.ndarray) -> jnp.ndarray:
+    """Appendix G Eq. (14): haversine great-circle distance.
+
+    xq/xk columns are (latitude, longitude).
+    """
+    lat_q, lon_q = xq[:, 0:1], xq[:, 1:2]
+    lat_k, lon_k = xk[None, :, 0], xk[None, :, 1]
+    s1 = jnp.sin((lat_q - lat_k) / 2.0) ** 2
+    s2 = jnp.cos(lat_q) * jnp.cos(lat_k) * jnp.sin((lon_q - lon_k) / 2.0) ** 2
+    return 2.0 * jnp.arcsin(jnp.sqrt(jnp.clip(s1 + s2, 0.0, 1.0)))
+
+
+# --------------------------------------------------------------------------
+# Synthetic "trained" relative-position bias (Swin / Pangu substitution)
+# --------------------------------------------------------------------------
+
+
+def swin_relative_bias(window: tuple[int, int], num_heads: int,
+                       seed: int = 0, smooth_terms: int = 6,
+                       noise: float = 0.02) -> np.ndarray:
+    """Synthetic learned relative-position bias with realistic spectra.
+
+    Real SwinV2 biases come from a (2w−1)×(2w−1) learned table indexed by
+    relative offset — a smooth function of (Δy, Δx) plus training noise,
+    which is exactly what makes them low-rank (Figure 6/8). We synthesize
+    the table as a small sum of separable Gaussians (smooth, low-rank
+    part) plus white noise (the full-rank tail), then gather into the
+    (N, N) per-head bias, N = wy·wx.
+    """
+    wy, wx = window
+    rng = np.random.default_rng(seed)
+    n = wy * wx
+    dy = np.arange(-(wy - 1), wy)[:, None].astype(np.float32)
+    dx = np.arange(-(wx - 1), wx)[None, :].astype(np.float32)
+    biases = np.empty((num_heads, n, n), np.float32)
+    ys, xs = np.meshgrid(np.arange(wy), np.arange(wx), indexing="ij")
+    coords = np.stack([ys.ravel(), xs.ravel()], -1)  # (n, 2)
+    rel = coords[:, None, :] - coords[None, :, :]    # (n, n, 2)
+    for h in range(num_heads):
+        table = np.zeros((2 * wy - 1, 2 * wx - 1), np.float32)
+        for _ in range(smooth_terms):
+            cy, cx = rng.normal(0, wy / 2), rng.normal(0, wx / 2)
+            sy = rng.uniform(wy / 4, wy) ; sx = rng.uniform(wx / 4, wx)
+            amp = rng.normal(0, 1.0)
+            table += amp * np.exp(-((dy - cy) / sy) ** 2) * np.exp(
+                -((dx - cx) / sx) ** 2
+            )
+        table += noise * rng.normal(size=table.shape).astype(np.float32)
+        biases[h] = table[rel[..., 0] + wy - 1, rel[..., 1] + wx - 1]
+    return biases
+
+
+# --------------------------------------------------------------------------
+# SVD decomposition (Table 1b)
+# --------------------------------------------------------------------------
+
+
+def svd_factors(bias: jnp.ndarray, rank: int):
+    """Truncated SVD: bias ≈ (U√Σ)(V√Σ)ᵀ with R columns."""
+    u, s, vt = jnp.linalg.svd(bias, full_matrices=False)
+    root = jnp.sqrt(s[:rank])
+    return u[:, :rank] * root[None, :], vt[:rank, :].T * root[None, :]
+
+
+def energy(bias: np.ndarray) -> np.ndarray:
+    """Cumulative squared-singular-value energy fractions (Remark 3.8)."""
+    s = np.linalg.svd(np.asarray(bias), compute_uv=False)
+    e = s**2
+    return np.cumsum(e) / max(e.sum(), 1e-30)
+
+
+def rank_for_energy(bias: np.ndarray, target: float = 0.99) -> int:
+    """Smallest R whose truncated SVD keeps ≥ target energy (Fig. 8)."""
+    cum = energy(bias)
+    return int(np.searchsorted(cum, target) + 1)
+
+
+# --------------------------------------------------------------------------
+# Neural decomposition (Table 1c, Eq. 5)
+# --------------------------------------------------------------------------
+
+
+class MlpParams(NamedTuple):
+    w1: jnp.ndarray
+    b1: jnp.ndarray
+    w2: jnp.ndarray
+    b2: jnp.ndarray
+    w3: jnp.ndarray
+    b3: jnp.ndarray
+
+
+def mlp_init(key, c_in: int, hidden: int, c_out: int) -> MlpParams:
+    """Three linear layers with tanh in between (Appendix H Table 12)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def lin(k, fan_in, fan_out):
+        scale = 1.0 / math.sqrt(fan_in)
+        return (
+            jax.random.uniform(k, (fan_in, fan_out), jnp.float32,
+                               -scale, scale),
+            jnp.zeros((fan_out,), jnp.float32),
+        )
+
+    w1, b1 = lin(k1, c_in, hidden)
+    w2, b2 = lin(k2, hidden, hidden)
+    w3, b3 = lin(k3, hidden, c_out)
+    return MlpParams(w1, b1, w2, b2, w3, b3)
+
+
+def mlp_apply(p: MlpParams, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.tanh(x @ p.w1 + p.b1)
+    h = jnp.tanh(h @ p.w2 + p.b2)
+    return h @ p.w3 + p.b3
+
+
+def _adam_update(g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1**step)
+    vh = v / (1 - b2**step)
+    return -lr * mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def neural_decompose(target_fn: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                     xq: jnp.ndarray, xk: jnp.ndarray, rank: int,
+                     hidden: int = 64, steps: int = 2000, lr: float = 1e-3,
+                     seed: int = 0, lr_decay: float = 0.95,
+                     lr_decay_every: int = 50):
+    """Fit φ̂_q,θ1 / φ̂_k,θ2 to a dense bias via Eq. (5) with Adam.
+
+    ``target_fn(xq, xk) -> (N, M)`` is evaluated once; the MLPs are
+    token-wise (Remark 3.6). Returns (params_q, params_k, loss_history).
+    """
+    key = jax.random.PRNGKey(seed)
+    kq, kk = jax.random.split(key)
+    pq = mlp_init(kq, xq.shape[-1], hidden, rank)
+    pk = mlp_init(kk, xk.shape[-1], hidden, rank)
+    target = target_fn(xq, xk)
+
+    def loss_fn(params):
+        pq, pk = params
+        approx = mlp_apply(pq, xq) @ mlp_apply(pk, xk).T
+        return jnp.mean((approx - target) ** 2)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    params = (pq, pk)
+    m_state = jax.tree_util.tree_map(jnp.zeros_like, params)
+    v_state = jax.tree_util.tree_map(jnp.zeros_like, params)
+    losses = []
+    cur_lr = lr
+    for step in range(1, steps + 1):
+        loss, grads = grad_fn(params)
+        losses.append(float(loss))
+        flat_p, tree = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(m_state)
+        flat_v = jax.tree_util.tree_leaves(v_state)
+        new_p, new_m, new_v = [], [], []
+        for p, g, mm, vv in zip(flat_p, flat_g, flat_m, flat_v):
+            upd, mm, vv = _adam_update(g, mm, vv, step, cur_lr)
+            new_p.append(p + upd)
+            new_m.append(mm)
+            new_v.append(vv)
+        params = jax.tree_util.tree_unflatten(tree, new_p)
+        m_state = jax.tree_util.tree_unflatten(tree, new_m)
+        v_state = jax.tree_util.tree_unflatten(tree, new_v)
+        if step % lr_decay_every == 0:
+            cur_lr *= lr_decay
+    return params[0], params[1], losses
+
+
+def reconstruction_error(bias: jnp.ndarray, phi_q: jnp.ndarray,
+                         phi_k: jnp.ndarray) -> float:
+    """Relative Frobenius error of a factor pair against a dense bias."""
+    diff = phi_q @ phi_k.T - bias
+    return float(jnp.linalg.norm(diff) / (jnp.linalg.norm(bias) + 1e-30))

@@ -1,0 +1,365 @@
+"""L1 — Pallas tiled online-softmax attention kernels.
+
+Five variants, mirroring the paper's Figure 2:
+
+* ``flash_attention``                 — pure FlashAttention (upper bound).
+* ``flash_attention_dense_bias``      — the baseline: reads the dense
+  ``N×M`` bias tile-by-tile from HBM (``O(NM)`` IO; Figure 1c).
+* ``flash_attention_factored``        — **FlashBias**: streams the rank-R
+  factor strips ``φ_q (N×R)`` / ``φ_k (M×R)`` instead and reconstructs the
+  bias tile with one extra MXU matmul (``O((N+M)R)`` IO; Figure 2 right).
+* ``flash_attention_alibi_jit``       — Appendix C: ALiBi factor strips
+  generated *inside* the kernel from the block coordinates (zero bias IO).
+* ``flash_attention_mult_factored``   — Appendix I Eq. (17): multiplicative
+  bias via the per-tile Hadamard of two factor matmuls.
+
+All kernels use the FlashAttention-2 schedule: grid over query blocks, an
+in-kernel loop over key blocks, and the (m, l, acc) online-softmax
+recurrence. ``interpret=True`` everywhere — the CPU PJRT client cannot run
+Mosaic custom-calls; real-TPU efficiency is estimated analytically
+(DESIGN.md §Hardware-Adaptation).
+
+TPU adaptation of the paper's Triton kernel: the (block_q × C+R) query
+strip and (block_k × C+R) key strip live in VMEM (BlockSpec), and the bias
+reconstruction φ_q φ_kᵀ is expressed as a matmul so it lands on the MXU —
+the paper's core insight ("bias as part of the dot product") maps 1:1.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# Perf pass (EXPERIMENTS.md §Perf L1): swept {32..512}²; 256² is 1.8x
+# faster than the initial 64² at N=512 (interpret->XLA while-loop trip
+# count) and its VMEM model (~0.5 MB: q/k/v/φ strips + score tile) stays
+# far under a TPU core's ~16 MB VMEM; 512² gained <5% more — stopped per
+# the three-strikes rule. _pick_block clamps to divisors of N for small N.
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest divisor of n that is <= preferred (kernels assume exact tiling)."""
+    b = min(preferred, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _attn_body(q, k_blk, v_blk, s_extra, m_acc, l_acc, o_acc, scale):
+    """One online-softmax step over a key block.
+
+    ``s_extra`` is an additive pre-softmax term for this tile (bias tile or
+    causal mask), already in score units.
+    """
+    s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+    if s_extra is not None:
+        s = s + s_extra
+    m_new = jnp.maximum(m_acc, s.max(axis=-1))
+    alpha = jnp.exp(m_acc - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_acc * alpha + p.sum(axis=-1)
+    o_new = o_acc * alpha[:, None] + jnp.dot(
+        p, v_blk, preferred_element_type=jnp.float32
+    )
+    return m_new, l_new, o_new
+
+
+def _causal_tile(q_start, k_start, block_q, block_k, n, m):
+    """Additive causal-mask tile in score units (0 or NEG_INF)."""
+    qi = q_start + jax.lax.iota(jnp.int32, block_q)[:, None]
+    kj = k_start + jax.lax.iota(jnp.int32, block_k)[None, :]
+    return jnp.where(kj - (m - n) <= qi, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, causal, n, m):
+    block_q, c = q_ref.shape
+    scale = 1.0 / (c**0.5)
+    q = q_ref[...]
+    q_start = pl.program_id(0) * block_q
+    m_acc = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_acc = jnp.zeros((block_q,), jnp.float32)
+    o_acc = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+
+    def body(i, carry):
+        m_a, l_a, o_a = carry
+        k_start = i * block_k
+        k_blk = k_ref[pl.ds(k_start, block_k), :]
+        v_blk = v_ref[pl.ds(k_start, block_k), :]
+        extra = (
+            _causal_tile(q_start, k_start, block_q, block_k, n, m)
+            if causal
+            else None
+        )
+        return _attn_body(q, k_blk, v_blk, extra, m_a, l_a, o_a, scale)
+
+    m_acc, l_acc, o_acc = jax.lax.fori_loop(
+        0, m // block_k, body, (m_acc, l_acc, o_acc)
+    )
+    o_ref[...] = (o_acc / l_acc[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=False, block_q=DEFAULT_BLOCK_Q,
+                    block_k=DEFAULT_BLOCK_K):
+    """Pure FlashAttention (no bias). q: (N,C), k/v: (M,C)."""
+    n, c = q.shape
+    m = k.shape[0]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    kernel = functools.partial(
+        _flash_kernel, block_k=bk, causal=causal, n=n, m=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, v.shape[-1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, v.shape[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v.shape[-1]), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _flash_dense_bias_kernel(q_ref, k_ref, v_ref, b_ref, o_ref, *, block_k,
+                             causal, n, m):
+    block_q, c = q_ref.shape
+    scale = 1.0 / (c**0.5)
+    q = q_ref[...]
+    q_start = pl.program_id(0) * block_q
+    m_acc = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_acc = jnp.zeros((block_q,), jnp.float32)
+    o_acc = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+
+    def body(i, carry):
+        m_a, l_a, o_a = carry
+        k_start = i * block_k
+        k_blk = k_ref[pl.ds(k_start, block_k), :]
+        v_blk = v_ref[pl.ds(k_start, block_k), :]
+        # The quadratic HBM stream the paper eliminates: a (block_q,
+        # block_k) tile of the dense bias per inner step.
+        extra = b_ref[:, pl.ds(k_start, block_k)].astype(jnp.float32)
+        if causal:
+            extra = extra + _causal_tile(q_start, k_start, block_q, block_k, n, m)
+        return _attn_body(q, k_blk, v_blk, extra, m_a, l_a, o_a, scale)
+
+    m_acc, l_acc, o_acc = jax.lax.fori_loop(
+        0, m // block_k, body, (m_acc, l_acc, o_acc)
+    )
+    o_ref[...] = (o_acc / l_acc[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_dense_bias(q, k, v, bias, *, causal=False,
+                               block_q=DEFAULT_BLOCK_Q,
+                               block_k=DEFAULT_BLOCK_K):
+    """Baseline: FlashAttention reading a dense (N, M) additive bias."""
+    n, c = q.shape
+    m = k.shape[0]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    kernel = functools.partial(
+        _flash_dense_bias_kernel, block_k=bk, causal=causal, n=n, m=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, v.shape[-1]), lambda i: (0, 0)),
+            pl.BlockSpec((bq, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, v.shape[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v.shape[-1]), q.dtype),
+        interpret=True,
+    )(q, k, v, bias)
+
+
+def _flash_factored_kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref, *,
+                           block_k, causal, n, m):
+    block_q, c = q_ref.shape
+    scale = 1.0 / (c**0.5)
+    q = q_ref[...]
+    pq = pq_ref[...].astype(jnp.float32)  # (block_q, R) — stays in VMEM
+    q_start = pl.program_id(0) * block_q
+    m_acc = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_acc = jnp.zeros((block_q,), jnp.float32)
+    o_acc = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+
+    def body(i, carry):
+        m_a, l_a, o_a = carry
+        k_start = i * block_k
+        k_blk = k_ref[pl.ds(k_start, block_k), :]
+        v_blk = v_ref[pl.ds(k_start, block_k), :]
+        pk_blk = pk_ref[pl.ds(k_start, block_k), :].astype(jnp.float32)
+        # FlashBias: reconstruct the bias tile with one extra matmul —
+        # (block_q, R) @ (R, block_k) — instead of reading it from HBM.
+        extra = jnp.dot(pq, pk_blk.T, preferred_element_type=jnp.float32)
+        if causal:
+            extra = extra + _causal_tile(q_start, k_start, block_q, block_k, n, m)
+        return _attn_body(q, k_blk, v_blk, extra, m_a, l_a, o_a, scale)
+
+    m_acc, l_acc, o_acc = jax.lax.fori_loop(
+        0, m // block_k, body, (m_acc, l_acc, o_acc)
+    )
+    o_ref[...] = (o_acc / l_acc[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_factored(q, k, v, phi_q, phi_k, *, causal=False,
+                             block_q=DEFAULT_BLOCK_Q,
+                             block_k=DEFAULT_BLOCK_K):
+    """FlashBias fused kernel: bias = phi_q @ phi_k.T, never materialized."""
+    n, c = q.shape
+    m = k.shape[0]
+    r = phi_q.shape[-1]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    kernel = functools.partial(
+        _flash_factored_kernel, block_k=bk, causal=causal, n=n, m=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, v.shape[-1]), lambda i: (0, 0)),
+            pl.BlockSpec((bq, r), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, v.shape[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v.shape[-1]), q.dtype),
+        interpret=True,
+    )(q, k, v, phi_q, phi_k)
+
+
+def _flash_alibi_jit_kernel(q_ref, k_ref, v_ref, slope_ref, o_ref, *,
+                            block_k, causal, n, m):
+    """Appendix C: ALiBi factor strips created in-kernel (JIT), zero bias IO.
+
+    ALiBi: b[i,j] = -slope * |i - j| for the bias part; with causal masking
+    only j <= i survives so b = slope * (j - i). Decomposition (Ex. 3.4):
+    φ_q(i) = [1, i], φ_k(j) = [-j, 1] scaled by slope.
+    """
+    block_q, c = q_ref.shape
+    scale = 1.0 / (c**0.5)
+    q = q_ref[...]
+    slope = slope_ref[0]
+    q_start = pl.program_id(0) * block_q
+    qi = (q_start + jax.lax.iota(jnp.int32, block_q)).astype(jnp.float32)
+    m_acc = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_acc = jnp.zeros((block_q,), jnp.float32)
+    o_acc = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+
+    def body(i, carry):
+        m_a, l_a, o_a = carry
+        k_start = i * block_k
+        k_blk = k_ref[pl.ds(k_start, block_k), :]
+        v_blk = v_ref[pl.ds(k_start, block_k), :]
+        kj = (k_start + jax.lax.iota(jnp.int32, block_k)).astype(jnp.float32)
+        extra = slope * (kj[None, :] - qi[:, None])
+        if causal:
+            extra = extra + _causal_tile(q_start, k_start, block_q, block_k, n, m)
+        return _attn_body(q, k_blk, v_blk, extra, m_a, l_a, o_a, scale)
+
+    m_acc, l_acc, o_acc = jax.lax.fori_loop(
+        0, m // block_k, body, (m_acc, l_acc, o_acc)
+    )
+    o_ref[...] = (o_acc / l_acc[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_alibi_jit(q, k, v, slope, *, causal=True,
+                              block_q=DEFAULT_BLOCK_Q,
+                              block_k=DEFAULT_BLOCK_K):
+    """ALiBi bias generated inside the kernel (Appendix C / Table 8)."""
+    n, c = q.shape
+    m = k.shape[0]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    slope_arr = jnp.asarray(slope, jnp.float32).reshape((1,))
+    kernel = functools.partial(
+        _flash_alibi_jit_kernel, block_k=bk, causal=causal, n=n, m=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, v.shape[-1]), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bq, v.shape[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v.shape[-1]), q.dtype),
+        interpret=True,
+    )(q, k, v, slope_arr)
+
+
+def _flash_mult_factored_kernel(q_ref, k_ref, v_ref, pq_ref, pk_ref, o_ref,
+                                *, block_k, n, m):
+    block_q, c = q_ref.shape
+    scale = 1.0 / (c**0.5)
+    q = q_ref[...]
+    pq = pq_ref[...].astype(jnp.float32)
+    m_acc = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l_acc = jnp.zeros((block_q,), jnp.float32)
+    o_acc = jnp.zeros((block_q, v_ref.shape[-1]), jnp.float32)
+
+    def body(i, carry):
+        m_a, l_a, o_a = carry
+        k_start = i * block_k
+        k_blk = k_ref[pl.ds(k_start, block_k), :]
+        v_blk = v_ref[pl.ds(k_start, block_k), :]
+        pk_blk = pk_ref[pl.ds(k_start, block_k), :].astype(jnp.float32)
+        s = jnp.dot(q, k_blk.T, preferred_element_type=jnp.float32) * scale
+        # Appendix I: Hadamard with the reconstructed multiplicative bias.
+        s = s * jnp.dot(pq, pk_blk.T, preferred_element_type=jnp.float32)
+        m_new = jnp.maximum(m_a, s.max(axis=-1))
+        alpha = jnp.exp(m_a - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_a * alpha + p.sum(axis=-1)
+        o_new = o_a * alpha[:, None] + jnp.dot(
+            p, v_blk, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, o_new
+
+    m_acc, l_acc, o_acc = jax.lax.fori_loop(
+        0, m // block_k, body, (m_acc, l_acc, o_acc)
+    )
+    o_ref[...] = (o_acc / l_acc[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_mult_factored(q, k, v, phi_q, phi_k, *,
+                                  block_q=DEFAULT_BLOCK_Q,
+                                  block_k=DEFAULT_BLOCK_K):
+    """Multiplicative-bias FlashBias (Appendix I), bias = phi_q @ phi_k.T."""
+    n, c = q.shape
+    m = k.shape[0]
+    r = phi_q.shape[-1]
+    bq = _pick_block(n, block_q)
+    bk = _pick_block(m, block_k)
+    kernel = functools.partial(
+        _flash_mult_factored_kernel, block_k=bk, n=n, m=m
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(n // bq,),
+        in_specs=[
+            pl.BlockSpec((bq, c), lambda i: (i, 0)),
+            pl.BlockSpec((m, c), lambda i: (0, 0)),
+            pl.BlockSpec((m, v.shape[-1]), lambda i: (0, 0)),
+            pl.BlockSpec((bq, r), lambda i: (i, 0)),
+            pl.BlockSpec((m, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, v.shape[-1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, v.shape[-1]), q.dtype),
+        interpret=True,
+    )(q, k, v, phi_q, phi_k)

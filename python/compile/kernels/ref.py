@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every attention variant in the repo.
+
+These are the correctness ground truth for the Pallas kernels (L1) and for
+the rust host-side reference implementations (cross-checked through the
+AOT artifacts). Everything is single-head ``(N, C)``; multi-head is vmap'd
+at L2.
+
+Equation (1) of the paper:   o = softmax(q kᵀ / √C + b) v
+Equation (3) (FlashBias):    o = softmax(([q | √C φ_q][k | φ_k]ᵀ) / √C) v
+Equation (15) (App. I):      o = softmax((q kᵀ / √C) ⊙ b) v
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _causal_mask(n: int, m: int):
+    """Causal mask aligned to the *end* of the key axis (decoder alignment)."""
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(m)[None, :]
+    return j - (m - n) <= i
+
+
+def attention(q, k, v, bias=None, causal: bool = False):
+    """Reference attention with optional additive dense bias and causal mask."""
+    c = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(c, q.dtype))
+    if bias is not None:
+        s = s + bias.astype(s.dtype)
+    if causal:
+        s = jnp.where(_causal_mask(q.shape[0], k.shape[0]), s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def attention_factored(q, k, v, phi_q, phi_k, causal: bool = False):
+    """FlashBias Eq. (3): factored bias folded into the dot product.
+
+    ``phi_q @ phi_k.T`` must equal the bias. Implemented exactly as the
+    concat trick so it exercises the same numerics as the kernels.
+    """
+    c = q.shape[-1]
+    sqrt_c = jnp.sqrt(jnp.asarray(c, q.dtype))
+    q_ext = jnp.concatenate([q, sqrt_c * phi_q.astype(q.dtype)], axis=-1)
+    k_ext = jnp.concatenate([k, phi_k.astype(k.dtype)], axis=-1)
+    s = (q_ext @ k_ext.T) / sqrt_c
+    if causal:
+        s = jnp.where(_causal_mask(q.shape[0], k.shape[0]), s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def attention_multiplicative(q, k, v, bias):
+    """Appendix I Eq. (15): Hadamard (multiplicative) bias."""
+    c = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(c, q.dtype))
+    s = s * bias.astype(s.dtype)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def attention_multiplicative_factored(q, k, v, phi_q, phi_k):
+    """Appendix I Eq. (17): channel-repeat trick for multiplicative bias.
+
+    q' = [q ⊙ φ_q,1, …, q ⊙ φ_q,R]  ∈ R^{N×CR}, likewise k'.
+    """
+    c = q.shape[-1]
+    r = phi_q.shape[-1]
+    # (N, R, C): broadcast each factor column over the channel dim.
+    q_ext = (q[:, None, :] * phi_q[:, :, None]).reshape(q.shape[0], r * c)
+    k_ext = (k[:, None, :] * phi_k[:, :, None]).reshape(k.shape[0], r * c)
+    s = (q_ext @ k_ext.T) / jnp.sqrt(jnp.asarray(c, q.dtype))
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def online_softmax_attention(q, k, v, bias=None, block_k: int = 64):
+    """Block-streamed online-softmax attention (Milakov & Gimelshein).
+
+    Mirrors the accumulator recurrence the Pallas kernels implement, but in
+    plain jnp — validates the recurrence independently of Pallas.
+    """
+    n, c = q.shape
+    m_len = k.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(c, q.dtype))
+    m_acc = jnp.full((n,), NEG_INF, q.dtype)
+    l_acc = jnp.zeros((n,), q.dtype)
+    o_acc = jnp.zeros((n, v.shape[-1]), q.dtype)
+    for start in range(0, m_len, block_k):
+        stop = min(start + block_k, m_len)
+        s = (q @ k[start:stop].T) * scale
+        if bias is not None:
+            s = s + bias[:, start:stop].astype(s.dtype)
+        m_new = jnp.maximum(m_acc, s.max(axis=-1))
+        alpha = jnp.exp(m_acc - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_acc = l_acc * alpha + p.sum(axis=-1)
+        o_acc = o_acc * alpha[:, None] + p @ v[start:stop]
+        m_acc = m_new
+    return o_acc / l_acc[:, None]

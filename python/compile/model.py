@@ -1,0 +1,754 @@
+"""L2 variant assembly: every AOT artifact is declared here.
+
+An artifact is a named, fully-shaped computation: a python builder returns
+``(fn, example_inputs, meta)`` where
+
+* ``fn(*flat_arrays) -> tuple(outputs)`` — a jax function over a *flat*
+  positional list of arrays (params, activations, bias factors, …). Flat
+  signatures keep the rust loader model-agnostic: it feeds literals in
+  manifest order.
+* ``example_inputs`` — list of concrete np/jnp arrays; these are dumped as
+  raw binaries next to the HLO so the rust side can execute any artifact
+  (and overwrite activation inputs when benchmarking).
+* ``meta`` — free-form dict recorded in the manifest (experiment id,
+  variant, N/C/H/R, which inputs are "weights" vs "activations").
+
+Variant families (see DESIGN.md per-experiment index):
+
+* ``attn_*``   — multi-head attention micro-ops over the L1 Pallas kernels
+  (Figures 3/4/5 measured rows, Table 8).
+* ``plain_*``  — §4.1 8-layer Transformer fwd + 2-layer train step.
+* ``gpt2_*``   — §4.2 causal + ALiBi decoder stack (Table 3).
+* ``swin_*``   — §4.3 window attention with learned bias (Table 4).
+* ``pde_*``    — §4.4 PDE solver with weighted spatial bias (Tables 5/11).
+* ``pairformer_*`` — §4.4 AF3-style block (Tables 6/9/10, Figure 7).
+* ``mult_*``   — Appendix I multiplicative bias.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import decomp
+from .kernels import flash_attention as fa
+from .models import common, gpt2_alibi, pairformer, pde, plain, swin
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, callable] = {}
+
+
+def artifact(name):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def registry():
+    return dict(_REGISTRY)
+
+
+def _key(seed=0):
+    return jax.random.PRNGKey(seed)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def _flatten_params(params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return flat, treedef
+
+
+def _meta_inputs(names):
+    """Mark which flat inputs are weights vs activations (for the bench
+    harness: activations may be randomized per-iteration, weights reused)."""
+    return names
+
+
+# ---------------------------------------------------------------------------
+# attention micro-ops (Figures 3/4/5, Table 8, Appendix I)
+# ---------------------------------------------------------------------------
+
+MICRO_H = 8
+MICRO_C = 64
+
+
+def _micro_qkv(n, h=MICRO_H, c=MICRO_C, seed=0):
+    k1, k2, k3 = jax.random.split(_key(seed), 3)
+    return (_rand(k1, (h, n, c)), _rand(k2, (h, n, c)), _rand(k3, (h, n, c)))
+
+
+def _register_micro(n):
+    @artifact(f"attn_pure_n{n}")
+    def _pure(n=n):
+        q, k, v = _micro_qkv(n)
+
+        def fn(q, k, v):
+            return (common.mha_pallas(q, k, v),)
+
+        return fn, [q, k, v], {
+            "family": "attn", "variant": "pure", "n": n, "c": MICRO_C,
+            "heads": MICRO_H, "inputs": ["q", "k", "v"],
+            "activations": [0, 1, 2],
+        }
+
+    @artifact(f"attn_dense_n{n}")
+    def _dense(n=n):
+        q, k, v = _micro_qkv(n)
+        bias = _rand(_key(7), (MICRO_H, n, n), 0.1)
+
+        def fn(q, k, v, bias):
+            return (common.mha_pallas_dense_bias(q, k, v, bias),)
+
+        return fn, [q, k, v, bias], {
+            "family": "attn", "variant": "dense", "n": n, "c": MICRO_C,
+            "heads": MICRO_H, "inputs": ["q", "k", "v", "bias"],
+            "activations": [0, 1, 2],
+        }
+
+    @artifact(f"attn_factored_n{n}")
+    def _factored(n=n, r=8):
+        q, k, v = _micro_qkv(n)
+        kk = jax.random.split(_key(8), 2)
+        pq = _rand(kk[0], (MICRO_H, n, r), 0.3)
+        pk = _rand(kk[1], (MICRO_H, n, r), 0.3)
+
+        def fn(q, k, v, pq, pk):
+            return (common.mha_pallas_factored(q, k, v, pq, pk),)
+
+        return fn, [q, k, v, pq, pk], {
+            "family": "attn", "variant": "factored", "n": n, "c": MICRO_C,
+            "heads": MICRO_H, "rank": r,
+            "inputs": ["q", "k", "v", "phi_q", "phi_k"],
+            "activations": [0, 1, 2],
+        }
+
+    @artifact(f"attn_flexlike_n{n}")
+    def _flexlike(n=n):
+        q, k, v = _micro_qkv(n)
+        pos = jnp.arange(n, dtype=jnp.float32)
+
+        def fn(q, k, v, pos):
+            # FlexAttention stand-in: the bias is an element-wise in-graph
+            # computation over (N, M) — never a matmul, never an input.
+            bias = jnp.stack(
+                [-0.05 * (h + 1) * jnp.abs(pos[:, None] - pos[None, :])
+                 for h in range(MICRO_H)]
+            )
+            return (common.mha_pallas_dense_bias(q, k, v, bias),)
+
+        return fn, [q, k, v, pos], {
+            "family": "attn", "variant": "flexlike", "n": n, "c": MICRO_C,
+            "heads": MICRO_H, "inputs": ["q", "k", "v", "pos"],
+            "activations": [0, 1, 2],
+        }
+
+
+for _n in (256, 512, 1024):
+    _register_micro(_n)
+
+
+def _register_fig5(n):
+    """Figure 5: fused Pallas kernel vs concat-SDPA graph, C=128 H=8 R=8."""
+    c, h, r = 128, 8, 8
+
+    def _qkvf(seed=0):
+        ks = jax.random.split(_key(seed), 5)
+        return (
+            _rand(ks[0], (h, n, c)), _rand(ks[1], (h, n, c)),
+            _rand(ks[2], (h, n, c)), _rand(ks[3], (h, n, r), 0.3),
+            _rand(ks[4], (h, n, r), 0.3),
+        )
+
+    @artifact(f"fig5_pallas_n{n}")
+    def _pallas(n=n):
+        q, k, v, pq, pk = _qkvf()
+
+        def fn(q, k, v, pq, pk):
+            return (common.mha_pallas_factored(q, k, v, pq, pk),)
+
+        return fn, [q, k, v, pq, pk], {
+            "family": "fig5", "variant": "pallas", "n": n, "c": c,
+            "heads": h, "rank": r,
+            "inputs": ["q", "k", "v", "phi_q", "phi_k"],
+            "activations": [0, 1, 2],
+        }
+
+    @artifact(f"fig5_sdpa_n{n}")
+    def _sdpa(n=n):
+        q, k, v, pq, pk = _qkvf()
+
+        def fn(q, k, v, pq, pk):
+            return (common.mha_sdpa_factored(q, k, v, pq, pk),)
+
+        return fn, [q, k, v, pq, pk], {
+            "family": "fig5", "variant": "sdpa", "n": n, "c": c,
+            "heads": h, "rank": r,
+            "inputs": ["q", "k", "v", "phi_q", "phi_k"],
+            "activations": [0, 1, 2],
+        }
+
+
+for _n in (256, 512, 1024):
+    _register_fig5(_n)
+
+
+def _register_causal(n):
+    """Table 3 / Table 8 micro path: causal attention + ALiBi variants."""
+    h, c = MICRO_H, MICRO_C
+    slopes = decomp.alibi_slopes(h)
+
+    @artifact(f"causal_pure_n{n}")
+    def _pure(n=n):
+        q, k, v = _micro_qkv(n, h, c, seed=3)
+
+        def fn(q, k, v):
+            return (common.mha_pallas(q, k, v, causal=True),)
+
+        return fn, [q, k, v], {
+            "family": "causal", "variant": "pure", "n": n, "c": c,
+            "heads": h, "inputs": ["q", "k", "v"], "activations": [0, 1, 2],
+        }
+
+    @artifact(f"causal_alibi_dense_n{n}")
+    def _dense(n=n):
+        q, k, v = _micro_qkv(n, h, c, seed=3)
+        bias = jnp.stack(
+            [decomp.alibi_bias(n, n, float(s)) for s in slopes]
+        )
+
+        def fn(q, k, v, bias):
+            return (common.mha_pallas_dense_bias(q, k, v, bias, causal=True),)
+
+        return fn, [q, k, v, bias], {
+            "family": "causal", "variant": "dense", "n": n, "c": c,
+            "heads": h, "inputs": ["q", "k", "v", "bias"],
+            "activations": [0, 1, 2],
+        }
+
+    @artifact(f"causal_alibi_factored_n{n}")
+    def _factored(n=n):
+        q, k, v = _micro_qkv(n, h, c, seed=3)
+        _, pq, pk = gpt2_alibi.alibi_inputs(n, h)
+
+        def fn(q, k, v, pq, pk):
+            return (common.mha_pallas_factored(q, k, v, pq, pk, causal=True),)
+
+        return fn, [q, k, v, pq, pk], {
+            "family": "causal", "variant": "factored", "n": n, "c": c,
+            "heads": h, "rank": 2,
+            "inputs": ["q", "k", "v", "phi_q", "phi_k"],
+            "activations": [0, 1, 2],
+        }
+
+    @artifact(f"causal_alibi_jit_n{n}")
+    def _jit(n=n):
+        q, k, v = _micro_qkv(n, h, c, seed=3)
+        slope_arr = jnp.asarray(slopes, jnp.float32)
+
+        def fn(q, k, v, slope_arr):
+            return (
+                jax.vmap(
+                    lambda a, b, cc, s: fa.flash_attention_alibi_jit(
+                        a, b, cc, s, causal=True
+                    )
+                )(q, k, v, slope_arr),
+            )
+
+        return fn, [q, k, v, slope_arr], {
+            "family": "causal", "variant": "jit", "n": n, "c": c,
+            "heads": h, "inputs": ["q", "k", "v", "slopes"],
+            "activations": [0, 1, 2],
+        }
+
+
+for _n in (256, 512):
+    _register_causal(_n)
+
+
+@artifact("mult_factored_n256")
+def _mult_factored(n=256):
+    """Appendix I: multiplicative cos(i-j) bias, R=2 fused kernel."""
+    q, k, v = _micro_qkv(n, 1, MICRO_C, seed=5)
+    pq, pk = decomp.cos_mult_factors(n, n)
+    pq = pq[None]
+    pk = pk[None]
+
+    def fn(q, k, v, pq, pk):
+        return (
+            jax.vmap(fa.flash_attention_mult_factored)(q, k, v, pq, pk),
+        )
+
+    return fn, [q, k, v, pq, pk], {
+        "family": "mult", "variant": "factored", "n": n, "c": MICRO_C,
+        "heads": 1, "rank": 2,
+        "inputs": ["q", "k", "v", "phi_q", "phi_k"], "activations": [0, 1, 2],
+    }
+
+
+@artifact("mult_dense_n256")
+def _mult_dense(n=256):
+    q, k, v = _micro_qkv(n, 1, MICRO_C, seed=5)
+    bias = decomp.cos_mult_bias(n, n)[None]
+
+    def fn(q, k, v, bias):
+        from .kernels import ref as kref
+
+        return (
+            jax.vmap(kref.attention_multiplicative)(q, k, v, bias),
+        )
+
+    return fn, [q, k, v, bias], {
+        "family": "mult", "variant": "dense", "n": n, "c": MICRO_C,
+        "heads": 1, "inputs": ["q", "k", "v", "bias"], "activations": [0, 1, 2],
+    }
+
+
+# ---------------------------------------------------------------------------
+# §4.1 plain Transformer (Figures 3/4)
+# ---------------------------------------------------------------------------
+
+PLAIN_D, PLAIN_FF, PLAIN_H, PLAIN_LAYERS = 512, 1024, 8, 8
+PLAIN_TRAIN_LAYERS = 2
+
+
+def _plain_setup(n, num_layers, seed=0):
+    params = plain.init(_key(seed), num_layers, PLAIN_D, PLAIN_FF)
+    x = _rand(_key(seed + 1), (n, PLAIN_D))
+    flat, treedef = _flatten_params(params)
+    return params, flat, treedef, x
+
+
+def _register_plain(n):
+    @artifact(f"plain_nobias_n{n}")
+    def _nobias(n=n):
+        _, flat, treedef, x = _plain_setup(n, PLAIN_LAYERS)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-1])
+            return (plain.forward(params, args[-1], PLAIN_H),)
+
+        return fn, flat + [x], {
+            "family": "plain", "variant": "nobias", "n": n, "c": PLAIN_D,
+            "heads": PLAIN_H, "layers": PLAIN_LAYERS,
+            "activations": [len(flat)],
+        }
+
+    @artifact(f"plain_dense_n{n}")
+    def _dense(n=n):
+        _, flat, treedef, x = _plain_setup(n, PLAIN_LAYERS)
+        bias = _rand(_key(11), (PLAIN_H, n, n), 0.1)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-2])
+            return (plain.forward(params, args[-2], PLAIN_H, bias=args[-1]),)
+
+        return fn, flat + [x, bias], {
+            "family": "plain", "variant": "dense", "n": n, "c": PLAIN_D,
+            "heads": PLAIN_H, "layers": PLAIN_LAYERS,
+            "activations": [len(flat)],
+        }
+
+    @artifact(f"plain_factored_n{n}")
+    def _factored(n=n, r=8):
+        _, flat, treedef, x = _plain_setup(n, PLAIN_LAYERS)
+        ks = jax.random.split(_key(12), 2)
+        pq = _rand(ks[0], (PLAIN_H, n, r), 0.3)
+        pk = _rand(ks[1], (PLAIN_H, n, r), 0.3)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-3])
+            return (
+                plain.forward(
+                    params, args[-3], PLAIN_H, phi_q=args[-2], phi_k=args[-1]
+                ),
+            )
+
+        return fn, flat + [x, pq, pk], {
+            "family": "plain", "variant": "factored", "n": n, "c": PLAIN_D,
+            "heads": PLAIN_H, "layers": PLAIN_LAYERS, "rank": r,
+            "activations": [len(flat)],
+        }
+
+    @artifact(f"plain_flexlike_n{n}")
+    def _flexlike(n=n):
+        _, flat, treedef, x = _plain_setup(n, PLAIN_LAYERS)
+        pos = jnp.arange(n, dtype=jnp.float32)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-2])
+            return (plain.forward_flexlike(params, args[-2], args[-1],
+                                           PLAIN_H),)
+
+        return fn, flat + [x, pos], {
+            "family": "plain", "variant": "flexlike", "n": n, "c": PLAIN_D,
+            "heads": PLAIN_H, "layers": PLAIN_LAYERS,
+            "activations": [len(flat)],
+        }
+
+
+for _n in (256, 512, 1024):
+    _register_plain(_n)
+
+
+def _register_plain_train(n):
+    @artifact(f"plain_train_dense_n{n}")
+    def _dense(n=n):
+        _, flat, treedef, x = _plain_setup(n, PLAIN_TRAIN_LAYERS)
+        target = _rand(_key(13), (n, PLAIN_D))
+        bias = _rand(_key(14), (PLAIN_H, n, n), 0.1)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-3])
+            val, _new_params, new_bias = plain.train_step(
+                params, args[-3], args[-2], PLAIN_H, bias=args[-1]
+            )
+            return (val.reshape((1,)), new_bias)
+
+        return fn, flat + [x, target, bias], {
+            "family": "plain_train", "variant": "dense", "n": n,
+            "c": PLAIN_D, "heads": PLAIN_H, "layers": PLAIN_TRAIN_LAYERS,
+            "activations": [len(flat), len(flat) + 1],
+        }
+
+    @artifact(f"plain_train_factored_n{n}")
+    def _factored(n=n, r=8):
+        _, flat, treedef, x = _plain_setup(n, PLAIN_TRAIN_LAYERS)
+        target = _rand(_key(13), (n, PLAIN_D))
+        ks = jax.random.split(_key(15), 2)
+        pq = _rand(ks[0], (PLAIN_H, n, r), 0.3)
+        pk = _rand(ks[1], (PLAIN_H, n, r), 0.3)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-4])
+            val, _new_params, new_pq, new_pk = plain.train_step(
+                params, args[-4], args[-3], PLAIN_H, phi_q=args[-2],
+                phi_k=args[-1],
+            )
+            return (val.reshape((1,)), new_pq, new_pk)
+
+        return fn, flat + [x, target, pq, pk], {
+            "family": "plain_train", "variant": "factored", "n": n,
+            "c": PLAIN_D, "heads": PLAIN_H, "layers": PLAIN_TRAIN_LAYERS,
+            "rank": r, "activations": [len(flat), len(flat) + 1],
+        }
+
+
+for _n in (256, 512):
+    _register_plain_train(_n)
+
+
+# ---------------------------------------------------------------------------
+# §4.2 GPT-2 + ALiBi (Table 3)
+# ---------------------------------------------------------------------------
+
+GPT_V, GPT_LAYERS, GPT_D, GPT_FF, GPT_H = 512, 4, 256, 1024, 8
+
+
+def _gpt_setup(n, seed=0):
+    params = gpt2_alibi.init(_key(seed), GPT_V, GPT_LAYERS, GPT_D, GPT_FF)
+    tokens = jax.random.randint(_key(seed + 1), (n,), 0, GPT_V, jnp.int32)
+    flat, treedef = _flatten_params(params)
+    return params, flat, treedef, tokens
+
+
+def _register_gpt(n):
+    @artifact(f"gpt2_pure_n{n}")
+    def _pure(n=n):
+        _, flat, treedef, tokens = _gpt_setup(n)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-1])
+            return (gpt2_alibi.forward(params, args[-1], GPT_H, mode="pure",
+                                       attn="pallas"),)
+
+        return fn, flat + [tokens], {
+            "family": "gpt2", "variant": "pure", "n": n, "c": GPT_D,
+            "heads": GPT_H, "layers": GPT_LAYERS, "vocab": GPT_V,
+            "activations": [len(flat)],
+        }
+
+    @artifact(f"gpt2_dense_n{n}")
+    def _dense(n=n):
+        _, flat, treedef, tokens = _gpt_setup(n)
+        dense, _, _ = gpt2_alibi.alibi_inputs(n, GPT_H)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-2])
+            return (
+                gpt2_alibi.forward(params, args[-2], GPT_H, mode="dense",
+                                   bias=args[-1], attn="pallas"),
+            )
+
+        return fn, flat + [tokens, dense], {
+            "family": "gpt2", "variant": "dense", "n": n, "c": GPT_D,
+            "heads": GPT_H, "layers": GPT_LAYERS, "vocab": GPT_V,
+            "activations": [len(flat)],
+        }
+
+    @artifact(f"gpt2_factored_n{n}")
+    def _factored(n=n):
+        _, flat, treedef, tokens = _gpt_setup(n)
+        _, pq, pk = gpt2_alibi.alibi_inputs(n, GPT_H)
+
+        def fn(*args):
+            params = jax.tree_util.tree_unflatten(treedef, args[:-3])
+            return (
+                gpt2_alibi.forward(params, args[-3], GPT_H, mode="factored",
+                                   phi_q=args[-2], phi_k=args[-1],
+                                   attn="pallas"),
+            )
+
+        return fn, flat + [tokens, pq, pk], {
+            "family": "gpt2", "variant": "factored", "n": n, "c": GPT_D,
+            "heads": GPT_H, "layers": GPT_LAYERS, "vocab": GPT_V, "rank": 2,
+            "activations": [len(flat)],
+        }
+
+
+for _n in (256, 512):
+    _register_gpt(_n)
+
+
+# ---------------------------------------------------------------------------
+# §4.3 Swin window attention (Table 4)
+# ---------------------------------------------------------------------------
+
+SWIN_WINDOW = (12, 12)          # N = 144 (paper: 24² = 576, scaled)
+SWIN_LAYERS, SWIN_D, SWIN_FF, SWIN_H = 4, 128, 256, 4
+SWIN_CLASSES, SWIN_PATCH = 10, 16
+SWIN_FACTORED_FROM = 2          # paper's "last layers only" policy
+SWIN_RANK = 16
+
+
+def _swin_setup(seed=0):
+    n = SWIN_WINDOW[0] * SWIN_WINDOW[1]
+    biases = np.stack(
+        [decomp.swin_relative_bias(SWIN_WINDOW, SWIN_H, seed=seed + li)
+         for li in range(SWIN_LAYERS)]
+    )
+    params = swin.init(
+        _key(seed), SWIN_LAYERS, SWIN_D, SWIN_FF, SWIN_WINDOW, SWIN_H,
+        SWIN_CLASSES, SWIN_PATCH, biases=biases,
+    )
+    patches = _rand(_key(seed + 9), (n, SWIN_PATCH))
+    flat, treedef = _flatten_params(params)
+    return params, flat, treedef, patches, biases
+
+
+@artifact("swin_dense")
+def _swin_dense():
+    _, flat, treedef, patches, _ = _swin_setup()
+
+    def fn(*args):
+        params = jax.tree_util.tree_unflatten(treedef, args[:-1])
+        return (swin.forward(params, args[-1], SWIN_H),)
+
+    return fn, flat + [patches], {
+        "family": "swin", "variant": "dense",
+        "n": SWIN_WINDOW[0] * SWIN_WINDOW[1], "c": SWIN_D, "heads": SWIN_H,
+        "layers": SWIN_LAYERS, "activations": [len(flat)],
+    }
+
+
+@artifact("swin_factored")
+def _swin_factored():
+    params, flat, treedef, patches, biases = _swin_setup()
+    fqs, fks = [], []
+    for li in range(SWIN_FACTORED_FROM, SWIN_LAYERS):
+        fq_h, fk_h = [], []
+        for h in range(SWIN_H):
+            pq, pk = decomp.svd_factors(jnp.asarray(biases[li, h]),
+                                        SWIN_RANK)
+            fq_h.append(pq)
+            fk_h.append(pk)
+        fqs.append(jnp.stack(fq_h))
+        fks.append(jnp.stack(fk_h))
+    fqs = jnp.stack(fqs)  # (L', H, N, R)
+    fks = jnp.stack(fks)
+
+    def fn(*args):
+        params = jax.tree_util.tree_unflatten(treedef, args[:-3])
+        return (
+            swin.forward(params, args[-3], SWIN_H, factor_qs=args[-2],
+                         factor_ks=args[-1],
+                         factored_from=SWIN_FACTORED_FROM),
+        )
+
+    return fn, flat + [patches, fqs, fks], {
+        "family": "swin", "variant": "factored",
+        "n": SWIN_WINDOW[0] * SWIN_WINDOW[1], "c": SWIN_D, "heads": SWIN_H,
+        "layers": SWIN_LAYERS, "rank": SWIN_RANK,
+        "factored_from": SWIN_FACTORED_FROM, "activations": [len(flat)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# §4.4 PDE solver (Tables 5 / 11)
+# ---------------------------------------------------------------------------
+
+PDE_LAYERS, PDE_D, PDE_FF, PDE_H = 2, 128, 256, 8
+
+
+def _pde_setup(n, seed=0):
+    params = pde.init(_key(seed), n, PDE_LAYERS, PDE_D, PDE_FF, PDE_H)
+    positions = jnp.asarray(pde.synthetic_car_cloud(n, seed))
+    flat, treedef = _flatten_params(params)
+    return params, flat, treedef, positions
+
+
+def _register_pde(n):
+    for mode in ("nobias", "dense", "factored"):
+        @artifact(f"pde_{mode}_n{n}")
+        def _fwd(n=n, mode=mode):
+            _, flat, treedef, positions = _pde_setup(n)
+
+            def fn(*args):
+                params = jax.tree_util.tree_unflatten(treedef, args[:-1])
+                return (pde.forward(params, args[-1], PDE_H, mode=mode),)
+
+            return fn, flat + [positions], {
+                "family": "pde", "variant": mode, "n": n, "c": PDE_D,
+                "heads": PDE_H, "layers": PDE_LAYERS,
+                "rank": 9 if mode == "factored" else None,
+                "activations": [len(flat)],
+            }
+
+
+for _n in (512, 1024, 2048):
+    _register_pde(_n)
+
+
+def _register_pde_train(n):
+    for mode in ("dense", "factored"):
+        @artifact(f"pde_train_{mode}_n{n}")
+        def _train(n=n, mode=mode):
+            _, flat, treedef, positions = _pde_setup(n)
+            target = jnp.asarray(pde.synthetic_fields(positions))
+
+            def fn(*args):
+                params = jax.tree_util.tree_unflatten(treedef, args[:-2])
+                val, new = pde.train_step(params, args[-2], args[-1], PDE_H,
+                                          mode=mode)
+                # return the α gradient-updated weights (the dense-vs-
+                # factored gradient traffic the paper measures)
+                return (val.reshape((1,)), new.alphas)
+
+            return fn, flat + [positions, target], {
+                "family": "pde_train", "variant": mode, "n": n, "c": PDE_D,
+                "heads": PDE_H, "layers": PDE_LAYERS,
+                "activations": [len(flat), len(flat) + 1],
+            }
+
+
+for _n in (512, 1024):
+    _register_pde_train(_n)
+
+
+# ---------------------------------------------------------------------------
+# §4.4 Pairformer (Tables 6/9/10, Figure 7)
+# ---------------------------------------------------------------------------
+
+PAIR_N, PAIR_LAYERS, PAIR_D, PAIR_FF = 128, 2, 64, 128
+PAIR_CZ, PAIR_H, PAIR_RANK = 8, 4, 16
+PAIR_NEURAL_STEPS = 400
+
+
+def _pair_setup(seed=0):
+    params = pairformer.init(_key(seed), PAIR_LAYERS, PAIR_D, PAIR_FF,
+                             PAIR_CZ)
+    single = _rand(_key(seed + 1), (PAIR_N, PAIR_D))
+    z = pairformer.synthetic_pair_rep(_key(seed + 2), PAIR_N, PAIR_CZ)
+    flat, treedef = _flatten_params(params)
+    return params, flat, treedef, single, z
+
+
+@artifact("pairformer_dense")
+def _pair_dense():
+    _, flat, treedef, single, z = _pair_setup()
+
+    def fn(*args):
+        params = jax.tree_util.tree_unflatten(treedef, args[:-2])
+        return (
+            pairformer.forward(params, args[-2], args[-1], PAIR_H,
+                               mode="dense"),
+        )
+
+    return fn, flat + [single, z], {
+        "family": "pairformer", "variant": "dense", "n": PAIR_N,
+        "c": PAIR_D, "heads": PAIR_H, "layers": PAIR_LAYERS,
+        "c_z": PAIR_CZ, "activations": [len(flat), len(flat) + 1],
+    }
+
+
+@artifact("pairformer_neural")
+def _pair_neural():
+    """Neural decomposition: φ̂ nets trained offline (Eq. 5) at AOT time,
+    their weights becoming ordinary inputs of the lowered graph."""
+    params, flat, treedef, single, z = _pair_setup()
+    factor_params = pairformer.train_factor_nets(
+        params, single, z, PAIR_H, PAIR_RANK, hidden=64,
+        steps=PAIR_NEURAL_STEPS,
+    )
+    fp_flat, fp_treedef = jax.tree_util.tree_flatten(factor_params)
+    n_fp = len(fp_flat)
+
+    def fn(*args):
+        params = jax.tree_util.tree_unflatten(treedef,
+                                              args[:-(2 + n_fp)])
+        fps = jax.tree_util.tree_unflatten(fp_treedef, args[-(2 + n_fp):-2])
+        return (
+            pairformer.forward(params, args[-2], args[-1], PAIR_H,
+                               mode="neural", factor_params=fps,
+                               rank=PAIR_RANK),
+        )
+
+    return fn, flat + list(fp_flat) + [single, z], {
+        "family": "pairformer", "variant": "neural", "n": PAIR_N,
+        "c": PAIR_D, "heads": PAIR_H, "layers": PAIR_LAYERS,
+        "c_z": PAIR_CZ, "rank": PAIR_RANK,
+        "activations": [len(flat) + n_fp, len(flat) + n_fp + 1],
+    }
+
+
+# ---------------------------------------------------------------------------
+# default artifact set (what `make artifacts` builds)
+# ---------------------------------------------------------------------------
+
+# Keep the default build bounded: micro-ops at all sizes, model variants at
+# their headline sizes. Everything else is available via --only.
+DEFAULT_SET = [
+    "attn_pure_n256", "attn_dense_n256", "attn_factored_n256",
+    "attn_flexlike_n256",
+    "attn_pure_n512", "attn_dense_n512", "attn_factored_n512",
+    "attn_flexlike_n512",
+    "attn_pure_n1024", "attn_dense_n1024", "attn_factored_n1024",
+    "attn_flexlike_n1024",
+    "fig5_pallas_n256", "fig5_sdpa_n256",
+    "fig5_pallas_n512", "fig5_sdpa_n512",
+    "causal_pure_n256", "causal_alibi_dense_n256",
+    "causal_alibi_factored_n256", "causal_alibi_jit_n256",
+    "causal_pure_n512", "causal_alibi_dense_n512",
+    "causal_alibi_factored_n512", "causal_alibi_jit_n512",
+    "mult_factored_n256", "mult_dense_n256",
+    "plain_nobias_n256", "plain_dense_n256", "plain_factored_n256",
+    "plain_flexlike_n256",
+    "plain_nobias_n512", "plain_dense_n512", "plain_factored_n512",
+    "plain_flexlike_n512",
+    "plain_train_dense_n256", "plain_train_factored_n256",
+    "gpt2_pure_n256", "gpt2_dense_n256", "gpt2_factored_n256",
+    "swin_dense", "swin_factored",
+    "pde_nobias_n512", "pde_dense_n512", "pde_factored_n512",
+    "pde_train_dense_n512", "pde_train_factored_n512",
+    "pairformer_dense", "pairformer_neural",
+]

@@ -1,0 +1,1 @@
+"""L2 model zoo for the FlashBias reproduction."""

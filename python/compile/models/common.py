@@ -1,0 +1,146 @@
+"""Shared L2 building blocks: multi-head attention wrappers and FFN.
+
+Every attention entry point comes in an "sdpa" flavour (plain jnp graph —
+what PyTorch SDPA corresponds to in the paper's Figure 5) and a "pallas"
+flavour (the L1 streaming kernels). Multi-head is vmap over the head axis.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import flash_attention as fa
+from ..kernels import ref as kref
+
+
+def mha_sdpa(q, k, v, bias=None, causal=False):
+    """Multi-head SDPA graph. q/k/v: (H, N, C); bias: (H, N, M) or None."""
+    if bias is None:
+        return jax.vmap(lambda a, b, c: kref.attention(a, b, c, causal=causal))(
+            q, k, v
+        )
+    return jax.vmap(
+        lambda a, b, c, d: kref.attention(a, b, c, bias=d, causal=causal)
+    )(q, k, v, bias)
+
+
+def mha_sdpa_factored(q, k, v, phi_q, phi_k, causal=False):
+    """Multi-head FlashBias concat graph. phi_*: (H, N, R)."""
+    return jax.vmap(
+        lambda a, b, c, pq, pk: kref.attention_factored(
+            a, b, c, pq, pk, causal=causal
+        )
+    )(q, k, v, phi_q, phi_k)
+
+
+def mha_pallas(q, k, v, causal=False):
+    return jax.vmap(lambda a, b, c: fa.flash_attention(a, b, c, causal=causal))(
+        q, k, v
+    )
+
+
+def mha_pallas_dense_bias(q, k, v, bias, causal=False):
+    return jax.vmap(
+        lambda a, b, c, d: fa.flash_attention_dense_bias(a, b, c, d, causal=causal)
+    )(q, k, v, bias)
+
+
+def mha_pallas_factored(q, k, v, phi_q, phi_k, causal=False):
+    return jax.vmap(
+        lambda a, b, c, pq, pk: fa.flash_attention_factored(
+            a, b, c, pq, pk, causal=causal
+        )
+    )(q, k, v, phi_q, phi_k)
+
+
+# --------------------------------------------------------------------------
+# Transformer layer (the §4.1 plain Transformer)
+# --------------------------------------------------------------------------
+
+
+class LayerParams(NamedTuple):
+    wq: jnp.ndarray  # (D, D)
+    wk: jnp.ndarray
+    wv: jnp.ndarray
+    wo: jnp.ndarray
+    w1: jnp.ndarray  # (D, F)
+    b1: jnp.ndarray
+    w2: jnp.ndarray  # (F, D)
+    b2: jnp.ndarray
+    ln1: tuple
+    ln2: tuple
+
+
+def layer_init(key, d_model: int, d_ff: int) -> LayerParams:
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    sf = 1.0 / math.sqrt(d_ff)
+    return LayerParams(
+        wq=jax.random.normal(ks[0], (d_model, d_model), jnp.float32) * s,
+        wk=jax.random.normal(ks[1], (d_model, d_model), jnp.float32) * s,
+        wv=jax.random.normal(ks[2], (d_model, d_model), jnp.float32) * s,
+        wo=jax.random.normal(ks[3], (d_model, d_model), jnp.float32) * s,
+        w1=jax.random.normal(ks[4], (d_model, d_ff), jnp.float32) * s,
+        b1=jnp.zeros((d_ff,), jnp.float32),
+        w2=jax.random.normal(ks[5], (d_ff, d_model), jnp.float32) * sf,
+        b2=jnp.zeros((d_model,), jnp.float32),
+        ln1=(jnp.ones((d_model,)), jnp.zeros((d_model,))),
+        ln2=(jnp.ones((d_model,)), jnp.zeros((d_model,))),
+    )
+
+
+def layer_norm(x, scale, shift, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + shift
+
+
+def split_heads(x, num_heads):
+    n, d = x.shape
+    c = d // num_heads
+    return x.reshape(n, num_heads, c).transpose(1, 0, 2)
+
+
+def merge_heads(x):
+    h, n, c = x.shape
+    return x.transpose(1, 0, 2).reshape(n, h * c)
+
+
+def transformer_layer(p: LayerParams, x, num_heads, *, bias=None,
+                      phi_q=None, phi_k=None, causal=False,
+                      attn="sdpa"):
+    """One pre-LN Transformer layer with selectable attention path.
+
+    ``attn``: "sdpa" | "pallas". Bias path is chosen by which of
+    ``bias`` / ``(phi_q, phi_k)`` is given (both None → pure attention).
+    """
+    h = layer_norm(x, *p.ln1)
+    q = split_heads(h @ p.wq, num_heads)
+    k = split_heads(h @ p.wk, num_heads)
+    v = split_heads(h @ p.wv, num_heads)
+    if phi_q is not None:
+        o = (
+            mha_pallas_factored(q, k, v, phi_q, phi_k, causal=causal)
+            if attn == "pallas"
+            else mha_sdpa_factored(q, k, v, phi_q, phi_k, causal=causal)
+        )
+    elif bias is not None:
+        o = (
+            mha_pallas_dense_bias(q, k, v, bias, causal=causal)
+            if attn == "pallas"
+            else mha_sdpa(q, k, v, bias=bias, causal=causal)
+        )
+    else:
+        o = (
+            mha_pallas(q, k, v, causal=causal)
+            if attn == "pallas"
+            else mha_sdpa(q, k, v, causal=causal)
+        )
+    x = x + merge_heads(o) @ p.wo
+    h = layer_norm(x, *p.ln2)
+    x = x + jnp.maximum(h @ p.w1 + p.b1, 0.0) @ p.w2 + p.b2
+    return x

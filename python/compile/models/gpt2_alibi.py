@@ -1,0 +1,94 @@
+"""§4.2 GPT-2-shaped decoder-only LM with ALiBi bias (Table 3 workload).
+
+The paper's model is 48 layers / 1600 channels / 50 heads (1.5B params);
+Table 3 measures the *bias-processing overhead* Δ = time(with-bias) −
+time(pure-causal), which is a property of the attention path, so we keep
+the exact layer structure (causal mask + per-head ALiBi slopes + LM head)
+at scaled dimensions (see DESIGN.md substitutions).
+
+Variants:
+  * ``pure``     — causal attention, no bias (the Δ baseline).
+  * ``dense``    — ALiBi materialized as a dense (H, N, N) input.
+  * ``factored`` — FlashBias exact decomposition (Example 3.4, R = 2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .. import decomp
+
+
+class GptParams(NamedTuple):
+    embed: jnp.ndarray    # (V, D)
+    pos_dummy: jnp.ndarray  # kept zero: ALiBi replaces positional embeddings
+    layers: list
+    ln_f: tuple
+    head: jnp.ndarray     # (D, V)
+
+
+def init(key, vocab=512, num_layers=4, d_model=256, d_ff=1024):
+    k1, k2, k3 = jax.random.split(key, 3)
+    layers = [
+        common.layer_init(k, d_model, d_ff)
+        for k in jax.random.split(k2, num_layers)
+    ]
+    return GptParams(
+        embed=jax.random.normal(k1, (vocab, d_model), jnp.float32) * 0.02,
+        pos_dummy=jnp.zeros((1, d_model), jnp.float32),
+        layers=layers,
+        ln_f=(jnp.ones((d_model,)), jnp.zeros((d_model,))),
+        head=jax.random.normal(k3, (d_model, vocab), jnp.float32) * 0.02,
+    )
+
+
+def forward(params: GptParams, tokens, num_heads=8, *, mode="pure",
+            bias=None, phi_q=None, phi_k=None, attn="sdpa"):
+    """tokens: (N,) int32. Returns logits (N, V)."""
+    x = params.embed[tokens]
+    for p in params.layers:
+        if mode == "dense":
+            x = common.transformer_layer(
+                p, x, num_heads, bias=bias, causal=True, attn=attn
+            )
+        elif mode == "factored":
+            x = common.transformer_layer(
+                p, x, num_heads, phi_q=phi_q, phi_k=phi_k, causal=True,
+                attn=attn,
+            )
+        else:
+            x = common.transformer_layer(p, x, num_heads, causal=True,
+                                          attn=attn)
+    x = common.layer_norm(x, *params.ln_f)
+    return x @ params.head
+
+
+def alibi_inputs(n: int, num_heads: int):
+    """Per-head dense bias (H,N,N) and factor strips (H,N,2)/(H,N,2)."""
+    slopes = decomp.alibi_slopes(num_heads)
+    dense = jnp.stack([decomp.alibi_bias(n, n, float(s)) for s in slopes])
+    fq, fk = [], []
+    for s in slopes:
+        pq, pk = decomp.alibi_factors(n, n, float(s))
+        fq.append(pq)
+        fk.append(pk)
+    return dense, jnp.stack(fq), jnp.stack(fk)
+
+
+def lm_loss(params, tokens, num_heads=8, **kw):
+    """Next-token cross-entropy (teacher-forced)."""
+    logits = forward(params, tokens[:-1], num_heads, **kw)
+    targets = tokens[1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def train_step(params, tokens, num_heads=8, lr=1e-3, **kw):
+    val, grads = jax.value_and_grad(lm_loss)(params, tokens, num_heads, **kw)
+    new = jax.tree_util.tree_map(lambda w, g: w - lr * g, params, grads)
+    return val, new

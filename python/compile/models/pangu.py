@@ -1,0 +1,69 @@
+"""Appendix B: Pangu-Weather 3D-window attention (Table 7 workload).
+
+Pangu's backbone is a 3D Swin Transformer; each block carries a relative-
+position bias of shape (#windows, H, 144, 144) with the 3D window
+2×6×12 = 144, and windows at the same latitude band share biases across
+longitude. Only the fine-scale biases are low-rank; the paper applies SVD
+FlashBias there with R = 56 (99% energy).
+
+We reproduce the geometry exactly (window 2×6×12, longitude sharing) with
+synthetic "trained" tables generated the same way as the Swin ones but in
+3D (pressure-level, latitude, longitude offsets).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+WINDOW = (2, 6, 12)  # (pressure levels, lat, lon)
+N = WINDOW[0] * WINDOW[1] * WINDOW[2]  # 144
+
+
+def pangu_relative_bias(num_heads: int = 4, seed: int = 0,
+                        smooth_terms: int = 5, noise: float = 0.02,
+                        window=WINDOW) -> np.ndarray:
+    """Synthetic learned 3D relative-position bias (H, 144, 144)."""
+    wz, wy, wx = window
+    n = wz * wy * wx
+    rng = np.random.default_rng(seed)
+    zz, yy, xx = np.meshgrid(
+        np.arange(wz), np.arange(wy), np.arange(wx), indexing="ij"
+    )
+    coords = np.stack([zz.ravel(), yy.ravel(), xx.ravel()], -1)  # (n, 3)
+    rel = coords[:, None, :] - coords[None, :, :]
+    dz = np.arange(-(wz - 1), wz).astype(np.float32)
+    dy = np.arange(-(wy - 1), wy).astype(np.float32)
+    dx = np.arange(-(wx - 1), wx).astype(np.float32)
+    out = np.empty((num_heads, n, n), np.float32)
+    for h in range(num_heads):
+        table = np.zeros((2 * wz - 1, 2 * wy - 1, 2 * wx - 1), np.float32)
+        for _ in range(smooth_terms):
+            cz = rng.normal(0, wz / 2)
+            cy = rng.normal(0, wy / 2)
+            cx = rng.normal(0, wx / 2)
+            sz = rng.uniform(wz / 3, wz)
+            sy = rng.uniform(wy / 3, wy)
+            sx = rng.uniform(wx / 3, wx)
+            amp = rng.normal(0, 1.0)
+            table += amp * (
+                np.exp(-((dz - cz) / sz) ** 2)[:, None, None]
+                * np.exp(-((dy - cy) / sy) ** 2)[None, :, None]
+                * np.exp(-((dx - cx) / sx) ** 2)[None, None, :]
+            )
+        table += noise * rng.normal(size=table.shape).astype(np.float32)
+        out[h] = table[
+            rel[..., 0] + wz - 1, rel[..., 1] + wy - 1, rel[..., 2] + wx - 1
+        ]
+    return out
+
+
+def longitude_shared_windows(num_lat_bands: int, num_lon: int,
+                             num_heads: int = 4, seed: int = 0):
+    """Biases for a (lat-band × lon) grid of windows: one table per lat
+    band, shared across longitude (the meteorological prior)."""
+    tables = [
+        pangu_relative_bias(num_heads, seed=seed + b)
+        for b in range(num_lat_bands)
+    ]
+    return np.stack([tables[b] for b in range(num_lat_bands)
+                     for _ in range(num_lon)])

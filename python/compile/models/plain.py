@@ -1,0 +1,89 @@
+"""§4.1 plain Transformer: 8 layers, 512 model channels, 8 heads, 1024 FFN,
+one static (H, N, N) bias shared across layers — the overall-comparison
+workload of Figures 3/4/5.
+
+Variants lowered by aot.py:
+  * ``nobias``   — "Pure FlashAttention" upper bound.
+  * ``dense``    — bias passed as a dense (H, N, N) input ("FlashAttention
+    with Bias": the whole quadratic tensor crosses HBM).
+  * ``factored`` — FlashBias: (H, N, R) factor inputs, concat trick.
+  * ``flexlike`` — FlexAttention stand-in: the bias is *computed
+    element-wise inside the graph* from per-token sources (no dense input,
+    but O(N·M) element-wise work that cannot use the MXU).
+
+A 2-layer ``train`` variant lowers value_and_grad + SGD for the training
+columns of Figure 3.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+
+
+def init(key, num_layers=8, d_model=512, d_ff=1024):
+    keys = jax.random.split(key, num_layers)
+    return [common.layer_init(k, d_model, d_ff) for k in keys]
+
+
+def forward(params, x, num_heads=8, *, bias=None, phi_q=None, phi_k=None,
+            attn="sdpa"):
+    for p in params:
+        x = common.transformer_layer(
+            p, x, num_heads, bias=bias, phi_q=phi_q, phi_k=phi_k, attn=attn
+        )
+    return x
+
+
+def flexlike_bias(xsrc_q, xsrc_k, scale):
+    """Element-wise in-graph bias: -scale * |i - j| from position inputs.
+
+    Mirrors what FlexAttention's score_mod compiles to — a full (N, M)
+    element-wise computation that is never a matmul.
+    """
+    return -scale * jnp.abs(xsrc_q[:, None] - xsrc_k[None, :])
+
+
+def forward_flexlike(params, x, positions, num_heads=8, scale=0.05):
+    h_bias = jnp.stack(
+        [flexlike_bias(positions, positions, scale * (h + 1))
+         for h in range(num_heads)]
+    )
+    return forward(params, x, num_heads, bias=h_bias)
+
+
+def loss(params, x, target, num_heads=8, **kw):
+    out = forward(params, x, num_heads, **kw)
+    return jnp.mean((out - target) ** 2)
+
+
+def train_step(params, x, target, num_heads=8, lr=1e-3, *, bias=None,
+               phi_q=None, phi_k=None):
+    """One SGD step; lowered as the Figure-3 training-phase workload.
+
+    When ``bias`` is given it is treated as a *learnable* input: its
+    gradient is computed and returned (the dense O(N²) gradient traffic
+    the paper calls out in §4.4). With factors, only (N, R) gradients flow.
+    """
+    if bias is not None:
+        def f(p, b):
+            return loss(p, x, target, num_heads, bias=b)
+
+        (val, (gp, gb)) = jax.value_and_grad(f, argnums=(0, 1))(params, bias)
+        new_params = jax.tree_util.tree_map(lambda w, g: w - lr * g, params, gp)
+        return val, new_params, bias - lr * gb
+    if phi_q is not None:
+        def f(p, pq, pk):
+            return loss(p, x, target, num_heads, phi_q=pq, phi_k=pk)
+
+        (val, (gp, gq, gk)) = jax.value_and_grad(f, argnums=(0, 1, 2))(
+            params, phi_q, phi_k
+        )
+        new_params = jax.tree_util.tree_map(lambda w, g: w - lr * g, params, gp)
+        return val, new_params, phi_q - lr * gq, phi_k - lr * gk
+
+    val, gp = jax.value_and_grad(loss)(params, x, target, num_heads)
+    new_params = jax.tree_util.tree_map(lambda w, g: w - lr * g, params, gp)
+    return val, new_params

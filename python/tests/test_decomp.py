@@ -1,0 +1,209 @@
+"""Decomposition library tests: exact factorizations are exact, SVD hits
+its energy targets, neural decomposition converges (Eq. 5)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import decomp
+
+
+# --------------------------------------------------------------------------
+# exact decompositions
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(4, 96),
+    m=st.integers(4, 96),
+    slope_exp=st.integers(-8, 0),
+)
+def test_alibi_factors_exact(n, m, slope_exp):
+    slope = 2.0**slope_exp
+    dense = decomp.alibi_bias(n, m, slope)
+    pq, pk = decomp.alibi_factors(n, m, slope)
+    assert pq.shape == (n, 2) and pk.shape == (m, 2)
+    assert_allclose(np.asarray(pq @ pk.T), np.asarray(dense),
+                    atol=1e-4, rtol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(4, 64),
+    m=st.integers(4, 64),
+    dim=st.sampled_from([1, 2, 3]),
+    weighted=st.booleans(),
+    seed=st.integers(0, 5),
+)
+def test_spatial_factors_exact(n, m, dim, weighted, seed):
+    """Example 3.5: rank-3·dim factorization of −α‖x_i − x_j‖²."""
+    rng = np.random.default_rng(seed)
+    xq = jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32))
+    xk = jnp.asarray(rng.normal(size=(m, dim)).astype(np.float32))
+    alpha = (
+        jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32))
+        if weighted else None
+    )
+    dense = decomp.spatial_bias(xq, xk, alpha)
+    pq, pk = decomp.spatial_factors(xq, xk, alpha)
+    assert pq.shape == (n, 3 * dim)
+    assert_allclose(np.asarray(pq @ pk.T), np.asarray(dense),
+                    atol=1e-4, rtol=1e-4)
+
+
+def test_cos_mult_factors_exact():
+    dense = decomp.cos_mult_bias(37, 53)
+    pq, pk = decomp.cos_mult_factors(37, 53)
+    assert pq.shape == (37, 2)
+    assert_allclose(np.asarray(pq @ pk.T), np.asarray(dense), atol=1e-5)
+
+
+def test_alibi_slopes_geometric():
+    s = decomp.alibi_slopes(8)
+    assert s.shape == (8,)
+    ratios = s[1:] / s[:-1]
+    assert_allclose(ratios, ratios[0], rtol=1e-6)
+    assert s[-1] == pytest.approx(2.0**-8)
+
+
+# --------------------------------------------------------------------------
+# SVD decomposition + energy accounting (Remark 3.8 / Figures 6/8)
+# --------------------------------------------------------------------------
+
+
+def test_svd_factors_reconstruct_lowrank_exactly():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=(48, 6)).astype(np.float32)
+    b = rng.normal(size=(64, 6)).astype(np.float32)
+    bias = jnp.asarray(a @ b.T)
+    pq, pk = decomp.svd_factors(bias, 6)
+    assert_allclose(np.asarray(pq @ pk.T), np.asarray(bias),
+                    atol=1e-3, rtol=1e-3)
+
+
+def test_svd_rank_truncation_error_decreases():
+    bias = jnp.asarray(decomp.swin_relative_bias((8, 8), 1, seed=1)[0])
+    errs = [
+        decomp.reconstruction_error(bias, *decomp.svd_factors(bias, r))
+        for r in (1, 2, 4, 8, 16, 32)
+    ]
+    assert all(e1 >= e2 - 1e-6 for e1, e2 in zip(errs, errs[1:]))
+    assert errs[-1] < 0.1
+
+
+def test_energy_monotone_and_normalized():
+    bias = np.random.default_rng(2).normal(size=(32, 32)).astype(np.float32)
+    cum = decomp.energy(bias)
+    assert np.all(np.diff(cum) >= -1e-7)
+    assert cum[-1] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_rank_for_energy_consistent_with_energy():
+    bias = decomp.swin_relative_bias((8, 8), 1, seed=3)[0]
+    r = decomp.rank_for_energy(bias, 0.99)
+    cum = decomp.energy(bias)
+    assert cum[r - 1] >= 0.99
+    if r > 1:
+        assert cum[r - 2] < 0.99
+
+
+def test_swin_synthetic_bias_is_lowrank():
+    """The synthetic 'trained' tables must exhibit the paper's observed
+    spectral decay (Figure 8): 99% energy well below full rank."""
+    bias = decomp.swin_relative_bias((12, 12), 4, seed=0)  # N=144
+    for h in range(4):
+        r = decomp.rank_for_energy(bias[h], 0.99)
+        assert r <= 40, f"head {h} rank@99% = {r}, not low-rank"
+
+
+def test_swin_bias_shapes_and_symmetry_structure():
+    wy, wx = 6, 7
+    bias = decomp.swin_relative_bias((wy, wx), 3, seed=0)
+    n = wy * wx
+    assert bias.shape == (3, n, n)
+    # relative-position structure: b[i,i] identical for all i (offset 0,0)
+    diag = np.diagonal(bias[0])
+    assert_allclose(diag, diag[0], atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# neural decomposition (Eq. 5, Appendix G)
+# --------------------------------------------------------------------------
+
+
+def test_neural_decompose_gravity_converges():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, (48, 2)).astype(np.float32))
+    pq, pk, losses = decomp.neural_decompose(
+        decomp.gravity_bias, x, x, rank=16, hidden=32, steps=800, seed=0
+    )
+    # Gravity is the paper's hard case (App. G: "more difficult for
+    # optimization ... still captures the locality"): require steady
+    # optimization progress, not a tight fit.
+    assert losses[-1] < losses[0] * 0.75
+    target = decomp.gravity_bias(x, x)
+    approx = decomp.mlp_apply(pq, x) @ decomp.mlp_apply(pk, x).T
+    rel = float(
+        jnp.linalg.norm(approx - target) / jnp.linalg.norm(target)
+    )
+    assert rel < 0.8
+
+
+def test_neural_decompose_spherical_good_fit():
+    rng = np.random.default_rng(1)
+    lat = rng.uniform(-np.pi / 2, np.pi / 2, 48)
+    lon = rng.uniform(0, 2 * np.pi, 48)
+    x = jnp.asarray(np.stack([lat, lon], -1).astype(np.float32))
+    pq, pk, losses = decomp.neural_decompose(
+        decomp.spherical_bias, x, x, rank=32, hidden=48, steps=400, seed=0
+    )
+    target = decomp.spherical_bias(x, x)
+    approx = decomp.mlp_apply(pq, x) @ decomp.mlp_apply(pk, x).T
+    rel = float(jnp.linalg.norm(approx - target) / jnp.linalg.norm(target))
+    assert rel < 0.25  # paper: spherical decomposes very well
+
+
+def test_neural_decompose_exact_lowrank_target():
+    """A target that IS rank-R must be fit to high accuracy."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(40, 3)).astype(np.float32))
+
+    def target_fn(xq, xk):
+        return -((xq[:, None, :] - xk[None, :, :]) ** 2).sum(-1)
+
+    pq, pk, losses = decomp.neural_decompose(
+        target_fn, x, x, rank=9, hidden=64, steps=800, seed=0
+    )
+    target = target_fn(x, x)
+    approx = decomp.mlp_apply(pq, x) @ decomp.mlp_apply(pk, x).T
+    rel = float(jnp.linalg.norm(approx - target) / jnp.linalg.norm(target))
+    assert rel < 0.15
+
+
+def test_mlp_tokenwise_property():
+    """Remark 3.6: φ̂ is token-wise — permuting rows permutes outputs."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32))
+    p = decomp.mlp_init(jax.random.PRNGKey(0), 4, 16, 8)
+    perm = np.asarray(rng.permutation(16))
+    out = decomp.mlp_apply(p, x)
+    out_perm = decomp.mlp_apply(p, x[perm])
+    assert_allclose(np.asarray(out[perm]), np.asarray(out_perm), atol=1e-6)
+
+
+def test_gravity_and_spherical_bias_values():
+    x = jnp.asarray([[0.0, 0.0], [1.0, 0.0]], jnp.float32)
+    g = decomp.gravity_bias(x, x)
+    assert g[0, 0] == pytest.approx(100.0)  # 1/eps at the diagonal
+    assert g[0, 1] == pytest.approx(1.0 / 1.01, rel=1e-5)
+    # antipodal points on the sphere: distance π
+    p = jnp.asarray([[0.0, 0.0], [0.0, np.pi]], jnp.float32)
+    s = decomp.spherical_bias(p, p)
+    assert s[0, 1] == pytest.approx(np.pi, rel=1e-5)
+    assert s[0, 0] == pytest.approx(0.0, abs=1e-6)

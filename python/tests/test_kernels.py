@@ -1,0 +1,207 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes (N, M, C, block sizes) and dtypes; fixed-seed
+numpy data keeps the sweeps reproducible. Tolerances are f32-accumulation
+level (the kernels accumulate in f32 like the oracle).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import flash_attention as fa
+from compile.kernels import ref
+
+ATOL, RTOL = 2e-5, 2e-5
+
+
+def _data(n, m, c, seed=0, cv=None):
+    rng = np.random.default_rng(seed)
+    cv = cv or c
+    q = rng.normal(size=(n, c)).astype(np.float32)
+    k = rng.normal(size=(m, c)).astype(np.float32)
+    v = rng.normal(size=(m, cv)).astype(np.float32)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+def _factors(n, m, r, seed=1, scale=0.3):
+    rng = np.random.default_rng(seed)
+    pq = (scale * rng.normal(size=(n, r))).astype(np.float32)
+    pk = (scale * rng.normal(size=(m, r))).astype(np.float32)
+    return jnp.asarray(pq), jnp.asarray(pk)
+
+
+# --------------------------------------------------------------------------
+# hypothesis shape sweeps
+# --------------------------------------------------------------------------
+
+shapes = st.tuples(
+    st.sampled_from([16, 24, 48, 64, 96, 128]),   # n
+    st.sampled_from([16, 32, 64, 128]),           # m
+    st.sampled_from([8, 16, 32, 64]),             # c
+)
+blocks = st.sampled_from([16, 32, 64])
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, bq=blocks, bk=blocks, seed=st.integers(0, 3))
+def test_flash_attention_matches_ref(shape, bq, bk, seed):
+    n, m, c = shape
+    q, k, v = _data(n, m, c, seed)
+    out = fa.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    expect = ref.attention(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, bq=blocks, bk=blocks, seed=st.integers(0, 3))
+def test_flash_dense_bias_matches_ref(shape, bq, bk, seed):
+    n, m, c = shape
+    q, k, v = _data(n, m, c, seed)
+    rng = np.random.default_rng(seed + 100)
+    bias = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    out = fa.flash_attention_dense_bias(q, k, v, bias, block_q=bq, block_k=bk)
+    expect = ref.attention(q, k, v, bias=bias)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shapes, r=st.sampled_from([1, 2, 8, 16]), seed=st.integers(0, 3))
+def test_flash_factored_matches_dense(shape, r, seed):
+    """FlashBias fused kernel == dense-bias kernel when b = φ_q φ_kᵀ."""
+    n, m, c = shape
+    q, k, v = _data(n, m, c, seed)
+    pq, pk = _factors(n, m, r, seed)
+    bias = pq @ pk.T
+    out = fa.flash_attention_factored(q, k, v, pq, pk)
+    expect = ref.attention(q, k, v, bias=bias)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([16, 48, 64, 128]),
+    m=st.sampled_from([64, 128]),
+    c=st.sampled_from([16, 64]),
+    seed=st.integers(0, 3),
+)
+def test_flash_causal_rectangular(n, m, c, seed):
+    """Causal mask with N != M (decoder alignment: mask ends at key end)."""
+    if n > m:
+        n = m
+    q, k, v = _data(n, m, c, seed)
+    out = fa.flash_attention(q, k, v, causal=True)
+    expect = ref.attention(q, k, v, causal=True)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes, r=st.sampled_from([2, 8]), seed=st.integers(0, 3))
+def test_flash_factored_causal(shape, r, seed):
+    n, m, c = shape
+    if n > m:
+        n = m
+    q, k, v = _data(n, m, c, seed)
+    pq, pk = _factors(n, m, r, seed)
+    bias = pq @ pk.T
+    out = fa.flash_attention_factored(q, k, v, pq, pk, causal=True)
+    expect = ref.attention(q, k, v, bias=bias, causal=True)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 128]),
+    c=st.sampled_from([16, 64]),
+    slope_exp=st.integers(-8, -1),
+    seed=st.integers(0, 3),
+)
+def test_alibi_jit_kernel(n, c, slope_exp, seed):
+    """Appendix C: in-kernel ALiBi == dense ALiBi bias + causal."""
+    from compile import decomp
+
+    slope = 2.0**slope_exp
+    q, k, v = _data(n, n, c, seed)
+    bias = decomp.alibi_bias(n, n, slope)
+    out = fa.flash_attention_alibi_jit(q, k, v, slope, causal=True)
+    expect = ref.attention(q, k, v, bias=bias, causal=True)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape=shapes, r=st.sampled_from([1, 2, 4]), seed=st.integers(0, 3))
+def test_mult_factored_kernel(shape, r, seed):
+    """Appendix I: multiplicative factored kernel vs Hadamard oracle."""
+    n, m, c = shape
+    q, k, v = _data(n, m, c, seed)
+    pq, pk = _factors(n, m, r, seed, scale=0.5)
+    bias = pq @ pk.T
+    out = fa.flash_attention_mult_factored(q, k, v, pq, pk)
+    expect = ref.attention_multiplicative(q, k, v, bias)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+# --------------------------------------------------------------------------
+# oracle self-consistency
+# --------------------------------------------------------------------------
+
+
+def test_online_softmax_equals_full():
+    q, k, v = _data(64, 96, 32)
+    rng = np.random.default_rng(9)
+    bias = jnp.asarray(rng.normal(size=(64, 96)).astype(np.float32))
+    out = ref.online_softmax_attention(q, k, v, bias=bias, block_k=16)
+    expect = ref.attention(q, k, v, bias=bias)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+def test_eq3_concat_equals_additive_bias():
+    """Equation (3): the concat trick is algebraically exact."""
+    n, m, c, r = 48, 64, 32, 8
+    q, k, v = _data(n, m, c)
+    pq, pk = _factors(n, m, r)
+    bias = pq @ pk.T
+    out = ref.attention_factored(q, k, v, pq, pk)
+    expect = ref.attention(q, k, v, bias=bias)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)
+
+
+def test_eq17_channel_repeat_equals_hadamard():
+    """Appendix I Eq. (17): channel-repeat trick is exact."""
+    n, m, c, r = 32, 48, 16, 2
+    q, k, v = _data(n, m, c)
+    pq, pk = _factors(n, m, r, scale=0.5)
+    bias = pq @ pk.T
+    out = ref.attention_multiplicative_factored(q, k, v, pq, pk)
+    expect = ref.attention_multiplicative(q, k, v, bias)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+def test_extreme_scores_stable():
+    """Online softmax must survive large score magnitudes (no inf/nan)."""
+    n, m, c = 32, 64, 16
+    q, k, v = _data(n, m, c)
+    bias = jnp.full((n, m), 80.0, jnp.float32)
+    out = fa.flash_attention_dense_bias(q, k, v, bias)
+    expect = ref.attention(q, k, v, bias=bias)
+    assert np.isfinite(np.asarray(out)).all()
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-4, rtol=1e-4)
+
+
+def test_single_block_and_multi_block_agree():
+    n, m, c = 64, 64, 32
+    q, k, v = _data(n, m, c)
+    one = fa.flash_attention(q, k, v, block_q=64, block_k=64)
+    many = fa.flash_attention(q, k, v, block_q=16, block_k=16)
+    assert_allclose(np.asarray(one), np.asarray(many), atol=ATOL, rtol=RTOL)
+
+
+def test_value_dim_differs_from_key_dim():
+    q, k, v = _data(32, 64, 16, cv=24)
+    out = fa.flash_attention(q, k, v)
+    expect = ref.attention(q, k, v)
+    assert_allclose(np.asarray(out), np.asarray(expect), atol=ATOL, rtol=RTOL)

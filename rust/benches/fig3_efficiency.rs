@@ -1,0 +1,111 @@
+//! Figure 3: GPU memory + running time vs sequence length, training and
+//! inference, for {pure Flash, Flash w/ dense bias, FlexAttention-like,
+//! FlashBias}.
+//!
+//! Two instruments (DESIGN.md §Hardware-Adaptation):
+//!  * the tiled-execution simulator at the paper's N ∈ {1k..16k} —
+//!    regenerates the *shape* (who wins, crossovers) of all four panels;
+//!  * measured XLA-CPU wall-clock on the compiled artifacts at
+//!    N ∈ {256, 512, 1024} — the same asymptotics on this host.
+
+use flashbias::benchkit::{bench_artifact, iters, paper_reference, Table};
+use flashbias::iomodel::Geometry;
+use flashbias::runtime::Runtime;
+use flashbias::simulator::{
+    simulate_fwd, simulate_train_step, Algorithm, HwModel,
+};
+use flashbias::util::human_bytes;
+
+const ALGS: [(Algorithm, &str); 4] = [
+    (Algorithm::Flash, "pure-flash"),
+    (Algorithm::FlashDenseBias, "flash+bias"),
+    (Algorithm::FlexLike, "flex-like"),
+    (Algorithm::FlashBias(16), "flashbias"),
+];
+
+fn simulated() {
+    let hw = HwModel::default();
+    println!("\n-- simulated (A100-like cost model, H=8 heads, C=64) --");
+    paper_reference(&[
+        "Fig 3(a-b): at N=16384 FlashBias memory 5x smaller (train), 10x \
+         (inference) vs dense-bias/Flex",
+        "Fig 3(c-d): FlashBias 18.6% (train) / 44% (infer) faster than \
+         FlashAttention w/ bias; Flex degrades at long N",
+    ]);
+    for phase in ["inference", "training"] {
+        println!("\n  {phase}: cost (HBM-equivalents) | peak memory");
+        print!("  {:>8}", "N");
+        for (_, name) in ALGS {
+            print!(" | {name:>24}");
+        }
+        println!();
+        for n in [1024usize, 2048, 4096, 8192, 16384] {
+            print!("  {n:>8}");
+            for (alg, _) in ALGS {
+                let r = if alg == Algorithm::Flash { 0 } else { 16 };
+                let g = Geometry::square(n, 64, r, hw.sram_elems);
+                let rep = if phase == "training" {
+                    simulate_train_step(alg, &g, &hw)
+                } else {
+                    simulate_fwd(alg, &g, &hw)
+                };
+                let cost = rep.cost(&hw) * 8.0; // 8 heads
+                print!(
+                    " | {:>11.3e} {:>10}",
+                    cost,
+                    human_bytes(rep.hbm_peak * 8 * 4)
+                );
+            }
+            println!();
+        }
+    }
+}
+
+fn measured() {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\n-- measured: SKIPPED ({e}) --");
+            return;
+        }
+    };
+    let it = iters(10);
+    let mut table = Table::new(
+        "Fig 3 measured (XLA-CPU, plain-Transformer attention micro-op, \
+         H=8, C=64)",
+    );
+    for n in [256usize, 512, 1024] {
+        for variant in ["pure", "dense", "factored", "flexlike"] {
+            let name = format!("attn_{variant}_n{n}");
+            if rt.spec(&name).is_some() {
+                table.row(bench_artifact(&rt, &name, 2, it));
+            }
+        }
+    }
+    // full 8-layer model forward (the paper's actual §4.1 workload)
+    let mut model = Table::new(
+        "Fig 3 measured (XLA-CPU, full 8-layer Transformer fwd, D=512)",
+    );
+    for n in [256usize, 512] {
+        for variant in ["nobias", "dense", "factored", "flexlike"] {
+            let name = format!("plain_{variant}_n{n}");
+            if rt.spec(&name).is_some() {
+                model.row(bench_artifact(&rt, &name, 1, it.min(5)));
+            }
+        }
+    }
+    // training phase (2-layer train step)
+    let mut train = Table::new("Fig 3 measured (train step, 2 layers)");
+    for variant in ["dense", "factored"] {
+        let name = format!("plain_train_{variant}_n256");
+        if rt.spec(&name).is_some() {
+            train.row(bench_artifact(&rt, &name, 1, it.min(5)));
+        }
+    }
+}
+
+fn main() {
+    println!("FIG3: efficiency comparison (memory + time vs N)");
+    simulated();
+    measured();
+}

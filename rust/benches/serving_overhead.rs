@@ -1,0 +1,70 @@
+//! L3 perf bench (EXPERIMENTS.md §Perf): coordinator overhead over raw
+//! PJRT execution — router + batcher + channel + thread hop must cost
+//! <10% of execute time, per the DESIGN.md target.
+//!
+//! Perf-pass finding: on the CPU PJRT backend each execute already uses
+//! the whole core pool, so 2 concurrent workers *contend* (per-execute
+//! wall time ~2x) and buy nothing; 1 worker is the right CPU config.
+//! On a real accelerator pool (1 device per worker) more workers scale.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::benchkit::{bench_fn, iters, Table};
+use flashbias::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use flashbias::runtime::Runtime;
+
+fn main() {
+    println!("SERVING OVERHEAD: coordinator vs raw PJRT");
+    let rt = Arc::new(Runtime::open_default().expect("make artifacts"));
+    let name = "attn_factored_n512";
+    let exe = rt.load_warm(name).expect("warm");
+    let inputs = rt.example_inputs(name).expect("inputs");
+    let it = iters(20);
+
+    let mut table = Table::new("per-request latency (attn_factored_n512)");
+    table.row(bench_fn("raw PJRT execute", 3, it, || {
+        exe.run(&inputs).expect("run");
+    }));
+    let raw = table.rows()[0].stats.mean();
+
+    let batch = 8usize;
+    for workers in [1usize, 2] {
+        let mut coord = Coordinator::new(
+            rt.clone(),
+            CoordinatorConfig {
+                batcher: BatcherConfig {
+                    max_batch: batch,
+                    max_wait: Duration::from_millis(1),
+                },
+                workers,
+                queue_depth: 64,
+            },
+        );
+        let label = format!("coordinator (batch=8, {workers} worker(s))");
+        let row = bench_fn(&label, 1, (it / 4).max(3), || {
+            let reqs: Vec<_> = (0..batch)
+                .map(|_| (name.to_string(), inputs.clone()))
+                .collect();
+            let out = coord.run_burst(reqs).expect("burst");
+            assert_eq!(out.len(), batch);
+        });
+        let per_req = row.stats.mean() / batch as f64;
+        table.row(row);
+        println!(
+            "  workers={workers}: per-request {} vs raw {} -> overhead \
+             {:+.1}%",
+            flashbias::util::human_secs(per_req),
+            flashbias::util::human_secs(raw),
+            (per_req / raw - 1.0) * 100.0
+        );
+        println!("  {}", coord.metrics().summary());
+        coord.shutdown();
+    }
+    println!(
+        "\n  (CPU PJRT saturates all cores per execute; 1 worker avoids \
+         pool contention — the <10% overhead target applies there)"
+    );
+}

@@ -1,0 +1,92 @@
+//! Table 11 (Appendix F): the spatial-distance bias *matters* — attention
+//! without it is substantially less accurate, and only FlashBias can run
+//! the biased model at scale (dense OOMs).
+//!
+//! Reproduction: a Nadaraya–Watson-style attention surrogate over a car
+//! hull — attention with the distance bias is a locality-aware kernel
+//! interpolator; without the bias it over-smooths. We fit physics fields
+//! at held-out points and report relative L2, pure vs biased (factored),
+//! plus the memory wall that kills the dense variant at N=32186.
+
+use flashbias::attention::{self, AttnOpts};
+use flashbias::benchkit::paper_reference;
+use flashbias::bias::{synthetic_car_cloud, ExactBias, SpatialDistance};
+use flashbias::iomodel;
+use flashbias::tensor::Tensor;
+use flashbias::util::{human_bytes, Xoshiro256};
+
+/// Smooth synthetic pressure field over the hull.
+fn field(p: &Tensor) -> Tensor {
+    Tensor::from_fn(&[p.shape()[0], 1], |ix| {
+        let (x, _y, z) = (p.at2(ix[0], 0), p.at2(ix[0], 1), p.at2(ix[0], 2));
+        x.tanh() * (-z * z).exp()
+    })
+}
+
+fn main() {
+    println!("TABLE 11: accuracy benefit of the spatial-distance bias");
+    paper_reference(&[
+        "Table 11 (N=32186): pure attention pressure err 0.0838, w/ bias",
+        "0.0706 (−15.7%); C_D err 0.0173 -> 0.0113 (−65.3% rel. promo.);",
+        "dense-bias methods OOM — only FlashBias trains",
+    ]);
+
+    let n_train = 2048;
+    let n_test = 512;
+    let cloud = synthetic_car_cloud(n_train + n_test, 0);
+    let train = cloud.slice_rows(0, n_train);
+    let test = cloud.slice_rows(n_train, n_train + n_test);
+    let y_train = field(&train);
+    let y_test = field(&test);
+
+    // attention interpolator: q = test coords proj, k = train coords proj,
+    // v = train field values; the bias adds locality
+    let mut rng = Xoshiro256::new(1);
+    let proj = Tensor::randn(&[3, 16], 0.6, &mut rng);
+    let q = test.matmul(&proj);
+    let k = train.matmul(&proj);
+    let opts = AttnOpts::default();
+
+    let pred_pure = attention::attention(&q, &k, &y_train, None, &opts);
+    // weighted distance bias, exact rank-9 factorization (Example 3.5)
+    let alpha: Vec<f32> = vec![8.0; n_test];
+    let bias = SpatialDistance::new(test.clone(), train.clone(),
+                                    Some(alpha));
+    let (pq, pk) = bias.factors();
+    let pred_biased =
+        attention::attention_factored(&q, &k, &y_train, &pq, &pk, &opts);
+
+    let err_pure = pred_pure.rel_err(&y_test);
+    let err_biased = pred_biased.rel_err(&y_test);
+    println!(
+        "\n  surface-field rel L2: pure {err_pure:.4} vs w/ spatial bias \
+         {err_biased:.4} ({:.1}% better)",
+        (1.0 - err_biased / err_pure) * 100.0
+    );
+    assert!(
+        err_biased < err_pure * 0.8,
+        "bias must improve accuracy: {err_biased} !< 0.8*{err_pure}"
+    );
+
+    // drag-coefficient-style aggregate (mean field over the surface)
+    let cd = |pred: &Tensor| pred.data().iter().sum::<f32>() / n_test as f32;
+    let cd_true = cd(&y_test);
+    let cd_err = |pred: &Tensor| ((cd(pred) - cd_true) / cd_true).abs();
+    println!(
+        "  aggregate (C_D-like) rel err: pure {:.4} vs biased {:.4}",
+        cd_err(&pred_pure),
+        cd_err(&pred_biased)
+    );
+
+    // the memory wall at the paper's N (why dense "OOM"s)
+    println!("\n  memory wall at N=32186 (8 heads, f32):");
+    let n = 32186usize;
+    let dense_b = iomodel::dense_storage_elems(n, n) * 4 * 8;
+    let fact_b = iomodel::factored_storage_elems(n, n, 9) * 4 * 8;
+    println!(
+        "    dense bias + gradient: {} | FlashBias factors: {} ({}x)",
+        human_bytes(2 * dense_b as u64),
+        human_bytes(2 * fact_b as u64),
+        dense_b / fact_b
+    );
+}

@@ -1,0 +1,76 @@
+//! Table 5: Transformer PDE solver with *learnable* weighted 3-D distance
+//! bias — training + inference memory/time across N; dense methods OOM,
+//! FlashBias scales.
+//!
+//! Paper (per 100 iters): train N=8192 FlashAttention 12.8GB/15.4s, OOM at
+//! 16384+; FlashBias 1.46GB/4.54s ... 2.97GB/51.1s at 32186. Inference
+//! FlexAttention OOM ≥16384; FlashBias 1.13GB/12.7s at 32186.
+
+use flashbias::benchkit::{bench_artifact, iters, paper_reference, Table};
+use flashbias::iomodel::Geometry;
+use flashbias::runtime::Runtime;
+use flashbias::simulator::{
+    simulate_fwd, simulate_train_step, Algorithm, HwModel,
+};
+use flashbias::util::human_bytes;
+
+fn main() {
+    println!("TABLE 5: PDE solver, learnable spatial-distance bias");
+    paper_reference(&[
+        "Table 5 train (GB / s-per-100it): FA 12.8/15.4 OOM OOM;",
+        "  FlashBias 1.46/4.54  2.02/14.7  2.97/51.1 at N=8192/16384/32186",
+        "Table 5 infer: FlexAttention 21.9GB/184s@8192, OOM beyond;",
+        "  FlashBias 0.98/1.22  1.03/3.48  1.13/12.7",
+    ]);
+
+    // simulated at the paper's N (8 heads, C=128, R=9, per train step)
+    let hw = HwModel::default();
+    println!("\n-- simulated peak memory (8 heads, C=128, R=9) --");
+    println!("  {:>8} | {:>24} | {:>24}", "N", "dense (train)",
+             "flashbias (train)");
+    for n in [8192usize, 16384, 32186] {
+        let g = Geometry::square(n, 128, 9, hw.sram_elems);
+        let dense = simulate_train_step(Algorithm::FlashDenseBias, &g, &hw);
+        let fact = simulate_train_step(Algorithm::FlashBias(9), &g, &hw);
+        println!(
+            "  {n:>8} | {:>24} | {:>24}",
+            human_bytes(dense.hbm_peak * 8 * 4),
+            human_bytes(fact.hbm_peak * 8 * 4)
+        );
+    }
+    println!("  (dense quadratic-gradient storage is what OOMs in Table 5)");
+
+    println!("\n-- simulated inference cost --");
+    for n in [8192usize, 16384, 32186] {
+        let g = Geometry::square(n, 128, 9, hw.sram_elems);
+        let dense = simulate_fwd(Algorithm::FlashDenseBias, &g, &hw);
+        let flex = simulate_fwd(Algorithm::FlexLike, &g, &hw);
+        let fact = simulate_fwd(Algorithm::FlashBias(9), &g, &hw);
+        println!(
+            "  N={n:>6}: dense {:.3e}  flex {:.3e}  flashbias {:.3e} \
+             (ratio dense/fb {:.2}x)",
+            dense.cost(&hw),
+            flex.cost(&hw),
+            fact.cost(&hw),
+            dense.cost(&hw) / fact.cost(&hw)
+        );
+    }
+
+    // measured on XLA-CPU at the built sizes
+    let rt = Runtime::open_default().expect("make artifacts");
+    let it = iters(6);
+    let mut table = Table::new("measured fwd (N=512, H=8, 2 layers)");
+    for variant in ["nobias", "dense", "factored"] {
+        let name = format!("pde_{variant}_n512");
+        if rt.spec(&name).is_some() {
+            table.row(bench_artifact(&rt, &name, 1, it));
+        }
+    }
+    let mut train = Table::new("measured train step (N=512)");
+    for variant in ["dense", "factored"] {
+        let name = format!("pde_train_{variant}_n512");
+        if rt.spec(&name).is_some() {
+            train.row(bench_artifact(&rt, &name, 1, it.min(4)));
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! Host-side reference attention — the ground truth the PJRT artifacts and
+//! the simulator are cross-checked against.
+//!
+//! All variants of Eq. (1)/(3)/(15): standard, dense additive bias,
+//! factored bias via the Eq. (3) concat trick, causal masking,
+//! multiplicative bias, and a block-streamed online-softmax version that
+//! mirrors the exact recurrence of the L1 Pallas kernels.
+
+use crate::tensor::Tensor;
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Options for [`attention`].
+#[derive(Clone, Debug, Default)]
+pub struct AttnOpts {
+    pub causal: bool,
+}
+
+fn causal_allowed(i: usize, j: usize, n: usize, m: usize) -> bool {
+    // decoder alignment: the mask ends at the key end (j − (m−n) ≤ i)
+    j as isize - (m as isize - n as isize) <= i as isize
+}
+
+/// Reference attention `softmax(q kᵀ/√C + b) v` with optional causal mask.
+///
+/// `q: (N, C)`, `k`, `v: (M, C)`, `bias: (N, M)` or `None`.
+pub fn attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bias: Option<&Tensor>,
+    opts: &AttnOpts,
+) -> Tensor {
+    let (n, c) = (q.shape()[0], q.shape()[1]);
+    let m = k.shape()[0];
+    assert_eq!(k.shape()[1], c);
+    assert_eq!(v.shape()[0], m);
+    if let Some(b) = bias {
+        assert_eq!(b.shape(), &[n, m], "bias shape");
+    }
+    let scale = 1.0 / (c as f32).sqrt();
+    let mut s = q.matmul_t(k).scale(scale);
+    if let Some(b) = bias {
+        s = s.add(b);
+    }
+    if opts.causal {
+        for i in 0..n {
+            for j in 0..m {
+                if !causal_allowed(i, j, n, m) {
+                    s.set2(i, j, NEG_INF);
+                }
+            }
+        }
+    }
+    s.softmax_rows().matmul(v)
+}
+
+/// FlashBias Eq. (3): factored bias folded into the dot product via
+/// channel concatenation. Exactly equivalent to
+/// `attention(q, k, v, Some(φ_q φ_kᵀ))`.
+pub fn attention_factored(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    phi_q: &Tensor,
+    phi_k: &Tensor,
+    opts: &AttnOpts,
+) -> Tensor {
+    let c = q.shape()[1];
+    let sqrt_c = (c as f32).sqrt();
+    // [q | √C·φ_q] [k | φ_k]ᵀ / √C  ==  q kᵀ/√C + φ_q φ_kᵀ
+    let q_ext = q.concat_cols(&phi_q.scale(sqrt_c));
+    let k_ext = k.concat_cols(phi_k);
+    let (n, m) = (q.shape()[0], k.shape()[0]);
+    let mut s = q_ext.matmul_t(&k_ext).scale(1.0 / sqrt_c);
+    if opts.causal {
+        for i in 0..n {
+            for j in 0..m {
+                if !causal_allowed(i, j, n, m) {
+                    s.set2(i, j, NEG_INF);
+                }
+            }
+        }
+    }
+    s.softmax_rows().matmul(v)
+}
+
+/// Appendix I Eq. (15): multiplicative (Hadamard) bias.
+pub fn attention_multiplicative(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bias: &Tensor,
+) -> Tensor {
+    let c = q.shape()[1];
+    let scale = 1.0 / (c as f32).sqrt();
+    let s = q.matmul_t(k).scale(scale).mul(bias);
+    s.softmax_rows().matmul(v)
+}
+
+/// Appendix I Eq. (17): multiplicative factored bias via the
+/// channel-repeat trick — `q' = [q⊙φ_q,1, …, q⊙φ_q,R] ∈ R^{N×CR}`.
+pub fn attention_multiplicative_factored(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    phi_q: &Tensor,
+    phi_k: &Tensor,
+) -> Tensor {
+    let (n, c) = (q.shape()[0], q.shape()[1]);
+    let m = k.shape()[0];
+    let r = phi_q.shape()[1];
+    let expand = |x: &Tensor, phi: &Tensor, rows: usize| {
+        Tensor::from_fn(&[rows, r * c], |ix| {
+            let (i, col) = (ix[0], ix[1]);
+            let (rr, cc) = (col / c, col % c);
+            x.at2(i, cc) * phi.at2(i, rr)
+        })
+    };
+    let q_ext = expand(q, phi_q, n);
+    let k_ext = expand(k, phi_k, m);
+    let scale = 1.0 / (c as f32).sqrt();
+    let s = q_ext.matmul_t(&k_ext).scale(scale);
+    s.softmax_rows().matmul(v)
+}
+
+/// Block-streamed online-softmax attention (the FlashAttention-2 /
+/// Milakov–Gimelshein recurrence) — validates the accumulator algebra the
+/// Pallas kernels implement, independent of XLA.
+pub fn online_softmax_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bias: Option<&Tensor>,
+    block_k: usize,
+) -> Tensor {
+    let (n, c) = (q.shape()[0], q.shape()[1]);
+    let m = k.shape()[0];
+    let cv = v.shape()[1];
+    let scale = 1.0 / (c as f32).sqrt();
+    let mut m_acc = vec![NEG_INF; n];
+    let mut l_acc = vec![0.0f32; n];
+    let mut o_acc = vec![0.0f32; n * cv];
+    let mut start = 0;
+    while start < m {
+        let stop = (start + block_k).min(m);
+        for i in 0..n {
+            // scores for this block row
+            let mut s_blk = Vec::with_capacity(stop - start);
+            let qrow = q.row(i);
+            for j in start..stop {
+                let krow = k.row(j);
+                let mut dot = 0.0f32;
+                for (a, b) in qrow.iter().zip(krow) {
+                    dot += a * b;
+                }
+                let mut sij = dot * scale;
+                if let Some(b) = bias {
+                    sij += b.at2(i, j);
+                }
+                s_blk.push(sij);
+            }
+            let blk_max =
+                s_blk.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let m_new = m_acc[i].max(blk_max);
+            let alpha = (m_acc[i] - m_new).exp();
+            let mut l_new = l_acc[i] * alpha;
+            for o in &mut o_acc[i * cv..(i + 1) * cv] {
+                *o *= alpha;
+            }
+            for (jj, &sij) in s_blk.iter().enumerate() {
+                let p = (sij - m_new).exp();
+                l_new += p;
+                let vrow = v.row(start + jj);
+                for (o, &vv) in
+                    o_acc[i * cv..(i + 1) * cv].iter_mut().zip(vrow)
+                {
+                    *o += p * vv;
+                }
+            }
+            m_acc[i] = m_new;
+            l_acc[i] = l_new;
+        }
+        start = stop;
+    }
+    for i in 0..n {
+        let inv = 1.0 / l_acc[i];
+        for o in &mut o_acc[i * cv..(i + 1) * cv] {
+            *o *= inv;
+        }
+    }
+    Tensor::new(&[n, cv], o_acc)
+}
+
+/// Multi-head wrapper: `q/k/v: (H, N, C)`, optional `bias: (H, N, M)`.
+pub fn mha(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    bias: Option<&Tensor>,
+    opts: &AttnOpts,
+) -> Tensor {
+    let h = q.shape()[0];
+    let heads: Vec<Tensor> = (0..h)
+        .map(|i| {
+            attention(
+                &q.index0(i),
+                &k.index0(i),
+                &v.index0(i),
+                bias.map(|b| b.index0(i)).as_ref(),
+                opts,
+            )
+        })
+        .collect();
+    Tensor::stack(&heads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn data(n: usize, m: usize, c: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Xoshiro256::new(seed);
+        (
+            Tensor::randn(&[n, c], 1.0, &mut rng),
+            Tensor::randn(&[m, c], 1.0, &mut rng),
+            Tensor::randn(&[m, c], 1.0, &mut rng),
+        )
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        let (q, k, v) = data(8, 12, 4, 0);
+        let out = attention(&q, &k, &v, None, &AttnOpts::default());
+        // each output row lies within [min, max] of v per column
+        for j in 0..4 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for i in 0..12 {
+                lo = lo.min(v.at2(i, j));
+                hi = hi.max(v.at2(i, j));
+            }
+            for i in 0..8 {
+                assert!(out.at2(i, j) >= lo - 1e-5);
+                assert!(out.at2(i, j) <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn factored_equals_dense_bias() {
+        let (q, k, v) = data(10, 14, 8, 1);
+        let mut rng = Xoshiro256::new(2);
+        let pq = Tensor::randn(&[10, 3], 0.3, &mut rng);
+        let pk = Tensor::randn(&[14, 3], 0.3, &mut rng);
+        let bias = pq.matmul_t(&pk);
+        let dense = attention(&q, &k, &v, Some(&bias), &AttnOpts::default());
+        let fact =
+            attention_factored(&q, &k, &v, &pq, &pk, &AttnOpts::default());
+        assert!(fact.allclose(&dense, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn factored_equals_dense_bias_causal() {
+        let (q, k, v) = data(9, 9, 8, 3);
+        let mut rng = Xoshiro256::new(4);
+        let pq = Tensor::randn(&[9, 2], 0.3, &mut rng);
+        let pk = Tensor::randn(&[9, 2], 0.3, &mut rng);
+        let bias = pq.matmul_t(&pk);
+        let opts = AttnOpts { causal: true };
+        let dense = attention(&q, &k, &v, Some(&bias), &opts);
+        let fact = attention_factored(&q, &k, &v, &pq, &pk, &opts);
+        assert!(fact.allclose(&dense, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn causal_mask_zeroes_future() {
+        let (q, k, v) = data(6, 6, 4, 5);
+        let out = attention(&q, &k, &v, None, &AttnOpts { causal: true });
+        // first query can only attend to first key → out[0] == v[0]
+        for j in 0..4 {
+            assert!((out.at2(0, j) - v.at2(0, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn causal_rectangular_alignment() {
+        // N=2 queries vs M=4 keys: query 0 sees keys 0..=2, query 1 all 4.
+        let (q, k, v) = data(2, 4, 4, 6);
+        let out = attention(&q, &k, &v, None, &AttnOpts { causal: true });
+        // reference: manual mask
+        let scale = 1.0 / 2.0;
+        let mut s = q.matmul_t(&k).scale(scale);
+        s.set2(0, 3, NEG_INF); // only key 3 masked for query 0
+        let expect = s.softmax_rows().matmul(&v);
+        assert!(out.allclose(&expect, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn online_softmax_matches_full() {
+        let (q, k, v) = data(7, 33, 8, 7);
+        let mut rng = Xoshiro256::new(8);
+        let bias = Tensor::randn(&[7, 33], 1.0, &mut rng);
+        let full = attention(&q, &k, &v, Some(&bias), &AttnOpts::default());
+        for block_k in [1, 4, 16, 33, 64] {
+            let streamed =
+                online_softmax_attention(&q, &k, &v, Some(&bias), block_k);
+            assert!(streamed.allclose(&full, 1e-4, 1e-4),
+                    "block_k={block_k}");
+        }
+    }
+
+    #[test]
+    fn multiplicative_factored_equals_dense() {
+        let (q, k, v) = data(8, 10, 4, 9);
+        let mut rng = Xoshiro256::new(10);
+        let pq = Tensor::randn(&[8, 2], 0.5, &mut rng);
+        let pk = Tensor::randn(&[10, 2], 0.5, &mut rng);
+        let bias = pq.matmul_t(&pk);
+        let dense = attention_multiplicative(&q, &k, &v, &bias);
+        let fact = attention_multiplicative_factored(&q, &k, &v, &pq, &pk);
+        assert!(fact.allclose(&dense, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn extreme_bias_is_stable() {
+        let (q, k, v) = data(5, 8, 4, 11);
+        let bias = Tensor::full(&[5, 8], 200.0);
+        let out = attention(&q, &k, &v, Some(&bias), &AttnOpts::default());
+        assert!(out.data().iter().all(|x| x.is_finite()));
+        let streamed = online_softmax_attention(&q, &k, &v, Some(&bias), 4);
+        assert!(streamed.allclose(&out, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn mha_shape_and_per_head_equivalence() {
+        let mut rng = Xoshiro256::new(12);
+        let q = Tensor::randn(&[3, 6, 4], 1.0, &mut rng);
+        let k = Tensor::randn(&[3, 8, 4], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 8, 4], 1.0, &mut rng);
+        let out = mha(&q, &k, &v, None, &AttnOpts::default());
+        assert_eq!(out.shape(), &[3, 6, 4]);
+        let h1 = attention(&q.index0(1), &k.index0(1), &v.index0(1), None,
+                           &AttnOpts::default());
+        assert!(out.index0(1).allclose(&h1, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn alibi_bias_attention_via_exact_factors() {
+        use crate::bias::{Alibi, ExactBias};
+        let (q, k, v) = data(12, 12, 8, 13);
+        let alibi = Alibi::new(12, 12, 0.25);
+        let dense = attention(&q, &k, &v, Some(&alibi.dense()),
+                              &AttnOpts { causal: true });
+        let (pq, pk) = alibi.factors();
+        let fact = attention_factored(&q, &k, &v, &pq, &pk,
+                                      &AttnOpts { causal: true });
+        assert!(fact.allclose(&dense, 1e-4, 1e-4));
+    }
+}

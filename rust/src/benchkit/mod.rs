@@ -1,0 +1,184 @@
+//! Shared harness for the paper-table/figure benches (no criterion in the
+//! vendored universe; each bench binary is `harness = false` and drives
+//! this module).
+//!
+//! Conventions: every bench prints (a) the paper's reference numbers for
+//! the row it regenerates, (b) the measured/simulated numbers, so
+//! `cargo bench | tee bench_output.txt` is the EXPERIMENTS.md source.
+
+use crate::runtime::{HostValue, Runtime};
+use crate::util::{human_bytes, human_secs, Stats, Timer};
+
+/// Measured row: label + per-iteration seconds + optional bytes.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub stats: Stats,
+    pub bytes: Option<u64>,
+    pub note: String,
+}
+
+/// Pretty table printer.
+pub struct Table {
+    title: String,
+    rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        Self {
+            title: title.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, row: Row) {
+        let mem = row
+            .bytes
+            .map(|b| human_bytes(b))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "  {:38} mean={:>12} p50={:>12} mem={:>10} {}",
+            row.label,
+            human_secs(row.stats.mean()),
+            human_secs(row.stats.p50()),
+            mem,
+            row.note
+        );
+        self.rows.push(row);
+    }
+
+    /// Δ against a baseline row (the paper's Table 3 presentation).
+    pub fn delta(&self, label: &str, baseline: &str) -> Option<f64> {
+        let get = |l: &str| {
+            self.rows
+                .iter()
+                .find(|r| r.label == l)
+                .map(|r| r.stats.mean())
+        };
+        Some(get(label)? - get(baseline)?)
+    }
+
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    pub fn rows(&self) -> &[Row] {
+        &self.rows
+    }
+}
+
+/// Bench one artifact: load, warm up, time `iters` executions of its
+/// example inputs. Returns per-iteration stats.
+pub fn bench_artifact(rt: &Runtime, name: &str, warmup: usize,
+                      iters: usize) -> Row {
+    let exe = rt.load(name).expect("load artifact");
+    let inputs = rt.example_inputs(name).expect("example inputs");
+    let stats = crate::util::bench_loop(warmup, iters, || {
+        exe.run(&inputs).expect("execute");
+    });
+    let bytes = input_bytes(&inputs);
+    Row {
+        label: name.to_string(),
+        stats,
+        bytes: Some(bytes),
+        note: String::new(),
+    }
+}
+
+/// Total bytes of a host input set (the HBM-resident request payload).
+pub fn input_bytes(inputs: &[HostValue]) -> u64 {
+    inputs
+        .iter()
+        .map(|v| match v {
+            HostValue::F32(t) => t.size_bytes() as u64,
+            HostValue::I32(d, _) => (d.len() * 4) as u64,
+        })
+        .sum()
+}
+
+/// Bytes of only the *bias-carrying* inputs (indices beyond activations'
+/// q/k/v), used to report the paper's bias-storage columns.
+pub fn bias_input_bytes(rt: &Runtime, name: &str) -> u64 {
+    let spec = rt.spec(name).expect("spec");
+    let acts = spec.activation_indices();
+    spec.inputs
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| acts.contains(i))
+        .map(|(_, s)| (s.numel() * s.dtype.size_bytes()) as u64)
+        .sum()
+}
+
+/// Time a closure `iters` times (for simulator/host-math benches).
+pub fn bench_fn<F: FnMut()>(label: &str, warmup: usize, iters: usize,
+                            f: F) -> Row {
+    let stats = crate::util::bench_loop(warmup, iters, f);
+    Row {
+        label: label.to_string(),
+        stats,
+        bytes: None,
+        note: String::new(),
+    }
+}
+
+/// Print a paper-reference block so bench output is self-describing.
+pub fn paper_reference(lines: &[&str]) {
+    println!("  paper reference:");
+    for l in lines {
+        println!("    | {l}");
+    }
+}
+
+/// Quick single-shot timing (for expensive one-off steps like SVD).
+pub fn time_once<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t = Timer::start();
+    let out = f();
+    println!("  {label}: {}", human_secs(t.elapsed_secs()));
+    out
+}
+
+/// Standard iteration counts, overridable via FLASHBIAS_BENCH_ITERS for
+/// quick smoke runs.
+pub fn iters(default: usize) -> usize {
+    std::env::var("FLASHBIAS_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_delta() {
+        let mut t = Table::new("test");
+        let mut s1 = Stats::new();
+        s1.push(1.0);
+        let mut s2 = Stats::new();
+        s2.push(3.0);
+        t.row(Row {
+            label: "base".into(),
+            stats: s1,
+            bytes: None,
+            note: String::new(),
+        });
+        t.row(Row {
+            label: "x".into(),
+            stats: s2,
+            bytes: Some(1024),
+            note: "n".into(),
+        });
+        assert_eq!(t.delta("x", "base"), Some(2.0));
+        assert_eq!(t.delta("missing", "base"), None);
+        assert_eq!(t.rows().len(), 2);
+        assert_eq!(t.title(), "test");
+    }
+
+    #[test]
+    fn iters_env_override() {
+        assert_eq!(iters(7), 7);
+    }
+}

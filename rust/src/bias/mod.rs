@@ -1,0 +1,522 @@
+//! The paper's bias zoo: dense generators plus exact factorizations.
+//!
+//! Each bias type knows how to (a) materialize its dense `N×M` matrix,
+//! (b) emit exact factor strips `φ_q (N×R)` / `φ_k (M×R)` when a
+//! closed-form decomposition exists (Table 1a), and (c) report its exact
+//! rank. Mirrors `python/compile/decomp.py`; the cross-layer tests pin
+//! both against each other through the AOT artifacts.
+
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+/// A bias with an exact closed-form factorization (Table 1a).
+pub trait ExactBias {
+    /// Dense `N×M` bias matrix.
+    fn dense(&self) -> Tensor;
+    /// Exact factor strips such that `φ_q φ_kᵀ == dense()`.
+    fn factors(&self) -> (Tensor, Tensor);
+    /// Exact rank R of the factorization.
+    fn rank(&self) -> usize;
+    fn shape(&self) -> (usize, usize);
+}
+
+// ---------------------------------------------------------------------------
+// ALiBi (Example 3.4)
+// ---------------------------------------------------------------------------
+
+/// ALiBi bias `b[i,j] = slope · (j − i)` (pre-causal-mask). R = 2.
+#[derive(Clone, Debug)]
+pub struct Alibi {
+    pub n: usize,
+    pub m: usize,
+    pub slope: f32,
+}
+
+impl Alibi {
+    pub fn new(n: usize, m: usize, slope: f32) -> Self {
+        Self { n, m, slope }
+    }
+
+    /// Geometric per-head slopes 2^(−8h/H) from the ALiBi paper.
+    pub fn head_slopes(num_heads: usize) -> Vec<f32> {
+        (1..=num_heads)
+            .map(|h| 2f32.powf(-8.0 * h as f32 / num_heads as f32))
+            .collect()
+    }
+}
+
+impl ExactBias for Alibi {
+    fn dense(&self) -> Tensor {
+        Tensor::from_fn(&[self.n, self.m], |ix| {
+            self.slope * (ix[1] as f32 - ix[0] as f32)
+        })
+    }
+
+    fn factors(&self) -> (Tensor, Tensor) {
+        // φ_q(i) = [−slope·i, slope], φ_k(j) = [1, j]
+        let pq = Tensor::from_fn(&[self.n, 2], |ix| match ix[1] {
+            0 => -self.slope * ix[0] as f32,
+            _ => self.slope,
+        });
+        let pk = Tensor::from_fn(&[self.m, 2], |ix| match ix[1] {
+            0 => 1.0,
+            _ => ix[0] as f32,
+        });
+        (pq, pk)
+    }
+
+    fn rank(&self) -> usize {
+        2
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spatial squared distance (Example 3.5 / §4.4 PDE solver)
+// ---------------------------------------------------------------------------
+
+/// Weighted spatial distance bias `b[i,j] = −α_i · ‖x_i − x_j‖²`.
+/// Exact rank 3·dim (9 for 3-D). `alpha = None` → unweighted.
+#[derive(Clone, Debug)]
+pub struct SpatialDistance {
+    /// (N, dim) query positions.
+    pub xq: Tensor,
+    /// (M, dim) key positions.
+    pub xk: Tensor,
+    /// Optional per-query weights (N,).
+    pub alpha: Option<Vec<f32>>,
+}
+
+impl SpatialDistance {
+    pub fn new(xq: Tensor, xk: Tensor, alpha: Option<Vec<f32>>) -> Self {
+        assert_eq!(xq.shape()[1], xk.shape()[1], "dim mismatch");
+        if let Some(a) = &alpha {
+            assert_eq!(a.len(), xq.shape()[0], "alpha length mismatch");
+        }
+        Self { xq, xk, alpha }
+    }
+
+    fn weight(&self, i: usize) -> f32 {
+        self.alpha.as_ref().map_or(1.0, |a| a[i])
+    }
+
+    fn dim(&self) -> usize {
+        self.xq.shape()[1]
+    }
+}
+
+impl ExactBias for SpatialDistance {
+    fn dense(&self) -> Tensor {
+        let (n, m) = self.shape();
+        let dim = self.dim();
+        Tensor::from_fn(&[n, m], |ix| {
+            let (i, j) = (ix[0], ix[1]);
+            let mut d2 = 0.0f32;
+            for d in 0..dim {
+                let diff = self.xq.at2(i, d) - self.xk.at2(j, d);
+                d2 += diff * diff;
+            }
+            -self.weight(i) * d2
+        })
+    }
+
+    fn factors(&self) -> (Tensor, Tensor) {
+        // per-dim triple: φ_q = [−α·x², −α, 2α·x], φ_k = [1, x², x]
+        let (n, m) = self.shape();
+        let dim = self.dim();
+        let r = 3 * dim;
+        let pq = Tensor::from_fn(&[n, r], |ix| {
+            let (i, c) = (ix[0], ix[1]);
+            let (d, slot) = (c / 3, c % 3);
+            let x = self.xq.at2(i, d);
+            let a = self.weight(i);
+            match slot {
+                0 => -a * x * x,
+                1 => -a,
+                _ => 2.0 * a * x,
+            }
+        });
+        let pk = Tensor::from_fn(&[m, r], |ix| {
+            let (j, c) = (ix[0], ix[1]);
+            let (d, slot) = (c / 3, c % 3);
+            let x = self.xk.at2(j, d);
+            match slot {
+                0 => 1.0,
+                1 => x * x,
+                _ => x,
+            }
+        });
+        (pq, pk)
+    }
+
+    fn rank(&self) -> usize {
+        3 * self.dim()
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.xq.shape()[0], self.xk.shape()[0])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multiplicative cos bias (Example I.1)
+// ---------------------------------------------------------------------------
+
+/// Multiplicative bias `b[i,j] = cos(i − j)`; exact rank 2 via the
+/// angle-difference identity.
+#[derive(Clone, Debug)]
+pub struct CosMultiplicative {
+    pub n: usize,
+    pub m: usize,
+}
+
+impl ExactBias for CosMultiplicative {
+    fn dense(&self) -> Tensor {
+        Tensor::from_fn(&[self.n, self.m], |ix| {
+            (ix[0] as f32 - ix[1] as f32).cos()
+        })
+    }
+
+    fn factors(&self) -> (Tensor, Tensor) {
+        let pq = Tensor::from_fn(&[self.n, 2], |ix| {
+            let i = ix[0] as f32;
+            if ix[1] == 0 { i.cos() } else { i.sin() }
+        });
+        let pk = Tensor::from_fn(&[self.m, 2], |ix| {
+            let j = ix[0] as f32;
+            if ix[1] == 0 { j.cos() } else { j.sin() }
+        });
+        (pq, pk)
+    }
+
+    fn rank(&self) -> usize {
+        2
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.n, self.m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense-only generators (neural-decomposition targets, Appendix G)
+// ---------------------------------------------------------------------------
+
+/// Gravity bias `1/(‖x_i − x_j‖² + eps)` (Appendix G Eq. 13). Not exactly
+/// low-rank; used as a neural-decomposition target.
+pub fn gravity_bias(xq: &Tensor, xk: &Tensor, eps: f32) -> Tensor {
+    let (n, m) = (xq.shape()[0], xk.shape()[0]);
+    let dim = xq.shape()[1];
+    Tensor::from_fn(&[n, m], |ix| {
+        let mut d2 = 0.0f32;
+        for d in 0..dim {
+            let diff = xq.at2(ix[0], d) - xk.at2(ix[1], d);
+            d2 += diff * diff;
+        }
+        1.0 / (d2 + eps)
+    })
+}
+
+/// Haversine great-circle distance bias (Appendix G Eq. 14).
+/// Columns of `x` are (latitude, longitude) in radians.
+pub fn spherical_bias(xq: &Tensor, xk: &Tensor) -> Tensor {
+    let (n, m) = (xq.shape()[0], xk.shape()[0]);
+    Tensor::from_fn(&[n, m], |ix| {
+        let (lat1, lon1) = (xq.at2(ix[0], 0), xq.at2(ix[0], 1));
+        let (lat2, lon2) = (xk.at2(ix[1], 0), xk.at2(ix[1], 1));
+        let s1 = ((lat1 - lat2) / 2.0).sin().powi(2);
+        let s2 = lat1.cos() * lat2.cos() * ((lon1 - lon2) / 2.0).sin().powi(2);
+        2.0 * (s1 + s2).clamp(0.0, 1.0).sqrt().asin()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic "trained" relative-position tables (Swin / Pangu substitution)
+// ---------------------------------------------------------------------------
+
+/// Synthetic learned 2-D relative-position bias with realistic spectra:
+/// a sum of separable Gaussians over the offset table (smooth, low-rank)
+/// plus white noise (the full-rank tail), gathered into (N, N), N = wy·wx.
+/// Mirrors `decomp.swin_relative_bias` on the python side.
+pub fn swin_relative_bias(
+    window: (usize, usize),
+    num_heads: usize,
+    seed: u64,
+    smooth_terms: usize,
+    noise: f32,
+) -> Vec<Tensor> {
+    let (wy, wx) = window;
+    let n = wy * wx;
+    let (ty, tx) = (2 * wy - 1, 2 * wx - 1);
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::with_capacity(num_heads);
+    for _ in 0..num_heads {
+        // build the (2wy−1, 2wx−1) offset table
+        let mut table = vec![0.0f32; ty * tx];
+        for _ in 0..smooth_terms {
+            let cy = rng.normal() * wy as f64 / 2.0;
+            let cx = rng.normal() * wx as f64 / 2.0;
+            let sy = rng.uniform(wy as f64 / 4.0, wy as f64);
+            let sx = rng.uniform(wx as f64 / 4.0, wx as f64);
+            let amp = rng.normal();
+            for (idx, t) in table.iter_mut().enumerate() {
+                let dy = (idx / tx) as f64 - (wy as f64 - 1.0);
+                let dx = (idx % tx) as f64 - (wx as f64 - 1.0);
+                let g = (-((dy - cy) / sy).powi(2)).exp()
+                    * (-((dx - cx) / sx).powi(2)).exp();
+                *t += (amp * g) as f32;
+            }
+        }
+        for t in table.iter_mut() {
+            *t += noise * rng.normal_f32();
+        }
+        // gather into (n, n) by relative offset
+        let bias = Tensor::from_fn(&[n, n], |ix| {
+            let (iy, ixx) = (ix[0] / wx, ix[0] % wx);
+            let (jy, jx) = (ix[1] / wx, ix[1] % wx);
+            let dy = iy as isize - jy as isize + (wy as isize - 1);
+            let dx = ixx as isize - jx as isize + (wx as isize - 1);
+            table[dy as usize * tx + dx as usize]
+        });
+        out.push(bias);
+    }
+    out
+}
+
+/// Synthetic learned 3-D relative-position bias (Pangu-Weather window
+/// 2×6×12 = 144). Same construction as the 2-D version, in 3-D.
+pub fn pangu_relative_bias(
+    window: (usize, usize, usize),
+    num_heads: usize,
+    seed: u64,
+    smooth_terms: usize,
+    noise: f32,
+) -> Vec<Tensor> {
+    let (wz, wy, wx) = window;
+    let n = wz * wy * wx;
+    let (tz, ty, tx) = (2 * wz - 1, 2 * wy - 1, 2 * wx - 1);
+    let mut rng = Xoshiro256::new(seed);
+    let mut out = Vec::with_capacity(num_heads);
+    for _ in 0..num_heads {
+        let mut table = vec![0.0f32; tz * ty * tx];
+        for _ in 0..smooth_terms {
+            let cz = rng.normal() * wz as f64 / 2.0;
+            let cy = rng.normal() * wy as f64 / 2.0;
+            let cx = rng.normal() * wx as f64 / 2.0;
+            let sz = rng.uniform(wz as f64 / 3.0, wz as f64);
+            let sy = rng.uniform(wy as f64 / 3.0, wy as f64);
+            let sx = rng.uniform(wx as f64 / 3.0, wx as f64);
+            let amp = rng.normal();
+            for (idx, t) in table.iter_mut().enumerate() {
+                let dz = (idx / (ty * tx)) as f64 - (wz as f64 - 1.0);
+                let dy = ((idx / tx) % ty) as f64 - (wy as f64 - 1.0);
+                let dx = (idx % tx) as f64 - (wx as f64 - 1.0);
+                let g = (-((dz - cz) / sz).powi(2)).exp()
+                    * (-((dy - cy) / sy).powi(2)).exp()
+                    * (-((dx - cx) / sx).powi(2)).exp();
+                *t += (amp * g) as f32;
+            }
+        }
+        for t in table.iter_mut() {
+            *t += noise * rng.normal_f32();
+        }
+        let coord = |flat: usize| -> (usize, usize, usize) {
+            (flat / (wy * wx), (flat / wx) % wy, flat % wx)
+        };
+        let bias = Tensor::from_fn(&[n, n], |ix| {
+            let (iz, iy, ixx) = coord(ix[0]);
+            let (jz, jy, jx) = coord(ix[1]);
+            let dz = (iz as isize - jz as isize + tz as isize / 2) as usize;
+            let dy = (iy as isize - jy as isize + ty as isize / 2) as usize;
+            let dx = (ixx as isize - jx as isize + tx as isize / 2) as usize;
+            table[dz * ty * tx + dy * tx + dx]
+        });
+        out.push(bias);
+    }
+    out
+}
+
+/// Synthetic car-like hull point cloud (DrivAer stand-in for the PDE
+/// solver, §4.4): elongated ellipsoid body + cabin bump + wheel clusters.
+pub fn synthetic_car_cloud(n: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::new(seed);
+    let mut data = Vec::with_capacity(n * 3);
+    for _ in 0..n {
+        let u = rng.next_f64();
+        let t = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        let x = 4.0 * (u - 0.5);
+        let ry = 0.8 * (1.0 - (2.0 * u - 1.0).powi(2)).max(0.0).sqrt() + 0.05;
+        let y = ry * t.cos();
+        let mut z = 0.5 * ry * t.sin().abs();
+        let cabin = (-(x - 0.2) * (x - 0.2) / 0.5).exp();
+        z += 0.35 * cabin * t.sin().max(0.0);
+        for wx in [-1.2, 1.2] {
+            for wy in [-0.6, 0.6] {
+                let d = (x - wx).powi(2) + (y - wy).powi(2);
+                if d < 0.08 {
+                    z = -0.2 + 0.1 * rng.next_f64();
+                }
+            }
+        }
+        data.push((x + 0.01 * rng.normal()) as f32);
+        data.push((y + 0.01 * rng.normal()) as f32);
+        data.push((z + 0.01 * rng.normal()) as f32);
+    }
+    Tensor::new(&[n, 3], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    fn assert_exact<B: ExactBias>(b: &B, tol: f32) {
+        let dense = b.dense();
+        let (pq, pk) = b.factors();
+        assert_eq!(pq.shape()[1], b.rank());
+        assert_eq!(pk.shape()[1], b.rank());
+        let recon = pq.matmul_t(&pk);
+        assert!(
+            recon.allclose(&dense, tol, tol),
+            "max err {}",
+            recon.sub(&dense).max_abs()
+        );
+    }
+
+    #[test]
+    fn alibi_factorization_exact() {
+        for (n, m, slope) in [(16, 16, 0.5), (7, 23, 0.0625), (64, 32, 1.0)] {
+            assert_exact(&Alibi::new(n, m, slope), 1e-4);
+        }
+    }
+
+    #[test]
+    fn alibi_head_slopes_geometric() {
+        let s = Alibi::head_slopes(8);
+        assert_eq!(s.len(), 8);
+        assert!((s[7] - 2f32.powi(-8)).abs() < 1e-9);
+        for w in s.windows(2) {
+            assert!((w[1] / w[0] - s[0]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn spatial_factorization_exact_unweighted() {
+        let mut rng = Xoshiro256::new(0);
+        let xq = Tensor::randn(&[20, 3], 1.0, &mut rng);
+        let xk = Tensor::randn(&[15, 3], 1.0, &mut rng);
+        let b = SpatialDistance::new(xq, xk, None);
+        assert_eq!(b.rank(), 9);
+        assert_exact(&b, 1e-4);
+    }
+
+    #[test]
+    fn spatial_factorization_exact_weighted() {
+        let mut rng = Xoshiro256::new(1);
+        let xq = Tensor::randn(&[12, 3], 1.0, &mut rng);
+        let alpha: Vec<f32> =
+            (0..12).map(|_| rng.uniform(0.5, 2.0) as f32).collect();
+        let b = SpatialDistance::new(xq.clone(), xq, Some(alpha));
+        assert_exact(&b, 1e-4);
+    }
+
+    #[test]
+    fn spatial_2d_has_rank_6() {
+        let mut rng = Xoshiro256::new(2);
+        let x = Tensor::randn(&[10, 2], 1.0, &mut rng);
+        let b = SpatialDistance::new(x.clone(), x, None);
+        assert_eq!(b.rank(), 6);
+        assert_exact(&b, 1e-4);
+    }
+
+    #[test]
+    fn spatial_diagonal_zero_when_self() {
+        let mut rng = Xoshiro256::new(3);
+        let x = Tensor::randn(&[8, 3], 1.0, &mut rng);
+        let b = SpatialDistance::new(x.clone(), x, None).dense();
+        for i in 0..8 {
+            assert!(b.at2(i, i).abs() < 1e-6);
+        }
+        // distances are non-positive with our sign convention
+        assert!(b.data().iter().all(|&v| v <= 1e-6));
+    }
+
+    #[test]
+    fn cos_mult_factorization_exact() {
+        assert_exact(&CosMultiplicative { n: 37, m: 53 }, 1e-4);
+    }
+
+    #[test]
+    fn gravity_bias_diagonal_dominant() {
+        let mut rng = Xoshiro256::new(4);
+        let x = Tensor::randn(&[10, 2], 1.0, &mut rng);
+        let g = gravity_bias(&x, &x, 0.01);
+        for i in 0..10 {
+            assert!((g.at2(i, i) - 100.0).abs() < 1e-3);
+            for j in 0..10 {
+                assert!(g.at2(i, j) <= 100.0 + 1e-3);
+                assert!(g.at2(i, j) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn spherical_bias_properties() {
+        // antipodal points: distance π; self-distance 0; symmetric
+        let x = Tensor::new(&[2, 2], vec![0.0, 0.0, 0.0, std::f32::consts::PI]);
+        let s = spherical_bias(&x, &x);
+        assert!((s.at2(0, 1) - std::f32::consts::PI).abs() < 1e-4);
+        assert!(s.at2(0, 0).abs() < 1e-6);
+        assert!((s.at2(0, 1) - s.at2(1, 0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn swin_bias_is_lowrank_and_relative() {
+        let biases = swin_relative_bias((8, 8), 2, 0, 6, 0.02);
+        assert_eq!(biases.len(), 2);
+        for b in &biases {
+            assert_eq!(b.shape(), &[64, 64]);
+            // diagonal entries all equal (offset 0,0)
+            let d0 = b.at2(0, 0);
+            for i in 0..64 {
+                assert!((b.at2(i, i) - d0).abs() < 1e-6);
+            }
+            // spectral decay: 99% energy well below full rank
+            let r = linalg::rank_for_energy(b, 0.99);
+            assert!(r <= 32, "rank@99% = {r}");
+        }
+    }
+
+    #[test]
+    fn pangu_bias_shape_and_rank() {
+        let biases = pangu_relative_bias((2, 6, 12), 2, 0, 5, 0.02);
+        for b in &biases {
+            assert_eq!(b.shape(), &[144, 144]);
+            let r = linalg::rank_for_energy(b, 0.99);
+            assert!(r <= 80, "rank@99% = {r}");
+        }
+    }
+
+    #[test]
+    fn car_cloud_bounds() {
+        let pts = synthetic_car_cloud(500, 0);
+        assert_eq!(pts.shape(), &[500, 3]);
+        for i in 0..500 {
+            assert!(pts.at2(i, 0).abs() < 2.5);
+            assert!(pts.at2(i, 1).abs() < 1.5);
+            assert!(pts.at2(i, 2) > -0.5 && pts.at2(i, 2) < 1.5);
+        }
+    }
+
+    #[test]
+    fn car_cloud_deterministic_by_seed() {
+        let a = synthetic_car_cloud(50, 7);
+        let b = synthetic_car_cloud(50, 7);
+        let c = synthetic_car_cloud(50, 8);
+        assert!(a.allclose(&b, 0.0, 0.0));
+        assert!(!a.allclose(&c, 1e-6, 1e-6));
+    }
+}

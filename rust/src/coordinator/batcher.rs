@@ -1,0 +1,199 @@
+//! Dynamic batcher: requests accumulate per artifact and flush when the
+//! batch is full or the oldest request's deadline expires — the standard
+//! latency/throughput knob of serving systems (vLLM-style), applied here
+//! to amortize PJRT dispatch and queue overhead.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Flush when a bucket reaches this many requests.
+    pub max_batch: usize,
+    /// Flush when the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A flushed group of same-artifact requests.
+#[derive(Debug)]
+pub struct Batch {
+    pub artifact: String,
+    pub requests: Vec<Request>,
+    pub formed: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Per-artifact accumulation queues.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    config: BatcherConfig,
+    pending: HashMap<String, Vec<Request>>,
+}
+
+impl DynamicBatcher {
+    pub fn new(config: BatcherConfig) -> Self {
+        Self {
+            config,
+            pending: HashMap::new(),
+        }
+    }
+
+    /// Number of requests currently waiting.
+    pub fn pending_len(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    /// Add a request; returns a full batch if this push filled one.
+    pub fn push(&mut self, req: Request) -> Option<Batch> {
+        let queue = self.pending.entry(req.artifact.clone()).or_default();
+        queue.push(req);
+        if queue.len() >= self.config.max_batch {
+            let artifact = queue[0].artifact.clone();
+            let requests = std::mem::take(queue);
+            return Some(Batch {
+                artifact,
+                requests,
+                formed: Instant::now(),
+            });
+        }
+        None
+    }
+
+    /// Flush every bucket whose oldest request exceeded `max_wait`.
+    pub fn flush_due(&mut self, now: Instant) -> Vec<Batch> {
+        let max_wait = self.config.max_wait;
+        let due: Vec<String> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .map(|r| now.duration_since(r.enqueued) >= max_wait)
+                    .unwrap_or(false)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        due.into_iter()
+            .filter_map(|k| self.take_bucket(&k))
+            .collect()
+    }
+
+    /// Flush everything regardless of deadlines.
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let keys: Vec<String> = self.pending.keys().cloned().collect();
+        keys.into_iter()
+            .filter_map(|k| self.take_bucket(&k))
+            .collect()
+    }
+
+    fn take_bucket(&mut self, key: &str) -> Option<Batch> {
+        let queue = self.pending.get_mut(key)?;
+        if queue.is_empty() {
+            return None;
+        }
+        let requests = std::mem::take(queue);
+        Some(Batch {
+            artifact: key.to_string(),
+            requests,
+            formed: Instant::now(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, artifact: &str) -> Request {
+        Request {
+            id,
+            artifact: artifact.to_string(),
+            inputs: vec![],
+            enqueued: Instant::now(),
+        }
+    }
+
+    fn req_at(id: u64, artifact: &str, enqueued: Instant) -> Request {
+        Request {
+            id,
+            artifact: artifact.to_string(),
+            inputs: vec![],
+            enqueued,
+        }
+    }
+
+    #[test]
+    fn flushes_on_max_batch() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+        });
+        assert!(b.push(req(0, "a")).is_none());
+        assert!(b.push(req(1, "a")).is_none());
+        let batch = b.push(req(2, "a")).expect("should flush");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(batch.artifact, "a");
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn buckets_are_per_artifact() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        assert!(b.push(req(0, "a")).is_none());
+        assert!(b.push(req(1, "b")).is_none());
+        assert_eq!(b.pending_len(), 2);
+        let batch = b.push(req(2, "a")).expect("a flushes");
+        assert_eq!(batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 2]);
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn deadline_flush() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        });
+        let old = Instant::now() - Duration::from_millis(50);
+        b.push(req_at(0, "a", old));
+        b.push(req(1, "b")); // fresh
+        let due = b.flush_due(Instant::now());
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].artifact, "a");
+        assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn flush_all_drains() {
+        let mut b = DynamicBatcher::new(BatcherConfig::default());
+        b.push(req(0, "a"));
+        b.push(req(1, "b"));
+        b.push(req(2, "b"));
+        let batches = b.flush_all();
+        assert_eq!(batches.iter().map(Batch::len).sum::<usize>(), 3);
+        assert_eq!(b.pending_len(), 0);
+        assert!(b.flush_all().is_empty());
+    }
+}

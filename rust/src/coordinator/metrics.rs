@@ -1,0 +1,163 @@
+//! Serving metrics: counters + latency distributions for each pipeline
+//! stage, safe to share across worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::Stats;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batch_sizes: Mutex<Stats>,
+    queue_secs: Mutex<Stats>,
+    exec_secs: Mutex<Stats>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.lock().unwrap().push(size as f64);
+    }
+
+    pub fn on_complete(&self, queue: Duration, exec: Duration, ok: bool) {
+        if ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+        self.queue_secs.lock().unwrap().push(queue.as_secs_f64());
+        self.exec_secs.lock().unwrap().push(exec.as_secs_f64());
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.batch_sizes.lock().unwrap().mean()
+    }
+
+    pub fn queue_stats(&self) -> Stats {
+        self.queue_secs.lock().unwrap().clone()
+    }
+
+    pub fn exec_stats(&self) -> Stats {
+        self.exec_secs.lock().unwrap().clone()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let q = self.queue_stats();
+        let e = self.exec_stats();
+        format!(
+            "submitted={} completed={} failed={} batches={} \
+             mean_batch={:.2} queue_p50={} exec_p50={} exec_p99={}",
+            self.submitted(),
+            self.completed(),
+            self.failed(),
+            self.batches(),
+            self.mean_batch_size(),
+            crate::util::human_secs(q.p50()),
+            crate::util::human_secs(e.p50()),
+            crate::util::human_secs(e.p99()),
+        )
+    }
+
+    /// Metrics as JSON (for the CLI's --metrics-out).
+    pub fn to_json(&self) -> crate::jsonlite::Json {
+        use crate::jsonlite::Json;
+        let q = self.queue_stats();
+        let e = self.exec_stats();
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted() as f64)),
+            ("completed", Json::num(self.completed() as f64)),
+            ("failed", Json::num(self.failed() as f64)),
+            ("batches", Json::num(self.batches() as f64)),
+            ("mean_batch_size", Json::num(self.mean_batch_size())),
+            ("queue_p50_s", Json::num(q.p50())),
+            ("queue_p99_s", Json::num(q.p99())),
+            ("exec_p50_s", Json::num(e.p50())),
+            ("exec_p99_s", Json::num(e.p99())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_track() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(2);
+        m.on_complete(Duration::from_millis(1), Duration::from_millis(2),
+                      true);
+        m.on_complete(Duration::from_millis(3), Duration::from_millis(4),
+                      false);
+        assert_eq!(m.submitted(), 2);
+        assert_eq!(m.completed(), 1);
+        assert_eq!(m.failed(), 1);
+        assert_eq!(m.batches(), 1);
+        assert_eq!(m.mean_batch_size(), 2.0);
+        assert!(m.exec_stats().mean() > 0.0);
+    }
+
+    #[test]
+    fn json_and_summary_render() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_batch(1);
+        m.on_complete(Duration::from_millis(1), Duration::from_millis(1),
+                      true);
+        let j = m.to_json();
+        assert_eq!(j.get("submitted").as_usize(), Some(1));
+        assert!(m.summary().contains("completed=1"));
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        m.on_submit();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.submitted(), 400);
+    }
+}

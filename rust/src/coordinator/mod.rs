@@ -1,0 +1,193 @@
+//! L3 coordinator: the serving layer in front of the PJRT runtime.
+//!
+//! FlashBias itself is a kernel-layer contribution, so the coordinator is
+//! the thin-but-real serving runtime a deployment needs around it:
+//!
+//! * [`router`] — shape-bucket routing: a request for sequence length N is
+//!   routed to the smallest compiled artifact bucket ≥ N (with padding),
+//!   per (family, variant).
+//! * [`selector`] — decomposition-strategy selection implementing the
+//!   paper's Table 1 decision procedure (exact / SVD / neural / dense
+//!   fallback when the rank test fails, Appendix J).
+//! * [`batcher`] — dynamic batching: requests accumulate per bucket and
+//!   flush on max-batch or deadline, amortizing dispatch overhead.
+//! * [`worker`] — a thread pool executing flushed batches on the shared
+//!   PJRT runtime; bounded queues give backpressure.
+//! * [`metrics`] — latency/throughput counters for every stage.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod selector;
+pub mod worker;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{HostValue, Runtime};
+
+pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
+pub use metrics::Metrics;
+pub use router::{RouteKey, Router};
+pub use selector::{BiasClass, StrategySelector};
+
+/// A unit of work: run `artifact` on `inputs`.
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub artifact: String,
+    pub inputs: Vec<HostValue>,
+    pub enqueued: Instant,
+}
+
+/// Execution result for one request.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub artifact: String,
+    pub outputs: Result<Vec<HostValue>>,
+    /// Time from submit to flush (batching wait).
+    pub queue_time: Duration,
+    /// Pure execute time.
+    pub exec_time: Duration,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+    /// Bounded depth of the dispatch queue (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            queue_depth: 64,
+        }
+    }
+}
+
+/// The assembled serving stack.
+pub struct Coordinator {
+    runtime: Arc<Runtime>,
+    batcher: DynamicBatcher,
+    pool: worker::WorkerPool,
+    responses: Receiver<Response>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    pub fn new(runtime: Arc<Runtime>, config: CoordinatorConfig) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let (pool, responses) = worker::WorkerPool::spawn(
+            runtime.clone(),
+            config.workers,
+            config.queue_depth,
+            metrics.clone(),
+        );
+        Self {
+            runtime,
+            batcher: DynamicBatcher::new(config.batcher),
+            pool,
+            responses,
+            metrics,
+            next_id: AtomicU64::new(0),
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Submit one request; may flush a batch to the workers. Returns the
+    /// request id. Errors if the artifact is unknown or the dispatch
+    /// queue is full (backpressure).
+    pub fn submit(&mut self, artifact: &str,
+                  inputs: Vec<HostValue>) -> Result<u64> {
+        if self.runtime.spec(artifact).is_none() {
+            return Err(anyhow!("unknown artifact {artifact}"));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            artifact: artifact.to_string(),
+            inputs,
+            enqueued: Instant::now(),
+        };
+        self.metrics.on_submit();
+        if let Some(batch) = self.batcher.push(req) {
+            self.pool.dispatch(batch)?;
+        }
+        Ok(id)
+    }
+
+    /// Flush any batches whose deadline has passed (call periodically, or
+    /// after the last submit of a burst).
+    pub fn flush_due(&mut self) -> Result<()> {
+        for batch in self.batcher.flush_due(Instant::now()) {
+            self.pool.dispatch(batch)?;
+        }
+        Ok(())
+    }
+
+    /// Force-flush everything.
+    pub fn flush_all(&mut self) -> Result<()> {
+        for batch in self.batcher.flush_all() {
+            self.pool.dispatch(batch)?;
+        }
+        Ok(())
+    }
+
+    /// Receive the next response, waiting up to `timeout`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        match self.responses.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+
+    /// Convenience: submit a burst, flush, and collect all responses.
+    pub fn run_burst(&mut self, reqs: Vec<(String, Vec<HostValue>)>)
+                     -> Result<Vec<Response>> {
+        let n = reqs.len();
+        for (artifact, inputs) in reqs {
+            self.submit(&artifact, inputs)?;
+        }
+        self.flush_all()?;
+        let mut out = Vec::with_capacity(n);
+        let deadline = Instant::now() + Duration::from_secs(600);
+        while out.len() < n {
+            let remaining = deadline
+                .checked_duration_since(Instant::now())
+                .ok_or_else(|| anyhow!("burst timed out"))?;
+            match self.recv_timeout(remaining.min(Duration::from_secs(5))) {
+                Some(r) => out.push(r),
+                None if Instant::now() >= deadline => {
+                    return Err(anyhow!("burst timed out"));
+                }
+                None => continue,
+            }
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    /// Shut down workers (drains in-flight batches).
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+    }
+}

@@ -1,0 +1,186 @@
+//! Shape-bucket router.
+//!
+//! Compiled PJRT executables are shape-specialized, so a request for
+//! sequence length N must run on an artifact compiled for some bucket
+//! N_b ≥ N (padding the inputs). The router indexes the manifest by
+//! (family, variant) and picks the smallest adequate bucket — the same
+//! discipline serving systems use for bucketed static shapes.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::Runtime;
+
+/// Routing key: artifact family + variant (e.g. ("attn", "factored")).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RouteKey {
+    pub family: String,
+    pub variant: String,
+}
+
+impl RouteKey {
+    pub fn new(family: &str, variant: &str) -> Self {
+        Self {
+            family: family.to_string(),
+            variant: variant.to_string(),
+        }
+    }
+}
+
+/// Maps (family, variant, n) → artifact name.
+#[derive(Debug, Default)]
+pub struct Router {
+    // key → sorted (bucket_n → artifact name)
+    buckets: BTreeMap<RouteKey, BTreeMap<usize, String>>,
+}
+
+impl Router {
+    /// Build from a runtime's manifest.
+    pub fn from_runtime(rt: &Runtime) -> Self {
+        let mut router = Router::default();
+        for name in rt.names() {
+            let spec = rt.spec(name).unwrap();
+            if spec.family().is_empty() {
+                continue;
+            }
+            router.insert(
+                RouteKey::new(spec.family(), spec.variant()),
+                spec.seq_len(),
+                name,
+            );
+        }
+        router
+    }
+
+    pub fn insert(&mut self, key: RouteKey, n: usize, artifact: &str) {
+        self.buckets
+            .entry(key)
+            .or_default()
+            .insert(n, artifact.to_string());
+    }
+
+    /// Smallest bucket with capacity ≥ n. Returns (artifact, bucket_n).
+    pub fn route(&self, key: &RouteKey, n: usize) -> Option<(&str, usize)> {
+        self.buckets
+            .get(key)?
+            .range(n..)
+            .next()
+            .map(|(&bn, name)| (name.as_str(), bn))
+    }
+
+    /// The largest bucket for a key (capacity probe).
+    pub fn max_bucket(&self, key: &RouteKey) -> Option<usize> {
+        self.buckets
+            .get(key)?
+            .keys()
+            .next_back()
+            .copied()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &RouteKey> {
+        self.buckets.keys()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+/// Pad a 2-D-or-3-D f32 tensor's sequence axis (second-to-last) with
+/// zeros up to `target`. Used when routing pads a request into a bucket.
+pub fn pad_seq(t: &crate::tensor::Tensor, target: usize)
+               -> crate::tensor::Tensor {
+    let shape = t.shape();
+    let rank = shape.len();
+    assert!(rank >= 2, "pad_seq needs rank ≥ 2");
+    let seq_axis = rank - 2;
+    let n = shape[seq_axis];
+    assert!(target >= n, "target {target} < current {n}");
+    if target == n {
+        return t.clone();
+    }
+    let mut new_shape = shape.to_vec();
+    new_shape[seq_axis] = target;
+    crate::tensor::Tensor::from_fn(&new_shape, |ix| {
+        if ix[seq_axis] < n {
+            let mut src = ix.to_vec();
+            src[seq_axis] = ix[seq_axis];
+            // flatten index manually
+            let mut flat = 0;
+            for (d, &i) in src.iter().enumerate() {
+                flat = flat * shape[d] + i;
+            }
+            t.data()[flat]
+        } else {
+            0.0
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn router() -> Router {
+        let mut r = Router::default();
+        let key = RouteKey::new("attn", "factored");
+        r.insert(key.clone(), 256, "attn_factored_n256");
+        r.insert(key.clone(), 512, "attn_factored_n512");
+        r.insert(key, 1024, "attn_factored_n1024");
+        r
+    }
+
+    #[test]
+    fn routes_to_smallest_adequate_bucket() {
+        let r = router();
+        let key = RouteKey::new("attn", "factored");
+        assert_eq!(r.route(&key, 100).unwrap(), ("attn_factored_n256", 256));
+        assert_eq!(r.route(&key, 256).unwrap(), ("attn_factored_n256", 256));
+        assert_eq!(r.route(&key, 257).unwrap(), ("attn_factored_n512", 512));
+        assert_eq!(r.route(&key, 1024).unwrap(),
+                   ("attn_factored_n1024", 1024));
+    }
+
+    #[test]
+    fn oversize_request_rejected() {
+        let r = router();
+        let key = RouteKey::new("attn", "factored");
+        assert!(r.route(&key, 2048).is_none());
+        assert_eq!(r.max_bucket(&key), Some(1024));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let r = router();
+        assert!(r.route(&RouteKey::new("attn", "nope"), 100).is_none());
+    }
+
+    #[test]
+    fn pad_seq_2d() {
+        let t = Tensor::from_fn(&[3, 2], |ix| (ix[0] * 2 + ix[1]) as f32);
+        let p = pad_seq(&t, 5);
+        assert_eq!(p.shape(), &[5, 2]);
+        assert_eq!(p.at2(2, 1), 5.0);
+        assert_eq!(p.at2(3, 0), 0.0);
+        assert_eq!(p.at2(4, 1), 0.0);
+    }
+
+    #[test]
+    fn pad_seq_3d_heads() {
+        let t = Tensor::from_fn(&[2, 3, 4], |ix| {
+            (ix[0] * 12 + ix[1] * 4 + ix[2]) as f32
+        });
+        let p = pad_seq(&t, 4);
+        assert_eq!(p.shape(), &[2, 4, 4]);
+        // original values preserved
+        assert_eq!(p.index0(1).at2(2, 3), 23.0);
+        // padding zero
+        assert_eq!(p.index0(1).at2(3, 0), 0.0);
+    }
+
+    #[test]
+    fn pad_seq_noop() {
+        let t = Tensor::ones(&[2, 2]);
+        assert!(pad_seq(&t, 2).allclose(&t, 0.0, 0.0));
+    }
+}

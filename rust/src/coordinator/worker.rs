@@ -1,0 +1,113 @@
+//! Worker pool: threads that pull flushed [`Batch`]es from a bounded
+//! channel and execute them on the shared PJRT runtime. The bounded
+//! channel is the backpressure boundary — when workers fall behind,
+//! `dispatch` errors instead of queueing without bound.
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{Batch, Metrics, Response};
+use crate::runtime::Runtime;
+
+enum Job {
+    Run(Batch),
+    Stop,
+}
+
+pub struct WorkerPool {
+    tx: SyncSender<Job>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads sharing one dispatch queue of depth
+    /// `queue_depth`. Returns the pool and the response channel.
+    pub fn spawn(
+        runtime: Arc<Runtime>,
+        workers: usize,
+        queue_depth: usize,
+        metrics: Arc<Metrics>,
+    ) -> (Self, Receiver<Response>) {
+        let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
+        let mut handles = Vec::with_capacity(workers.max(1));
+        for _ in 0..workers.max(1) {
+            let rx = rx.clone();
+            let runtime = runtime.clone();
+            let resp_tx: Sender<Response> = resp_tx.clone();
+            let metrics = metrics.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(Job::Run(batch)) => {
+                        run_batch(&runtime, batch, &resp_tx, &metrics);
+                    }
+                    Ok(Job::Stop) | Err(_) => break,
+                }
+            }));
+        }
+        (Self { tx, handles }, resp_rx)
+    }
+
+    /// Enqueue a batch; errors when the queue is full (backpressure).
+    pub fn dispatch(&self, batch: Batch) -> Result<()> {
+        match self.tx.try_send(Job::Run(batch)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => {
+                Err(anyhow!("dispatch queue full (backpressure)"))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                Err(anyhow!("worker pool stopped"))
+            }
+        }
+    }
+
+    /// Stop all workers after draining in-flight jobs.
+    pub fn shutdown(self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_batch(
+    runtime: &Runtime,
+    batch: Batch,
+    resp_tx: &Sender<Response>,
+    metrics: &Metrics,
+) {
+    metrics.on_batch(batch.len());
+    let exe = runtime.load(&batch.artifact);
+    for req in batch.requests {
+        let queue_time = batch.formed.duration_since(req.enqueued);
+        let t0 = Instant::now();
+        let outputs = match &exe {
+            Ok(exe) => exe.run(&req.inputs),
+            Err(e) => Err(anyhow!("load {}: {e}", batch.artifact)),
+        };
+        let exec_time = t0.elapsed();
+        metrics.on_complete(queue_time, exec_time, outputs.is_ok());
+        let _ = resp_tx.send(Response {
+            id: req.id,
+            artifact: req.artifact,
+            outputs,
+            queue_time,
+            exec_time,
+        });
+    }
+}
+
+// Integration tests that exercise the pool against real artifacts live in
+// rust/tests/coordinator_serving.rs; the pool's queue/backpressure logic
+// is covered there end-to-end.

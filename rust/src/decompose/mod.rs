@@ -1,0 +1,381 @@
+//! Decomposition strategies — the heart of FlashBias (§3.2, Table 1).
+//!
+//! * [`Strategy::Exact`] — closed-form factors from a [`crate::bias::ExactBias`].
+//! * [`Strategy::Svd`] — truncated SVD at a fixed rank or an energy target
+//!   (Remark 3.8), for learned-parameter biases (Swin, Pangu).
+//! * [`Strategy::Neural`] — token-wise MLP factor functions fitted with
+//!   hand-rolled backprop + Adam against Eq. (5), for dynamic biases
+//!   (AlphaFold pair bias, gravity, spherical).
+//! * [`Strategy::Dense`] — keep the dense matrix (the baseline).
+//!
+//! Plus the Appendix J extension: a low-rank + sparse split for biases
+//! with a full-rank tail (e.g. diagonal-heavy matrices).
+
+use crate::linalg;
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+pub mod neural;
+
+pub use neural::{Mlp, NeuralConfig, NeuralDecomposition};
+
+/// How to pick the SVD truncation rank.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankSelect {
+    /// Fixed rank R.
+    Fixed(usize),
+    /// Smallest R keeping ≥ this squared-singular-value energy fraction.
+    Energy(f64),
+}
+
+/// A decomposition strategy for one bias matrix.
+#[derive(Clone, Debug)]
+pub enum Strategy {
+    /// Use caller-provided exact factors (Table 1a).
+    Exact,
+    /// Truncated SVD (Table 1b).
+    Svd(RankSelect),
+    /// Token-wise neural factor functions (Table 1c).
+    Neural(NeuralConfig),
+    /// No decomposition — dense baseline.
+    Dense,
+}
+
+/// The result of decomposing a bias: factor strips + bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Factors {
+    pub phi_q: Tensor,
+    pub phi_k: Tensor,
+    /// Relative Frobenius reconstruction error against the dense bias.
+    pub rel_err: f32,
+    /// Rank actually used.
+    pub rank: usize,
+}
+
+impl Factors {
+    /// Storage in bytes of the factor pair (Thm 3.2: Θ((N+M)·R)).
+    pub fn size_bytes(&self) -> usize {
+        self.phi_q.size_bytes() + self.phi_k.size_bytes()
+    }
+
+    /// Reconstruct the dense bias (test/inspection path only).
+    pub fn reconstruct(&self) -> Tensor {
+        self.phi_q.matmul_t(&self.phi_k)
+    }
+}
+
+/// Decompose a dense bias with the requested strategy.
+///
+/// For [`Strategy::Exact`] pass the closed-form factors through
+/// [`from_exact`] instead (there is no dense matrix to approximate).
+/// [`Strategy::Dense`] returns `None` (no factors — keep the matrix).
+pub fn decompose(bias: &Tensor, strategy: &Strategy,
+                 rng: &mut Xoshiro256) -> Option<Factors> {
+    match strategy {
+        Strategy::Exact => panic!(
+            "Strategy::Exact needs closed-form factors; use from_exact()"
+        ),
+        Strategy::Dense => None,
+        Strategy::Svd(sel) => {
+            let rank = match *sel {
+                RankSelect::Fixed(r) => r,
+                RankSelect::Energy(target) => {
+                    linalg::rank_for_energy(bias, target)
+                }
+            };
+            let (pq, pk) = linalg::svd_factors(bias, rank);
+            let rel_err = linalg::reconstruction_error(bias, &pq, &pk);
+            Some(Factors {
+                phi_q: pq,
+                phi_k: pk,
+                rel_err,
+                rank,
+            })
+        }
+        Strategy::Neural(cfg) => {
+            // Without token sources, use normalized row/col indices as the
+            // source coordinates (positional biases); callers with real
+            // sources should use neural::NeuralDecomposition directly.
+            let (n, m) = (bias.shape()[0], bias.shape()[1]);
+            let xq = Tensor::from_fn(&[n, 1], |ix| ix[0] as f32 / n as f32);
+            let xk = Tensor::from_fn(&[m, 1], |ix| ix[0] as f32 / m as f32);
+            let nd = NeuralDecomposition::fit(&xq, &xk, bias, cfg, rng);
+            let pq = nd.phi_q(&xq);
+            let pk = nd.phi_k(&xk);
+            let rel_err = linalg::reconstruction_error(bias, &pq, &pk);
+            Some(Factors {
+                phi_q: pq,
+                phi_k: pk,
+                rel_err,
+                rank: cfg.rank,
+            })
+        }
+    }
+}
+
+/// Wrap the closed-form factors of an exact bias (rel_err is checked, and
+/// should be ~0 up to f32 rounding).
+pub fn from_exact<B: crate::bias::ExactBias>(bias: &B) -> Factors {
+    let (pq, pk) = bias.factors();
+    let dense = bias.dense();
+    let rel_err = linalg::reconstruction_error(&dense, &pq, &pk);
+    Factors {
+        rank: bias.rank(),
+        phi_q: pq,
+        phi_k: pk,
+        rel_err,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Appendix J: low-rank + sparse split
+// ---------------------------------------------------------------------------
+
+/// Low-rank + sparse decomposition `b ≈ φ_q φ_kᵀ + t` where `t` keeps the
+/// largest-magnitude residual entries (a practical proxy for the convex
+/// program in Appendix J Eq. (20)).
+#[derive(Clone, Debug)]
+pub struct LowRankSparse {
+    pub factors: Factors,
+    /// Sparse residual as (row, col, value) triplets.
+    pub sparse: Vec<(usize, usize, f32)>,
+    pub rel_err: f32,
+}
+
+impl LowRankSparse {
+    /// Alternate: truncated SVD of (b − sparse), then re-pick the sparse
+    /// support from the residual. `sparse_frac` bounds the kept entries.
+    pub fn fit(bias: &Tensor, rank: usize, sparse_frac: f64,
+               iters: usize) -> Self {
+        let (n, m) = (bias.shape()[0], bias.shape()[1]);
+        let keep = ((n * m) as f64 * sparse_frac).ceil() as usize;
+        let mut sparse: Vec<(usize, usize, f32)> = Vec::new();
+        let mut factors = None;
+        for _ in 0..iters.max(1) {
+            // low-rank pass on b − t
+            let mut work = bias.clone();
+            for &(i, j, v) in &sparse {
+                work.set2(i, j, work.at2(i, j) - v);
+            }
+            let (pq, pk) = linalg::svd_factors(&work, rank);
+            let recon = pq.matmul_t(&pk);
+            // sparse pass on b − r: keep top-|keep| magnitudes
+            let resid = bias.sub(&recon);
+            let mut entries: Vec<(usize, usize, f32)> = (0..n)
+                .flat_map(|i| {
+                    let r = &resid;
+                    (0..m).map(move |j| (i, j, r.at2(i, j)))
+                })
+                .collect();
+            entries.sort_by(|a, b| {
+                b.2.abs().partial_cmp(&a.2.abs()).unwrap()
+            });
+            entries.truncate(keep);
+            sparse = entries;
+            let rel_err = {
+                let mut approx = recon.clone();
+                for &(i, j, v) in &sparse {
+                    approx.set2(i, j, approx.at2(i, j) + v);
+                }
+                approx.rel_err(bias)
+            };
+            factors = Some(Factors {
+                rel_err: linalg::reconstruction_error(bias, &pq, &pk),
+                phi_q: pq,
+                phi_k: pk,
+                rank,
+            });
+            let _ = rel_err;
+        }
+        let factors = factors.unwrap();
+        let mut approx = factors.reconstruct();
+        for &(i, j, v) in &sparse {
+            approx.set2(i, j, approx.at2(i, j) + v);
+        }
+        let rel_err = approx.rel_err(bias);
+        Self {
+            factors,
+            sparse,
+            rel_err,
+        }
+    }
+
+    /// Reconstruct the dense approximation.
+    pub fn reconstruct(&self) -> Tensor {
+        let mut out = self.factors.reconstruct();
+        for &(i, j, v) in &self.sparse {
+            out.set2(i, j, out.at2(i, j) + v);
+        }
+        out
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.factors.size_bytes() + self.sparse.len() * 12
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Factor cache (offline SVD happens once; Table 4 notes 4.79 s for SwinV2)
+// ---------------------------------------------------------------------------
+
+/// Cache of decomposed factors keyed by (layer, head)-style string keys.
+#[derive(Default)]
+pub struct FactorCache {
+    map: std::collections::HashMap<String, Factors>,
+}
+
+impl FactorCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get_or_insert_with(
+        &mut self,
+        key: &str,
+        f: impl FnOnce() -> Factors,
+    ) -> &Factors {
+        self.map.entry(key.to_string()).or_insert_with(f)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Factors> {
+        self.map.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Total bytes held by all cached factor pairs.
+    pub fn total_bytes(&self) -> usize {
+        self.map.values().map(Factors::size_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bias::{Alibi, ExactBias, SpatialDistance};
+
+    #[test]
+    fn exact_strategy_zero_error() {
+        let f = from_exact(&Alibi::new(32, 32, 0.25));
+        assert!(f.rel_err < 1e-5);
+        assert_eq!(f.rank, 2);
+        assert_eq!(f.size_bytes(), (32 + 32) * 2 * 4);
+    }
+
+    #[test]
+    fn svd_fixed_rank() {
+        let mut rng = Xoshiro256::new(0);
+        let a = Tensor::randn(&[24, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[20, 4], 1.0, &mut rng);
+        let bias = a.matmul_t(&b);
+        let f = decompose(&bias, &Strategy::Svd(RankSelect::Fixed(4)),
+                          &mut rng)
+            .unwrap();
+        assert!(f.rel_err < 1e-3, "rel_err {}", f.rel_err);
+        assert_eq!(f.rank, 4);
+    }
+
+    #[test]
+    fn svd_energy_target_meets_error_bound() {
+        let biases = crate::bias::swin_relative_bias((8, 8), 1, 3, 6, 0.02);
+        let mut rng = Xoshiro256::new(1);
+        let f = decompose(&biases[0],
+                          &Strategy::Svd(RankSelect::Energy(0.99)), &mut rng)
+            .unwrap();
+        // 99% energy → ≤ 10% Frobenius error (Eckart–Young: sqrt(1−0.99))
+        assert!(f.rel_err <= 0.11, "rel_err {}", f.rel_err);
+        assert!(f.rank < 64);
+    }
+
+    #[test]
+    fn dense_strategy_returns_none() {
+        let mut rng = Xoshiro256::new(2);
+        let bias = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        assert!(decompose(&bias, &Strategy::Dense, &mut rng).is_none());
+    }
+
+    #[test]
+    fn neural_strategy_fits_positional_bias() {
+        // ALiBi-like positional bias from index sources
+        let alibi = Alibi::new(24, 24, 0.5).dense();
+        let mut rng = Xoshiro256::new(3);
+        let cfg = NeuralConfig {
+            rank: 8,
+            hidden: 32,
+            steps: 800,
+            lr: 5e-3,
+            ..NeuralConfig::default()
+        };
+        let f = decompose(&alibi, &Strategy::Neural(cfg), &mut rng).unwrap();
+        assert!(f.rel_err < 0.2, "rel_err {}", f.rel_err);
+    }
+
+    #[test]
+    fn storage_matches_thm_3_2() {
+        // Thm 3.2: factored storage is Θ((N+M)·R) vs dense N·M
+        let mut rng = Xoshiro256::new(4);
+        let spatial = {
+            let x = Tensor::randn(&[64, 3], 1.0, &mut rng);
+            SpatialDistance::new(x.clone(), x, None)
+        };
+        let f = from_exact(&spatial);
+        assert_eq!(f.size_bytes(), (64 + 64) * 9 * 4);
+        let dense_bytes = spatial.dense().size_bytes();
+        assert!(f.size_bytes() < dense_bytes / 3);
+    }
+
+    #[test]
+    fn lowrank_sparse_beats_pure_svd_on_diagonal_heavy() {
+        // Appendix J: a low-rank matrix plus a strong diagonal (the
+        // gravity-style failure mode of pure truncation)
+        let mut rng = Xoshiro256::new(5);
+        let a = Tensor::randn(&[32, 3], 1.0, &mut rng);
+        let mut bias = a.matmul_t(&a);
+        for i in 0..32 {
+            bias.set2(i, i, bias.at2(i, i) + 10.0);
+        }
+        let pure = decompose(&bias, &Strategy::Svd(RankSelect::Fixed(3)),
+                             &mut rng)
+            .unwrap();
+        let split = LowRankSparse::fit(&bias, 3, 32.0 / (32.0 * 32.0), 2);
+        assert!(
+            split.rel_err < pure.rel_err * 0.8,
+            "split {} vs pure {}",
+            split.rel_err,
+            pure.rel_err
+        );
+    }
+
+    #[test]
+    fn lowrank_sparse_reconstruct_consistent() {
+        let mut rng = Xoshiro256::new(6);
+        let bias = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let split = LowRankSparse::fit(&bias, 4, 0.05, 2);
+        let recon = split.reconstruct();
+        assert!((recon.rel_err(&bias) - split.rel_err).abs() < 1e-5);
+        assert!(split.size_bytes() > 0);
+    }
+
+    #[test]
+    fn factor_cache_reuses() {
+        let mut cache = FactorCache::new();
+        let mut calls = 0;
+        for _ in 0..3 {
+            cache.get_or_insert_with("l0.h0", || {
+                calls += 1;
+                from_exact(&Alibi::new(8, 8, 1.0))
+            });
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.total_bytes() > 0);
+        assert!(cache.get("l0.h0").is_some());
+        assert!(cache.get("missing").is_none());
+    }
+}

@@ -1,0 +1,381 @@
+//! Neural decomposition (Table 1c): token-wise MLP factor functions
+//! `φ̂_q, φ̂_k : R^{C'} → R^R` fitted against Eq. (5),
+//! `min ‖φ̂_q(x_q) φ̂_k(x_k)ᵀ − f(x_q, x_k)‖²`,
+//! with hand-rolled backprop + Adam (no autodiff crates in the vendored
+//! universe). Architecture follows Appendix H Table 12: three linear
+//! layers with tanh in between.
+
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+/// Three-layer tanh MLP with Adam state per parameter.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub w1: Tensor,
+    pub b1: Vec<f32>,
+    pub w2: Tensor,
+    pub b2: Vec<f32>,
+    pub w3: Tensor,
+    pub b3: Vec<f32>,
+}
+
+/// Forward-pass activations kept for backprop.
+struct Acts {
+    x: Tensor,
+    h1: Tensor,
+    h2: Tensor,
+}
+
+/// Gradients in the same layout as [`Mlp`].
+struct Grads {
+    w1: Tensor,
+    b1: Vec<f32>,
+    w2: Tensor,
+    b2: Vec<f32>,
+    w3: Tensor,
+    b3: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn init(c_in: usize, hidden: usize, c_out: usize,
+                rng: &mut Xoshiro256) -> Self {
+        let lin = |fan_in: usize, fan_out: usize, rng: &mut Xoshiro256| {
+            let scale = 1.0 / (fan_in as f32).sqrt();
+            Tensor::new(
+                &[fan_in, fan_out],
+                (0..fan_in * fan_out)
+                    .map(|_| (rng.uniform(-1.0, 1.0) as f32) * scale)
+                    .collect(),
+            )
+        };
+        Self {
+            w1: lin(c_in, hidden, rng),
+            b1: vec![0.0; hidden],
+            w2: lin(hidden, hidden, rng),
+            b2: vec![0.0; hidden],
+            w3: lin(hidden, c_out, rng),
+            b3: vec![0.0; c_out],
+        }
+    }
+
+    fn add_bias(x: &Tensor, b: &[f32]) -> Tensor {
+        let (n, m) = (x.shape()[0], x.shape()[1]);
+        Tensor::from_fn(&[n, m], |ix| x.at2(ix[0], ix[1]) + b[ix[1]])
+    }
+
+    /// Forward pass returning (output, activations-for-backprop).
+    fn forward_acts(&self, x: &Tensor) -> (Tensor, Acts) {
+        let h1 = Self::add_bias(&x.matmul(&self.w1), &self.b1)
+            .map(f32::tanh);
+        let h2 = Self::add_bias(&h1.matmul(&self.w2), &self.b2)
+            .map(f32::tanh);
+        let y = Self::add_bias(&h2.matmul(&self.w3), &self.b3);
+        (
+            y,
+            Acts {
+                x: x.clone(),
+                h1,
+                h2,
+            },
+        )
+    }
+
+    /// Plain forward pass.
+    pub fn forward(&self, x: &Tensor) -> Tensor {
+        self.forward_acts(x).0
+    }
+
+    /// Backprop `d_out (N × c_out)` through the net, returning gradients.
+    fn backward(&self, acts: &Acts, d_out: &Tensor) -> Grads {
+        let col_sum = |t: &Tensor| -> Vec<f32> {
+            let (n, m) = (t.shape()[0], t.shape()[1]);
+            let mut out = vec![0.0f32; m];
+            for i in 0..n {
+                for (o, &v) in out.iter_mut().zip(t.row(i)) {
+                    *o += v;
+                }
+            }
+            out
+        };
+        // layer 3
+        let gw3 = acts.h2.t().matmul(d_out);
+        let gb3 = col_sum(d_out);
+        let dh2 = d_out.matmul(&self.w3.t());
+        // tanh'
+        let dz2 = dh2.zip(&acts.h2, |d, h| d * (1.0 - h * h));
+        let gw2 = acts.h1.t().matmul(&dz2);
+        let gb2 = col_sum(&dz2);
+        let dh1 = dz2.matmul(&self.w2.t());
+        let dz1 = dh1.zip(&acts.h1, |d, h| d * (1.0 - h * h));
+        let gw1 = acts.x.t().matmul(&dz1);
+        let gb1 = col_sum(&dz1);
+        Grads {
+            w1: gw1,
+            b1: gb1,
+            w2: gw2,
+            b2: gb2,
+            w3: gw3,
+            b3: gb3,
+        }
+    }
+}
+
+/// Adam moment buffers mirroring an [`Mlp`].
+struct AdamState {
+    m: Mlp,
+    v: Mlp,
+    step: usize,
+}
+
+impl AdamState {
+    fn zeros_like(mlp: &Mlp) -> Self {
+        let z = |t: &Tensor| Tensor::zeros(t.shape());
+        let zb = |b: &[f32]| vec![0.0; b.len()];
+        let zero = Mlp {
+            w1: z(&mlp.w1),
+            b1: zb(&mlp.b1),
+            w2: z(&mlp.w2),
+            b2: zb(&mlp.b2),
+            w3: z(&mlp.w3),
+            b3: zb(&mlp.b3),
+        };
+        Self {
+            m: zero.clone(),
+            v: zero,
+            step: 0,
+        }
+    }
+
+    fn update(&mut self, params: &mut Mlp, grads: &Grads, lr: f32) {
+        self.step += 1;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let bc1 = 1.0 - b1.powi(self.step as i32);
+        let bc2 = 1.0 - b2.powi(self.step as i32);
+        let upd = |p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]| {
+            for i in 0..p.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mh = m[i] / bc1;
+                let vh = v[i] / bc2;
+                p[i] -= lr * mh / (vh.sqrt() + eps);
+            }
+        };
+        upd(params.w1.data_mut(), grads.w1.data(), self.m.w1.data_mut(),
+            self.v.w1.data_mut());
+        upd(&mut params.b1, &grads.b1, &mut self.m.b1, &mut self.v.b1);
+        upd(params.w2.data_mut(), grads.w2.data(), self.m.w2.data_mut(),
+            self.v.w2.data_mut());
+        upd(&mut params.b2, &grads.b2, &mut self.m.b2, &mut self.v.b2);
+        upd(params.w3.data_mut(), grads.w3.data(), self.m.w3.data_mut(),
+            self.v.w3.data_mut());
+        upd(&mut params.b3, &grads.b3, &mut self.m.b3, &mut self.v.b3);
+    }
+}
+
+/// Hyperparameters for the neural fit (Appendix H Table 12 defaults,
+/// scaled down).
+#[derive(Clone, Copy, Debug)]
+pub struct NeuralConfig {
+    pub rank: usize,
+    pub hidden: usize,
+    pub steps: usize,
+    pub lr: f32,
+    /// Multiply lr by `lr_decay` every `lr_decay_every` steps.
+    pub lr_decay: f32,
+    pub lr_decay_every: usize,
+    pub seed: u64,
+}
+
+impl Default for NeuralConfig {
+    fn default() -> Self {
+        Self {
+            rank: 16,
+            hidden: 64,
+            steps: 1000,
+            lr: 1e-3,
+            lr_decay: 0.95,
+            lr_decay_every: 50,
+            seed: 0,
+        }
+    }
+}
+
+/// A fitted factor-function pair.
+#[derive(Clone, Debug)]
+pub struct NeuralDecomposition {
+    pub mlp_q: Mlp,
+    pub mlp_k: Mlp,
+    pub loss_history: Vec<f32>,
+}
+
+impl NeuralDecomposition {
+    /// Fit `φ̂_q(x_q) φ̂_k(x_k)ᵀ ≈ target` by full-batch Adam on Eq. (5).
+    pub fn fit(
+        xq: &Tensor,
+        xk: &Tensor,
+        target: &Tensor,
+        cfg: &NeuralConfig,
+        rng: &mut Xoshiro256,
+    ) -> Self {
+        let _ = rng; // seeding comes from cfg for reproducibility
+        let mut seed_rng = Xoshiro256::new(cfg.seed);
+        let mut mlp_q = Mlp::init(xq.shape()[1], cfg.hidden, cfg.rank,
+                                  &mut seed_rng);
+        let mut mlp_k = Mlp::init(xk.shape()[1], cfg.hidden, cfg.rank,
+                                  &mut seed_rng);
+        let mut adam_q = AdamState::zeros_like(&mlp_q);
+        let mut adam_k = AdamState::zeros_like(&mlp_k);
+        let (n, m) = (target.shape()[0], target.shape()[1]);
+        let inv_nm = 1.0 / (n * m) as f32;
+        let mut lr = cfg.lr;
+        let mut losses = Vec::with_capacity(cfg.steps);
+        for step in 1..=cfg.steps {
+            let (fq, acts_q) = mlp_q.forward_acts(xq);
+            let (fk, acts_k) = mlp_k.forward_acts(xk);
+            let approx = fq.matmul_t(&fk);
+            let diff = approx.sub(target);
+            let loss =
+                diff.data().iter().map(|&d| d * d).sum::<f32>() * inv_nm;
+            losses.push(loss);
+            // dL/dA = 2(A − T)/NM; dFq = dA·Fk; dFk = dAᵀ·Fq
+            let d_a = diff.scale(2.0 * inv_nm);
+            let d_fq = d_a.matmul(&fk);
+            let d_fk = d_a.t().matmul(&fq);
+            let gq = mlp_q.backward(&acts_q, &d_fq);
+            let gk = mlp_k.backward(&acts_k, &d_fk);
+            adam_q.update(&mut mlp_q, &gq, lr);
+            adam_k.update(&mut mlp_k, &gk, lr);
+            if step % cfg.lr_decay_every == 0 {
+                lr *= cfg.lr_decay;
+            }
+        }
+        Self {
+            mlp_q,
+            mlp_k,
+            loss_history: losses,
+        }
+    }
+
+    /// Factor strip for query sources: (N, R).
+    pub fn phi_q(&self, xq: &Tensor) -> Tensor {
+        self.mlp_q.forward(xq)
+    }
+
+    /// Factor strip for key sources: (M, R).
+    pub fn phi_k(&self, xk: &Tensor) -> Tensor {
+        self.mlp_k.forward(xk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finite_diff_check(mlp: &Mlp, x: &Tensor) {
+        // numeric gradient of L = sum(y²)/2 wrt w3[0,0]
+        let (y, acts) = mlp.forward_acts(x);
+        let grads = mlp.backward(&acts, &y);
+        let eps = 1e-3f32;
+        let mut plus = mlp.clone();
+        plus.w3.data_mut()[0] += eps;
+        let mut minus = mlp.clone();
+        minus.w3.data_mut()[0] -= eps;
+        let loss = |m: &Mlp| -> f32 {
+            let out = m.forward(x);
+            out.data().iter().map(|&v| v * v).sum::<f32>() / 2.0
+        };
+        let numeric = (loss(&plus) - loss(&minus)) / (2.0 * eps);
+        let analytic = grads.w3.data()[0];
+        assert!(
+            (numeric - analytic).abs() < 2e-2 * numeric.abs().max(1.0),
+            "numeric {numeric} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn backprop_matches_finite_differences() {
+        let mut rng = Xoshiro256::new(0);
+        let mlp = Mlp::init(3, 8, 4, &mut rng);
+        let x = Tensor::randn(&[5, 3], 1.0, &mut rng);
+        finite_diff_check(&mlp, &x);
+    }
+
+    #[test]
+    fn fits_exact_lowrank_target() {
+        // target that IS rank-2 from smooth sources: must fit well
+        let mut rng = Xoshiro256::new(1);
+        let n = 24;
+        let x = Tensor::from_fn(&[n, 1], |ix| ix[0] as f32 / n as f32);
+        let pq = x.map(|v| (2.0 * v).sin());
+        let pk = x.map(|v| (2.0 * v).cos());
+        let target = Tensor::from_fn(&[n, n], |ix| {
+            pq.data()[ix[0]] * pk.data()[ix[1]] + 0.5
+        });
+        let cfg = NeuralConfig {
+            rank: 4,
+            hidden: 24,
+            steps: 1200,
+            lr: 1e-2,
+            ..NeuralConfig::default()
+        };
+        let nd = NeuralDecomposition::fit(&x, &x, &target, &cfg, &mut rng);
+        let approx = nd.phi_q(&x).matmul_t(&nd.phi_k(&x));
+        assert!(
+            approx.rel_err(&target) < 0.1,
+            "rel_err {}",
+            approx.rel_err(&target)
+        );
+    }
+
+    #[test]
+    fn loss_decreases_monotonically_in_trend() {
+        let mut rng = Xoshiro256::new(2);
+        let x = Tensor::randn(&[16, 2], 1.0, &mut rng);
+        let target = crate::bias::spherical_bias(&x, &x);
+        let cfg = NeuralConfig {
+            rank: 8,
+            hidden: 24,
+            steps: 400,
+            lr: 3e-3,
+            ..NeuralConfig::default()
+        };
+        let nd = NeuralDecomposition::fit(&x, &x, &target, &cfg, &mut rng);
+        let first = nd.loss_history[..10].iter().sum::<f32>() / 10.0;
+        let last = nd.loss_history[nd.loss_history.len() - 10..]
+            .iter()
+            .sum::<f32>()
+            / 10.0;
+        assert!(last < first * 0.5, "first {first} last {last}");
+    }
+
+    #[test]
+    fn tokenwise_property() {
+        // Remark 3.6: permuting input rows permutes outputs identically
+        let mut rng = Xoshiro256::new(3);
+        let mlp = Mlp::init(2, 8, 4, &mut rng);
+        let x = Tensor::randn(&[10, 2], 1.0, &mut rng);
+        let out = mlp.forward(&x);
+        // reverse rows
+        let rev = Tensor::from_fn(&[10, 2], |ix| x.at2(9 - ix[0], ix[1]));
+        let out_rev = mlp.forward(&rev);
+        for i in 0..10 {
+            for j in 0..4 {
+                assert!((out.at2(9 - i, j) - out_rev.at2(i, j)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut rng = Xoshiro256::new(4);
+        let x = Tensor::randn(&[8, 1], 1.0, &mut rng);
+        let target = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let cfg = NeuralConfig {
+            steps: 50,
+            ..NeuralConfig::default()
+        };
+        let a = NeuralDecomposition::fit(&x, &x, &target, &cfg, &mut rng);
+        let b = NeuralDecomposition::fit(&x, &x, &target, &cfg, &mut rng);
+        assert_eq!(a.loss_history, b.loss_history);
+    }
+}

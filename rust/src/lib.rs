@@ -1,0 +1,30 @@
+//! FlashBias: fast computation of attention with bias.
+//!
+//! Rust/JAX/Pallas three-layer reproduction of "FlashBias: Fast Computation
+//! of Attention with Bias" (Wu et al., NeurIPS 2025).
+//!
+//! * [`tensor`] / [`linalg`] — host-side numeric substrate (dense f32
+//!   tensors, Jacobi SVD, energy spectra).
+//! * [`bias`] — the paper's bias zoo: generators plus exact factorizations.
+//! * [`decompose`] — decomposition strategies (exact / SVD / neural / dense).
+//! * [`attention`] — reference attention implementations for cross-checking.
+//! * [`iomodel`] — analytic HBM-access model (Thm 3.1/3.2, Cor 3.3/3.7).
+//! * [`simulator`] — tiled-execution HBM/SRAM simulator (Figures 3/4).
+//! * [`runtime`] — PJRT artifact loading + execution.
+//! * [`coordinator`] — serving layer: router, dynamic batcher, strategy
+//!   selection, metrics.
+//! * [`server`] — CLI + config + run loop.
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod bias;
+pub mod decompose;
+pub mod attention;
+pub mod iomodel;
+pub mod simulator;
+pub mod jsonlite;
+pub mod proplite;
+pub mod runtime;
+pub mod coordinator;
+pub mod server;
+pub mod benchkit;

@@ -1,0 +1,318 @@
+//! Host-side linear algebra: one-sided Jacobi SVD, truncated SVD factors,
+//! singular-value energy spectra and rank-for-energy selection — the
+//! machinery behind the paper's Figures 6/8/9 and the SVD decomposition
+//! strategy (Table 1b).
+
+use crate::tensor::Tensor;
+
+/// Full SVD result: `a ≈ u · diag(s) · vᵀ` with `u: (n, k)`, `s: (k,)`,
+/// `v: (m, k)`, `k = min(n, m)`; singular values sorted descending.
+#[derive(Clone, Debug)]
+pub struct Svd {
+    pub u: Tensor,
+    pub s: Vec<f32>,
+    pub v: Tensor,
+}
+
+/// One-sided Jacobi SVD (Hestenes). Numerically robust for the modest,
+/// well-conditioned matrices we decompose (bias tables ≤ ~1k); cost
+/// O(n·m²) per sweep, converging in ~5–15 sweeps.
+pub fn svd(a: &Tensor) -> Svd {
+    assert_eq!(a.rank(), 2);
+    let (n, m) = (a.shape()[0], a.shape()[1]);
+    if n < m {
+        // work on the transpose and swap factors back
+        let Svd { u, s, v } = svd(&a.t());
+        return Svd { u: v, s, v: u };
+    }
+    // Work array: columns of `w` get orthogonalized in place.
+    // w = a (n × m), v accumulates the right rotations (m × m).
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; m * m];
+    for i in 0..m {
+        v[i * m + i] = 1.0;
+    }
+    let col = |w: &Vec<f64>, j: usize| -> Vec<f64> {
+        (0..n).map(|i| w[i * m + j]).collect()
+    };
+    let _ = col; // (kept simple below; direct indexing)
+
+    let eps = 1e-12f64;
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..m {
+            for q in (p + 1)..m {
+                // dot products over column p and q
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..n {
+                    let wp = w[i * m + p];
+                    let wq = w[i * m + q];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) off-diagonal
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let wp = w[i * m + p];
+                    let wq = w[i * m + q];
+                    w[i * m + p] = c * wp - s * wq;
+                    w[i * m + q] = s * wp + c * wq;
+                }
+                for i in 0..m {
+                    let vp = v[i * m + p];
+                    let vq = v[i * m + q];
+                    v[i * m + p] = c * vp - s * vq;
+                    v[i * m + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-15 {
+            break;
+        }
+    }
+
+    // singular values = column norms of w; u = normalized columns
+    let mut order: Vec<usize> = (0..m).collect();
+    let mut sigmas = vec![0.0f64; m];
+    for (j, sig) in sigmas.iter_mut().enumerate() {
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            sum += w[i * m + j] * w[i * m + j];
+        }
+        *sig = sum.sqrt();
+    }
+    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+
+    let mut u_data = vec![0.0f32; n * m];
+    let mut v_data = vec![0.0f32; m * m];
+    let mut s_out = vec![0.0f32; m];
+    for (dst, &src) in order.iter().enumerate() {
+        let sig = sigmas[src];
+        s_out[dst] = sig as f32;
+        let inv = if sig > 1e-30 { 1.0 / sig } else { 0.0 };
+        for i in 0..n {
+            u_data[i * m + dst] = (w[i * m + src] * inv) as f32;
+        }
+        for i in 0..m {
+            v_data[i * m + dst] = v[i * m + src] as f32;
+        }
+    }
+    Svd {
+        u: Tensor::new(&[n, m], u_data),
+        s: s_out,
+        v: Tensor::new(&[m, m], v_data),
+    }
+}
+
+/// Truncated SVD factor pair: bias ≈ φ_q φ_kᵀ with
+/// `φ_q = U_R √Σ_R (n × R)`, `φ_k = V_R √Σ_R (m × R)` — Table 1b.
+pub fn svd_factors(a: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    let Svd { u, s, v } = svd(a);
+    let (n, m) = (a.shape()[0], a.shape()[1]);
+    let k = s.len();
+    let r = rank.min(k);
+    let mut pq = vec![0.0f32; n * r];
+    let mut pk = vec![0.0f32; m * r];
+    for j in 0..r {
+        let root = s[j].max(0.0).sqrt();
+        for i in 0..n {
+            pq[i * r + j] = u.at2(i, j) * root;
+        }
+        for i in 0..m {
+            pk[i * r + j] = v.at2(i, j) * root;
+        }
+    }
+    (Tensor::new(&[n, r], pq), Tensor::new(&[m, r], pk))
+}
+
+/// Cumulative squared-singular-value energy fractions (Remark 3.8).
+pub fn energy_spectrum(a: &Tensor) -> Vec<f64> {
+    let s = svd(a).s;
+    let energies: Vec<f64> = s.iter().map(|&x| (x as f64) * (x as f64)).collect();
+    let total: f64 = energies.iter().sum::<f64>().max(1e-300);
+    let mut cum = 0.0;
+    energies
+        .iter()
+        .map(|e| {
+            cum += e;
+            cum / total
+        })
+        .collect()
+}
+
+/// Smallest R whose truncated SVD keeps ≥ `target` energy (Figure 8).
+pub fn rank_for_energy(a: &Tensor, target: f64) -> usize {
+    let cum = energy_spectrum(a);
+    cum.iter().position(|&c| c >= target).map_or(cum.len(), |p| p + 1)
+}
+
+/// Numerical rank: #singular values above `tol * s_max`.
+pub fn numerical_rank(a: &Tensor, tol: f32) -> usize {
+    let s = svd(a).s;
+    let smax = s.first().copied().unwrap_or(0.0);
+    s.iter().filter(|&&x| x > tol * smax).count()
+}
+
+/// Relative Frobenius reconstruction error of a factor pair.
+pub fn reconstruction_error(bias: &Tensor, pq: &Tensor, pk: &Tensor) -> f32 {
+    pq.matmul_t(pk).rel_err(bias)
+}
+
+/// Best rank-R approximation error predicted by the spectrum
+/// (Eckart–Young): sqrt(1 − energy(R)).
+pub fn eckart_young_error(a: &Tensor, rank: usize) -> f64 {
+    let cum = energy_spectrum(a);
+    if rank == 0 {
+        return 1.0;
+    }
+    let e = cum.get(rank - 1).copied().unwrap_or(1.0);
+    (1.0 - e).max(0.0).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    fn reconstruct(svd: &Svd) -> Tensor {
+        let (n, k) = (svd.u.shape()[0], svd.s.len());
+        let _m = svd.v.shape()[0];
+        let mut us = vec![0.0f32; n * k];
+        for i in 0..n {
+            for j in 0..k {
+                us[i * k + j] = svd.u.at2(i, j) * svd.s[j];
+            }
+        }
+        Tensor::new(&[n, k], us).matmul_t(&svd.v)
+    }
+
+    #[test]
+    fn svd_reconstructs_random_matrix() {
+        let mut rng = Xoshiro256::new(0);
+        let a = Tensor::randn(&[20, 12], 1.0, &mut rng);
+        let d = svd(&a);
+        assert!(reconstruct(&d).rel_err(&a) < 1e-4);
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Tensor::randn(&[8, 17], 1.0, &mut rng);
+        let d = svd(&a);
+        assert_eq!(d.u.shape(), &[8, 8]);
+        assert_eq!(d.v.shape(), &[17, 8]);
+        assert!(reconstruct(&d).rel_err(&a) < 1e-4);
+    }
+
+    #[test]
+    fn svd_singular_values_sorted_and_match_norm() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let d = svd(&a);
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5);
+        }
+        let fro: f32 = d.s.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((fro - a.norm()).abs() / a.norm() < 1e-4);
+    }
+
+    #[test]
+    fn svd_orthogonal_u() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Tensor::randn(&[24, 10], 1.0, &mut rng);
+        let d = svd(&a);
+        let gram = d.u.t().matmul(&d.u);
+        assert!(gram.allclose(&Tensor::eye(10), 1e-3, 1e-3));
+    }
+
+    #[test]
+    fn svd_exact_lowrank_detected() {
+        let mut rng = Xoshiro256::new(4);
+        let p = Tensor::randn(&[30, 4], 1.0, &mut rng);
+        let q = Tensor::randn(&[25, 4], 1.0, &mut rng);
+        let a = p.matmul_t(&q);
+        assert_eq!(numerical_rank(&a, 1e-4), 4);
+        let (pq, pk) = svd_factors(&a, 4);
+        assert!(reconstruction_error(&a, &pq, &pk) < 1e-3);
+    }
+
+    #[test]
+    fn svd_factors_shapes() {
+        let mut rng = Xoshiro256::new(5);
+        let a = Tensor::randn(&[12, 18], 1.0, &mut rng);
+        let (pq, pk) = svd_factors(&a, 5);
+        assert_eq!(pq.shape(), &[12, 5]);
+        assert_eq!(pk.shape(), &[18, 5]);
+    }
+
+    #[test]
+    fn truncation_error_decreases_with_rank() {
+        let mut rng = Xoshiro256::new(6);
+        let a = Tensor::randn(&[24, 24], 1.0, &mut rng);
+        let mut last = f32::INFINITY;
+        for r in [1, 2, 4, 8, 16, 24] {
+            let (pq, pk) = svd_factors(&a, r);
+            let err = reconstruction_error(&a, &pq, &pk);
+            assert!(err <= last + 1e-5, "rank {r}: {err} > {last}");
+            last = err;
+        }
+        assert!(last < 1e-3); // full rank ≈ exact
+    }
+
+    #[test]
+    fn energy_spectrum_monotone_to_one() {
+        let mut rng = Xoshiro256::new(7);
+        let a = Tensor::randn(&[15, 15], 1.0, &mut rng);
+        let cum = energy_spectrum(&a);
+        for w in cum.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12);
+        }
+        assert!((cum.last().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_for_energy_on_known_spectrum() {
+        // diag(3, 2, 1): energies 9/14, 13/14, 14/14
+        let a = Tensor::from_fn(&[3, 3], |ix| {
+            if ix[0] == ix[1] {
+                (3 - ix[0]) as f32
+            } else {
+                0.0
+            }
+        });
+        assert_eq!(rank_for_energy(&a, 0.60), 1);
+        assert_eq!(rank_for_energy(&a, 0.90), 2);
+        assert_eq!(rank_for_energy(&a, 0.99), 3);
+    }
+
+    #[test]
+    fn eckart_young_matches_actual_truncation() {
+        let mut rng = Xoshiro256::new(8);
+        let a = Tensor::randn(&[20, 20], 1.0, &mut rng);
+        for r in [2usize, 5, 10] {
+            let (pq, pk) = svd_factors(&a, r);
+            let actual = reconstruction_error(&a, &pq, &pk) as f64;
+            let predicted = eckart_young_error(&a, r);
+            assert!(
+                (actual - predicted).abs() < 5e-3,
+                "rank {r}: actual {actual} vs predicted {predicted}"
+            );
+        }
+    }
+
+    #[test]
+    fn svd_zero_matrix() {
+        let a = Tensor::zeros(&[6, 4]);
+        let d = svd(&a);
+        assert!(d.s.iter().all(|&s| s == 0.0));
+    }
+}

@@ -1,0 +1,217 @@
+//! Tiny property-testing harness (no proptest in the vendored universe).
+//!
+//! Generators are closures over [`crate::util::Xoshiro256`]; a property is
+//! run over `cases` random inputs and on failure the input is shrunk with
+//! a caller-provided shrinker (halving-style candidates) before panicking
+//! with the minimal counterexample.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries lack the xla_extension rpath)
+//! use flashbias::proplite::{forall, shrink_usize, Config};
+//! forall(
+//!     Config::default().cases(64),
+//!     |rng| rng.next_below(1000) as usize,
+//!     |n| shrink_usize(n),
+//!     |&n| n < 1000,
+//! );
+//! ```
+
+use crate::util::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            seed: 0x5EED,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop` over `cfg.cases` values drawn from `gen`. On failure, shrink
+/// with `shrink` (must return *smaller* candidates) and panic with the
+/// minimal failing input's Debug representation.
+pub fn forall<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Xoshiro256) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = Xoshiro256::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &shrink, &prop,
+                                      cfg.max_shrink_steps);
+            panic!(
+                "property failed on case {case}; minimal counterexample: \
+                 {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, S, P>(mut failing: T, shrink: &S, prop: &P,
+                        max_steps: usize) -> T
+where
+    T: Clone,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in shrink(&failing) {
+            steps += 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// stock shrinkers
+// ---------------------------------------------------------------------------
+
+/// Binary-search-style shrinker for usize: candidates approach `n` from
+/// below geometrically (0, n/2, 3n/4, 7n/8, …, n−1), so repeated passes
+/// converge on the smallest failing value like bisection.
+pub fn shrink_usize(n: &usize) -> Vec<usize> {
+    let n = *n;
+    let mut out = Vec::new();
+    if n > 0 {
+        out.push(0);
+        let mut gap = n / 2;
+        while gap > 0 {
+            out.push(n - gap);
+            gap /= 2;
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out.retain(|&x| x != n);
+    out
+}
+
+/// Shrinker for f32 toward 0 and simpler magnitudes.
+pub fn shrink_f32(x: &f32) -> Vec<f32> {
+    let x = *x;
+    let mut out = Vec::new();
+    if x != 0.0 {
+        out.push(0.0);
+        out.push(x / 2.0);
+        out.push(x.trunc());
+    }
+    out.retain(|&y| y != x);
+    out.dedup_by(|a, b| a == b);
+    out
+}
+
+/// Shrinker for Vec<T>: drop halves, drop single elements, shrink elements.
+pub fn shrink_vec<T: Clone>(xs: &[T],
+                            elem: impl Fn(&T) -> Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n == 0 {
+        return out;
+    }
+    out.push(xs[..n / 2].to_vec());
+    out.push(xs[n / 2..].to_vec());
+    if n <= 16 {
+        for i in 0..n {
+            let mut v = xs.to_vec();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..n {
+            for e in elem(&xs[i]) {
+                let mut v = xs.to_vec();
+                v[i] = e;
+                out.push(v);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// stock generators
+// ---------------------------------------------------------------------------
+
+/// Random dims in [lo, hi] (inclusive).
+pub fn gen_dim(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below((hi - lo + 1) as u64) as usize
+}
+
+/// Random f32 vector with entries ~ N(0, scale).
+pub fn gen_vec(rng: &mut Xoshiro256, n: usize, scale: f32) -> Vec<f32> {
+    rng.normal_vec(n, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            Config::default().cases(50),
+            |rng| gen_dim(rng, 1, 64),
+            |n| shrink_usize(n),
+            |&n| (1..=64).contains(&n),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics() {
+        forall(
+            Config::default().cases(50),
+            |rng| gen_dim(rng, 0, 1000),
+            |n| shrink_usize(n),
+            |&n| n < 500,
+        );
+    }
+
+    #[test]
+    fn shrinker_reaches_small_counterexample() {
+        // Property: n < 500. Failing inputs are >= 500; the halving
+        // shrinker must land on a value well below the initial failure.
+        let minimal = super::shrink_loop(987usize, &shrink_usize,
+                                         &|&n: &usize| n < 500, 200);
+        assert_eq!(minimal, 500);
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let xs = vec![1, 2, 3, 4];
+        let cands = shrink_vec(&xs, |_| vec![]);
+        assert!(cands.iter().any(|c| c.len() < xs.len()));
+    }
+}

@@ -1,0 +1,430 @@
+//! PJRT runtime: load AOT artifacts (HLO text + input binaries produced by
+//! `python/compile/aot.py`) and execute them on the CPU PJRT client.
+//!
+//! This is the only module that touches the `xla` crate. The flow follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format (xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos with 64-bit ids).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonlite::Json;
+use crate::tensor::Tensor;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype + backing file of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub file: Option<String>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype").as_str().ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        let file = j.get("file").as_str().map(str::to_string);
+        Ok(Self { shape, dtype, file })
+    }
+}
+
+/// Manifest entry for one AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Indices of inputs the bench harness may randomize per request
+    /// (activations); the rest are weights.
+    pub fn activation_indices(&self) -> Vec<usize> {
+        self.meta
+            .get("activations")
+            .as_arr()
+            .map(|a| a.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn family(&self) -> &str {
+        self.meta.get("family").as_str().unwrap_or("")
+    }
+
+    pub fn variant(&self) -> &str {
+        self.meta.get("variant").as_str().unwrap_or("")
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.meta.get("n").as_usize().unwrap_or(0)
+    }
+}
+
+/// Host value fed to / returned from an executable.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostValue {
+    pub fn as_f32(&self) -> Option<&Tensor> {
+        match self {
+            HostValue::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32(t) => t.shape(),
+            HostValue::I32(_, s) => s,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64>;
+        let lit = match self {
+            HostValue::F32(t) => {
+                dims = t.shape().iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(t.data()).reshape(&dims)?
+            }
+            HostValue::I32(v, shape) => {
+                dims = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+/// A compiled executable plus its spec.
+///
+/// # Safety of the `Send + Sync` impls
+/// `PjRtLoadedExecutable::execute` and buffer transfers go through the
+/// PJRT C API, which guarantees thread-safe execution of a loaded
+/// executable (PJRT is designed for concurrent dispatch). The wrapper
+/// types only lack the auto-traits because they hold raw pointers.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host values; returns host values (tuple flattened).
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .map(HostValue::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> =
+                shape.dims().iter().map(|&d| d as usize).collect();
+            match shape.ty() {
+                xla::ElementType::F32 => {
+                    let data = lit.to_vec::<f32>()?;
+                    out.push(HostValue::F32(Tensor::new(&dims, data)));
+                }
+                xla::ElementType::S32 => {
+                    let data = lit.to_vec::<i32>()?;
+                    out.push(HostValue::I32(data, dims));
+                }
+                other => bail!("unsupported output type {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The artifact registry + PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    artifacts: HashMap<String, ArtifactSpec>,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(
+            || format!("reading {} (run `make artifacts`)",
+                       manifest_path.display()),
+        )?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut artifacts = HashMap::new();
+        for entry in json
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = entry
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let hlo = entry
+                .get("hlo")
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact missing hlo"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    hlo,
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta: entry.get("meta").clone(),
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            root,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifact directory: `$FLASHBIAS_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn open_default() -> Result<Self> {
+        if let Ok(dir) = std::env::var("FLASHBIAS_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+        }
+        // fall back to the crate-root-relative path
+        Self::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> =
+            self.artifacts.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
+        let hlo_path = self.root.join(&spec.hlo);
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("bad path {hlo_path:?}"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exe = Arc::new(Executable { exe, spec });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn read_bin(&self, spec: &TensorSpec) -> Result<HostValue> {
+        let file = spec
+            .file
+            .as_ref()
+            .ok_or_else(|| anyhow!("spec has no backing file"))?;
+        let bytes = std::fs::read(self.root.join(file))
+            .with_context(|| format!("reading {file}"))?;
+        let expect = spec.numel() * spec.dtype.size_bytes();
+        if bytes.len() != expect {
+            bail!("{file}: {} bytes, expected {expect}", bytes.len());
+        }
+        Ok(match spec.dtype {
+            Dtype::F32 => {
+                let data: Vec<f32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostValue::F32(Tensor::new(&spec.shape, data))
+            }
+            Dtype::I32 => {
+                let data: Vec<i32> = bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                HostValue::I32(data, spec.shape.clone())
+            }
+        })
+    }
+
+    /// The example inputs the artifact was lowered with.
+    pub fn example_inputs(&self, name: &str) -> Result<Vec<HostValue>> {
+        let spec = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        spec.inputs.iter().map(|s| self.read_bin(s)).collect()
+    }
+
+    /// The expected outputs recorded at AOT time (XLA:CPU python run).
+    pub fn expected_outputs(&self, name: &str) -> Result<Vec<HostValue>> {
+        let spec = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        spec.outputs.iter().map(|s| self.read_bin(s)).collect()
+    }
+
+    /// Load + warm up (one execution with example inputs).
+    pub fn load_warm(&self, name: &str) -> Result<Arc<Executable>> {
+        let exe = self.load(name)?;
+        let inputs = self.example_inputs(name)?;
+        exe.run(&inputs)?;
+        Ok(exe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in
+    // rust/tests/runtime_artifacts.rs (integration, requires
+    // `make artifacts`). Unit tests here cover the manifest parsing and
+    // HostValue plumbing without a PJRT client.
+    use super::*;
+
+    #[test]
+    fn tensor_spec_from_json() {
+        let j = Json::parse(
+            r#"{"shape": [2, 3], "dtype": "f32", "file": "x.bin"}"#,
+        )
+        .unwrap();
+        let spec = TensorSpec::from_json(&j).unwrap();
+        assert_eq!(spec.shape, vec![2, 3]);
+        assert_eq!(spec.dtype, Dtype::F32);
+        assert_eq!(spec.numel(), 6);
+        assert_eq!(spec.file.as_deref(), Some("x.bin"));
+    }
+
+    #[test]
+    fn tensor_spec_rejects_bad_dtype() {
+        let j = Json::parse(r#"{"shape": [1], "dtype": "f64"}"#).unwrap();
+        assert!(TensorSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn host_value_shapes() {
+        let t = HostValue::F32(Tensor::zeros(&[2, 5]));
+        assert_eq!(t.shape(), &[2, 5]);
+        let i = HostValue::I32(vec![1, 2, 3], vec![3]);
+        assert_eq!(i.shape(), &[3]);
+        assert!(i.as_f32().is_none());
+        assert!(t.as_f32().is_some());
+    }
+
+    #[test]
+    fn artifact_spec_meta_accessors() {
+        let meta = Json::parse(
+            r#"{"family": "attn", "variant": "factored", "n": 256,
+                "activations": [0, 1, 2]}"#,
+        )
+        .unwrap();
+        let spec = ArtifactSpec {
+            name: "x".into(),
+            hlo: "hlo/x.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+            meta,
+        };
+        assert_eq!(spec.family(), "attn");
+        assert_eq!(spec.variant(), "factored");
+        assert_eq!(spec.seq_len(), 256);
+        assert_eq!(spec.activation_indices(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,311 @@
+//! CLI + config + run loop — the `flashbias` binary's brain.
+//!
+//! Subcommands:
+//!
+//! * `list`                — artifacts in the manifest.
+//! * `verify [--only RE]`  — replay every artifact against its recorded
+//!   expected outputs (the cross-layer integrity check).
+//! * `run <artifact> [-n ITERS]` — execute one artifact, print timing.
+//! * `serve [--requests N] [--workers W]` — synthetic serving loop through
+//!   the full coordinator (router → batcher → workers), print metrics.
+//! * `info`                — platform + manifest summary.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{Coordinator, CoordinatorConfig, RouteKey, Router};
+use crate::runtime::{HostValue, Runtime};
+use crate::util::{bench_loop, human_secs, Xoshiro256};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Hand-rolled parser: `cmd pos1 --flag value --bool-flag`.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut cli = Cli {
+            command,
+            ..Cli::default()
+        };
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                cli.flags.insert(name.to_string(), value);
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v}")),
+        }
+    }
+}
+
+/// Config file: `key = value` lines, `#` comments (mini-TOML subset).
+pub fn parse_config(text: &str) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    for line in text.lines() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((k, v)) = line.split_once('=') {
+            out.insert(
+                k.trim().to_string(),
+                v.trim().trim_matches('"').to_string(),
+            );
+        }
+    }
+    out
+}
+
+pub const USAGE: &str = "\
+flashbias — FlashBias serving runtime (rust/JAX/Pallas reproduction)
+
+USAGE: flashbias <COMMAND> [ARGS]
+
+COMMANDS:
+  info                         platform + manifest summary
+  list                         list artifacts
+  verify [--only REGEX-ISH]    replay artifacts vs recorded outputs
+  run <ARTIFACT> [--iters N]   execute one artifact, print timing
+  serve [--requests N] [--workers W] [--max-batch B]
+                               synthetic serving loop, print metrics
+  help                         this text
+";
+
+/// Entry point used by main.rs (and tested directly).
+pub fn run(cli: &Cli) -> Result<String> {
+    match cli.command.as_str() {
+        "help" | "" => Ok(USAGE.to_string()),
+        "info" => cmd_info(),
+        "list" => cmd_list(),
+        "verify" => cmd_verify(cli),
+        "run" => cmd_run(cli),
+        "serve" => cmd_serve(cli),
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}
+
+fn cmd_info() -> Result<String> {
+    let rt = Runtime::open_default()?;
+    Ok(format!(
+        "platform: {}\nartifacts: {}\n",
+        rt.platform(),
+        rt.names().len()
+    ))
+}
+
+fn cmd_list() -> Result<String> {
+    let rt = Runtime::open_default()?;
+    let mut out = String::new();
+    for name in rt.names() {
+        let spec = rt.spec(name).unwrap();
+        out.push_str(&format!(
+            "{name:32} family={:12} variant={:10} n={}\n",
+            spec.family(),
+            spec.variant(),
+            spec.seq_len()
+        ));
+    }
+    Ok(out)
+}
+
+/// Max |a−b| across all f32 outputs.
+fn max_abs_diff(a: &[HostValue], b: &[HostValue]) -> f32 {
+    let mut worst = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        if let (Some(tx), Some(ty)) = (x.as_f32(), y.as_f32()) {
+            worst = worst.max(tx.sub(ty).max_abs());
+        }
+    }
+    worst
+}
+
+fn cmd_verify(cli: &Cli) -> Result<String> {
+    let rt = Runtime::open_default()?;
+    let filter = cli.flag("only").unwrap_or("");
+    let mut out = String::new();
+    let mut failures = 0;
+    for name in rt.names() {
+        if !filter.is_empty() && !name.contains(filter) {
+            continue;
+        }
+        let spec = rt.spec(name).unwrap();
+        if spec.outputs.is_empty() {
+            continue;
+        }
+        let exe = rt.load(name)?;
+        let inputs = rt.example_inputs(name)?;
+        let expected = rt.expected_outputs(name)?;
+        let got = exe.run(&inputs)?;
+        let diff = max_abs_diff(&got, &expected);
+        let ok = diff < 2e-3;
+        if !ok {
+            failures += 1;
+        }
+        out.push_str(&format!(
+            "{name:32} max|Δ|={diff:.2e} {}\n",
+            if ok { "OK" } else { "FAIL" }
+        ));
+    }
+    if failures > 0 {
+        bail!("{failures} artifacts FAILED\n{out}");
+    }
+    Ok(out)
+}
+
+fn cmd_run(cli: &Cli) -> Result<String> {
+    let artifact = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("run needs an artifact name"))?;
+    let iters = cli.flag_usize("iters", 10)?;
+    let rt = Runtime::open_default()?;
+    let exe = rt.load_warm(artifact)?;
+    let inputs = rt.example_inputs(artifact)?;
+    let stats = bench_loop(1, iters, || {
+        exe.run(&inputs).expect("execute");
+    });
+    Ok(format!(
+        "{artifact}: mean={} p50={} p99={} over {iters} iters\n",
+        human_secs(stats.mean()),
+        human_secs(stats.p50()),
+        human_secs(stats.p99()),
+    ))
+}
+
+/// Synthetic serving workload: route random-length factored-attention
+/// requests through the full stack.
+fn cmd_serve(cli: &Cli) -> Result<String> {
+    let n_requests = cli.flag_usize("requests", 64)?;
+    let workers = cli.flag_usize("workers", 2)?;
+    let max_batch = cli.flag_usize("max-batch", 8)?;
+    let rt = Arc::new(Runtime::open_default()?);
+    let router = Router::from_runtime(&rt);
+    let key = RouteKey::new("attn", "factored");
+    if router.route(&key, 1).is_none() {
+        bail!("no attn/factored artifacts in manifest; run `make artifacts`");
+    }
+    let mut config = CoordinatorConfig::default();
+    config.workers = workers;
+    config.batcher.max_batch = max_batch;
+    let mut coord = Coordinator::new(rt.clone(), config);
+    let mut rng = Xoshiro256::new(42);
+    let t0 = std::time::Instant::now();
+    let max_n = router.max_bucket(&key).unwrap();
+    let mut submitted = 0usize;
+    for _ in 0..n_requests {
+        let want_n = 1 + rng.next_below(max_n as u64) as usize;
+        let (artifact, _bucket) = router.route(&key, want_n).unwrap();
+        let inputs = rt.example_inputs(artifact)?;
+        // retry on backpressure: drain a few responses then resubmit
+        loop {
+            match coord.submit(artifact, inputs.clone()) {
+                Ok(_) => break,
+                Err(_) => {
+                    let _ = coord.recv_timeout(Duration::from_millis(50));
+                }
+            }
+        }
+        submitted += 1;
+    }
+    coord.flush_all()?;
+    let mut completed = 0usize;
+    while completed < submitted {
+        match coord.recv_timeout(Duration::from_secs(60)) {
+            Some(resp) => {
+                resp.outputs?;
+                completed += 1;
+            }
+            None => bail!("serve loop timed out"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let summary = coord.metrics().summary();
+    let json = coord.metrics().to_json().dump();
+    coord.shutdown();
+    Ok(format!(
+        "served {completed}/{submitted} requests in {:.2}s \
+         ({:.1} req/s)\n{summary}\nmetrics: {json}\n",
+        wall,
+        completed as f64 / wall
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cli_parses_flags_and_positionals() {
+        let cli = Cli::parse(
+            ["run", "attn_pure_n256", "--iters", "5", "--verbose"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cli.command, "run");
+        assert_eq!(cli.positional, vec!["attn_pure_n256"]);
+        assert_eq!(cli.flag("iters"), Some("5"));
+        assert_eq!(cli.flag("verbose"), Some("true"));
+        assert_eq!(cli.flag_usize("iters", 1).unwrap(), 5);
+        assert_eq!(cli.flag_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn cli_bad_int_flag_errors() {
+        let cli = Cli::parse(
+            ["run", "--iters", "abc"].into_iter().map(String::from),
+        )
+        .unwrap();
+        assert!(cli.flag_usize("iters", 1).is_err());
+    }
+
+    #[test]
+    fn config_parser() {
+        let cfg = parse_config(
+            "# comment\nworkers = 4\nname = \"prod\" # inline\n\nbad line\n",
+        );
+        assert_eq!(cfg.get("workers").map(String::as_str), Some("4"));
+        assert_eq!(cfg.get("name").map(String::as_str), Some("prod"));
+        assert_eq!(cfg.len(), 2);
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let cli =
+            Cli::parse(["wat"].into_iter().map(String::from)).unwrap();
+        assert!(run(&cli).is_err());
+    }
+
+    #[test]
+    fn help_prints_usage() {
+        let cli = Cli::parse(std::iter::empty()).unwrap();
+        assert!(run(&cli).unwrap().contains("USAGE"));
+    }
+}

@@ -1,0 +1,527 @@
+//! Tiled-execution memory-hierarchy simulator.
+//!
+//! Executes the exact FlashAttention-2 block schedule (grid over query
+//! blocks, inner loop over key/value blocks, online-softmax accumulators
+//! in SRAM) and counts every HBM read/write, matmul FLOP, element-wise
+//! FLOP and the SRAM high-water mark, for each algorithm the paper
+//! compares:
+//!
+//! * [`Algorithm::Standard`]       — materializing attention (scores to HBM).
+//! * [`Algorithm::Flash`]          — FlashAttention, no bias (upper bound).
+//! * [`Algorithm::FlashDenseBias`] — FlashAttention + dense N×M bias stream.
+//! * [`Algorithm::FlexLike`]       — FlexAttention stand-in: bias recomputed
+//!   element-wise in-kernel (no bias IO, element-wise work, recompile
+//!   penalty per new shape).
+//! * [`Algorithm::FlashBias`]      — factor strips streamed, bias tile
+//!   reconstructed with one extra MXU matmul.
+//!
+//! Counts must match `crate::iomodel`'s Θ-asymptotics up to block
+//! rounding — `tests/sim_vs_model.rs` enforces this. This is the
+//! instrument that regenerates the *shape* of Figures 3/4 independently
+//! of host-CPU quirks (DESIGN.md §Hardware-Adaptation).
+
+use crate::iomodel::Geometry;
+
+/// Which attention algorithm to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    Standard,
+    Flash,
+    FlashDenseBias,
+    FlexLike,
+    /// FlashBias with factor rank R.
+    FlashBias(usize),
+}
+
+impl Algorithm {
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::Standard => "standard".into(),
+            Algorithm::Flash => "flash".into(),
+            Algorithm::FlashDenseBias => "flash+dense-bias".into(),
+            Algorithm::FlexLike => "flex-like".into(),
+            Algorithm::FlashBias(r) => format!("flashbias(R={r})"),
+        }
+    }
+
+    fn bias_rank(&self) -> usize {
+        match self {
+            Algorithm::FlashBias(r) => *r,
+            _ => 0,
+        }
+    }
+}
+
+/// Hardware model: SRAM capacity and relative cost weights used by
+/// [`SimReport::cost`]. Defaults approximate an A100-class accelerator
+/// normalized to HBM-element = 1.
+#[derive(Clone, Copy, Debug)]
+pub struct HwModel {
+    /// SRAM capacity in elements.
+    pub sram_elems: usize,
+    /// Cost of one matmul FLOP relative to one HBM element access.
+    /// MXU/tensor-core matmuls are effectively free next to HBM traffic.
+    pub matmul_flop_cost: f64,
+    /// Cost of one element-wise FLOP (VPU, not MXU) — the FlexAttention
+    /// weakness: "element-wise operations are less optimized than matrix
+    /// multiplications".
+    pub elemwise_flop_cost: f64,
+    /// One-time cost (in HBM-element units) charged per *new shape/value
+    /// configuration* for compiler-based approaches (FlexAttention
+    /// recompilation, §4.3).
+    pub recompile_penalty: f64,
+}
+
+impl Default for HwModel {
+    fn default() -> Self {
+        Self {
+            // 100 KB fp16 working set — the paper's Example 3.9 setting
+            sram_elems: 100 * 1024 / 2,
+            // MXU matmul throughput vs HBM bandwidth: ~1000 flops per
+            // element access on an A100-class part.
+            matmul_flop_cost: 0.001,
+            // VPU element-wise ops are ~50× more expensive per flop than
+            // MXU matmul flops — FlexAttention's documented weakness.
+            elemwise_flop_cost: 0.05,
+            recompile_penalty: 5e6,
+        }
+    }
+}
+
+/// What one simulated pass did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimReport {
+    /// HBM elements read.
+    pub hbm_read: u64,
+    /// HBM elements written.
+    pub hbm_write: u64,
+    /// Matmul FLOPs (MXU-eligible: 2·m·n·k per m×k·k×n product).
+    pub matmul_flops: u64,
+    /// Element-wise FLOPs (softmax, masks, in-kernel bias recompute).
+    pub elemwise_flops: u64,
+    /// SRAM high-water mark in elements.
+    pub sram_peak: u64,
+    /// Peak HBM allocation in elements (activations + bias (+ grads)).
+    pub hbm_peak: u64,
+    /// Recompilations charged (FlexLike only).
+    pub recompiles: u64,
+}
+
+impl SimReport {
+    pub fn hbm_total(&self) -> u64 {
+        self.hbm_read + self.hbm_write
+    }
+
+    /// Scalar cost under a hardware model — the simulator's "runtime".
+    pub fn cost(&self, hw: &HwModel) -> f64 {
+        self.hbm_total() as f64
+            + self.matmul_flops as f64 * hw.matmul_flop_cost
+            + self.elemwise_flops as f64 * hw.elemwise_flop_cost
+            + self.recompiles as f64 * hw.recompile_penalty
+    }
+
+    fn add(&mut self, other: &SimReport) {
+        self.hbm_read += other.hbm_read;
+        self.hbm_write += other.hbm_write;
+        self.matmul_flops += other.matmul_flops;
+        self.elemwise_flops += other.elemwise_flops;
+        self.sram_peak = self.sram_peak.max(other.sram_peak);
+        self.hbm_peak = self.hbm_peak.max(other.hbm_peak);
+        self.recompiles += other.recompiles;
+    }
+}
+
+/// FlashAttention-2 block sizes (Appendix A Eq. 10): `B_q = Θ(S/w)`,
+/// `B_kv = Θ(min(S/w, w))` for strip width `w`.
+///
+/// `strip_w` is the per-query-token SRAM residency (q strip + output
+/// accumulator + m/l scalars); `kv_w` the per-key-token stream width
+/// (k (+φ_k) + v). The query strip gets half of SRAM (it is resident for
+/// the whole inner loop — the lean allocation is what makes
+/// FlashAttention's T = Θ(N·w/S) pass count achievable); k/v tiles are
+/// small since total k/v traffic does not depend on `B_kv`.
+pub fn block_sizes(sram: usize, strip_w: usize, kv_w: usize,
+                   n: usize, m: usize) -> (usize, usize) {
+    let bq = (sram / (2 * strip_w)).clamp(1, n.max(1));
+    let bkv = (sram / (8 * kv_w)).min(kv_w).clamp(1, m.max(1));
+    (bq, bkv)
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Forward pass of one attention head.
+pub fn simulate_fwd(alg: Algorithm, g: &Geometry, hw: &HwModel) -> SimReport {
+    let mut rep = SimReport::default();
+    let (n, m, c) = (g.n, g.m, g.c);
+    let r = alg.bias_rank();
+    match alg {
+        Algorithm::Standard => {
+            // s = q kᵀ: read q, k; write s
+            rep.hbm_read += (n * c + m * c) as u64;
+            rep.matmul_flops += 2 * (n * m * c) as u64;
+            rep.hbm_write += (n * m) as u64;
+            // softmax(s + b): read s (+ bias), write p
+            rep.hbm_read += (n * m) as u64;
+            if g.r > 0 {
+                rep.hbm_read += (n * m) as u64; // dense bias
+            }
+            rep.elemwise_flops += 4 * (n * m) as u64;
+            rep.hbm_write += (n * m) as u64;
+            // o = p v: read p, v; write o
+            rep.hbm_read += (n * m + m * c) as u64;
+            rep.matmul_flops += 2 * (n * m * c) as u64;
+            rep.hbm_write += (n * c) as u64;
+            rep.sram_peak = (2 * c) as u64; // row-streamed
+            rep.hbm_peak = (n * c + 2 * m * c + 2 * n * m
+                + if g.r > 0 { n * m } else { 0 }
+                + n * c) as u64;
+        }
+        Algorithm::Flash
+        | Algorithm::FlashDenseBias
+        | Algorithm::FlexLike
+        | Algorithm::FlashBias(_) => {
+            let dense_bias = alg == Algorithm::FlashDenseBias;
+            let flexlike = alg == Algorithm::FlexLike;
+            let w = c + r; // channel width streamed per query token
+            // strip: q (+φ_q) + o accumulator + (m, l) scalars
+            let strip_w = w + c + 2;
+            // kv stream: k (+φ_k) + v per key token
+            let kv_w = w + c;
+            let (bq, bkv) = block_sizes(hw.sram_elems, strip_w, kv_w, n, m);
+            let t_q = ceil_div(n, bq);
+            let t_kv = ceil_div(m, bkv);
+            // simulate the actual grid
+            for qi in 0..t_q {
+                let bq_cur = if qi == t_q - 1 { n - qi * bq } else { bq };
+                // load query strip (+ φ_q strip) and init accumulators
+                rep.hbm_read += (bq_cur * w) as u64;
+                let mut sram = bq_cur * strip_w;
+                for ki in 0..t_kv {
+                    let bk_cur =
+                        if ki == t_kv - 1 { m - ki * bkv } else { bkv };
+                    // stream k/v (+ φ_k) tiles
+                    rep.hbm_read += (bk_cur * kv_w) as u64;
+                    let tile = bk_cur * kv_w + bq_cur * bk_cur;
+                    sram = sram.max(bq_cur * strip_w + tile);
+                    // s = q kᵀ tile
+                    rep.matmul_flops += 2 * (bq_cur * bk_cur * c) as u64;
+                    if dense_bias {
+                        // the quadratic stream the paper eliminates
+                        rep.hbm_read += (bq_cur * bk_cur) as u64;
+                        rep.elemwise_flops += (bq_cur * bk_cur) as u64;
+                    }
+                    if flexlike {
+                        // score_mod: element-wise bias recompute per tile
+                        // (index arithmetic + gather + arithmetic chain —
+                        // all VPU work, never a matmul)
+                        rep.elemwise_flops += 10 * (bq_cur * bk_cur) as u64;
+                    }
+                    if r > 0 && !dense_bias && !flexlike {
+                        // FlashBias: tile reconstruction on the MXU
+                        rep.matmul_flops +=
+                            2 * (bq_cur * bk_cur * r) as u64;
+                        rep.elemwise_flops += (bq_cur * bk_cur) as u64;
+                    }
+                    // online softmax update + p·v
+                    rep.elemwise_flops += 5 * (bq_cur * bk_cur) as u64;
+                    rep.matmul_flops += 2 * (bq_cur * bk_cur * c) as u64;
+                }
+                // write output strip
+                rep.hbm_write += (bq_cur * c) as u64;
+                rep.sram_peak = rep.sram_peak.max(sram as u64);
+            }
+            let bias_resident = if dense_bias {
+                n * m
+            } else if flexlike {
+                0
+            } else {
+                (n + m) * r
+            };
+            rep.hbm_peak =
+                (n * c + 2 * m * c + bias_resident + n * c) as u64
+                + (n + m) as u64 * r as u64; // factor strips if any
+            if flexlike {
+                rep.recompiles = 1;
+            }
+        }
+    }
+    rep
+}
+
+/// Backward pass (training). Follows FlashAttention-2's recompute
+/// strategy: one extra forward-shaped pass for dq and one for dk/dv, plus
+/// the *bias gradient traffic* — the §4.4 pain point: dense learnable
+/// biases write and re-read an N×M gradient; factored biases only touch
+/// (N+M)·R.
+pub fn simulate_bwd(alg: Algorithm, g: &Geometry, hw: &HwModel) -> SimReport {
+    let mut rep = SimReport::default();
+    // dq pass + dkv pass ≈ 2 forward-shaped sweeps
+    let fwd = simulate_fwd(alg, g, hw);
+    rep.add(&fwd);
+    rep.add(&fwd);
+    rep.recompiles = fwd.recompiles; // recompile once, not thrice
+    let (n, m) = (g.n, g.m);
+    match alg {
+        Algorithm::FlashDenseBias | Algorithm::Standard => {
+            // learnable dense bias: db = dS must be materialized
+            rep.hbm_write += (n * m) as u64;
+            rep.hbm_read += (n * m) as u64; // optimizer read
+            rep.hbm_peak += (n * m) as u64;
+        }
+        Algorithm::FlashBias(r) => {
+            let strip = ((n + m) * r) as u64;
+            rep.hbm_write += strip;
+            rep.hbm_read += strip;
+            rep.hbm_peak += strip;
+        }
+        Algorithm::FlexLike => {
+            // FlexAttention "fails in speeding up dynamic bias": grads of a
+            // data-dependent bias must materialize dS too
+            rep.hbm_write += (n * m) as u64;
+            rep.hbm_read += (n * m) as u64;
+            rep.hbm_peak += (n * m) as u64;
+        }
+        Algorithm::Flash => {}
+    }
+    rep
+}
+
+/// One training step = forward + backward.
+pub fn simulate_train_step(alg: Algorithm, g: &Geometry,
+                           hw: &HwModel) -> SimReport {
+    let mut rep = simulate_fwd(alg, g, hw);
+    let bwd = simulate_bwd(alg, g, hw);
+    rep.add(&bwd);
+    rep.recompiles = bwd.recompiles;
+    rep
+}
+
+/// Multi-head, multi-layer sweep helper: per-head geometry scaled out.
+pub fn simulate_model_fwd(alg: Algorithm, g: &Geometry, heads: usize,
+                          layers: usize, hw: &HwModel) -> SimReport {
+    let one = simulate_fwd(alg, g, hw);
+    let mut rep = SimReport::default();
+    for _ in 0..heads * layers {
+        rep.add(&one);
+    }
+    // Flex-like recompiles once per distinct shape, not per head/layer —
+    // unless bias values differ per layer (Swin case, handled by caller).
+    rep.recompiles = one.recompiles;
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iomodel;
+
+    fn hw() -> HwModel {
+        HwModel::default()
+    }
+
+    fn geo(n: usize, r: usize) -> Geometry {
+        Geometry {
+            n,
+            m: n,
+            c: 64,
+            r,
+            sram: hw().sram_elems,
+        }
+    }
+
+    #[test]
+    fn sram_never_exceeded() {
+        for n in [256usize, 1024, 4096, 16384] {
+            for alg in [
+                Algorithm::Flash,
+                Algorithm::FlashDenseBias,
+                Algorithm::FlexLike,
+                Algorithm::FlashBias(64),
+            ] {
+                let rep = simulate_fwd(alg, &geo(n, 64), &hw());
+                assert!(
+                    rep.sram_peak <= hw().sram_elems as u64,
+                    "{} n={n}: sram {} > {}",
+                    alg.name(),
+                    rep.sram_peak,
+                    hw().sram_elems
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flash_beats_standard_io() {
+        let rep_std = simulate_fwd(Algorithm::Standard, &geo(4096, 0), &hw());
+        let rep_fla = simulate_fwd(Algorithm::Flash, &geo(4096, 0), &hw());
+        assert!(rep_fla.hbm_total() < rep_std.hbm_total());
+    }
+
+    #[test]
+    fn flashbias_eliminates_quadratic_bias_stream() {
+        let n = 8192;
+        let r = 16; // typical FlashBias rank (paper uses R = 8..16 here)
+        let dense =
+            simulate_fwd(Algorithm::FlashDenseBias, &geo(n, r), &hw());
+        let fact = simulate_fwd(Algorithm::FlashBias(r), &geo(n, r), &hw());
+        let pure = simulate_fwd(Algorithm::Flash, &geo(n, 0), &hw());
+        // dense pays ≥ N² extra reads over pure
+        assert!(dense.hbm_read >= pure.hbm_read + (n * n) as u64);
+        // FlashBias pays only the strips
+        assert!(fact.hbm_read < dense.hbm_read);
+        assert!(fact.hbm_total() < pure.hbm_total() * 2);
+    }
+
+    #[test]
+    fn flashbias_advantage_shrinks_as_rank_grows() {
+        // Remark 3.8 trade-off: at R ≈ C the widened q/k streams eat the
+        // bias-stream saving (the block-level constant-factor reality the
+        // Θ analysis hides); at small R the win is large.
+        let n = 8192;
+        let ratio = |r: usize| {
+            let dense =
+                simulate_fwd(Algorithm::FlashDenseBias, &geo(n, r), &hw());
+            let fact =
+                simulate_fwd(Algorithm::FlashBias(r), &geo(n, r), &hw());
+            dense.hbm_total() as f64 / fact.hbm_total() as f64
+        };
+        let r8 = ratio(8);
+        let r64 = ratio(64);
+        assert!(r8 > r64, "r8 {r8} !> r64 {r64}");
+        assert!(r8 > 1.5, "small-rank win too small: {r8}");
+    }
+
+    #[test]
+    fn flashbias_io_matches_corollary_3_7_asymptotics() {
+        // simulated HBM ≈ Θ(NM(C²+R²)/S): ratio to the model stays
+        // bounded across a 16× N sweep
+        let mut ratios = Vec::new();
+        for n in [1024usize, 4096, 16384] {
+            let g = geo(n, 64);
+            let sim =
+                simulate_fwd(Algorithm::FlashBias(64), &g, &hw()).hbm_total();
+            let model = iomodel::flashbias_io(&g);
+            ratios.push(sim as f64 / model);
+        }
+        let (lo, hi) = ratios
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(l, h), &r| (l.min(r), h.max(r)));
+        assert!(hi / lo < 1.6, "ratios {ratios:?} not Θ-stable");
+    }
+
+    #[test]
+    fn dense_bias_io_matches_model_asymptotics() {
+        let mut ratios = Vec::new();
+        for n in [1024usize, 4096, 16384] {
+            let g = geo(n, 64);
+            let sim = simulate_fwd(Algorithm::FlashDenseBias, &g, &hw())
+                .hbm_total();
+            let model = iomodel::flash_dense_bias_io(&g);
+            ratios.push(sim as f64 / model);
+        }
+        let (lo, hi) = ratios
+            .iter()
+            .fold((f64::MAX, f64::MIN), |(l, h), &r| (l.min(r), h.max(r)));
+        assert!(hi / lo < 1.6, "ratios {ratios:?} not Θ-stable");
+    }
+
+    #[test]
+    fn flexlike_pays_elementwise_not_io() {
+        let n = 4096;
+        let flex = simulate_fwd(Algorithm::FlexLike, &geo(n, 64), &hw());
+        let dense =
+            simulate_fwd(Algorithm::FlashDenseBias, &geo(n, 64), &hw());
+        assert!(flex.hbm_read < dense.hbm_read);
+        assert!(flex.elemwise_flops > dense.elemwise_flops);
+        assert_eq!(flex.recompiles, 1);
+        assert_eq!(dense.recompiles, 0);
+    }
+
+    #[test]
+    fn figure3_ordering_under_cost_model() {
+        // Figure 3(c-d) long-sequence ordering:
+        //   pure flash < flashbias < flexlike < flash+dense-bias
+        let n = 16384;
+        let r = 16;
+        let hwm = hw();
+        let pure = simulate_fwd(Algorithm::Flash, &geo(n, 0), &hwm).cost(&hwm);
+        let fb =
+            simulate_fwd(Algorithm::FlashBias(r), &geo(n, r), &hwm)
+                .cost(&hwm);
+        let flex =
+            simulate_fwd(Algorithm::FlexLike, &geo(n, r), &hwm).cost(&hwm);
+        let dense = simulate_fwd(Algorithm::FlashDenseBias, &geo(n, r), &hwm)
+            .cost(&hwm);
+        assert!(pure < fb, "pure {pure} !< fb {fb}");
+        assert!(fb < flex, "fb {fb} !< flex {flex}");
+        assert!(flex < dense, "flex {flex} !< dense {dense}");
+    }
+
+    #[test]
+    fn training_memory_gap_matches_table5_shape() {
+        // Table 5: dense learnable-bias training OOMs (quadratic grads);
+        // FlashBias stays near-linear
+        let n = 16384;
+        let dense =
+            simulate_train_step(Algorithm::FlashDenseBias, &geo(n, 9), &hw());
+        let fact =
+            simulate_train_step(Algorithm::FlashBias(9), &geo(n, 9), &hw());
+        assert!(dense.hbm_peak as f64 / fact.hbm_peak as f64 > 20.0);
+    }
+
+    #[test]
+    fn bwd_is_roughly_two_fwd() {
+        let g = geo(2048, 16);
+        let fwd = simulate_fwd(Algorithm::FlashBias(16), &g, &hw());
+        let bwd = simulate_bwd(Algorithm::FlashBias(16), &g, &hw());
+        let ratio = bwd.hbm_total() as f64 / fwd.hbm_total() as f64;
+        assert!((1.8..=2.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn rectangular_cross_attention() {
+        let g = Geometry {
+            n: 512,
+            m: 4096,
+            c: 64,
+            r: 16,
+            sram: hw().sram_elems,
+        };
+        let rep = simulate_fwd(Algorithm::FlashBias(16), &g, &hw());
+        assert!(rep.hbm_total() > 0);
+        assert!(rep.sram_peak <= hw().sram_elems as u64);
+    }
+
+    #[test]
+    fn model_sweep_scales_linearly() {
+        let g = geo(1024, 16);
+        let one = simulate_fwd(Algorithm::FlashBias(16), &g, &hw());
+        let many =
+            simulate_model_fwd(Algorithm::FlashBias(16), &g, 8, 4, &hw());
+        assert_eq!(many.hbm_total(), one.hbm_total() * 32);
+        assert_eq!(many.sram_peak, one.sram_peak);
+    }
+
+    #[test]
+    fn block_sizes_respect_sram() {
+        for (sram, sw, kw) in [
+            (1024usize, 130usize, 128usize),
+            (51200, 146, 144),
+            (51200, 194, 192),
+            (51200, 700, 680),
+        ] {
+            let (bq, bkv) = block_sizes(sram, sw, kw, 10_000, 10_000);
+            assert!(bq >= 1 && bkv >= 1);
+            // resident strip + kv tile + score tile must fit
+            assert!(
+                bq * sw + bkv * kw + bq * bkv <= sram
+                    || bq == 1
+                    || bkv == 1,
+                "sram={sram} sw={sw}: {} used",
+                bq * sw + bkv * kw + bq * bkv
+            );
+        }
+    }
+}

@@ -1,0 +1,510 @@
+//! Dense row-major f32 tensor — the host-side numeric substrate.
+//!
+//! Everything the reference attention, bias generators, SVD and the
+//! coordinator's host math need: matmul (blocked + transposed-B
+//! microkernel), transpose, softmax, concat, slicing, reductions and
+//! elementwise ops. Shapes are `Vec<usize>`; rank ≤ 4 in practice
+//! (head, row, col).
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    // ---- constructors -----------------------------------------------------
+
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} incompatible with {} elements",
+            shape,
+            data.len()
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self::new(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::new(shape, vec![1.0; shape.iter().product()])
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self::new(shape, vec![v; shape.iter().product()])
+    }
+
+    /// `[0, 1, ..., n-1]` as a 1-D tensor.
+    pub fn arange(n: usize) -> Self {
+        Self::new(&[n], (0..n).map(|i| i as f32).collect())
+    }
+
+    pub fn from_fn(shape: &[usize], f: impl Fn(&[usize]) -> f32) -> Self {
+        let numel: usize = shape.iter().product();
+        let mut idx = vec![0usize; shape.len()];
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(f(&idx));
+            for d in (0..shape.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        Self::new(shape, data)
+    }
+
+    pub fn randn(shape: &[usize], scale: f32,
+                 rng: &mut crate::util::Xoshiro256) -> Self {
+        let numel = shape.iter().product();
+        Self::new(shape, rng.normal_vec(numel, scale))
+    }
+
+    // ---- accessors ---------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Size in bytes (f32).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let m = self.shape[1];
+        &self.data[i * m..(i + 1) * m]
+    }
+
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        Tensor::new(shape, self.data.clone())
+    }
+
+    /// 3-D indexing helper: slice `[h]` of an (H, N, M) tensor as (N, M).
+    pub fn index0(&self, h: usize) -> Tensor {
+        assert!(self.rank() >= 2);
+        let sub: usize = self.shape[1..].iter().product();
+        Tensor::new(
+            &self.shape[1..],
+            self.data[h * sub..(h + 1) * sub].to_vec(),
+        )
+    }
+
+    // ---- elementwise -------------------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(&self.shape, self.data.iter().map(|&x| f(x)).collect())
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor::new(
+            &self.shape,
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        )
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    // ---- reductions --------------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+            as f32
+    }
+
+    /// Relative L2 distance ‖a − b‖ / ‖b‖.
+    pub fn rel_err(&self, other: &Tensor) -> f32 {
+        let diff = self.sub(other).norm() as f64;
+        let denom = (other.norm() as f64).max(1e-30);
+        (diff / denom) as f32
+    }
+
+    /// Row-wise mean of a 2-D tensor → 1-D (N,).
+    pub fn mean_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            out[i] = self.row(i).iter().sum::<f32>() / m as f32;
+        }
+        Tensor::new(&[n], out)
+    }
+
+    // ---- linear algebra ----------------------------------------------------
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; n * m];
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..n).step_by(B) {
+            for jb in (0..m).step_by(B) {
+                for i in ib..(ib + B).min(n) {
+                    for j in jb..(jb + B).min(m) {
+                        out[j * n + i] = self.data[i * m + j];
+                    }
+                }
+            }
+        }
+        Tensor::new(&[m, n], out)
+    }
+
+    /// Dense matmul C = A·B for 2-D tensors, blocked over K with an
+    /// i-k-j loop order (unit-stride inner loop; autovectorizes well).
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (n, k) = (self.shape[0], self.shape[1]);
+        let (k2, m) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; n * m];
+        let a = &self.data;
+        let b = &other.data;
+        for i in 0..n {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * m..(kk + 1) * m];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// C = A·Bᵀ without materializing the transpose (dot-product kernel;
+    /// the attention score path).
+    pub fn matmul_t(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (n, k) = (self.shape[0], self.shape[1]);
+        let (m, k2) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul_t inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..m {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&x, &y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                out[i * m + j] = acc;
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Row-wise numerically-stable softmax of a 2-D tensor.
+    pub fn softmax_rows(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; n * m];
+        for i in 0..n {
+            let row = self.row(i);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let orow = &mut out[i * m..(i + 1) * m];
+            let mut sum = 0.0f32;
+            for (o, &x) in orow.iter_mut().zip(row) {
+                let e = (x - mx).exp();
+                *o = e;
+                sum += e;
+            }
+            let inv = 1.0 / sum;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
+        }
+        Tensor::new(&[n, m], out)
+    }
+
+    /// Concatenate along the last axis (2-D only): (N, A) ++ (N, B) → (N, A+B).
+    pub fn concat_cols(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        assert_eq!(self.shape[0], other.shape[0], "concat row mismatch");
+        let (n, a, b) = (self.shape[0], self.shape[1], other.shape[1]);
+        let mut out = Vec::with_capacity(n * (a + b));
+        for i in 0..n {
+            out.extend_from_slice(self.row(i));
+            out.extend_from_slice(other.row(i));
+        }
+        Tensor::new(&[n, a + b], out)
+    }
+
+    /// Row slice of a 2-D tensor: rows [start, stop).
+    pub fn slice_rows(&self, start: usize, stop: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let m = self.shape[1];
+        Tensor::new(
+            &[stop - start, m],
+            self.data[start * m..stop * m].to_vec(),
+        )
+    }
+
+    /// Column slice of a 2-D tensor: cols [start, stop).
+    pub fn slice_cols(&self, start: usize, stop: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (n, m) = (self.shape[0], self.shape[1]);
+        let w = stop - start;
+        let mut out = Vec::with_capacity(n * w);
+        for i in 0..n {
+            out.extend_from_slice(&self.data[i * m + start..i * m + stop]);
+        }
+        Tensor::new(&[n, w], out)
+    }
+
+    /// Stack equal-shape tensors along a new leading axis.
+    pub fn stack(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let shape = parts[0].shape().to_vec();
+        let mut data = Vec::with_capacity(parts.len() * parts[0].numel());
+        for p in parts {
+            assert_eq!(p.shape(), &shape[..], "stack shape mismatch");
+            data.extend_from_slice(&p.data);
+        }
+        let mut out_shape = vec![parts.len()];
+        out_shape.extend_from_slice(&shape);
+        Tensor::new(&out_shape, data)
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.set2(i, i, 1.0);
+        }
+        t
+    }
+
+    /// All-close comparison with absolute + relative tolerance.
+    pub fn allclose(&self, other: &Tensor, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data.iter().zip(&other.data).all(|(&a, &b)| {
+            (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.size_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn bad_shape_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn from_fn_row_major_order() {
+        let t = Tensor::from_fn(&[2, 3], |ix| (ix[0] * 10 + ix[1]) as f32);
+        assert_eq!(t.data(), &[0., 1., 2., 10., 11., 12.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Xoshiro256::new(0);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        let out = a.matmul(&Tensor::eye(7));
+        assert!(out.allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Tensor::randn(&[9, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        let got = a.matmul_t(&b);
+        let expect = a.matmul(&b.t());
+        assert!(got.allclose(&expect, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Tensor::randn(&[37, 53], 1.0, &mut rng);
+        assert!(a.t().t().allclose(&a, 0.0, 0.0));
+    }
+
+    #[test]
+    fn softmax_rows_normalized_and_stable() {
+        let t = Tensor::new(&[2, 3], vec![1e4, 1e4, 1e4, 0., 1., 2.]);
+        let s = t.softmax_rows();
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        assert!((s.at2(0, 0) - 1.0 / 3.0).abs() < 1e-6);
+        assert!(s.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn concat_and_slice_roundtrip() {
+        let mut rng = Xoshiro256::new(3);
+        let a = Tensor::randn(&[4, 3], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let c = a.concat_cols(&b);
+        assert_eq!(c.shape(), &[4, 8]);
+        assert!(c.slice_cols(0, 3).allclose(&a, 0.0, 0.0));
+        assert!(c.slice_cols(3, 8).allclose(&b, 0.0, 0.0));
+    }
+
+    #[test]
+    fn slice_rows_works() {
+        let t = Tensor::from_fn(&[5, 2], |ix| ix[0] as f32);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn stack_and_index0() {
+        let a = Tensor::ones(&[2, 2]);
+        let b = Tensor::zeros(&[2, 2]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        assert!(s.index0(0).allclose(&a, 0.0, 0.0));
+        assert!(s.index0(1).allclose(&b, 0.0, 0.0));
+    }
+
+    #[test]
+    fn norms_and_errors() {
+        let a = Tensor::new(&[1, 2], vec![3., 4.]);
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+        let b = Tensor::new(&[1, 2], vec![3., 5.]);
+        assert!((a.rel_err(&b) - 1.0 / (34f32).sqrt()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mean_rows() {
+        let t = Tensor::new(&[2, 2], vec![1., 3., 5., 7.]);
+        assert_eq!(t.mean_rows().data(), &[2., 6.]);
+    }
+
+    #[test]
+    fn arange_and_map() {
+        let t = Tensor::arange(4).map(|x| x * x);
+        assert_eq!(t.data(), &[0., 1., 4., 9.]);
+    }
+
+    #[test]
+    fn matmul_associativity_with_vectors() {
+        let mut rng = Xoshiro256::new(4);
+        let a = Tensor::randn(&[8, 6], 0.5, &mut rng);
+        let b = Tensor::randn(&[6, 7], 0.5, &mut rng);
+        let c = Tensor::randn(&[7, 3], 0.5, &mut rng);
+        let left = a.matmul(&b).matmul(&c);
+        let right = a.matmul(&b.matmul(&c));
+        assert!(left.allclose(&right, 1e-4, 1e-4));
+    }
+}

@@ -1,0 +1,150 @@
+//! Integration: the full serving stack (router → batcher → worker pool →
+//! PJRT) over real artifacts. Requires `make artifacts`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, RouteKey, Router,
+};
+use flashbias::runtime::Runtime;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::open_default().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn router_builds_from_manifest() {
+    let rt = runtime();
+    let router = Router::from_runtime(&rt);
+    assert!(!router.is_empty());
+    let key = RouteKey::new("attn", "factored");
+    let (name, bucket) = router.route(&key, 300).expect("route 300");
+    assert_eq!(bucket, 512);
+    assert_eq!(name, "attn_factored_n512");
+    // exact fit
+    assert_eq!(router.route(&key, 256).unwrap().1, 256);
+    // oversize
+    assert!(router.route(&key, 100_000).is_none());
+}
+
+#[test]
+fn serve_burst_end_to_end() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        rt.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            queue_depth: 64,
+        },
+    );
+    let inputs = rt.example_inputs("attn_factored_n256").unwrap();
+    let reqs: Vec<_> = (0..10)
+        .map(|_| ("attn_factored_n256".to_string(), inputs.clone()))
+        .collect();
+    let responses = coord.run_burst(reqs).unwrap();
+    assert_eq!(responses.len(), 10);
+    let expected = rt.expected_outputs("attn_factored_n256").unwrap();
+    for resp in &responses {
+        let outs = resp.outputs.as_ref().unwrap();
+        let diff = outs[0]
+            .as_f32()
+            .unwrap()
+            .sub(expected[0].as_f32().unwrap())
+            .max_abs();
+        assert!(diff < 1e-4, "resp {} diff {diff}", resp.id);
+    }
+    // metrics consistent
+    let m = coord.metrics();
+    assert_eq!(m.submitted(), 10);
+    assert_eq!(m.completed(), 10);
+    assert_eq!(m.failed(), 0);
+    assert!(m.batches() >= 3); // 10 requests / max_batch 4
+    assert!(m.mean_batch_size() <= 4.0);
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_artifact_burst_routes_correctly() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(rt.clone(), CoordinatorConfig::default());
+    let a = rt.example_inputs("attn_pure_n256").unwrap();
+    let b = rt.example_inputs("attn_dense_n256").unwrap();
+    let mut reqs = Vec::new();
+    for _ in 0..3 {
+        reqs.push(("attn_pure_n256".to_string(), a.clone()));
+        reqs.push(("attn_dense_n256".to_string(), b.clone()));
+    }
+    let responses = coord.run_burst(reqs).unwrap();
+    assert_eq!(responses.len(), 6);
+    for r in &responses {
+        assert!(r.outputs.is_ok(), "{}: {:?}", r.artifact, r.outputs);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_artifact_rejected_at_submit() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(rt, CoordinatorConfig::default());
+    assert!(coord.submit("nope", vec![]).is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn deadline_flush_drains_partial_batches() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        rt.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 100, // never fills
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+            queue_depth: 8,
+        },
+    );
+    let inputs = rt.example_inputs("attn_pure_n256").unwrap();
+    coord.submit("attn_pure_n256", inputs).unwrap();
+    std::thread::sleep(Duration::from_millis(5));
+    coord.flush_due().unwrap();
+    let resp = coord
+        .recv_timeout(Duration::from_secs(60))
+        .expect("deadline flush must deliver");
+    assert!(resp.outputs.is_ok());
+    assert!(resp.queue_time >= Duration::from_millis(1));
+    coord.shutdown();
+}
+
+#[test]
+fn queue_time_reflects_batch_wait() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        rt.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_secs(10),
+            },
+            workers: 1,
+            queue_depth: 8,
+        },
+    );
+    let inputs = rt.example_inputs("attn_pure_n256").unwrap();
+    coord.submit("attn_pure_n256", inputs.clone()).unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    coord.submit("attn_pure_n256", inputs).unwrap(); // fills the batch
+    let r1 = coord.recv_timeout(Duration::from_secs(60)).unwrap();
+    let r2 = coord.recv_timeout(Duration::from_secs(60)).unwrap();
+    let (first, second) = if r1.id == 0 { (r1, r2) } else { (r2, r1) };
+    // the first request waited for the second
+    assert!(first.queue_time >= Duration::from_millis(15),
+            "queue_time {:?}", first.queue_time);
+    assert!(second.queue_time < first.queue_time);
+    coord.shutdown();
+}

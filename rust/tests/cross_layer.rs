@@ -1,0 +1,160 @@
+//! Cross-layer numerics: the rust host-side reference attention
+//! (`flashbias::attention`) must agree with the AOT-compiled Pallas
+//! kernels executed through PJRT, on the *same* inputs (read back from
+//! the artifact input dumps). This pins L3's host math against L1's
+//! kernels through the full interchange pipeline.
+
+use flashbias::attention::{self, AttnOpts};
+use flashbias::runtime::{HostValue, Runtime};
+use flashbias::tensor::Tensor;
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+fn f32_input(inputs: &[HostValue], i: usize) -> &Tensor {
+    inputs[i].as_f32().expect("f32 input")
+}
+
+#[test]
+fn host_attention_matches_pallas_pure() {
+    let rt = runtime();
+    let name = "attn_pure_n256";
+    let inputs = rt.example_inputs(name).unwrap();
+    let got = rt.load(name).unwrap().run(&inputs).unwrap();
+    let out = got[0].as_f32().unwrap();
+    let (q, k, v) = (
+        f32_input(&inputs, 0),
+        f32_input(&inputs, 1),
+        f32_input(&inputs, 2),
+    );
+    let host = attention::mha(q, k, v, None, &AttnOpts::default());
+    let rel = out.rel_err(&host);
+    assert!(rel < 1e-4, "pure: rel {rel}");
+}
+
+#[test]
+fn host_attention_matches_pallas_dense_bias() {
+    let rt = runtime();
+    let name = "attn_dense_n256";
+    let inputs = rt.example_inputs(name).unwrap();
+    let got = rt.load(name).unwrap().run(&inputs).unwrap();
+    let out = got[0].as_f32().unwrap();
+    let host = attention::mha(
+        f32_input(&inputs, 0),
+        f32_input(&inputs, 1),
+        f32_input(&inputs, 2),
+        Some(f32_input(&inputs, 3)),
+        &AttnOpts::default(),
+    );
+    let rel = out.rel_err(&host);
+    assert!(rel < 1e-4, "dense: rel {rel}");
+}
+
+#[test]
+fn host_attention_matches_pallas_factored() {
+    let rt = runtime();
+    let name = "attn_factored_n256";
+    let inputs = rt.example_inputs(name).unwrap();
+    let got = rt.load(name).unwrap().run(&inputs).unwrap();
+    let out = got[0].as_f32().unwrap();
+    let (q, k, v) = (
+        f32_input(&inputs, 0),
+        f32_input(&inputs, 1),
+        f32_input(&inputs, 2),
+    );
+    let (pq, pk) = (f32_input(&inputs, 3), f32_input(&inputs, 4));
+    // per head: host factored attention (Eq. 3 concat)
+    let h = q.shape()[0];
+    let heads: Vec<Tensor> = (0..h)
+        .map(|i| {
+            attention::attention_factored(
+                &q.index0(i),
+                &k.index0(i),
+                &v.index0(i),
+                &pq.index0(i),
+                &pk.index0(i),
+                &AttnOpts::default(),
+            )
+        })
+        .collect();
+    let host = Tensor::stack(&heads);
+    let rel = out.rel_err(&host);
+    assert!(rel < 1e-4, "factored: rel {rel}");
+}
+
+#[test]
+fn host_attention_matches_pallas_causal() {
+    let rt = runtime();
+    let name = "causal_pure_n256";
+    let inputs = rt.example_inputs(name).unwrap();
+    let got = rt.load(name).unwrap().run(&inputs).unwrap();
+    let out = got[0].as_f32().unwrap();
+    let host = attention::mha(
+        f32_input(&inputs, 0),
+        f32_input(&inputs, 1),
+        f32_input(&inputs, 2),
+        None,
+        &AttnOpts { causal: true },
+    );
+    let rel = out.rel_err(&host);
+    assert!(rel < 1e-4, "causal: rel {rel}");
+}
+
+#[test]
+fn host_multiplicative_matches_kernel() {
+    let rt = runtime();
+    let name = "mult_factored_n256";
+    let inputs = rt.example_inputs(name).unwrap();
+    let got = rt.load(name).unwrap().run(&inputs).unwrap();
+    let out = got[0].as_f32().unwrap();
+    let (q, k, v) = (
+        f32_input(&inputs, 0).index0(0),
+        f32_input(&inputs, 1).index0(0),
+        f32_input(&inputs, 2).index0(0),
+    );
+    let bias = f32_input(&inputs, 3)
+        .index0(0)
+        .matmul_t(&f32_input(&inputs, 4).index0(0));
+    let host = attention::attention_multiplicative(&q, &k, &v, &bias);
+    let rel = out.index0(0).rel_err(&host);
+    assert!(rel < 1e-4, "mult: rel {rel}");
+}
+
+#[test]
+fn exact_alibi_factors_match_python_layout() {
+    // The rust Alibi factorization must reproduce the python-side factor
+    // strips baked into causal_alibi_factored (same slopes, same layout).
+    use flashbias::bias::{Alibi, ExactBias};
+    let rt = runtime();
+    let inputs = rt.example_inputs("causal_alibi_factored_n256").unwrap();
+    let pq = f32_input(&inputs, 3);
+    let pk = f32_input(&inputs, 4);
+    let h = pq.shape()[0];
+    let n = pq.shape()[1];
+    let slopes = Alibi::head_slopes(h);
+    for head in 0..h {
+        let alibi = Alibi::new(n, n, slopes[head]);
+        let dense_from_python =
+            pq.index0(head).matmul_t(&pk.index0(head));
+        let dense_rust = alibi.dense();
+        let rel = dense_from_python.rel_err(&dense_rust);
+        assert!(rel < 1e-4, "head {head}: rel {rel}");
+    }
+}
+
+#[test]
+fn rust_svd_reconstructs_swin_factor_quality() {
+    // SVD here and SVD in python both hit the Eckart–Young bound, so the
+    // reconstruction error of our factors at the same rank must match the
+    // artifact's (within noise).
+    use flashbias::linalg;
+    let biases = flashbias::bias::swin_relative_bias((12, 12), 4, 0, 6, 0.02);
+    for b in &biases {
+        let (pq, pk) = linalg::svd_factors(b, 16);
+        let err = linalg::reconstruction_error(b, &pq, &pk) as f64;
+        let bound = linalg::eckart_young_error(b, 16);
+        assert!((err - bound).abs() < 0.02,
+                "err {err} vs Eckart–Young {bound}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Failure injection: the runtime and coordinator must degrade cleanly —
+//! bad manifests, missing binaries, wrong-arity requests, and
+//! backpressure must produce errors, not hangs or crashes, and the
+//! worker pool must survive failed requests.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use flashbias::runtime::{HostValue, Runtime};
+use flashbias::tensor::Tensor;
+
+fn runtime() -> Arc<Runtime> {
+    Arc::new(Runtime::open_default().expect("run `make artifacts` first"))
+}
+
+#[test]
+fn open_missing_dir_errors() {
+    let err = match Runtime::open("/nonexistent/path/xyz") {
+        Ok(_) => panic!("open of missing dir must fail"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest") || msg.contains("artifacts"),
+            "unhelpful error: {msg}");
+}
+
+#[test]
+fn open_corrupt_manifest_errors() {
+    let dir = std::env::temp_dir().join("flashbias_corrupt_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(Runtime::open(&dir).is_err());
+    // structurally valid JSON but missing fields
+    std::fs::write(dir.join("manifest.json"), r#"{"format": 1}"#).unwrap();
+    assert!(Runtime::open(&dir).is_err());
+}
+
+#[test]
+fn manifest_with_missing_binaries_errors_on_read() {
+    let dir = std::env::temp_dir().join("flashbias_missing_bins");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 1, "artifacts": [{"name": "ghost",
+            "hlo": "hlo/ghost.hlo.txt",
+            "inputs": [{"shape": [2], "dtype": "f32",
+                        "file": "inputs/ghost/0.bin"}],
+            "outputs": [], "meta": {}}]}"#,
+    )
+    .unwrap();
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.spec("ghost").is_some());
+    assert!(rt.example_inputs("ghost").is_err(), "missing bin must error");
+    assert!(rt.load("ghost").is_err(), "missing hlo must error");
+}
+
+#[test]
+fn wrong_size_binary_rejected() {
+    let dir = std::env::temp_dir().join("flashbias_badsize");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(dir.join("inputs/x")).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": 1, "artifacts": [{"name": "x",
+            "hlo": "hlo/x.hlo.txt",
+            "inputs": [{"shape": [4], "dtype": "f32",
+                        "file": "inputs/x/0.bin"}],
+            "outputs": [], "meta": {}}]}"#,
+    )
+    .unwrap();
+    std::fs::write(dir.join("inputs/x/0.bin"), [0u8; 8]).unwrap(); // 2 not 4
+    let rt = Runtime::open(&dir).unwrap();
+    let err = rt.example_inputs("x").unwrap_err();
+    assert!(format!("{err:#}").contains("expected"));
+}
+
+#[test]
+fn executable_rejects_wrong_arity_and_pool_survives() {
+    let rt = runtime();
+    let exe = rt.load("attn_pure_n256").unwrap();
+    let good = rt.example_inputs("attn_pure_n256").unwrap();
+    // wrong arity
+    assert!(exe.run(&good[..2]).is_err());
+    // still usable afterwards
+    assert!(exe.run(&good).is_ok());
+}
+
+#[test]
+fn coordinator_reports_failed_requests_and_continues() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        rt.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+            queue_depth: 16,
+        },
+    );
+    // a request with wrong-shaped inputs: PJRT must error, the worker
+    // must survive, and the next good request must succeed
+    let bad = vec![
+        HostValue::F32(Tensor::zeros(&[1, 1])),
+        HostValue::F32(Tensor::zeros(&[1, 1])),
+        HostValue::F32(Tensor::zeros(&[1, 1])),
+    ];
+    coord.submit("attn_pure_n256", bad).unwrap();
+    coord.flush_all().unwrap();
+    let resp = coord.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(resp.outputs.is_err(), "mis-shaped request must fail");
+
+    let good = rt.example_inputs("attn_pure_n256").unwrap();
+    coord.submit("attn_pure_n256", good).unwrap();
+    coord.flush_all().unwrap();
+    let resp = coord.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(resp.outputs.is_ok(), "pool must survive a failed request");
+    assert_eq!(coord.metrics().failed(), 1);
+    assert_eq!(coord.metrics().completed(), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_surfaces_as_error_not_hang() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(
+        rt.clone(),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 1, // every submit flushes a batch
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+            queue_depth: 1,
+        },
+    );
+    let inputs = rt.example_inputs("attn_dense_n512").unwrap();
+    // slam the queue; with depth 1 and slow executes, some submit must
+    // eventually report backpressure
+    let mut saw_backpressure = false;
+    let mut accepted = 0usize;
+    for _ in 0..16 {
+        match coord.submit("attn_dense_n512", inputs.clone()) {
+            Ok(_) => accepted += 1,
+            Err(e) => {
+                saw_backpressure = true;
+                assert!(format!("{e}").contains("backpressure"));
+                break;
+            }
+        }
+    }
+    assert!(saw_backpressure, "queue_depth=1 should backpressure");
+    // drain what was accepted
+    let mut drained = 0usize;
+    while drained < accepted {
+        if coord
+            .recv_timeout(Duration::from_secs(60))
+            .is_some()
+        {
+            drained += 1;
+        } else {
+            break;
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_work() {
+    let rt = runtime();
+    let mut coord = Coordinator::new(rt.clone(),
+                                     CoordinatorConfig::default());
+    let inputs = rt.example_inputs("attn_pure_n256").unwrap();
+    for _ in 0..3 {
+        coord.submit("attn_pure_n256", inputs.clone()).unwrap();
+    }
+    coord.flush_all().unwrap();
+    // shutdown without receiving: must not deadlock
+    coord.shutdown();
+}

@@ -1,0 +1,221 @@
+//! Property tests (proplite) over coordinator + decomposition invariants:
+//! routing monotonicity, batch conservation, Eq. (3) equivalence over
+//! random shapes, SVD error vs the Eckart–Young bound, exact-bias
+//! factorization over random geometry.
+
+use flashbias::attention::{self, AttnOpts};
+use flashbias::bias::{Alibi, ExactBias, SpatialDistance};
+use flashbias::coordinator::batcher::{BatcherConfig, DynamicBatcher};
+use flashbias::coordinator::router::{RouteKey, Router};
+use flashbias::coordinator::Request;
+use flashbias::linalg;
+use flashbias::proplite::{forall, gen_dim, shrink_usize, Config};
+use flashbias::tensor::Tensor;
+use flashbias::util::Xoshiro256;
+
+#[test]
+fn prop_router_smallest_adequate_bucket() {
+    let mut router = Router::default();
+    let key = RouteKey::new("f", "v");
+    let buckets = [64usize, 128, 256, 512, 1024];
+    for &b in &buckets {
+        router.insert(key.clone(), b, &format!("a{b}"));
+    }
+    forall(
+        Config::default().cases(300),
+        |rng| gen_dim(rng, 1, 1500),
+        |n| shrink_usize(n),
+        |&n| match router.route(&key, n) {
+            Some((_, bucket)) => {
+                bucket >= n
+                    && buckets
+                        .iter()
+                        .filter(|&&b| b >= n)
+                        .all(|&b| bucket <= b)
+            }
+            None => n > 1024,
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    // any submission sequence: flushed + pending == submitted, no dups
+    forall(
+        Config::default().cases(50),
+        |rng| {
+            let n = gen_dim(rng, 1, 40);
+            (0..n)
+                .map(|_| gen_dim(rng, 0, 2)) // artifact index
+                .collect::<Vec<_>>()
+        },
+        |v| flashbias::proplite::shrink_vec(v, |_| vec![]),
+        |seq| {
+            let mut b = DynamicBatcher::new(BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_secs(100),
+            });
+            let mut flushed_ids = Vec::new();
+            for (id, &art) in seq.iter().enumerate() {
+                let req = Request {
+                    id: id as u64,
+                    artifact: format!("a{art}"),
+                    inputs: vec![],
+                    enqueued: std::time::Instant::now(),
+                };
+                if let Some(batch) = b.push(req) {
+                    flushed_ids
+                        .extend(batch.requests.iter().map(|r| r.id));
+                }
+            }
+            let pending = b.pending_len();
+            for batch in b.flush_all() {
+                flushed_ids.extend(batch.requests.iter().map(|r| r.id));
+            }
+            let _ = pending;
+            let mut sorted = flushed_ids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            sorted.len() == seq.len() && flushed_ids.len() == seq.len()
+        },
+    );
+}
+
+#[test]
+fn prop_eq3_concat_equals_additive_bias() {
+    // Eq. (3) equivalence over random (n, m, c, r)
+    forall(
+        Config::default().cases(30),
+        |rng| {
+            (
+                gen_dim(rng, 2, 24),
+                gen_dim(rng, 2, 24),
+                gen_dim(rng, 2, 16),
+                gen_dim(rng, 1, 6),
+                rng.next_u64(),
+            )
+        },
+        |_| vec![],
+        |&(n, m, c, r, seed)| {
+            let mut rng = Xoshiro256::new(seed);
+            let q = Tensor::randn(&[n, c], 1.0, &mut rng);
+            let k = Tensor::randn(&[m, c], 1.0, &mut rng);
+            let v = Tensor::randn(&[m, c], 1.0, &mut rng);
+            let pq = Tensor::randn(&[n, r], 0.3, &mut rng);
+            let pk = Tensor::randn(&[m, r], 0.3, &mut rng);
+            let bias = pq.matmul_t(&pk);
+            let dense = attention::attention(&q, &k, &v, Some(&bias),
+                                             &AttnOpts::default());
+            let fact = attention::attention_factored(
+                &q, &k, &v, &pq, &pk, &AttnOpts::default());
+            fact.allclose(&dense, 1e-4, 1e-4)
+        },
+    );
+}
+
+#[test]
+fn prop_online_softmax_block_size_invariant() {
+    forall(
+        Config::default().cases(25),
+        |rng| {
+            (
+                gen_dim(rng, 1, 16),
+                gen_dim(rng, 1, 40),
+                gen_dim(rng, 2, 12),
+                gen_dim(rng, 1, 41),
+                rng.next_u64(),
+            )
+        },
+        |_| vec![],
+        |&(n, m, c, block, seed)| {
+            let mut rng = Xoshiro256::new(seed);
+            let q = Tensor::randn(&[n, c], 1.0, &mut rng);
+            let k = Tensor::randn(&[m, c], 1.0, &mut rng);
+            let v = Tensor::randn(&[m, c], 1.0, &mut rng);
+            let full = attention::attention(&q, &k, &v, None,
+                                            &AttnOpts::default());
+            let streamed = attention::online_softmax_attention(
+                &q, &k, &v, None, block);
+            streamed.allclose(&full, 1e-4, 1e-4)
+        },
+    );
+}
+
+#[test]
+fn prop_alibi_exact_over_random_geometry() {
+    forall(
+        Config::default().cases(60),
+        |rng| {
+            (
+                gen_dim(rng, 1, 80),
+                gen_dim(rng, 1, 80),
+                rng.uniform(0.001, 2.0) as f32,
+            )
+        },
+        |_| vec![],
+        |&(n, m, slope)| {
+            let alibi = Alibi::new(n, m, slope);
+            let (pq, pk) = alibi.factors();
+            pq.matmul_t(&pk).allclose(&alibi.dense(), 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_spatial_exact_over_random_clouds() {
+    forall(
+        Config::default().cases(30),
+        |rng| (gen_dim(rng, 1, 30), gen_dim(rng, 1, 30), rng.next_u64()),
+        |_| vec![],
+        |&(n, m, seed)| {
+            let mut rng = Xoshiro256::new(seed);
+            let xq = Tensor::randn(&[n, 3], 1.0, &mut rng);
+            let xk = Tensor::randn(&[m, 3], 1.0, &mut rng);
+            let alpha: Vec<f32> =
+                (0..n).map(|_| rng.uniform(0.1, 3.0) as f32).collect();
+            let b = SpatialDistance::new(xq, xk, Some(alpha));
+            let (pq, pk) = b.factors();
+            pq.matmul_t(&pk).allclose(&b.dense(), 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_svd_error_matches_eckart_young() {
+    // truncated-SVD error never beats and closely tracks the spectral
+    // optimum
+    forall(
+        Config::default().cases(12),
+        |rng| {
+            (
+                gen_dim(rng, 4, 24),
+                gen_dim(rng, 4, 24),
+                gen_dim(rng, 1, 8),
+                rng.next_u64(),
+            )
+        },
+        |_| vec![],
+        |&(n, m, r, seed)| {
+            let mut rng = Xoshiro256::new(seed);
+            let a = Tensor::randn(&[n, m], 1.0, &mut rng);
+            let (pq, pk) = linalg::svd_factors(&a, r);
+            let err = linalg::reconstruction_error(&a, &pq, &pk) as f64;
+            let bound = linalg::eckart_young_error(&a, r);
+            err >= bound - 5e-3 && err <= bound + 5e-2
+        },
+    );
+}
+
+#[test]
+fn prop_factored_storage_always_matches_formula() {
+    use flashbias::decompose::from_exact;
+    forall(
+        Config::default().cases(40),
+        |rng| (gen_dim(rng, 1, 100), gen_dim(rng, 1, 100)),
+        |_| vec![],
+        |&(n, m)| {
+            let f = from_exact(&Alibi::new(n, m, 0.5));
+            f.size_bytes() == (n + m) * 2 * 4
+        },
+    );
+}

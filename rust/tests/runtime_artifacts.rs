@@ -1,0 +1,184 @@
+//! Integration: the PJRT runtime replays every AOT artifact and matches
+//! the outputs recorded by the python side at lowering time — the
+//! L1/L2 ⇄ L3 integrity check. Requires `make artifacts`.
+
+use flashbias::runtime::{HostValue, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::open_default().expect("run `make artifacts` first")
+}
+
+fn max_diff(a: &[HostValue], b: &[HostValue]) -> f32 {
+    let mut worst = 0.0f32;
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        match (x, y) {
+            (HostValue::F32(tx), HostValue::F32(ty)) => {
+                assert_eq!(tx.shape(), ty.shape());
+                worst = worst.max(tx.sub(ty).max_abs());
+            }
+            (HostValue::I32(vx, _), HostValue::I32(vy, _)) => {
+                assert_eq!(vx, vy);
+            }
+            _ => panic!("output dtype mismatch"),
+        }
+    }
+    worst
+}
+
+#[test]
+fn manifest_loads_and_has_expected_families() {
+    let rt = runtime();
+    let names = rt.names();
+    assert!(names.len() >= 40, "only {} artifacts", names.len());
+    for family in ["attn", "causal", "plain", "gpt2", "swin", "pde",
+                   "pairformer", "fig5", "mult"] {
+        assert!(
+            names.iter().any(|n| rt.spec(n).unwrap().family() == family
+                             || rt.spec(n).unwrap().family()
+                                 .starts_with(family)),
+            "no artifacts for family {family}"
+        );
+    }
+}
+
+#[test]
+fn replay_micro_attention_artifacts() {
+    let rt = runtime();
+    for name in ["attn_pure_n256", "attn_dense_n256", "attn_factored_n256",
+                 "attn_flexlike_n256"] {
+        let exe = rt.load(name).unwrap();
+        let inputs = rt.example_inputs(name).unwrap();
+        let expected = rt.expected_outputs(name).unwrap();
+        let got = exe.run(&inputs).unwrap();
+        let diff = max_diff(&got, &expected);
+        assert!(diff < 1e-4, "{name}: max|Δ| = {diff}");
+    }
+}
+
+#[test]
+fn replay_causal_and_mult_artifacts() {
+    let rt = runtime();
+    for name in ["causal_pure_n256", "causal_alibi_dense_n256",
+                 "causal_alibi_factored_n256", "causal_alibi_jit_n256",
+                 "mult_factored_n256", "mult_dense_n256"] {
+        let exe = rt.load(name).unwrap();
+        let got = exe.run(&rt.example_inputs(name).unwrap()).unwrap();
+        let diff = max_diff(&got, &rt.expected_outputs(name).unwrap());
+        assert!(diff < 1e-4, "{name}: max|Δ| = {diff}");
+    }
+}
+
+#[test]
+fn replay_model_artifacts() {
+    let rt = runtime();
+    for name in ["plain_factored_n256", "gpt2_factored_n256",
+                 "swin_factored", "pde_factored_n512",
+                 "pairformer_neural"] {
+        let exe = rt.load(name).unwrap();
+        let got = exe.run(&rt.example_inputs(name).unwrap()).unwrap();
+        let diff = max_diff(&got, &rt.expected_outputs(name).unwrap());
+        assert!(diff < 2e-3, "{name}: max|Δ| = {diff}");
+    }
+}
+
+#[test]
+fn alibi_exact_decomposition_identical_through_models() {
+    // Table 3's claim "the result of FlashBias is exactly equivalent":
+    // gpt2_dense and gpt2_factored share weights and tokens; ALiBi's
+    // exact decomposition must give (near-)identical logits end-to-end.
+    let rt = runtime();
+    let dense = rt
+        .load("gpt2_dense_n256")
+        .unwrap()
+        .run(&rt.example_inputs("gpt2_dense_n256").unwrap())
+        .unwrap();
+    let fact = rt
+        .load("gpt2_factored_n256")
+        .unwrap()
+        .run(&rt.example_inputs("gpt2_factored_n256").unwrap())
+        .unwrap();
+    let diff = max_diff(&dense, &fact);
+    assert!(diff < 5e-3, "gpt2 dense vs factored: max|Δ| = {diff}");
+}
+
+#[test]
+fn causal_alibi_variants_agree() {
+    // dense / factored / jit all encode the same ALiBi bias over the same
+    // q/k/v (same data seed) — outputs must agree.
+    let rt = runtime();
+    let run = |name: &str| {
+        rt.load(name)
+            .unwrap()
+            .run(&rt.example_inputs(name).unwrap())
+            .unwrap()
+    };
+    let dense = run("causal_alibi_dense_n256");
+    let fact = run("causal_alibi_factored_n256");
+    let jit = run("causal_alibi_jit_n256");
+    assert!(max_diff(&dense, &fact) < 1e-3);
+    assert!(max_diff(&dense, &jit) < 1e-3);
+}
+
+#[test]
+fn fig5_pallas_and_sdpa_agree() {
+    // Figure 5 compares two implementations of the same computation.
+    let rt = runtime();
+    let run = |name: &str| {
+        rt.load(name)
+            .unwrap()
+            .run(&rt.example_inputs(name).unwrap())
+            .unwrap()
+    };
+    let pallas = run("fig5_pallas_n256");
+    let sdpa = run("fig5_sdpa_n256");
+    assert!(max_diff(&pallas, &sdpa) < 1e-3);
+}
+
+#[test]
+fn swin_svd_truncation_accuracy_preserved() {
+    // Table 4: SVD-factored Swin must track the dense model closely
+    // (class logits, not bit-exact — R=16 keeps ≥99% energy).
+    let rt = runtime();
+    let dense = rt
+        .load("swin_dense")
+        .unwrap()
+        .run(&rt.example_inputs("swin_dense").unwrap())
+        .unwrap();
+    let fact = rt
+        .load("swin_factored")
+        .unwrap()
+        .run(&rt.example_inputs("swin_factored").unwrap())
+        .unwrap();
+    let (d, f) = (dense[0].as_f32().unwrap(), fact[0].as_f32().unwrap());
+    let rel = f.rel_err(d);
+    assert!(rel < 0.15, "swin factored rel err {rel}");
+    // top-1 class unchanged
+    let argmax = |t: &flashbias::tensor::Tensor| {
+        t.data()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    assert_eq!(argmax(d), argmax(f));
+}
+
+#[test]
+fn runtime_rejects_bad_requests() {
+    let rt = runtime();
+    assert!(rt.load("no_such_artifact").is_err());
+    assert!(rt.example_inputs("no_such_artifact").is_err());
+    let exe = rt.load("attn_pure_n256").unwrap();
+    // wrong arity
+    assert!(exe.run(&[]).is_err());
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let rt = runtime();
+    let a = rt.load("attn_pure_n256").unwrap();
+    let b = rt.load("attn_pure_n256").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+}

@@ -1,0 +1,157 @@
+//! The tiled-execution simulator must agree with the analytic IO model
+//! (Theorems 3.1/3.2, Corollaries 3.3/3.7) up to block-rounding constants
+//! — over wide sweeps of N, C, R and SRAM size.
+
+use flashbias::iomodel::{self, Geometry};
+use flashbias::simulator::{simulate_fwd, Algorithm, HwModel};
+
+fn hw(sram: usize) -> HwModel {
+    HwModel {
+        sram_elems: sram,
+        ..HwModel::default()
+    }
+}
+
+/// Ratio spread of simulated/model over a sweep must stay bounded — that
+/// is what Θ(...) agreement means.
+fn theta_stable(ratios: &[f64], max_spread: f64, label: &str) {
+    let (lo, hi) = ratios
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(l, h), &r| (l.min(r), h.max(r)));
+    assert!(
+        hi / lo <= max_spread,
+        "{label}: ratios {ratios:?} spread {:.2} > {max_spread}",
+        hi / lo
+    );
+}
+
+#[test]
+fn cor_3_7_flashbias_io_theta_over_n() {
+    for &r in &[8usize, 16, 64] {
+        let ratios: Vec<f64> = [512usize, 2048, 8192, 32768]
+            .iter()
+            .map(|&n| {
+                let g = Geometry::square(n, 64, r, 51200);
+                simulate_fwd(Algorithm::FlashBias(r), &g, &hw(51200))
+                    .hbm_total() as f64
+                    / iomodel::flashbias_io(&g)
+            })
+            .collect();
+        theta_stable(&ratios, 1.7, &format!("flashbias R={r} over N"));
+    }
+}
+
+#[test]
+fn cor_3_7_flashbias_io_theta_over_sram() {
+    // IO must scale ≈ 1/S
+    let ratios: Vec<f64> = [16_384usize, 51_200, 131_072, 524_288]
+        .iter()
+        .map(|&s| {
+            let g = Geometry::square(8192, 64, 16, s);
+            simulate_fwd(Algorithm::FlashBias(16), &g, &hw(s)).hbm_total()
+                as f64
+                / iomodel::flashbias_io(&g)
+        })
+        .collect();
+    theta_stable(&ratios, 2.5, "flashbias over S");
+}
+
+#[test]
+fn dense_bias_io_theta_over_n() {
+    let ratios: Vec<f64> = [512usize, 2048, 8192, 32768]
+        .iter()
+        .map(|&n| {
+            let g = Geometry::square(n, 64, 64, 51200);
+            simulate_fwd(Algorithm::FlashDenseBias, &g, &hw(51200))
+                .hbm_total() as f64
+                / iomodel::flash_dense_bias_io(&g)
+        })
+        .collect();
+    theta_stable(&ratios, 1.7, "dense bias over N");
+}
+
+#[test]
+fn flash_io_theta_over_channel() {
+    let ratios: Vec<f64> = [32usize, 64, 128]
+        .iter()
+        .map(|&c| {
+            let g = Geometry::square(8192, c, 0, 51200);
+            simulate_fwd(Algorithm::Flash, &g, &hw(51200)).hbm_total() as f64
+                / iomodel::flash_attention_io(&g)
+        })
+        .collect();
+    // C² scaling has larger block-rounding wobble; still bounded
+    theta_stable(&ratios, 3.0, "flash over C");
+}
+
+#[test]
+fn lower_bound_never_beaten() {
+    // Corollary 3.3: the simulator cannot beat the lower bound (up to the
+    // block-allocation constant < 1 is impossible; allow 0.5 for the
+    // Θ-constant mismatch direction)
+    for n in [1024usize, 8192, 32768] {
+        for r in [8usize, 64] {
+            let g = Geometry::square(n, 64, r, 51200);
+            let sim = simulate_fwd(Algorithm::FlashBias(r), &g, &hw(51200))
+                .hbm_total() as f64;
+            let bound = iomodel::lower_bound_io(&g);
+            assert!(
+                sim > bound * 0.5,
+                "n={n} r={r}: simulated {sim} below lower bound {bound}"
+            );
+        }
+    }
+}
+
+#[test]
+fn thm_3_1_standard_over_flash_ratio_tracks_beta() {
+    // doubling SRAM (β) roughly doubles the standard/flash IO ratio
+    let g = |s| Geometry::square(8192, 64, 0, s);
+    let ratio = |s: usize| {
+        let std =
+            simulate_fwd(Algorithm::Standard, &g(s), &hw(s)).hbm_total();
+        let fla = simulate_fwd(Algorithm::Flash, &g(s), &hw(s)).hbm_total();
+        std as f64 / fla as f64
+    };
+    let r1 = ratio(25_600);
+    let r2 = ratio(51_200);
+    let gain = r2 / r1;
+    assert!((1.5..=2.5).contains(&gain), "β-scaling gain {gain}");
+}
+
+#[test]
+fn thm_3_2_memory_footprints() {
+    // simulator peak memory matches the storage model: dense ⇒ Θ(N²),
+    // factored ⇒ Θ((N+M)R)
+    for n in [2048usize, 8192] {
+        let g = Geometry::square(n, 64, 16, 51200);
+        let dense = simulate_fwd(Algorithm::FlashDenseBias, &g, &hw(51200));
+        let fact = simulate_fwd(Algorithm::FlashBias(16), &g, &hw(51200));
+        let dense_bias_bytes = dense.hbm_peak as i64
+            - fact.hbm_peak as i64;
+        let model_gap = iomodel::dense_storage_elems(n, n) as i64
+            - iomodel::factored_storage_elems(n, n, 16) as i64;
+        let rel = (dense_bias_bytes - model_gap).abs() as f64
+            / model_gap as f64;
+        assert!(rel < 0.2, "n={n}: peak gap {dense_bias_bytes} vs model \
+                            {model_gap}");
+    }
+}
+
+#[test]
+fn figure4_efficiency_ratio_improves_with_n() {
+    // Figure 4: FlashBias's advantage over dense-bias grows with sequence
+    // length (the quadratic stream dominates)
+    let hwm = hw(51200);
+    let ratio = |n: usize| {
+        let g = Geometry::square(n, 64, 16, 51200);
+        let dense =
+            simulate_fwd(Algorithm::FlashDenseBias, &g, &hwm).cost(&hwm);
+        let fb = simulate_fwd(Algorithm::FlashBias(16), &g, &hwm).cost(&hwm);
+        dense / fb
+    };
+    let r1k = ratio(1024);
+    let r16k = ratio(16384);
+    assert!(r16k >= r1k * 0.99, "ratio fell: 1k={r1k} 16k={r16k}");
+    assert!(r16k > 1.3, "no speedup at 16k: {r16k}");
+}
