@@ -1,0 +1,40 @@
+# FlashBias workspace glue.
+#
+# Tier-1 verify: `make verify` (= cargo build --release && cargo test -q).
+# The PJRT artifacts are optional: everything except the runtime-replay
+# paths works without them (tests skip, examples print a notice).
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: all build test verify bench examples fmt clippy artifacts clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+verify: build test
+
+bench:
+	$(CARGO) bench
+
+examples:
+	$(CARGO) build --release --examples
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# AOT-compile the HLO artifacts + input/output dumps (needs the python
+# jax toolchain from the accelerator image).
+artifacts:
+	cd python/compile && $(PYTHON) aot.py --out-dir ../../artifacts
+
+clean:
+	$(CARGO) clean

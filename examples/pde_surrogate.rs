@@ -1,80 +1,135 @@
 //! PDE-surrogate example (§4.4 / Example 3.5): spatial-distance-bias
-//! attention over synthetic car-hull point clouds — dense vs exact rank-9
-//! factorization, host-side decomposition + PJRT execution.
+//! attention over synthetic car-hull point clouds, through the unified
+//! plan API — `BiasSpec::spatial → Planner (exact rank-9 factors) →
+//! execute` — plus the Table 5 scaling story off the plan's cost model.
 //!
-//!     make artifacts && cargo run --release --example pde_surrogate
+//!     cargo run --release --example pde_surrogate
+//!     # optional PJRT section: make artifacts first
 
 use flashbias::attention::{self, AttnOpts};
 use flashbias::benchkit::{bench_artifact, Table};
-use flashbias::bias::{synthetic_car_cloud, ExactBias, SpatialDistance};
+use flashbias::bias::synthetic_car_cloud;
 use flashbias::iomodel::{self, Geometry};
+use flashbias::plan::{self, BiasSpec, ExecMode, PlanOptions, Planner};
 use flashbias::runtime::Runtime;
+use flashbias::tensor::Tensor;
 use flashbias::util::{human_bytes, Xoshiro256};
 
 fn main() -> anyhow::Result<()> {
-    // --- 1. host-side: the exact factorization on a real cloud ----------
+    // --- 1. plan the exact factorization on a real cloud -----------------
     let n = 2048;
     let cloud = synthetic_car_cloud(n, 0);
     let mut rng = Xoshiro256::new(1);
     let alpha: Vec<f32> =
         (0..n).map(|_| rng.uniform(0.5, 2.0) as f32).collect();
-    let bias = SpatialDistance::new(cloud.clone(), cloud.clone(),
-                                    Some(alpha));
-    let (pq, pk) = bias.factors();
-    let dense = bias.dense();
-    let err = pq.matmul_t(&pk).rel_err(&dense);
+    let spec =
+        BiasSpec::spatial(cloud.clone(), cloud.clone(), Some(alpha));
+    let geo = Geometry::square(n, 32, 0, 100 * 1024 / 2);
+    let planner = Planner::default();
+    // verify_exact: double-check the closed form against the dense matrix
+    let planop = PlanOptions {
+        verify_exact: true,
+        ..PlanOptions::default()
+    };
+    let plan = planner.plan(&spec, &geo, &planop)?;
     println!(
-        "Example 3.5 on a {n}-point car hull: rank {} exact factorization, \
-         rel err {err:.2e}",
-        bias.rank()
+        "Example 3.5 on a {n}-point car hull: {}",
+        plan.summary()
     );
+    let rel_err = match &plan.mode {
+        ExecMode::Factored { factors } => factors.rel_err,
+        _ => panic!("spatial bias must plan as exact factors"),
+    };
+    println!("exact factorization rel err: {rel_err:.2e}");
     println!(
         "bias storage: dense {} -> factored {}",
-        human_bytes(dense.size_bytes() as u64),
-        human_bytes((pq.size_bytes() + pk.size_bytes()) as u64)
+        human_bytes((n * n * 4) as u64),
+        human_bytes(plan.bias_storage_bytes as u64)
     );
 
-    // attention through the factors equals dense-bias attention
-    let q = flashbias::tensor::Tensor::randn(&[64, 32], 1.0, &mut rng);
-    let k = flashbias::tensor::Tensor::randn(&[n, 32], 1.0, &mut rng);
-    let v = flashbias::tensor::Tensor::randn(&[n, 32], 1.0, &mut rng);
-    let bias_rows = dense.slice_rows(0, 64);
-    let pq_rows = pq.slice_rows(0, 64);
+    // --- 2. executed cross-attention equals the dense-bias reference -----
+    let q = Tensor::randn(&[64, 32], 1.0, &mut rng);
+    let k = Tensor::randn(&[n, 32], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, 32], 1.0, &mut rng);
+    // cross-attention: 64 query points against the full hull — re-plan at
+    // the rectangular geometry with the matching spec rows
+    let alpha64: Vec<f32> = (0..64)
+        .map(|i| {
+            match &spec {
+                BiasSpec::Spatial(s) => {
+                    s.alpha.as_ref().map(|a| a[i]).unwrap_or(1.0)
+                }
+                _ => 1.0,
+            }
+        })
+        .collect();
+    let xq64 = cloud.slice_rows(0, 64);
+    let cross_spec =
+        BiasSpec::spatial(xq64, cloud.clone(), Some(alpha64));
+    let cross_geo = Geometry {
+        n: 64,
+        m: n,
+        c: 32,
+        r: 0,
+        sram: geo.sram,
+    };
+    let cross_plan =
+        planner.plan(&cross_spec, &cross_geo, &PlanOptions::default())?;
+    let o_fact = plan::execute(&cross_plan, &q, &k, &v)?;
+    let bias_rows = cross_spec.materialize().unwrap();
     let o_dense = attention::attention(&q, &k, &v, Some(&bias_rows),
                                        &AttnOpts::default());
-    let o_fact = attention::attention_factored(&q, &k, &v, &pq_rows, &pk,
-                                               &AttnOpts::default());
-    println!("cross-attention dense↔factored rel err: {:.2e}",
-             o_fact.rel_err(&o_dense));
+    println!(
+        "cross-attention plan↔dense rel err: {:.2e}",
+        o_fact.rel_err(&o_dense)
+    );
     assert!(o_fact.rel_err(&o_dense) < 1e-3);
 
-    // --- 2. PJRT: the full 2-layer solver, three variants ----------------
-    let rt = Runtime::open_default()?;
-    let mut table = Table::new(
-        "PDE solver fwd (N=512, H=8, 2 layers) — Table 5 shape",
-    );
-    for name in ["pde_nobias_n512", "pde_dense_n512", "pde_factored_n512"] {
-        table.row(bench_artifact(&rt, name, 2, 8));
-    }
-    for name in ["pde_train_dense_n512", "pde_train_factored_n512"] {
-        let mut row = bench_artifact(&rt, name, 1, 4);
-        row.note = "train step (α gradients flow through the bias)".into();
-        table.row(row);
-    }
-    drop(table);
-
-    // --- 3. the Table 5 scaling story via the IO model --------------------
-    println!("\nTable 5 scaling (model, training step, per head):");
+    // --- 3. the Table 5 scaling story via the plan's cost model ----------
+    println!("\nTable 5 scaling (plan-predicted, training step, per head):");
     for &nn in &[8192usize, 16384, 32186] {
-        let g = Geometry::square(nn, 128, 9, 100 * 1024 / 2);
-        let dense_mem = iomodel::training_memory_elems(&g, true) * 4;
-        let fact_mem = iomodel::training_memory_elems(&g, false) * 4;
+        let cl = synthetic_car_cloud(nn, 2);
+        let s = BiasSpec::spatial(cl.clone(), cl, None);
+        let g = Geometry::square(nn, 128, 0, 100 * 1024 / 2);
+        let p = planner.plan(&s, &g, &PlanOptions::default())?;
+        let dense_mem =
+            iomodel::training_memory_elems(&p.geometry, true) * 4;
+        let fact_mem =
+            iomodel::training_memory_elems(&p.geometry, false) * 4;
         println!(
-            "  N={nn:6}: dense {} vs FlashBias {}  ({}x)",
+            "  N={nn:6}: rank {} plan, {:.1}x IO saving, memory dense {} \
+             vs FlashBias {} ({}x)",
+            p.rank(),
+            p.io_saving(),
             human_bytes(dense_mem as u64),
             human_bytes(fact_mem as u64),
             dense_mem / fact_mem
         );
+    }
+
+    // --- 4. PJRT: the full 2-layer solver (optional) ----------------------
+    match Runtime::open_default() {
+        Ok(rt) => {
+            let mut table = Table::new(
+                "PDE solver fwd (N=512, H=8, 2 layers) — Table 5 shape",
+            );
+            for name in
+                ["pde_nobias_n512", "pde_dense_n512", "pde_factored_n512"]
+            {
+                table.row(bench_artifact(&rt, name, 2, 8));
+            }
+            for name in
+                ["pde_train_dense_n512", "pde_train_factored_n512"]
+            {
+                let mut row = bench_artifact(&rt, name, 1, 4);
+                row.note =
+                    "train step (α gradients flow through the bias)"
+                        .into();
+                table.row(row);
+            }
+            drop(table);
+        }
+        Err(e) => println!("\nPJRT section skipped ({e})"),
     }
     println!("pde_surrogate OK");
     Ok(())

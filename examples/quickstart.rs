@@ -1,72 +1,108 @@
-//! Quickstart: load the AOT artifacts, run ALiBi attention three ways
-//! (dense bias / FlashBias factored / in-kernel JIT), verify they agree,
-//! and print timing + the bias-storage saving.
+//! Quickstart: the whole FlashBias pipeline in three lines —
+//! `BiasSpec → Planner → execute` — then the same plan through the
+//! tiled simulator and (when artifacts are built) the PJRT runtime.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
+//!     # optional PJRT section: make artifacts first
 
-use flashbias::benchkit::{bench_artifact, bias_input_bytes, Table};
-use flashbias::bias::{Alibi, ExactBias};
-use flashbias::decompose;
-use flashbias::iomodel::{self, Geometry};
+use std::sync::Arc;
+
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{
+    self, BiasSpec, Executor, PjrtExecutor, PlanOptions, Planner,
+    SimExecutor,
+};
 use flashbias::runtime::Runtime;
-use flashbias::util::human_bytes;
+use flashbias::tensor::Tensor;
+use flashbias::util::{human_bytes, Xoshiro256};
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::open_default()?;
-    println!("platform: {}", rt.platform());
-    println!("artifacts: {}", rt.names().len());
+    let (n, c) = (256usize, 64usize);
+    let sram = 100 * 1024 / 2; // Example 3.9: 100 KB of fp16
+    let mut rng = Xoshiro256::new(0);
+    let q = Tensor::randn(&[n, c], 1.0, &mut rng);
+    let k = Tensor::randn(&[n, c], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, c], 1.0, &mut rng);
 
-    // --- 1. correctness: the three ALiBi encodings agree -----------------
-    let run = |name: &str| -> anyhow::Result<flashbias::tensor::Tensor> {
-        let out = rt.load(name)?.run(&rt.example_inputs(name)?)?;
-        Ok(out[0].as_f32().unwrap().clone())
-    };
-    let dense = run("causal_alibi_dense_n256")?;
-    let fact = run("causal_alibi_factored_n256")?;
-    let jit = run("causal_alibi_jit_n256")?;
-    println!(
-        "\nALiBi encodings agree: dense↔factored rel={:.2e}, \
-         dense↔jit rel={:.2e}",
-        fact.rel_err(&dense),
-        jit.rel_err(&dense)
-    );
-    assert!(fact.rel_err(&dense) < 1e-3);
-    assert!(jit.rel_err(&dense) < 1e-3);
+    // --- 1. the three-line pipeline --------------------------------------
+    let spec = BiasSpec::alibi(n, n, 0.25);
+    let plan = Planner::default().plan(
+        &spec,
+        &Geometry::square(n, c, 0, sram),
+        &PlanOptions { causal: true, ..PlanOptions::default() },
+    )?;
+    let out = plan::execute(&plan, &q, &k, &v)?;
+    println!("plan:   {}", plan.summary());
+    println!("output: {:?} (host executor)", out.shape());
 
-    // --- 2. the decomposition itself (Example 3.4) -----------------------
-    let alibi = Alibi::new(256, 256, 0.25);
-    let factors = decompose::from_exact(&alibi);
+    // --- 2. the jit mode of the same bias agrees -------------------------
+    let jit_plan = Planner::default().plan(
+        &spec,
+        &Geometry::square(n, c, 0, sram),
+        &PlanOptions {
+            causal: true,
+            prefer_jit: true,
+            ..PlanOptions::default()
+        },
+    )?;
+    let jit_out = plan::execute(&jit_plan, &q, &k, &v)?;
     println!(
-        "\nExample 3.4: ALiBi rank = {}, reconstruction err = {:.2e}",
-        factors.rank, factors.rel_err
+        "factored ↔ jit agree: rel err {:.2e}",
+        jit_out.rel_err(&out)
     );
+    assert!(jit_out.rel_err(&out) < 1e-4);
+
+    // --- 3. same plan, simulator backend: numerics + HBM accounting ------
+    let sim = SimExecutor::default();
+    let sim_out = sim.execute(&plan, &q, &k, &v)?;
+    assert!(sim_out.rel_err(&out) < 1e-4);
+    let rep = sim.last_report().expect("report");
     println!(
-        "bias storage: dense {} -> factored {} ({}x smaller)",
-        human_bytes(alibi.dense().size_bytes() as u64),
-        human_bytes(factors.size_bytes() as u64),
-        alibi.dense().size_bytes() / factors.size_bytes()
+        "simulator: rel err {:.2e}, HBM {} elems (predicted {:.3e}, \
+         dense-bias baseline {:.3e} → {:.1}x)",
+        sim_out.rel_err(&out),
+        rep.hbm_total(),
+        plan.predicted_io,
+        plan.dense_io,
+        plan.io_saving()
     );
 
-    // --- 3. measured timing ----------------------------------------------
-    let mut table = Table::new("quickstart timing (N=256, H=8, C=64)");
-    for name in ["causal_pure_n256", "causal_alibi_dense_n256",
-                 "causal_alibi_factored_n256", "causal_alibi_jit_n256"] {
-        let mut row = bench_artifact(&rt, name, 2, 10);
-        row.note = format!(
-            "bias-input bytes: {}",
-            human_bytes(bias_input_bytes(&rt, name))
-        );
-        table.row(row);
+    // --- 4. the storage story (Thm 3.2) ----------------------------------
+    let dense_bytes = n * n * 4;
+    println!(
+        "bias storage: dense {} -> plan {} ({}x smaller)",
+        human_bytes(dense_bytes as u64),
+        human_bytes(plan.bias_storage_bytes.max(1) as u64),
+        dense_bytes / plan.bias_storage_bytes.max(1)
+    );
+
+    // --- 5. PJRT backend (optional: requires `make artifacts`) -----------
+    match Runtime::open_default() {
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            println!("\nplatform: {}", rt.platform());
+            // the "attn" artifact family is non-causal: plan the same
+            // bias without the mask for the cross-backend check
+            let flat_plan = Planner::default().plan(
+                &spec,
+                &Geometry::square(n, c, 0, sram),
+                &PlanOptions::default(),
+            )?;
+            let host_out = plan::execute(&flat_plan, &q, &k, &v)?;
+            let pjrt = PjrtExecutor::new(rt, "attn");
+            match pjrt.execute(&flat_plan, &q, &k, &v) {
+                Ok(pout) => {
+                    let rel = pout.rel_err(&host_out);
+                    println!("pjrt executor: rel err vs host {rel:.2e}");
+                    assert!(rel < 1e-3, "pjrt disagrees with host: {rel}");
+                }
+                Err(e) => println!("pjrt executor skipped: {e}"),
+            }
+        }
+        Err(e) => {
+            println!("\nPJRT section skipped ({e})");
+        }
     }
-    drop(table);
-
-    // --- 4. the theory (Example 3.9) --------------------------------------
-    let g = Geometry::square(16384, 64, 64, 100 * 1024 / 2);
-    println!(
-        "\nExample 3.9 (N=16384, C=R=64, S=100KB fp16): \
-         model predicts FlashBias IO {:.1}x smaller than dense-bias",
-        iomodel::flash_dense_bias_io(&g) / iomodel::flashbias_io(&g)
-    );
     println!("quickstart OK");
     Ok(())
 }

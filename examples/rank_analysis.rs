@@ -1,53 +1,74 @@
 //! Spectral/energy analysis of learned relative-position biases —
 //! regenerates the numbers behind Figures 6, 8 and 9 (SwinV2) and the
-//! Pangu-Weather Appendix B setting, on the synthetic "trained" tables.
+//! Pangu-Weather Appendix B setting, on the synthetic "trained" tables —
+//! and shows what the Table 1 planner decides for every head.
 //!
 //!     cargo run --release --example rank_analysis
 
 use flashbias::bias::{pangu_relative_bias, swin_relative_bias};
-use flashbias::linalg::{
-    energy_spectrum, rank_for_energy, reconstruction_error, svd_factors,
-};
+use flashbias::iomodel::Geometry;
+use flashbias::linalg::energy_spectrum;
+use flashbias::plan::{BiasSpec, Decision, PlanOptions, Planner};
 
 fn main() {
-    // --- Figure 6/8: SwinV2-like window bias, per-head rank@energy -------
+    let planner = Planner::default();
+    let opts = PlanOptions::default();
+
+    // --- Figure 6/8: SwinV2-like window bias, per-head plan --------------
     let window = (12, 12); // N = 144 (paper: 24² = 576, scaled)
+    let n = window.0 * window.1;
     let heads = 8;
-    println!("SwinV2-like window {window:?} (N = {}):",
-             window.0 * window.1);
-    println!("  head | rank@95% | rank@99% | rank@99.5% | err@R=16");
+    let geo = Geometry::square(n, 32, 0, 100 * 1024 / 2);
+    println!("SwinV2-like window {window:?} (N = {n}):");
+    println!("  head | decision                  | rank | rel err | IO win");
     let mut r99_all = Vec::new();
     for (h, bias) in swin_relative_bias(window, heads, 0, 6, 0.02)
-        .iter()
+        .into_iter()
         .enumerate()
     {
-        let r95 = rank_for_energy(bias, 0.95);
-        let r99 = rank_for_energy(bias, 0.99);
-        let r995 = rank_for_energy(bias, 0.995);
-        let (pq, pk) = svd_factors(bias, 16);
-        let err = reconstruction_error(bias, &pq, &pk);
-        println!("  {h:4} | {r95:8} | {r99:8} | {r995:10} | {err:.4}");
-        r99_all.push(r99);
+        let plan = planner
+            .plan(&BiasSpec::static_learned(bias), &geo, &opts)
+            .expect("plan static table");
+        let rank = plan.measured_rank();
+        let (label, err) = match &plan.decision {
+            Decision::Svd { rel_err, .. } => ("SVD", *rel_err),
+            Decision::DenseFallback { .. } => ("dense-fallback", 0.0),
+            other => panic!("unexpected decision {other:?}"),
+        };
+        println!(
+            "  {h:4} | {label:25} | {rank:4} | {err:7.4} | {:5.1}x",
+            plan.io_saving()
+        );
+        r99_all.push(rank);
     }
     let mean_r99 =
         r99_all.iter().sum::<usize>() as f64 / r99_all.len() as f64;
     println!(
-        "  mean rank@99% = {mean_r99:.1} of {} (paper Fig. 8: later-layer \
-         heads well below full rank)",
-        window.0 * window.1
+        "  mean rank@99% = {mean_r99:.1} of {n} (paper Fig. 8: later-layer \
+         heads well below full rank)"
     );
 
     // --- Figure 8's layer trend: noise level as a proxy for layer depth --
     println!("\nlayer-depth trend (noise ↓ ⇒ smoother ⇒ lower rank):");
+    let mut per_layer_ranks = Vec::new();
     for (li, noise) in [0.08f32, 0.04, 0.02, 0.01].iter().enumerate() {
         let biases = swin_relative_bias(window, 4, li as u64, 6, *noise);
-        let mean: f64 = biases
-            .iter()
-            .map(|b| rank_for_energy(b, 0.95) as f64)
-            .sum::<f64>()
-            / biases.len() as f64;
-        println!("  layer~{li}: mean rank@95% = {mean:.1}");
+        let ranks: Vec<usize> = biases
+            .into_iter()
+            .map(|b| {
+                planner
+                    .plan(&BiasSpec::static_learned(b), &geo, &opts)
+                    .expect("plan")
+                    .measured_rank()
+            })
+            .collect();
+        let mean: f64 = ranks.iter().sum::<usize>() as f64
+            / ranks.len() as f64;
+        println!("  layer~{li}: mean rank@99% = {mean:.1}");
+        per_layer_ranks.push(*ranks.iter().max().unwrap());
     }
+    let from = planner.factored_from(&per_layer_ranks, n);
+    println!("  → §4.3 policy: factored from layer {from}");
 
     // --- energy spectrum detail (Figure 6's 99.5% claim) -----------------
     let bias = &swin_relative_bias(window, 1, 42, 6, 0.02)[0];
@@ -57,14 +78,29 @@ fn main() {
 
     // --- Appendix B: Pangu 3-D window 2×6×12 = 144 -----------------------
     println!("\nPangu-Weather 3-D window (2, 6, 12) (N = 144):");
+    // the paper pins R = 56; an override bypasses the fraction test
+    let pangu_opts = PlanOptions {
+        rank_override: Some(56),
+        ..PlanOptions::default()
+    };
     for (h, bias) in pangu_relative_bias((2, 6, 12), 4, 0, 5, 0.02)
-        .iter()
+        .into_iter()
         .enumerate()
     {
-        let r99 = rank_for_energy(bias, 0.99);
-        let (pq, pk) = svd_factors(bias, 56); // paper: R = 56
-        let err = reconstruction_error(bias, &pq, &pk);
-        println!("  head {h}: rank@99% = {r99:3}, err@R=56 = {err:.5}");
+        let measured = planner
+            .plan(&BiasSpec::static_learned(bias.clone()), &geo, &opts)
+            .expect("plan");
+        let pinned = planner
+            .plan(&BiasSpec::static_learned(bias), &geo, &pangu_opts)
+            .expect("plan");
+        let err56 = match &pinned.decision {
+            Decision::Svd { rel_err, .. } => *rel_err,
+            other => panic!("override must stay SVD, got {other:?}"),
+        };
+        println!(
+            "  head {h}: planned rank = {:3}, err@R=56 = {err56:.5}",
+            measured.rank()
+        );
     }
     println!("rank_analysis OK");
 }

@@ -1,11 +1,16 @@
 //! Figure 10 (Appendix G): neural decomposition generalizes to diverse
 //! scientific biases — gravity (hard: near-singular diagonal) and
-//! spherical haversine distance (easy: smooth) — trained with the
-//! rust-side Eq. (5) fitter.
+//! spherical haversine distance (easy: smooth) — both declared as
+//! `BiasSpec::dynamic` and routed through the Table 1 planner, which
+//! picks the neural decomposition (Eq. 5) for data-dependent biases.
 
 use flashbias::benchkit::paper_reference;
 use flashbias::bias::{gravity_bias, spherical_bias};
-use flashbias::decompose::{NeuralConfig, NeuralDecomposition};
+use flashbias::decompose::NeuralConfig;
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{
+    BiasSpec, Decision, PlanOptions, Planner, SelectorConfig,
+};
 use flashbias::tensor::Tensor;
 use flashbias::util::{Timer, Xoshiro256};
 
@@ -18,28 +23,45 @@ fn main() {
     ]);
     let n = 64;
     let mut rng = Xoshiro256::new(0);
+    let planner = Planner::new(SelectorConfig {
+        neural: NeuralConfig {
+            rank: 32,
+            hidden: 48,
+            steps: 1500,
+            lr: 3e-3,
+            ..NeuralConfig::default()
+        },
+        ..SelectorConfig::default()
+    });
+    let geo = Geometry::square(n, 32, 0, 100 * 1024 / 2);
+    let opts = PlanOptions::default();
+
+    let fit = |sources: &Tensor, target: &Tensor| {
+        let spec = BiasSpec::dynamic(
+            sources.clone(),
+            sources.clone(),
+            target.clone(),
+        );
+        let t = Timer::start();
+        let plan = planner.plan(&spec, &geo, &opts).expect("plan dynamic");
+        let secs = t.elapsed_secs();
+        let (rank, rel_err) = match &plan.decision {
+            Decision::Neural { rank, rel_err } => (*rank, *rel_err),
+            other => panic!("dynamic bias must plan neural: {other:?}"),
+        };
+        let approx = plan.materialized_bias().expect("factored bias");
+        (plan, rank, rel_err, secs, approx)
+    };
 
     // gravity: points in [0,1]², bias 1/(d² + 0.01)
     let pts_data: Vec<f32> = (0..n * 2).map(|_| rng.next_f32()).collect();
     let pts = Tensor::new(&[n, 2], pts_data);
     let grav = gravity_bias(&pts, &pts, 0.01);
-    let cfg = NeuralConfig {
-        rank: 32,
-        hidden: 48,
-        steps: 1500,
-        lr: 3e-3,
-        ..NeuralConfig::default()
-    };
-    let t = Timer::start();
-    let nd = NeuralDecomposition::fit(&pts, &pts, &grav, &cfg, &mut rng);
-    let approx = nd.phi_q(&pts).matmul_t(&nd.phi_k(&pts));
-    let grav_err = approx.rel_err(&grav);
+    let (gplan, grank, grav_err, gsecs, gapprox) = fit(&pts, &grav);
     println!(
-        "\n  gravity  (R=32): rel err {grav_err:.3} in {:.1}s, loss \
-         {:.2} -> {:.2}",
-        t.elapsed_secs(),
-        nd.loss_history.first().unwrap(),
-        nd.loss_history.last().unwrap()
+        "\n  gravity  (R={grank}): rel err {grav_err:.3} in {gsecs:.1}s, \
+         plan {}",
+        gplan.mode_name()
     );
 
     // spherical: (lat, lon) samples, haversine distance
@@ -54,18 +76,12 @@ fn main() {
         .collect();
     let sphere_pts = Tensor::new(&[n, 2], sphere_data);
     let sph = spherical_bias(&sphere_pts, &sphere_pts);
-    let t = Timer::start();
-    let nd2 = NeuralDecomposition::fit(&sphere_pts, &sphere_pts, &sph,
-                                       &cfg, &mut rng2);
-    let approx2 =
-        nd2.phi_q(&sphere_pts).matmul_t(&nd2.phi_k(&sphere_pts));
-    let sph_err = approx2.rel_err(&sph);
+    let (splan, srank, sph_err, ssecs, _sapprox) = fit(&sphere_pts, &sph);
     println!(
-        "  spherical(R=32): rel err {sph_err:.3} in {:.1}s, loss \
-         {:.3} -> {:.4}",
-        t.elapsed_secs(),
-        nd2.loss_history.first().unwrap(),
-        nd2.loss_history.last().unwrap()
+        "  spherical(R={srank}): rel err {sph_err:.3} in {ssecs:.1}s, \
+         plan {} ({:.1}x predicted IO win)",
+        splan.mode_name(),
+        splan.io_saving()
     );
 
     // the paper's shape: spherical much easier than gravity
@@ -77,7 +93,7 @@ fn main() {
     let mut den_b = 0.0f64;
     for i in 0..n {
         for j in 0..n {
-            let a = approx.at2(i, j) as f64;
+            let a = gapprox.at2(i, j) as f64;
             let b = grav.at2(i, j) as f64;
             num += a * b;
             den_a += a * a;

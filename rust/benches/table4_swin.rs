@@ -1,5 +1,7 @@
 //! Table 4: SwinV2-B — SVD-decomposed relative-position bias: accuracy
-//! preserved, time/memory reduced; offline SVD cost reported.
+//! preserved, time/memory reduced; offline SVD cost reported. The whole
+//! offline pipeline goes through the plan API: every head's table is a
+//! `BiasSpec::static_learned` and the planner runs the rank test + SVD.
 //!
 //! Paper: Acc@1 87.14→87.19 (+0.04), time 0.479→0.190 s (−60%), mem
 //! 12.8→9.4 GB (−27%); offline SVD of all biases 4.79 s.
@@ -9,7 +11,8 @@ use flashbias::benchkit::{
     Table,
 };
 use flashbias::bias::swin_relative_bias;
-use flashbias::linalg::{rank_for_energy, svd_factors};
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{BiasSpec, PlanOptions, Planner};
 use flashbias::runtime::Runtime;
 use flashbias::util::human_bytes;
 
@@ -20,27 +23,65 @@ fn main() {
         "Acc@1 87.144%->87.186%, Acc@5 98.232%->98.220% (no loss);",
         "offline SVD of all biases: 4.79s",
     ]);
-    let rt = Runtime::open_default().expect("make artifacts");
     let it = iters(10);
 
-    // offline SVD cost (the Table 4 footnote)
+    // offline planning cost (the Table 4 footnote): rank scan + SVD for
+    // every (layer, head) table, at the paper's pinned R = 16
     let window = (12, 12);
+    let n = window.0 * window.1;
     let heads = 4;
     let layers = 4;
-    time_once("offline SVD of all biases", || {
-        for li in 0..layers {
-            for b in swin_relative_bias(window, heads, li as u64, 6, 0.02) {
-                let _ = svd_factors(&b, 16);
-            }
-        }
+    let planner = Planner::default();
+    let geo = Geometry::square(n, 32, 0, 100 * 1024 / 2);
+    let opts = PlanOptions {
+        rank_override: Some(16),
+        ..PlanOptions::default()
+    };
+    let plans = time_once("offline planning of all biases (R=16)", || {
+        (0..layers)
+            .flat_map(|li| {
+                swin_relative_bias(window, heads, li as u64, 6, 0.02)
+                    .into_iter()
+                    .map(|b| {
+                        planner
+                            .plan(&BiasSpec::static_learned(b), &geo,
+                                  &opts)
+                            .expect("plan swin table")
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect::<Vec<_>>()
     });
+    let total_factor_bytes: usize =
+        plans.iter().map(|p| p.bias_storage_bytes).sum();
+    println!(
+        "  {} plans, factor storage {} (dense would be {})",
+        plans.len(),
+        human_bytes(total_factor_bytes as u64),
+        human_bytes((plans.len() * n * n * 4) as u64)
+    );
 
-    // rank profile (Figure 8 companion)
-    let biases = swin_relative_bias(window, heads, 0, 6, 0.02);
-    let ranks: Vec<usize> =
-        biases.iter().map(|b| rank_for_energy(b, 0.99)).collect();
-    println!("  rank@99% per head: {ranks:?} of {}", window.0 * window.1);
+    // rank profile at the energy target (Figure 8 companion)
+    let measured_opts = PlanOptions::default();
+    let ranks: Vec<usize> = swin_relative_bias(window, heads, 0, 6, 0.02)
+        .into_iter()
+        .map(|b| {
+            planner
+                .plan(&BiasSpec::static_learned(b), &geo, &measured_opts)
+                .expect("plan")
+                .measured_rank()
+        })
+        .collect();
+    println!("  rank@99% per head: {ranks:?} of {n}");
 
+    // measured artifacts (optional: requires `make artifacts`)
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("  measured section skipped ({e})");
+            return;
+        }
+    };
     let mut table = Table::new("Swin classifier (N=144, 4 layers, H=4)");
     for name in ["swin_dense", "swin_factored"] {
         let mut row = bench_artifact(&rt, name, 2, it);

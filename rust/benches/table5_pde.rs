@@ -1,13 +1,17 @@
 //! Table 5: Transformer PDE solver with *learnable* weighted 3-D distance
 //! bias — training + inference memory/time across N; dense methods OOM,
-//! FlashBias scales.
+//! FlashBias scales. The per-N geometry, rank and algorithm all come from
+//! the planner: `BiasSpec::spatial` plans to exact rank-9 factors and the
+//! simulator runs `plan.algorithm()` against the dense-bias baseline.
 //!
 //! Paper (per 100 iters): train N=8192 FlashAttention 12.8GB/15.4s, OOM at
 //! 16384+; FlashBias 1.46GB/4.54s ... 2.97GB/51.1s at 32186. Inference
 //! FlexAttention OOM ≥16384; FlashBias 1.13GB/12.7s at 32186.
 
 use flashbias::benchkit::{bench_artifact, iters, paper_reference, Table};
+use flashbias::bias::synthetic_car_cloud;
 use flashbias::iomodel::Geometry;
+use flashbias::plan::{BiasSpec, PlanOptions, Planner};
 use flashbias::runtime::Runtime;
 use flashbias::simulator::{
     simulate_fwd, simulate_train_step, Algorithm, HwModel,
@@ -23,41 +27,66 @@ fn main() {
         "  FlashBias 0.98/1.22  1.03/3.48  1.13/12.7",
     ]);
 
-    // simulated at the paper's N (8 heads, C=128, R=9, per train step)
+    // plan the bias at each paper N: the spatial spec always plans to the
+    // exact rank-9 factors (8 heads, C=128)
     let hw = HwModel::default();
-    println!("\n-- simulated peak memory (8 heads, C=128, R=9) --");
-    println!("  {:>8} | {:>24} | {:>24}", "N", "dense (train)",
-             "flashbias (train)");
+    let planner = Planner::default();
+    let opts = PlanOptions::default();
+    println!("\n-- plan-driven simulation (8 heads, C=128) --");
+    println!(
+        "  {:>8} | {:>10} | {:>24} | {:>24}",
+        "N", "plan", "dense (train mem)", "flashbias (train mem)"
+    );
     for n in [8192usize, 16384, 32186] {
-        let g = Geometry::square(n, 128, 9, hw.sram_elems);
-        let dense = simulate_train_step(Algorithm::FlashDenseBias, &g, &hw);
-        let fact = simulate_train_step(Algorithm::FlashBias(9), &g, &hw);
+        let cloud = synthetic_car_cloud(n, 0);
+        let spec = BiasSpec::spatial(cloud.clone(), cloud, None);
+        let g = Geometry::square(n, 128, 0, hw.sram_elems);
+        let plan = planner.plan(&spec, &g, &opts).expect("plan spatial");
+        let dense =
+            simulate_train_step(Algorithm::FlashDenseBias, &plan.geometry,
+                                &hw);
+        let fact = simulate_train_step(plan.algorithm(), &plan.geometry,
+                                       &hw);
         println!(
-            "  {n:>8} | {:>24} | {:>24}",
+            "  {n:>8} | {:>7} R={} | {:>24} | {:>24}",
+            plan.mode_name(),
+            plan.rank(),
             human_bytes(dense.hbm_peak * 8 * 4),
             human_bytes(fact.hbm_peak * 8 * 4)
         );
     }
     println!("  (dense quadratic-gradient storage is what OOMs in Table 5)");
 
-    println!("\n-- simulated inference cost --");
+    println!("\n-- plan-driven inference cost --");
     for n in [8192usize, 16384, 32186] {
-        let g = Geometry::square(n, 128, 9, hw.sram_elems);
-        let dense = simulate_fwd(Algorithm::FlashDenseBias, &g, &hw);
-        let flex = simulate_fwd(Algorithm::FlexLike, &g, &hw);
-        let fact = simulate_fwd(Algorithm::FlashBias(9), &g, &hw);
+        let cloud = synthetic_car_cloud(n, 1);
+        let spec = BiasSpec::spatial(cloud.clone(), cloud, None);
+        let g = Geometry::square(n, 128, 0, hw.sram_elems);
+        let plan = planner.plan(&spec, &g, &opts).expect("plan spatial");
+        let dense = simulate_fwd(Algorithm::FlashDenseBias, &plan.geometry,
+                                 &hw);
+        let flex =
+            simulate_fwd(Algorithm::FlexLike, &plan.geometry, &hw);
+        let fact = simulate_fwd(plan.algorithm(), &plan.geometry, &hw);
         println!(
             "  N={n:>6}: dense {:.3e}  flex {:.3e}  flashbias {:.3e} \
-             (ratio dense/fb {:.2}x)",
+             (model predicts {:.2}x; sim dense/fb {:.2}x)",
             dense.cost(&hw),
             flex.cost(&hw),
             fact.cost(&hw),
+            plan.io_saving(),
             dense.cost(&hw) / fact.cost(&hw)
         );
     }
 
-    // measured on XLA-CPU at the built sizes
-    let rt = Runtime::open_default().expect("make artifacts");
+    // measured on XLA-CPU at the built sizes (requires `make artifacts`)
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\n  measured section skipped ({e})");
+            return;
+        }
+    };
     let it = iters(6);
     let mut table = Table::new("measured fwd (N=512, H=8, 2 layers)");
     for variant in ["nobias", "dense", "factored"] {

@@ -2,13 +2,16 @@
 //! FlashBias at R=56 on the 2×6×12=144 window; output difference vs the
 //! dense code must be tiny (paper: 0.0003 vs 0.0128 for no-bias).
 //!
-//! Host-side reproduction: synthetic 3-D relative tables with longitude
-//! sharing, SVD truncation, attention output difference + timing.
+//! Host-side reproduction through the plan API: each head's synthetic
+//! 3-D relative table is a `BiasSpec::static_learned`, planned at the
+//! paper's pinned R = 56 (`rank_override`), and executed against the
+//! dense reference and the no-bias plan.
 
 use flashbias::attention::{self, AttnOpts};
 use flashbias::benchkit::{bench_fn, iters, paper_reference, Table};
 use flashbias::bias::pangu_relative_bias;
-use flashbias::linalg::{rank_for_energy, svd_factors};
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{self, BiasSpec, Decision, PlanOptions, Planner};
 use flashbias::tensor::Tensor;
 use flashbias::util::Xoshiro256;
 
@@ -22,42 +25,63 @@ fn main() {
     let window = (2usize, 6, 12);
     let n = window.0 * window.1 * window.2; // 144
     let heads = 4;
-    let r = 56;
     let biases = pangu_relative_bias(window, heads, 0, 5, 0.02);
 
-    // rank profile
-    let ranks: Vec<usize> =
-        biases.iter().map(|b| rank_for_energy(b, 0.99)).collect();
+    let planner = Planner::default();
+    let geo = Geometry::square(n, 32, 0, 100 * 1024 / 2);
+    let pinned = PlanOptions {
+        rank_override: Some(56),
+        ..PlanOptions::default()
+    };
+
+    // rank profile at the energy target vs the paper's pinned rank
+    let ranks: Vec<usize> = biases
+        .iter()
+        .map(|b| {
+            planner
+                .plan(&BiasSpec::static_learned(b.clone()), &geo,
+                      &PlanOptions::default())
+                .expect("plan")
+                .measured_rank()
+        })
+        .collect();
     println!("  rank@99% per head: {ranks:?} of {n} (paper sets R = 56)");
 
-    // output difference through attention
+    // output difference through the executed plans
     let mut rng = Xoshiro256::new(0);
     let q = Tensor::randn(&[n, 32], 1.0, &mut rng);
     let k = Tensor::randn(&[n, 32], 1.0, &mut rng);
     let v = Tensor::randn(&[n, 32], 1.0, &mut rng);
     let opts = AttnOpts::default();
+    let nobias_plan = planner
+        .plan(&BiasSpec::None, &geo, &PlanOptions::default())
+        .expect("plan no-bias");
     let mut diff_fb = 0.0f32;
     let mut diff_nobias = 0.0f32;
+    let mut fb_plans = Vec::new();
     for b in &biases {
         let dense_out = attention::attention(&q, &k, &v, Some(b), &opts);
-        let (pq, pk) = svd_factors(b, r);
-        let fb_out =
-            attention::attention_factored(&q, &k, &v, &pq, &pk, &opts);
-        let nob_out = attention::attention(&q, &k, &v, None, &opts);
+        let fb_plan = planner
+            .plan(&BiasSpec::static_learned(b.clone()), &geo, &pinned)
+            .expect("plan R=56");
+        let fb_out = plan::execute(&fb_plan, &q, &k, &v).expect("execute");
+        let nob_out =
+            plan::execute(&nobias_plan, &q, &k, &v).expect("execute");
         diff_fb = diff_fb.max(fb_out.rel_err(&dense_out));
         diff_nobias = diff_nobias.max(nob_out.rel_err(&dense_out));
+        fb_plans.push(fb_plan);
     }
     println!(
-        "  output diff: FlashBias(R={r}) {diff_fb:.5} vs no-bias \
+        "  output diff: FlashBias(R=56) {diff_fb:.5} vs no-bias \
          {diff_nobias:.4} ({}x smaller)",
         (diff_nobias / diff_fb.max(1e-9)) as u32
     );
     assert!(diff_fb < diff_nobias / 5.0, "Table 7 shape violated");
 
-    // longitude sharing: one SVD serves every window in the lat band
+    // longitude sharing: one plan per lat band serves every window in it
     let num_lon = 8;
     println!(
-        "  longitude sharing: 1 SVD per lat band serves {num_lon} windows \
+        "  longitude sharing: 1 plan per lat band serves {num_lon} windows \
          -> {num_lon}x fewer decompositions"
     );
 
@@ -68,9 +92,13 @@ fn main() {
     table.row(bench_fn("dense-bias attention", 2, it, || {
         let _ = attention::attention(&q, &k, &v, Some(&b0), &opts);
     }));
-    let (pq, pk) = svd_factors(&b0, r);
-    table.row(bench_fn("flashbias attention (R=56)", 2, it, || {
-        let _ = attention::attention_factored(&q, &k, &v, &pq, &pk, &opts);
+    let p0 = &fb_plans[0];
+    table.row(bench_fn("flashbias plan (R=56)", 2, it, || {
+        let _ = plan::execute(p0, &q, &k, &v).expect("execute");
     }));
+    println!(
+        "  plan summary: {}",
+        p0.summary()
+    );
     println!("  (N=144 is small — the paper notes the speedup grows with N)");
 }

@@ -6,9 +6,9 @@
 //! * [`router`] — shape-bucket routing: a request for sequence length N is
 //!   routed to the smallest compiled artifact bucket ≥ N (with padding),
 //!   per (family, variant).
-//! * [`selector`] — decomposition-strategy selection implementing the
-//!   paper's Table 1 decision procedure (exact / SVD / neural / dense
-//!   fallback when the rank test fails, Appendix J).
+//! * [`selector`] — decomposition-strategy selection, delegated to
+//!   [`crate::plan::Planner`] (the Table 1 decision procedure now lives
+//!   behind the unified `BiasSpec → plan → execute` API).
 //! * [`batcher`] — dynamic batching: requests accumulate per bucket and
 //!   flush on max-batch or deadline, amortizing dispatch overhead.
 //! * [`worker`] — a thread pool executing flushed batches on the shared
@@ -33,7 +33,7 @@ use crate::runtime::{HostValue, Runtime};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use router::{RouteKey, Router};
-pub use selector::{BiasClass, StrategySelector};
+pub use selector::{SelectorConfig, StrategySelector};
 
 /// A unit of work: run `artifact` on `inputs`.
 #[derive(Debug)]

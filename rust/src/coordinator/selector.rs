@@ -1,185 +1,10 @@
-//! Decomposition-strategy selector — the Table 1 decision procedure as a
-//! policy object.
+//! Decomposition-strategy selection — delegated to [`crate::plan`].
 //!
-//! Given what the coordinator knows about a bias (closed-form? static
-//! learned parameter? data-dependent? measured spectral rank?), pick the
-//! strategy the paper prescribes:
-//!
-//! * closed form            → Exact (ALiBi, spatial distance, cos)
-//! * static learned, low-rank at the energy target → SVD (Swin, Pangu)
-//! * dynamic/data-dependent → Neural (AlphaFold pair bias)
-//! * rank test fails        → Dense fallback (Appendix J limitation),
-//!   optionally LowRankSparse when the residual is sparse.
+//! The Table 1 decision procedure used to live here as a standalone
+//! policy object keyed on a hand-declared `BiasClass`. It is now the
+//! [`crate::plan::Planner`]: callers declare a [`crate::plan::BiasSpec`]
+//! and receive a full executable plan instead of a bare strategy, so the
+//! decision stays fused with execution (the paper's whole point). This
+//! module remains as the serving-layer alias for that policy object.
 
-use crate::decompose::{NeuralConfig, RankSelect, Strategy};
-
-/// What kind of bias a model layer declares.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum BiasClass {
-    /// Closed-form factorization known (rank R).
-    ClosedForm { rank: usize },
-    /// Fixed learned parameter; spectral profile measured offline.
-    StaticLearned {
-        /// Rank needed to keep the energy target.
-        rank_at_energy: usize,
-        /// Full matrix side (min(N, M)).
-        full_rank: usize,
-    },
-    /// Projected from activations — differs per sample/layer/head.
-    Dynamic { source_dim: usize },
-    /// Nothing known.
-    Unknown,
-}
-
-/// Policy knobs.
-#[derive(Clone, Copy, Debug)]
-pub struct SelectorConfig {
-    /// Energy target for SVD truncation (paper: 0.99–0.995).
-    pub energy_target: f64,
-    /// A static bias is "low-rank enough" if rank_at_energy ≤
-    /// `max_rank_fraction` · full_rank (paper applies FlashBias only to
-    /// the low-rank layers of SwinV2, §4.3 / Figure 8).
-    pub max_rank_fraction: f64,
-    /// Neural decomposition defaults for dynamic biases.
-    pub neural: NeuralConfig,
-}
-
-impl Default for SelectorConfig {
-    fn default() -> Self {
-        Self {
-            energy_target: 0.99,
-            max_rank_fraction: 0.35,
-            neural: NeuralConfig::default(),
-        }
-    }
-}
-
-/// The selector.
-#[derive(Clone, Debug, Default)]
-pub struct StrategySelector {
-    pub config: SelectorConfig,
-}
-
-impl StrategySelector {
-    pub fn new(config: SelectorConfig) -> Self {
-        Self { config }
-    }
-
-    /// Pick a strategy for one bias.
-    pub fn select(&self, class: BiasClass) -> Strategy {
-        match class {
-            BiasClass::ClosedForm { .. } => Strategy::Exact,
-            BiasClass::StaticLearned {
-                rank_at_energy,
-                full_rank,
-            } => {
-                let limit = (full_rank as f64
-                    * self.config.max_rank_fraction)
-                    .ceil() as usize;
-                if rank_at_energy <= limit {
-                    Strategy::Svd(RankSelect::Fixed(rank_at_energy))
-                } else {
-                    // Appendix J: not low-rank enough — keep dense
-                    Strategy::Dense
-                }
-            }
-            BiasClass::Dynamic { .. } => Strategy::Neural(self.config.neural),
-            BiasClass::Unknown => Strategy::Dense,
-        }
-    }
-
-    /// Layer-policy helper (§4.3): given per-layer rank measurements,
-    /// return the first layer index from which FlashBias applies — the
-    /// paper's "last 8 layers of SwinV2" rule generalized.
-    pub fn factored_from(&self, ranks_at_energy: &[usize],
-                         full_rank: usize) -> usize {
-        let limit =
-            (full_rank as f64 * self.config.max_rank_fraction).ceil() as usize;
-        // longest low-rank suffix
-        let mut from = ranks_at_energy.len();
-        for (i, &r) in ranks_at_energy.iter().enumerate().rev() {
-            if r <= limit {
-                from = i;
-            } else {
-                break;
-            }
-        }
-        from
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn sel() -> StrategySelector {
-        StrategySelector::new(SelectorConfig::default())
-    }
-
-    #[test]
-    fn closed_form_goes_exact() {
-        assert!(matches!(
-            sel().select(BiasClass::ClosedForm { rank: 2 }),
-            Strategy::Exact
-        ));
-    }
-
-    #[test]
-    fn lowrank_static_goes_svd_with_measured_rank() {
-        let s = sel().select(BiasClass::StaticLearned {
-            rank_at_energy: 16,
-            full_rank: 576,
-        });
-        match s {
-            Strategy::Svd(RankSelect::Fixed(16)) => {}
-            other => panic!("expected SVD(16), got {other:?}"),
-        }
-    }
-
-    #[test]
-    fn highrank_static_falls_back_dense() {
-        // rank@99% = 500 of 576 — the Figure 6 "not all heads are
-        // low-rank" case: keep dense (paper's own deployment rule)
-        assert!(matches!(
-            sel().select(BiasClass::StaticLearned {
-                rank_at_energy: 500,
-                full_rank: 576,
-            }),
-            Strategy::Dense
-        ));
-    }
-
-    #[test]
-    fn dynamic_goes_neural() {
-        assert!(matches!(
-            sel().select(BiasClass::Dynamic { source_dim: 577 }),
-            Strategy::Neural(_)
-        ));
-    }
-
-    #[test]
-    fn unknown_goes_dense() {
-        assert!(matches!(sel().select(BiasClass::Unknown), Strategy::Dense));
-    }
-
-    #[test]
-    fn factored_from_suffix_rule() {
-        // SwinV2 pattern (Figure 8): early layers high-rank, later low
-        let ranks = [300, 280, 250, 120, 60, 40, 30, 20];
-        let from = sel().factored_from(&ranks, 576);
-        // 576 * 0.35 ≈ 202 → suffix starts where rank ≤ 202: index 3
-        assert_eq!(from, 3);
-    }
-
-    #[test]
-    fn factored_from_none_lowrank() {
-        let ranks = [500, 480, 460];
-        assert_eq!(sel().factored_from(&ranks, 576), 3); // empty suffix
-    }
-
-    #[test]
-    fn factored_from_all_lowrank() {
-        let ranks = [10, 12, 8];
-        assert_eq!(sel().factored_from(&ranks, 576), 0);
-    }
-}
+pub use crate::plan::{Planner as StrategySelector, SelectorConfig};

@@ -64,18 +64,42 @@ impl Factors {
     }
 }
 
+/// Typed failure from [`decompose`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecomposeError {
+    /// `Strategy::Exact` has no dense matrix to approximate — the closed
+    /// form lives with the caller. Route exact biases through
+    /// [`from_exact`] (or `plan::BiasSpec`, which carries the closed
+    /// form itself).
+    ExactNeedsClosedForm,
+}
+
+impl std::fmt::Display for DecomposeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecomposeError::ExactNeedsClosedForm => write!(
+                f,
+                "Strategy::Exact needs closed-form factors; use \
+                 from_exact() or a plan::BiasSpec"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DecomposeError {}
+
 /// Decompose a dense bias with the requested strategy.
 ///
 /// For [`Strategy::Exact`] pass the closed-form factors through
-/// [`from_exact`] instead (there is no dense matrix to approximate).
-/// [`Strategy::Dense`] returns `None` (no factors — keep the matrix).
-pub fn decompose(bias: &Tensor, strategy: &Strategy,
-                 rng: &mut Xoshiro256) -> Option<Factors> {
+/// [`from_exact`] instead (there is no dense matrix to approximate);
+/// requesting it here is a typed error, not a panic, so policy layers
+/// can route it. [`Strategy::Dense`] returns `Ok(None)` (no factors —
+/// keep the matrix).
+pub fn decompose(bias: &Tensor, strategy: &Strategy, rng: &mut Xoshiro256)
+                 -> Result<Option<Factors>, DecomposeError> {
     match strategy {
-        Strategy::Exact => panic!(
-            "Strategy::Exact needs closed-form factors; use from_exact()"
-        ),
-        Strategy::Dense => None,
+        Strategy::Exact => Err(DecomposeError::ExactNeedsClosedForm),
+        Strategy::Dense => Ok(None),
         Strategy::Svd(sel) => {
             let rank = match *sel {
                 RankSelect::Fixed(r) => r,
@@ -85,12 +109,12 @@ pub fn decompose(bias: &Tensor, strategy: &Strategy,
             };
             let (pq, pk) = linalg::svd_factors(bias, rank);
             let rel_err = linalg::reconstruction_error(bias, &pq, &pk);
-            Some(Factors {
+            Ok(Some(Factors {
                 phi_q: pq,
                 phi_k: pk,
                 rel_err,
                 rank,
-            })
+            }))
         }
         Strategy::Neural(cfg) => {
             // Without token sources, use normalized row/col indices as the
@@ -103,12 +127,12 @@ pub fn decompose(bias: &Tensor, strategy: &Strategy,
             let pq = nd.phi_q(&xq);
             let pk = nd.phi_k(&xk);
             let rel_err = linalg::reconstruction_error(bias, &pq, &pk);
-            Some(Factors {
+            Ok(Some(Factors {
                 phi_q: pq,
                 phi_k: pk,
                 rel_err,
                 rank: cfg.rank,
-            })
+            }))
         }
     }
 }
@@ -276,9 +300,20 @@ mod tests {
         let bias = a.matmul_t(&b);
         let f = decompose(&bias, &Strategy::Svd(RankSelect::Fixed(4)),
                           &mut rng)
+            .unwrap()
             .unwrap();
         assert!(f.rel_err < 1e-3, "rel_err {}", f.rel_err);
         assert_eq!(f.rank, 4);
+    }
+
+    #[test]
+    fn exact_strategy_is_typed_error() {
+        let mut rng = Xoshiro256::new(9);
+        let bias = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        assert!(matches!(
+            decompose(&bias, &Strategy::Exact, &mut rng),
+            Err(DecomposeError::ExactNeedsClosedForm)
+        ));
     }
 
     #[test]
@@ -287,6 +322,7 @@ mod tests {
         let mut rng = Xoshiro256::new(1);
         let f = decompose(&biases[0],
                           &Strategy::Svd(RankSelect::Energy(0.99)), &mut rng)
+            .unwrap()
             .unwrap();
         // 99% energy → ≤ 10% Frobenius error (Eckart–Young: sqrt(1−0.99))
         assert!(f.rel_err <= 0.11, "rel_err {}", f.rel_err);
@@ -297,7 +333,9 @@ mod tests {
     fn dense_strategy_returns_none() {
         let mut rng = Xoshiro256::new(2);
         let bias = Tensor::randn(&[8, 8], 1.0, &mut rng);
-        assert!(decompose(&bias, &Strategy::Dense, &mut rng).is_none());
+        assert!(decompose(&bias, &Strategy::Dense, &mut rng)
+            .unwrap()
+            .is_none());
     }
 
     #[test]
@@ -312,7 +350,9 @@ mod tests {
             lr: 5e-3,
             ..NeuralConfig::default()
         };
-        let f = decompose(&alibi, &Strategy::Neural(cfg), &mut rng).unwrap();
+        let f = decompose(&alibi, &Strategy::Neural(cfg), &mut rng)
+            .unwrap()
+            .unwrap();
         assert!(f.rel_err < 0.2, "rel_err {}", f.rel_err);
     }
 
@@ -342,6 +382,7 @@ mod tests {
         }
         let pure = decompose(&bias, &Strategy::Svd(RankSelect::Fixed(3)),
                              &mut rng)
+            .unwrap()
             .unwrap();
         let split = LowRankSparse::fit(&bias, 3, 32.0 / (32.0 * 32.0), 2);
         assert!(

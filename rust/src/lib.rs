@@ -1,19 +1,53 @@
 //! FlashBias: fast computation of attention with bias.
 //!
-//! Rust/JAX/Pallas three-layer reproduction of "FlashBias: Fast Computation
-//! of Attention with Bias" (Wu et al., NeurIPS 2025).
+//! Rust/JAX/Pallas three-layer reproduction of "FlashBias: Fast
+//! Computation of Attention with Bias" (Wu et al., NeurIPS 2025).
+//!
+//! # The pipeline: bias → plan → execute
+//!
+//! The single public entry point is [`plan`]: declare any bias from the
+//! paper's zoo as a [`plan::BiasSpec`], let the [`plan::Planner`] run the
+//! Table 1 decision procedure (exact / SVD / neural / dense fallback)
+//! fused with the analytic IO cost model, and hand the resulting
+//! [`plan::AttentionPlan`] to any [`plan::Executor`] backend:
+//!
+//! ```no_run
+//! # use flashbias::{iomodel::Geometry, plan::{self, BiasSpec, PlanOptions, Planner}};
+//! # use flashbias::{tensor::Tensor, util::Xoshiro256};
+//! # let mut rng = Xoshiro256::new(0);
+//! # let q = Tensor::randn(&[256, 64], 1.0, &mut rng);
+//! # let k = Tensor::randn(&[256, 64], 1.0, &mut rng);
+//! # let v = Tensor::randn(&[256, 64], 1.0, &mut rng);
+//! let spec = BiasSpec::alibi(256, 256, 0.25);
+//! let plan = Planner::default().plan(
+//!     &spec, &Geometry::square(256, 64, 0, 51200),
+//!     &PlanOptions::default())?;
+//! let out = plan::execute(&plan, &q, &k, &v)?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! # Layers
 //!
 //! * [`tensor`] / [`linalg`] — host-side numeric substrate (dense f32
 //!   tensors, Jacobi SVD, energy spectra).
-//! * [`bias`] — the paper's bias zoo: generators plus exact factorizations.
-//! * [`decompose`] — decomposition strategies (exact / SVD / neural / dense).
-//! * [`attention`] — reference attention implementations for cross-checking.
-//! * [`iomodel`] — analytic HBM-access model (Thm 3.1/3.2, Cor 3.3/3.7).
-//! * [`simulator`] — tiled-execution HBM/SRAM simulator (Figures 3/4).
-//! * [`runtime`] — PJRT artifact loading + execution.
-//! * [`coordinator`] — serving layer: router, dynamic batcher, strategy
-//!   selection, metrics.
-//! * [`server`] — CLI + config + run loop.
+//! * [`bias`] — the paper's bias zoo: generators plus exact
+//!   factorizations (the raw material [`plan::BiasSpec`] wraps).
+//! * [`decompose`] — decomposition mechanisms (SVD / neural / low-rank +
+//!   sparse) the planner drives; returns typed errors, never panics.
+//! * [`attention`] — reference attention implementations backing the
+//!   host executor.
+//! * [`iomodel`] — analytic HBM-access model (Thm 3.1/3.2, Cor 3.3/3.7);
+//!   the planner's cost gate.
+//! * [`plan`] — **the API**: `BiasSpec` → `Planner` → `AttentionPlan` →
+//!   `Executor` (host / simulator / PJRT).
+//! * [`simulator`] — tiled-execution HBM/SRAM simulator (Figures 3/4)
+//!   behind [`plan::SimExecutor`].
+//! * [`runtime`] — PJRT artifact loading + execution (stubbed outside
+//!   the accelerator image, see [`xla_stub`]).
+//! * [`coordinator`] — serving layer: router, dynamic batcher, metrics;
+//!   strategy selection is delegated to [`plan::Planner`].
+//! * [`server`] — CLI + config + run loop (including the `plan`
+//!   subcommand).
 pub mod util;
 pub mod tensor;
 pub mod linalg;
@@ -21,9 +55,11 @@ pub mod bias;
 pub mod decompose;
 pub mod attention;
 pub mod iomodel;
+pub mod plan;
 pub mod simulator;
 pub mod jsonlite;
 pub mod proplite;
+pub mod xla_stub;
 pub mod runtime;
 pub mod coordinator;
 pub mod server;

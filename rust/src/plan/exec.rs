@@ -1,0 +1,454 @@
+//! [`Executor`] — one `execute(&plan, q, k, v)` call, three backends.
+//!
+//! * [`HostExecutor`] — the `crate::attention` reference math (ground
+//!   truth; always available).
+//! * [`SimExecutor`] — the tiled-execution HBM/SRAM simulator: computes
+//!   the same output through the block-streamed online-softmax recurrence
+//!   *and* records a [`SimReport`] of the schedule's HBM traffic, so a
+//!   single call yields both numerics and the Figure 3/4 instrument.
+//! * [`PjrtExecutor`] — routes the plan to a compiled PJRT artifact
+//!   through the shape-bucket [`Router`] (requires `make artifacts`).
+//!
+//! Backends accept any [`AttentionPlan`]; callers never re-inspect the
+//! bias class or re-wire factor strips by hand.
+
+use std::cell::Cell;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::attention::{self, AttnOpts, NEG_INF};
+use crate::coordinator::router::{RouteKey, Router};
+use crate::runtime::{HostValue, Runtime};
+use crate::simulator::{simulate_fwd, HwModel, SimReport};
+use crate::tensor::Tensor;
+
+use super::planner::{AttentionPlan, ExecMode};
+
+/// Execute an [`AttentionPlan`] on `q: (N, C)`, `k`, `v: (M, C)`.
+pub trait Executor {
+    fn name(&self) -> &'static str;
+    fn execute(&self, plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+               v: &Tensor) -> Result<Tensor>;
+}
+
+fn check_shapes(plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+                v: &Tensor) -> Result<()> {
+    let g = &plan.geometry;
+    if q.shape() != [g.n, g.c] {
+        bail!("q shape {:?} != plan (N={}, C={})", q.shape(), g.n, g.c);
+    }
+    if k.shape() != [g.m, g.c] {
+        bail!("k shape {:?} != plan (M={}, C={})", k.shape(), g.m, g.c);
+    }
+    if v.shape()[0] != g.m {
+        bail!("v rows {} != plan M={}", v.shape()[0], g.m);
+    }
+    Ok(())
+}
+
+/// Convenience: execute on the host reference backend.
+pub fn execute(plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+               v: &Tensor) -> Result<Tensor> {
+    HostExecutor.execute(plan, q, k, v)
+}
+
+// ---------------------------------------------------------------------------
+// Host reference backend
+// ---------------------------------------------------------------------------
+
+/// Reference backend over `crate::attention`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostExecutor;
+
+impl Executor for HostExecutor {
+    fn name(&self) -> &'static str {
+        "host"
+    }
+
+    fn execute(&self, plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+               v: &Tensor) -> Result<Tensor> {
+        check_shapes(plan, q, k, v)?;
+        let opts = AttnOpts { causal: plan.causal };
+        match &plan.mode {
+            ExecMode::NoBias => {
+                Ok(attention::attention(q, k, v, None, &opts))
+            }
+            ExecMode::Dense { bias } => {
+                if plan.multiplicative {
+                    Ok(attention::attention_multiplicative(q, k, v, bias))
+                } else {
+                    Ok(attention::attention(q, k, v, Some(bias), &opts))
+                }
+            }
+            ExecMode::Factored { factors } => {
+                if plan.multiplicative {
+                    Ok(attention::attention_multiplicative_factored(
+                        q, k, v, &factors.phi_q, &factors.phi_k,
+                    ))
+                } else {
+                    Ok(attention::attention_factored(
+                        q, k, v, &factors.phi_q, &factors.phi_k, &opts,
+                    ))
+                }
+            }
+            ExecMode::Jit { generator } => {
+                let (pq, pk) =
+                    generator.factors(plan.geometry.n, plan.geometry.m);
+                Ok(attention::attention_factored(q, k, v, &pq, &pk, &opts))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tiled-simulator backend
+// ---------------------------------------------------------------------------
+
+/// Tiled-execution backend: numerics through the block-streamed
+/// online-softmax recurrence, HBM accounting through the simulator.
+#[derive(Debug)]
+pub struct SimExecutor {
+    pub hw: HwModel,
+    /// Key-block size of the numeric online-softmax mirror.
+    pub block_k: usize,
+    last: Cell<Option<SimReport>>,
+}
+
+impl Default for SimExecutor {
+    fn default() -> Self {
+        Self::new(HwModel::default())
+    }
+}
+
+impl SimExecutor {
+    pub fn new(hw: HwModel) -> Self {
+        Self {
+            hw,
+            block_k: 64,
+            last: Cell::new(None),
+        }
+    }
+
+    /// The HBM/FLOP report of the most recent `execute` call.
+    pub fn last_report(&self) -> Option<SimReport> {
+        self.last.get()
+    }
+}
+
+impl Executor for SimExecutor {
+    fn name(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn execute(&self, plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+               v: &Tensor) -> Result<Tensor> {
+        check_shapes(plan, q, k, v)?;
+        if plan.multiplicative {
+            // no tiled multiplicative schedule to mirror: fall back to
+            // the reference and record no report rather than an
+            // additive one that contradicts the plan's own cost model
+            self.last.set(None);
+            return HostExecutor.execute(plan, q, k, v);
+        }
+        self.last.set(Some(simulate_fwd(
+            plan.algorithm(),
+            &plan.geometry,
+            &self.hw,
+        )));
+        let (n, m) = (plan.geometry.n, plan.geometry.m);
+        let bias = plan.materialized_bias();
+        let bias = if plan.causal {
+            Some(causal_masked(bias, n, m))
+        } else {
+            bias
+        };
+        Ok(attention::online_softmax_attention(
+            q,
+            k,
+            v,
+            bias.as_ref(),
+            self.block_k,
+        ))
+    }
+}
+
+/// Fold the decoder-aligned causal mask into a dense bias (the streamed
+/// recurrence has no mask input of its own).
+fn causal_masked(bias: Option<Tensor>, n: usize, m: usize) -> Tensor {
+    let mut b = bias.unwrap_or_else(|| Tensor::zeros(&[n, m]));
+    for i in 0..n {
+        for j in 0..m {
+            // mask ends at the key end: j − (m − n) > i is the future
+            if j as isize - (m as isize - n as isize) > i as isize {
+                b.set2(i, j, NEG_INF);
+            }
+        }
+    }
+    b
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Compiled-artifact backend: maps a plan's mode to an artifact variant
+/// (`pure` / `dense` / `factored` / `jit`), routes through the shape
+/// buckets, substitutes the plan's activations, and executes on PJRT.
+pub struct PjrtExecutor {
+    rt: Arc<Runtime>,
+    router: Router,
+    family: String,
+}
+
+impl PjrtExecutor {
+    pub fn new(rt: Arc<Runtime>, family: &str) -> Self {
+        let router = Router::from_runtime(&rt);
+        Self {
+            rt,
+            router,
+            family: family.to_string(),
+        }
+    }
+
+    /// Artifact variant an exec mode maps to.
+    pub fn variant(mode: &ExecMode) -> &'static str {
+        match mode {
+            ExecMode::NoBias => "pure",
+            ExecMode::Dense { .. } => "dense",
+            ExecMode::Factored { .. } => "factored",
+            ExecMode::Jit { .. } => "jit",
+        }
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute(&self, plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+               v: &Tensor) -> Result<Tensor> {
+        check_shapes(plan, q, k, v)?;
+        // The family encodes attention semantics the artifact was
+        // compiled with; executing a plan with different semantics would
+        // silently return wrong numbers. The micro-attention families
+        // ("attn" = non-causal additive, "causal" = causal additive,
+        // "mult" = multiplicative) are checked; model families are the
+        // caller's contract.
+        if plan.multiplicative != (self.family == "mult") {
+            bail!(
+                "{} plan routed to family {:?}; multiplicative plans \
+                 require the \"mult\" family and vice versa",
+                if plan.multiplicative { "multiplicative" } else
+                { "additive" },
+                self.family
+            );
+        }
+        if matches!(self.family.as_str(), "attn" | "causal")
+            && plan.causal != (self.family == "causal")
+        {
+            bail!(
+                "{} plan routed to family {:?}; use {:?}",
+                if plan.causal { "causal" } else { "non-causal" },
+                self.family,
+                if plan.causal { "causal" } else { "attn" }
+            );
+        }
+        let variant = Self::variant(&plan.mode);
+        let key = RouteKey::new(&self.family, variant);
+        let n = plan.geometry.n;
+        let (artifact, bucket) = self
+            .router
+            .route(&key, n)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no {}/{variant} artifact for N={n} (run `make \
+                     artifacts`)",
+                    self.family
+                )
+            })?;
+        if bucket != n {
+            bail!(
+                "nearest {}/{variant} bucket is N={bucket}, plan wants \
+                 N={n}; the PJRT backend requires an exact-shape artifact",
+                self.family
+            );
+        }
+        let artifact = artifact.to_string();
+        let spec = self
+            .rt
+            .spec(&artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact} vanished"))?
+            .clone();
+        let mut inputs = self.rt.example_inputs(&artifact)?;
+        // activation payloads in manifest order: q, k, v, then the
+        // bias-carrying inputs of the variant
+        let mut payloads = vec![q.clone(), k.clone(), v.clone()];
+        match &plan.mode {
+            ExecMode::Dense { bias } => payloads.push(bias.clone()),
+            ExecMode::Factored { factors } => {
+                payloads.push(factors.phi_q.clone());
+                payloads.push(factors.phi_k.clone());
+            }
+            ExecMode::NoBias | ExecMode::Jit { .. } => {}
+        }
+        let acts = spec.activation_indices();
+        if acts.len() != payloads.len() {
+            bail!(
+                "{artifact}: {} activation inputs, plan supplies {}",
+                acts.len(),
+                payloads.len()
+            );
+        }
+        for (&slot, payload) in acts.iter().zip(payloads) {
+            let want = &spec.inputs[slot].shape;
+            if want.as_slice() != payload.shape() {
+                bail!(
+                    "{artifact} input {slot}: artifact shape {want:?} != \
+                     plan payload {:?}",
+                    payload.shape()
+                );
+            }
+            inputs[slot] = HostValue::F32(payload);
+        }
+        let out = self.rt.load(&artifact)?.run(&inputs)?;
+        out.first()
+            .and_then(HostValue::as_f32)
+            .cloned()
+            .ok_or_else(|| anyhow!("{artifact}: no f32 output"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iomodel::Geometry;
+    use crate::plan::{BiasSpec, PlanOptions, Planner};
+    use crate::util::Xoshiro256;
+
+    fn qkv(n: usize, m: usize, c: usize,
+           seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Xoshiro256::new(seed);
+        (
+            Tensor::randn(&[n, c], 1.0, &mut rng),
+            Tensor::randn(&[m, c], 1.0, &mut rng),
+            Tensor::randn(&[m, c], 1.0, &mut rng),
+        )
+    }
+
+    fn geo(n: usize, m: usize, c: usize) -> Geometry {
+        Geometry {
+            n,
+            m,
+            c,
+            r: 0,
+            sram: 100 * 1024 / 2,
+        }
+    }
+
+    #[test]
+    fn host_factored_matches_dense_reference() {
+        let (q, k, v) = qkv(24, 24, 8, 0);
+        let spec = BiasSpec::alibi(24, 24, 0.25);
+        let plan = Planner::default()
+            .plan(&spec, &geo(24, 24, 8), &PlanOptions::default())
+            .unwrap();
+        let out = execute(&plan, &q, &k, &v).unwrap();
+        let dense = attention::attention(
+            &q,
+            &k,
+            &v,
+            Some(&spec.materialize().unwrap()),
+            &AttnOpts::default(),
+        );
+        assert!(out.allclose(&dense, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn jit_equals_factored() {
+        let (q, k, v) = qkv(16, 16, 4, 1);
+        let planner = Planner::default();
+        let spec = BiasSpec::alibi(16, 16, 0.5);
+        let g = geo(16, 16, 4);
+        let causal = PlanOptions {
+            causal: true,
+            ..PlanOptions::default()
+        };
+        let fact = planner.plan(&spec, &g, &causal).unwrap();
+        let jit = planner
+            .plan(
+                &spec,
+                &g,
+                &PlanOptions {
+                    prefer_jit: true,
+                    ..causal
+                },
+            )
+            .unwrap();
+        let a = execute(&fact, &q, &k, &v).unwrap();
+        let b = execute(&jit, &q, &k, &v).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn simulator_matches_host_and_reports_io() {
+        let (q, k, v) = qkv(32, 48, 8, 2);
+        let spec = BiasSpec::alibi(32, 48, 0.125);
+        let plan = Planner::default()
+            .plan(&spec, &geo(32, 48, 8), &PlanOptions::default())
+            .unwrap();
+        let sim = SimExecutor::default();
+        let out = sim.execute(&plan, &q, &k, &v).unwrap();
+        let host = HostExecutor.execute(&plan, &q, &k, &v).unwrap();
+        assert!(out.allclose(&host, 1e-4, 1e-4));
+        let rep = sim.last_report().expect("report recorded");
+        assert!(rep.hbm_total() > 0);
+    }
+
+    #[test]
+    fn simulator_causal_matches_host() {
+        let (q, k, v) = qkv(20, 20, 8, 3);
+        let plan = Planner::default()
+            .plan(
+                &BiasSpec::alibi(20, 20, 0.25),
+                &geo(20, 20, 8),
+                &PlanOptions {
+                    causal: true,
+                    ..PlanOptions::default()
+                },
+            )
+            .unwrap();
+        let sim = SimExecutor::default();
+        let out = sim.execute(&plan, &q, &k, &v).unwrap();
+        let host = HostExecutor.execute(&plan, &q, &k, &v).unwrap();
+        assert!(out.allclose(&host, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn multiplicative_plan_executes() {
+        let (q, k, v) = qkv(12, 12, 4, 4);
+        let spec = BiasSpec::cos_multiplicative(12, 12);
+        let plan = Planner::default()
+            .plan(&spec, &geo(12, 12, 4), &PlanOptions::default())
+            .unwrap();
+        let out = execute(&plan, &q, &k, &v).unwrap();
+        let dense = attention::attention_multiplicative(
+            &q,
+            &k,
+            &v,
+            &spec.materialize().unwrap(),
+        );
+        assert!(out.allclose(&dense, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let (q, k, v) = qkv(8, 8, 4, 5);
+        let plan = Planner::default()
+            .plan(&BiasSpec::alibi(16, 16, 0.5), &geo(16, 16, 4),
+                  &PlanOptions::default())
+            .unwrap();
+        assert!(execute(&plan, &q, &k, &v).is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! The FlashBias pipeline behind one API: **bias → plan → execute**.
+//!
+//! The paper's core claim is that a single decision procedure (Table 1,
+//! justified by the Thm 3.1 rank bound) covers ALiBi, Swin, Pangu,
+//! AlphaFold and PDE biases alike — and that the win comes from keeping
+//! that decision fused with execution. This module is that procedure as
+//! the crate's single public entry point:
+//!
+//! ```no_run
+//! use flashbias::iomodel::Geometry;
+//! use flashbias::plan::{self, BiasSpec, PlanOptions, Planner};
+//! # use flashbias::tensor::Tensor;
+//! # use flashbias::util::Xoshiro256;
+//! # let mut rng = Xoshiro256::new(0);
+//! # let (q, k, v) = (
+//! #     Tensor::randn(&[256, 64], 1.0, &mut rng),
+//! #     Tensor::randn(&[256, 64], 1.0, &mut rng),
+//! #     Tensor::randn(&[256, 64], 1.0, &mut rng),
+//! # );
+//! let spec = BiasSpec::alibi(256, 256, 0.25);
+//! let plan = Planner::default()
+//!     .plan(&spec, &Geometry::square(256, 64, 0, 51200),
+//!           &PlanOptions { causal: true, ..PlanOptions::default() })?;
+//! let out = plan::execute(&plan, &q, &k, &v)?;
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! * [`BiasSpec`] — the whole bias zoo (closed-form, static learned,
+//!   dynamic, opaque dense) with uniform metadata.
+//! * [`Planner`] — Table 1 decision procedure + the `iomodel` cost gate;
+//!   emits an [`AttentionPlan`] (mode = dense / factored / JIT, effective
+//!   rank, predicted HBM IO, factor storage).
+//! * [`Executor`] — one `execute(&plan, q, k, v)` call over three
+//!   backends: host reference, tiled simulator, PJRT runtime.
+//!
+//! Everything downstream (coordinator, server, examples, benches) goes
+//! through this module; no caller declares bias classes or decomposition
+//! strategies by hand.
+
+mod exec;
+mod planner;
+mod spec;
+
+pub use exec::{
+    execute, Executor, HostExecutor, PjrtExecutor, SimExecutor,
+};
+pub use planner::{
+    AttentionPlan, Decision, ExecMode, JitBias, PlanError, PlanOptions,
+    Planner, SelectorConfig,
+};
+pub use spec::BiasSpec;

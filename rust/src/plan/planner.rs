@@ -1,0 +1,627 @@
+//! [`Planner`] — the Table 1 decision procedure plus the Thm 3.1/Cor 3.7
+//! cost model, emitting an executable [`AttentionPlan`].
+//!
+//! The planner is the single place that decides *how* a bias is carried
+//! through attention:
+//!
+//! * closed form               → Exact factors (ALiBi, spatial, cos) —
+//!   optionally generated in-kernel ([`ExecMode::Jit`], Table 8);
+//! * static learned, low-rank  → truncated SVD at the energy target
+//!   (Swin §4.3, Pangu Appendix B);
+//! * dynamic / data-dependent  → neural factor functions fitted on the
+//!   token sources (AlphaFold pair bias, Eq. 5);
+//! * rank test fails           → dense fallback (Appendix J limitation).
+//!
+//! On top of the class split, every factored candidate is checked against
+//! the analytic IO model: if `Θ(NM(C²+R²)/S)` does not beat the dense
+//! stream `Θ(NMC²/S + NM)` (Remark 3.8), or a multiplicative rank exceeds
+//! the Corollary I.2 threshold, the planner keeps the dense matrix. The
+//! emitted plan records the decision, the effective geometry, predicted
+//! HBM traffic for plan-vs-dense, and the factor storage bill (Thm 3.2).
+
+use crate::bias::ExactBias;
+use crate::decompose::{
+    decompose, DecomposeError, Factors, NeuralDecomposition, RankSelect,
+    Strategy,
+};
+use crate::iomodel::{self, Geometry};
+use crate::linalg;
+use crate::simulator::Algorithm;
+use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
+
+use super::spec::BiasSpec;
+
+/// Policy knobs for the Table 1 decision procedure.
+#[derive(Clone, Copy, Debug)]
+pub struct SelectorConfig {
+    /// Energy target for SVD truncation (paper: 0.99–0.995).
+    pub energy_target: f64,
+    /// A static bias is "low-rank enough" if rank_at_energy ≤
+    /// `max_rank_fraction` · min(N, M) (the paper applies FlashBias only
+    /// to the low-rank layers of SwinV2, §4.3 / Figure 8).
+    pub max_rank_fraction: f64,
+    /// Neural decomposition defaults for dynamic biases.
+    pub neural: crate::decompose::NeuralConfig,
+}
+
+impl Default for SelectorConfig {
+    fn default() -> Self {
+        Self {
+            energy_target: 0.99,
+            max_rank_fraction: 0.35,
+            neural: crate::decompose::NeuralConfig::default(),
+        }
+    }
+}
+
+/// Per-plan options (orthogonal to the policy in [`SelectorConfig`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanOptions {
+    /// Apply the decoder-aligned causal mask.
+    pub causal: bool,
+    /// For biases whose factor strips are cheap closed forms of the block
+    /// coordinates (ALiBi), generate them in-kernel instead of streaming
+    /// them from HBM (Table 8 / Appendix C).
+    pub prefer_jit: bool,
+    /// Force the SVD/neural rank instead of measuring it at the energy
+    /// target (the paper pins R = 56 for Pangu, R = 16 for Swin). An
+    /// override also bypasses the `max_rank_fraction` test.
+    pub rank_override: Option<usize>,
+    /// Verify exact factorizations against the materialized dense matrix
+    /// (O(NM); off by default so exact plans stay O((N+M)·R)).
+    pub verify_exact: bool,
+}
+
+/// Which Table 1 row fired, with the evidence.
+#[derive(Clone, Debug)]
+pub enum Decision {
+    /// No bias declared.
+    NoBias,
+    /// Closed-form factorization (Table 1a).
+    Exact { rank: usize },
+    /// Truncated SVD of a static learned table (Table 1b).
+    Svd { rank: usize, rel_err: f32 },
+    /// Neural factor functions fitted on token sources (Table 1c).
+    Neural { rank: usize, rel_err: f32 },
+    /// Rank or cost test failed — keep the dense matrix (Appendix J).
+    DenseFallback { measured_rank: usize, reason: String },
+}
+
+/// How the executor carries the bias.
+#[derive(Clone, Debug)]
+pub enum ExecMode {
+    /// Pure FlashAttention.
+    NoBias,
+    /// Stream the dense `(N, M)` matrix.
+    Dense { bias: Tensor },
+    /// Stream factor strips and fold them into the dot product (Eq. 3).
+    Factored { factors: Factors },
+    /// Generate the factor strips in-kernel from block coordinates —
+    /// zero bias IO (Table 8).
+    Jit { generator: JitBias },
+}
+
+/// Closed forms cheap enough to generate inside the kernel.
+#[derive(Clone, Copy, Debug)]
+pub enum JitBias {
+    Alibi { slope: f32 },
+}
+
+impl JitBias {
+    pub fn rank(&self) -> usize {
+        match self {
+            JitBias::Alibi { .. } => 2,
+        }
+    }
+
+    /// Materialize the strips (what the kernel would compute from its
+    /// block coordinates).
+    pub fn factors(&self, n: usize, m: usize) -> (Tensor, Tensor) {
+        match *self {
+            JitBias::Alibi { slope } => {
+                crate::bias::Alibi::new(n, m, slope).factors()
+            }
+        }
+    }
+}
+
+/// An executable plan: everything an [`super::Executor`] backend needs,
+/// plus the predicted costs that justified the decision.
+#[derive(Clone, Debug)]
+pub struct AttentionPlan {
+    pub mode: ExecMode,
+    /// Problem geometry with `r` set to the plan's effective rank.
+    pub geometry: Geometry,
+    pub causal: bool,
+    /// Hadamard-combined bias (Appendix I) instead of additive.
+    pub multiplicative: bool,
+    pub decision: Decision,
+    /// Predicted HBM accesses (elements) of this plan.
+    pub predicted_io: f64,
+    /// Predicted HBM accesses of the dense-bias baseline.
+    pub dense_io: f64,
+    /// Bias-carrying HBM residency in bytes (factor strips, dense table,
+    /// or zero for JIT/no-bias) — the Thm 3.2 storage column.
+    pub bias_storage_bytes: usize,
+}
+
+impl AttentionPlan {
+    /// Effective bias rank (0 for dense / no-bias plans).
+    pub fn rank(&self) -> usize {
+        self.geometry.r
+    }
+
+    /// The spectral-rank evidence behind the decision: the planned rank
+    /// for exact/SVD/neural plans, the measured rank for dense
+    /// fallbacks, 0 for no-bias. Unlike [`Self::rank`], this survives a
+    /// fallback — it is what rank profiles (Figure 8) report.
+    pub fn measured_rank(&self) -> usize {
+        match &self.decision {
+            Decision::NoBias => 0,
+            Decision::Exact { rank }
+            | Decision::Svd { rank, .. }
+            | Decision::Neural { rank, .. } => *rank,
+            Decision::DenseFallback { measured_rank, .. } => *measured_rank,
+        }
+    }
+
+    /// Predicted IO saving over the dense-bias baseline.
+    pub fn io_saving(&self) -> f64 {
+        self.dense_io / self.predicted_io.max(1e-12)
+    }
+
+    /// The tiled-simulator algorithm this plan maps to.
+    pub fn algorithm(&self) -> Algorithm {
+        match &self.mode {
+            ExecMode::NoBias => Algorithm::Flash,
+            ExecMode::Dense { .. } => Algorithm::FlashDenseBias,
+            ExecMode::Factored { factors } => {
+                Algorithm::FlashBias(factors.rank)
+            }
+            ExecMode::Jit { generator } => {
+                Algorithm::FlashBias(generator.rank())
+            }
+        }
+    }
+
+    /// Short human label of the execution mode.
+    pub fn mode_name(&self) -> &'static str {
+        match &self.mode {
+            ExecMode::NoBias => "no-bias",
+            ExecMode::Dense { .. } => "dense",
+            ExecMode::Factored { .. } => "factored",
+            ExecMode::Jit { .. } => "jit",
+        }
+    }
+
+    /// Reconstruct the dense bias this plan represents (`None` for
+    /// no-bias plans). Test/inspection path — O(NM).
+    pub fn materialized_bias(&self) -> Option<Tensor> {
+        match &self.mode {
+            ExecMode::NoBias => None,
+            ExecMode::Dense { bias } => Some(bias.clone()),
+            ExecMode::Factored { factors } => Some(factors.reconstruct()),
+            ExecMode::Jit { generator } => {
+                let (pq, pk) =
+                    generator.factors(self.geometry.n, self.geometry.m);
+                Some(pq.matmul_t(&pk))
+            }
+        }
+    }
+
+    /// One-line report for CLIs and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "mode={} rank={} io={:.3e} ({}x vs dense) bias-bytes={} {:?}",
+            self.mode_name(),
+            self.rank(),
+            self.predicted_io,
+            (self.io_saving() * 10.0).round() / 10.0,
+            self.bias_storage_bytes,
+            self.decision
+        )
+    }
+}
+
+/// Planning failure.
+#[derive(Debug)]
+pub enum PlanError {
+    /// Bias shape disagrees with the declared geometry.
+    ShapeMismatch {
+        spec: (usize, usize),
+        geometry: (usize, usize),
+    },
+    /// No reference semantics for causal multiplicative bias.
+    CausalMultiplicative,
+    /// Decomposition-layer failure.
+    Decompose(DecomposeError),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::ShapeMismatch { spec, geometry } => write!(
+                f,
+                "bias shape {spec:?} does not match geometry {geometry:?}"
+            ),
+            PlanError::CausalMultiplicative => write!(
+                f,
+                "causal masking of a multiplicative bias is undefined \
+                 (Appendix I covers the non-causal case)"
+            ),
+            PlanError::Decompose(e) => write!(f, "decompose: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl From<DecomposeError> for PlanError {
+    fn from(e: DecomposeError) -> Self {
+        PlanError::Decompose(e)
+    }
+}
+
+/// The planner: [`SelectorConfig`] policy + Table 1 procedure + IO model.
+#[derive(Clone, Debug, Default)]
+pub struct Planner {
+    pub config: SelectorConfig,
+}
+
+impl Planner {
+    pub fn new(config: SelectorConfig) -> Self {
+        Self { config }
+    }
+
+    /// Run the decision procedure for one bias and emit the plan.
+    ///
+    /// `geo.r` is ignored on input; the planner sets it to the effective
+    /// rank of whatever mode it picks.
+    pub fn plan(&self, spec: &BiasSpec, geo: &Geometry,
+                opts: &PlanOptions) -> Result<AttentionPlan, PlanError> {
+        if let Some((n, m)) = spec.shape() {
+            if (n, m) != (geo.n, geo.m) {
+                return Err(PlanError::ShapeMismatch {
+                    spec: (n, m),
+                    geometry: (geo.n, geo.m),
+                });
+            }
+        }
+        let multiplicative = spec.is_multiplicative();
+        if multiplicative && opts.causal {
+            return Err(PlanError::CausalMultiplicative);
+        }
+
+        match spec {
+            BiasSpec::None => {
+                let geometry = Geometry { r: 0, ..*geo };
+                let io = iomodel::flash_attention_io(&geometry);
+                Ok(AttentionPlan {
+                    mode: ExecMode::NoBias,
+                    geometry,
+                    causal: opts.causal,
+                    multiplicative: false,
+                    decision: Decision::NoBias,
+                    predicted_io: io,
+                    dense_io: io,
+                    bias_storage_bytes: 0,
+                })
+            }
+            BiasSpec::Alibi { slope, .. } if opts.prefer_jit => {
+                let generator = JitBias::Alibi { slope: *slope };
+                let rank = generator.rank();
+                self.emit(
+                    ExecMode::Jit { generator },
+                    Decision::Exact { rank },
+                    spec,
+                    geo,
+                    opts,
+                    rank,
+                )
+            }
+            BiasSpec::Alibi { .. }
+            | BiasSpec::Spatial(_)
+            | BiasSpec::CosMultiplicative { .. } => {
+                let rank = spec.exact_rank().expect("closed form has rank");
+                let (phi_q, phi_k) =
+                    spec.exact_factors().expect("closed form has factors");
+                let rel_err = if opts.verify_exact {
+                    linalg::reconstruction_error(
+                        &spec.materialize().expect("dense"),
+                        &phi_q,
+                        &phi_k,
+                    )
+                } else {
+                    0.0
+                };
+                let factors = Factors {
+                    phi_q,
+                    phi_k,
+                    rel_err,
+                    rank,
+                };
+                self.emit(
+                    ExecMode::Factored { factors },
+                    Decision::Exact { rank },
+                    spec,
+                    geo,
+                    opts,
+                    rank,
+                )
+            }
+            BiasSpec::StaticLearned { table }
+            | BiasSpec::Dense { table } => {
+                self.plan_measured(spec, table, geo, opts)
+            }
+            BiasSpec::Dynamic {
+                sources_q,
+                sources_k,
+                bias,
+            } => {
+                let mut cfg = self.config.neural;
+                if let Some(r) = opts.rank_override {
+                    cfg.rank = r;
+                }
+                let mut rng = Xoshiro256::new(cfg.seed);
+                let nd = NeuralDecomposition::fit(
+                    sources_q, sources_k, bias, &cfg, &mut rng,
+                );
+                let phi_q = nd.phi_q(sources_q);
+                let phi_k = nd.phi_k(sources_k);
+                let rel_err =
+                    linalg::reconstruction_error(bias, &phi_q, &phi_k);
+                let factors = Factors {
+                    phi_q,
+                    phi_k,
+                    rel_err,
+                    rank: cfg.rank,
+                };
+                self.emit(
+                    ExecMode::Factored { factors },
+                    Decision::Neural {
+                        rank: cfg.rank,
+                        rel_err,
+                    },
+                    spec,
+                    geo,
+                    opts,
+                    cfg.rank,
+                )
+            }
+        }
+    }
+
+    /// Static-learned / opaque path: measure the spectral rank, apply the
+    /// §4.3 low-rank test, SVD or fall back to dense.
+    fn plan_measured(&self, spec: &BiasSpec, table: &Tensor, geo: &Geometry,
+                     opts: &PlanOptions)
+                     -> Result<AttentionPlan, PlanError> {
+        let full_rank = geo.n.min(geo.m);
+        let measured =
+            linalg::rank_for_energy(table, self.config.energy_target);
+        let limit = (full_rank as f64 * self.config.max_rank_fraction)
+            .ceil() as usize;
+        let (rank, rank_ok) = match opts.rank_override {
+            Some(r) => (r, true),
+            None => (measured, measured <= limit),
+        };
+        if !rank_ok {
+            return self.emit(
+                ExecMode::Dense {
+                    bias: table.clone(),
+                },
+                Decision::DenseFallback {
+                    measured_rank: measured,
+                    reason: format!(
+                        "rank@{:.3} = {measured} > limit {limit}",
+                        self.config.energy_target
+                    ),
+                },
+                spec,
+                geo,
+                opts,
+                0,
+            );
+        }
+        let mut rng = Xoshiro256::new(self.config.neural.seed);
+        let factors =
+            decompose(table, &Strategy::Svd(RankSelect::Fixed(rank)),
+                      &mut rng)?
+                .expect("SVD always yields factors");
+        let rel_err = factors.rel_err;
+        self.emit(
+            ExecMode::Factored { factors },
+            Decision::Svd { rank, rel_err },
+            spec,
+            geo,
+            opts,
+            rank,
+        )
+    }
+
+    /// Final cost-model gate + plan assembly. A factored/JIT candidate
+    /// that the IO model says loses to the dense stream is demoted to
+    /// dense (Remark 3.8 / Corollary I.2).
+    fn emit(&self, mode: ExecMode, decision: Decision, spec: &BiasSpec,
+            geo: &Geometry, opts: &PlanOptions, rank: usize)
+            -> Result<AttentionPlan, PlanError> {
+        let geometry = Geometry { r: rank, ..*geo };
+        let multiplicative = spec.is_multiplicative();
+        let dense_io = iomodel::flash_dense_bias_io(&geometry);
+        let (mode, decision, predicted_io) = match mode {
+            ExecMode::Dense { bias } => {
+                (ExecMode::Dense { bias }, decision, dense_io)
+            }
+            ExecMode::NoBias => (
+                ExecMode::NoBias,
+                decision,
+                iomodel::flash_attention_io(&geometry),
+            ),
+            candidate @ (ExecMode::Factored { .. }
+            | ExecMode::Jit { .. }) => {
+                let io = if multiplicative {
+                    iomodel::mult_factored_io(&geometry)
+                } else {
+                    iomodel::flashbias_io(&geometry)
+                };
+                let mult_ok = !multiplicative
+                    || (rank as f64)
+                        <= iomodel::mult_bias_rank_threshold(
+                            geometry.c, geometry.sram,
+                        );
+                if io >= dense_io || !mult_ok {
+                    let bias = spec
+                        .materialize()
+                        .expect("biased spec materializes");
+                    let reason = if mult_ok {
+                        format!(
+                            "factored IO {io:.3e} >= dense {dense_io:.3e} \
+                             (Remark 3.8)"
+                        )
+                    } else {
+                        format!(
+                            "multiplicative rank {rank} above the \
+                             Corollary I.2 threshold"
+                        )
+                    };
+                    (
+                        ExecMode::Dense { bias },
+                        Decision::DenseFallback {
+                            measured_rank: rank,
+                            reason,
+                        },
+                        dense_io,
+                    )
+                } else {
+                    (candidate, decision, io)
+                }
+            }
+        };
+        let bias_storage_bytes = match &mode {
+            ExecMode::NoBias | ExecMode::Jit { .. } => 0,
+            ExecMode::Dense { bias } => bias.size_bytes(),
+            ExecMode::Factored { factors } => factors.size_bytes(),
+        };
+        let geometry = Geometry {
+            r: match &mode {
+                ExecMode::Dense { .. } | ExecMode::NoBias => 0,
+                _ => rank,
+            },
+            ..geometry
+        };
+        Ok(AttentionPlan {
+            mode,
+            geometry,
+            causal: opts.causal,
+            multiplicative,
+            decision,
+            predicted_io,
+            dense_io,
+            bias_storage_bytes,
+        })
+    }
+
+    /// Layer-policy helper (§4.3): given per-layer rank measurements,
+    /// return the first layer index from which FlashBias applies — the
+    /// paper's "last 8 layers of SwinV2" rule generalized.
+    pub fn factored_from(&self, ranks_at_energy: &[usize],
+                         full_rank: usize) -> usize {
+        let limit = (full_rank as f64 * self.config.max_rank_fraction)
+            .ceil() as usize;
+        // longest low-rank suffix
+        let mut from = ranks_at_energy.len();
+        for (i, &r) in ranks_at_energy.iter().enumerate().rev() {
+            if r <= limit {
+                from = i;
+            } else {
+                break;
+            }
+        }
+        from
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo(n: usize, m: usize) -> Geometry {
+        Geometry {
+            n,
+            m,
+            c: 64,
+            r: 0,
+            sram: 100 * 1024 / 2,
+        }
+    }
+
+    #[test]
+    fn alibi_plans_exact_factored() {
+        let plan = Planner::default()
+            .plan(&BiasSpec::alibi(64, 64, 0.25), &geo(64, 64),
+                  &PlanOptions::default())
+            .unwrap();
+        assert!(matches!(plan.decision, Decision::Exact { rank: 2 }));
+        assert!(matches!(plan.mode, ExecMode::Factored { .. }));
+        assert_eq!(plan.rank(), 2);
+        assert!(plan.predicted_io < plan.dense_io);
+    }
+
+    #[test]
+    fn alibi_jit_has_zero_bias_storage() {
+        let opts = PlanOptions {
+            prefer_jit: true,
+            ..PlanOptions::default()
+        };
+        let plan = Planner::default()
+            .plan(&BiasSpec::alibi(64, 64, 0.25), &geo(64, 64), &opts)
+            .unwrap();
+        assert!(matches!(plan.mode, ExecMode::Jit { .. }));
+        assert_eq!(plan.bias_storage_bytes, 0);
+        assert_eq!(plan.algorithm(), Algorithm::FlashBias(2));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let err = Planner::default()
+            .plan(&BiasSpec::alibi(64, 64, 0.25), &geo(64, 32),
+                  &PlanOptions::default())
+            .unwrap_err();
+        assert!(matches!(err, PlanError::ShapeMismatch { .. }));
+    }
+
+    #[test]
+    fn causal_multiplicative_rejected() {
+        let opts = PlanOptions {
+            causal: true,
+            ..PlanOptions::default()
+        };
+        let err = Planner::default()
+            .plan(&BiasSpec::cos_multiplicative(16, 16), &geo(16, 16),
+                  &opts)
+            .unwrap_err();
+        assert!(matches!(err, PlanError::CausalMultiplicative));
+    }
+
+    #[test]
+    fn no_bias_plan_is_pure_flash() {
+        let plan = Planner::default()
+            .plan(&BiasSpec::None, &geo(128, 128), &PlanOptions::default())
+            .unwrap();
+        assert!(matches!(plan.mode, ExecMode::NoBias));
+        assert_eq!(plan.algorithm(), Algorithm::Flash);
+        assert_eq!(plan.rank(), 0);
+    }
+
+    #[test]
+    fn factored_from_suffix_rule() {
+        let p = Planner::default();
+        // SwinV2 pattern (Figure 8): early layers high-rank, later low
+        let ranks = [300, 280, 250, 120, 60, 40, 30, 20];
+        // 576 * 0.35 ≈ 202 → suffix starts where rank ≤ 202: index 3
+        assert_eq!(p.factored_from(&ranks, 576), 3);
+        assert_eq!(p.factored_from(&[500, 480, 460], 576), 3);
+        assert_eq!(p.factored_from(&[10, 12, 8], 576), 0);
+    }
+}

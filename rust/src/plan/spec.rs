@@ -1,0 +1,230 @@
+//! [`BiasSpec`] — the whole bias zoo behind one type.
+//!
+//! Every bias the paper touches (Table 1 and §4) is declared here with
+//! uniform metadata: shape, classification (closed-form / static learned /
+//! dynamic / opaque), exact rank when a closed-form factorization exists,
+//! and — when the planner needs them — the dense matrix or the exact
+//! factor strips. The [`crate::plan::Planner`] consumes a `BiasSpec` and
+//! never asks the caller which Table 1 row applies; that decision is the
+//! planner's job.
+
+use crate::bias::{Alibi, CosMultiplicative, ExactBias, SpatialDistance};
+use crate::tensor::Tensor;
+
+/// One bias from the paper's zoo, in planner-consumable form.
+#[derive(Clone, Debug)]
+pub enum BiasSpec {
+    /// No bias — pure FlashAttention.
+    None,
+    /// ALiBi `b[i,j] = slope·(j − i)` (Example 3.4). Closed form, R = 2.
+    Alibi { n: usize, m: usize, slope: f32 },
+    /// Weighted spatial squared distance (Example 3.5, PDE solvers).
+    /// Closed form, R = 3·dim.
+    Spatial(SpatialDistance),
+    /// Multiplicative `cos(i − j)` bias (Appendix I Example I.1).
+    /// Closed form, R = 2, combined by Hadamard product not addition.
+    CosMultiplicative { n: usize, m: usize },
+    /// Fixed learned parameter table (Swin / Pangu relative-position
+    /// bias): spectral profile measurable offline, SVD candidate.
+    StaticLearned { table: Tensor },
+    /// Data-dependent bias projected from activations (AlphaFold pair
+    /// bias, gravity, spherical): differs per sample, neural candidate.
+    /// `sources_q`/`sources_k` are the token-wise inputs the factor
+    /// functions φ̂ are fitted on (Eq. 5); `bias` is this sample's dense
+    /// matrix (the fitting target).
+    Dynamic {
+        sources_q: Tensor,
+        sources_k: Tensor,
+        bias: Tensor,
+    },
+    /// Opaque dense matrix: nothing declared. The planner still runs the
+    /// spectral rank test before falling back to the dense stream.
+    Dense { table: Tensor },
+}
+
+impl BiasSpec {
+    /// ALiBi with the given shape and per-head slope.
+    pub fn alibi(n: usize, m: usize, slope: f32) -> Self {
+        BiasSpec::Alibi { n, m, slope }
+    }
+
+    /// Spatial squared-distance bias from query/key positions
+    /// (`xq: (N, dim)`, `xk: (M, dim)`) and optional per-query weights.
+    pub fn spatial(xq: Tensor, xk: Tensor, alpha: Option<Vec<f32>>) -> Self {
+        BiasSpec::Spatial(SpatialDistance::new(xq, xk, alpha))
+    }
+
+    /// Multiplicative `cos(i − j)` bias.
+    pub fn cos_multiplicative(n: usize, m: usize) -> Self {
+        BiasSpec::CosMultiplicative { n, m }
+    }
+
+    /// Static learned table (one head's gathered `(N, M)` bias).
+    pub fn static_learned(table: Tensor) -> Self {
+        assert_eq!(table.rank(), 2, "bias table must be (N, M)");
+        BiasSpec::StaticLearned { table }
+    }
+
+    /// Dynamic bias with its token sources (`(N, d)` / `(M, d)`).
+    pub fn dynamic(sources_q: Tensor, sources_k: Tensor,
+                   bias: Tensor) -> Self {
+        assert_eq!(bias.rank(), 2, "bias must be (N, M)");
+        assert_eq!(sources_q.shape()[0], bias.shape()[0], "N mismatch");
+        assert_eq!(sources_k.shape()[0], bias.shape()[1], "M mismatch");
+        BiasSpec::Dynamic {
+            sources_q,
+            sources_k,
+            bias,
+        }
+    }
+
+    /// Opaque dense bias.
+    pub fn dense(table: Tensor) -> Self {
+        assert_eq!(table.rank(), 2, "bias table must be (N, M)");
+        BiasSpec::Dense { table }
+    }
+
+    /// `(N, M)` shape, or `None` for the no-bias spec.
+    pub fn shape(&self) -> Option<(usize, usize)> {
+        match self {
+            BiasSpec::None => None,
+            BiasSpec::Alibi { n, m, .. }
+            | BiasSpec::CosMultiplicative { n, m } => Some((*n, *m)),
+            BiasSpec::Spatial(s) => Some(s.shape()),
+            BiasSpec::StaticLearned { table }
+            | BiasSpec::Dense { table } => {
+                Some((table.shape()[0], table.shape()[1]))
+            }
+            BiasSpec::Dynamic { bias, .. } => {
+                Some((bias.shape()[0], bias.shape()[1]))
+            }
+        }
+    }
+
+    /// Exact factorization rank when a closed form exists (Table 1a).
+    pub fn exact_rank(&self) -> Option<usize> {
+        match self {
+            BiasSpec::Alibi { .. } => Some(2),
+            BiasSpec::Spatial(s) => Some(s.rank()),
+            BiasSpec::CosMultiplicative { .. } => Some(2),
+            _ => None,
+        }
+    }
+
+    /// Whether this bias multiplies the scores instead of adding
+    /// (Appendix I Eq. 15).
+    pub fn is_multiplicative(&self) -> bool {
+        matches!(self, BiasSpec::CosMultiplicative { .. })
+    }
+
+    /// Whether the bias differs per sample (blocks offline SVD).
+    pub fn is_dynamic(&self) -> bool {
+        matches!(self, BiasSpec::Dynamic { .. })
+    }
+
+    /// Short label for plan summaries and routing.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            BiasSpec::None => "none",
+            BiasSpec::Alibi { .. } => "alibi",
+            BiasSpec::Spatial(_) => "spatial",
+            BiasSpec::CosMultiplicative { .. } => "cos-mult",
+            BiasSpec::StaticLearned { .. } => "static-learned",
+            BiasSpec::Dynamic { .. } => "dynamic",
+            BiasSpec::Dense { .. } => "dense",
+        }
+    }
+
+    /// Exact closed-form factor strips (Table 1a), when they exist.
+    pub fn exact_factors(&self) -> Option<(Tensor, Tensor)> {
+        match self {
+            BiasSpec::Alibi { n, m, slope } => {
+                Some(Alibi::new(*n, *m, *slope).factors())
+            }
+            BiasSpec::Spatial(s) => Some(s.factors()),
+            BiasSpec::CosMultiplicative { n, m } => {
+                Some(CosMultiplicative { n: *n, m: *m }.factors())
+            }
+            _ => None,
+        }
+    }
+
+    /// Materialize the dense `(N, M)` matrix. `None` only for
+    /// [`BiasSpec::None`]. For closed-form biases this is O(NM) — the
+    /// planner avoids calling it unless it must fall back to dense.
+    pub fn materialize(&self) -> Option<Tensor> {
+        match self {
+            BiasSpec::None => None,
+            BiasSpec::Alibi { n, m, slope } => {
+                Some(Alibi::new(*n, *m, *slope).dense())
+            }
+            BiasSpec::Spatial(s) => Some(s.dense()),
+            BiasSpec::CosMultiplicative { n, m } => {
+                Some(CosMultiplicative { n: *n, m: *m }.dense())
+            }
+            BiasSpec::StaticLearned { table }
+            | BiasSpec::Dense { table } => Some(table.clone()),
+            BiasSpec::Dynamic { bias, .. } => Some(bias.clone()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn alibi_spec_metadata() {
+        let s = BiasSpec::alibi(16, 24, 0.5);
+        assert_eq!(s.shape(), Some((16, 24)));
+        assert_eq!(s.exact_rank(), Some(2));
+        assert!(!s.is_multiplicative());
+        assert!(!s.is_dynamic());
+        assert_eq!(s.kind(), "alibi");
+        let (pq, pk) = s.exact_factors().unwrap();
+        let dense = s.materialize().unwrap();
+        assert!(pq.matmul_t(&pk).allclose(&dense, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn spatial_spec_rank_tracks_dim() {
+        let mut rng = Xoshiro256::new(0);
+        let x = Tensor::randn(&[10, 3], 1.0, &mut rng);
+        let s = BiasSpec::spatial(x.clone(), x, None);
+        assert_eq!(s.exact_rank(), Some(9));
+        assert_eq!(s.shape(), Some((10, 10)));
+    }
+
+    #[test]
+    fn cos_mult_is_multiplicative() {
+        let s = BiasSpec::cos_multiplicative(8, 8);
+        assert!(s.is_multiplicative());
+        assert_eq!(s.exact_rank(), Some(2));
+    }
+
+    #[test]
+    fn static_and_dense_have_no_exact_rank() {
+        let t = Tensor::ones(&[4, 4]);
+        assert_eq!(BiasSpec::static_learned(t.clone()).exact_rank(), None);
+        assert_eq!(BiasSpec::dense(t).exact_rank(), None);
+    }
+
+    #[test]
+    fn dynamic_spec_shapes() {
+        let mut rng = Xoshiro256::new(1);
+        let xq = Tensor::randn(&[6, 2], 1.0, &mut rng);
+        let xk = Tensor::randn(&[9, 2], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let s = BiasSpec::dynamic(xq, xk, b);
+        assert_eq!(s.shape(), Some((6, 9)));
+        assert!(s.is_dynamic());
+        assert!(s.exact_factors().is_none());
+    }
+
+    #[test]
+    fn none_spec_is_shapeless() {
+        assert_eq!(BiasSpec::None.shape(), None);
+        assert!(BiasSpec::None.materialize().is_none());
+    }
+}

@@ -1,11 +1,19 @@
 //! PJRT runtime: load AOT artifacts (HLO text + input binaries produced by
 //! `python/compile/aot.py`) and execute them on the CPU PJRT client.
 //!
-//! This is the only module that touches the `xla` crate. The flow follows
-//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! This is the only module that touches the `xla` bindings. The flow
+//! follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
 //! `XlaComputation::from_proto` → `client.compile` → `execute`. HLO
 //! *text* is the interchange format (xla_extension 0.5.1 rejects jax≥0.5
 //! serialized protos with 64-bit ids).
+//!
+//! Outside the vendored accelerator image the real bindings do not
+//! exist, so this module builds against [`crate::xla_stub`] (imported
+//! under the name `xla`): every `Runtime::open*` then fails with a clear
+//! "PJRT backend unavailable" error while the rest of the crate — the
+//! `plan` pipeline, host/simulator executors, coordinator — keeps
+//! working. To wire the real backend, swap the `use` below for the real
+//! crate and add it to `rust/Cargo.toml`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -15,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::jsonlite::Json;
 use crate::tensor::Tensor;
+use crate::xla_stub as xla;
 
 /// Element type of an artifact input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -193,8 +202,12 @@ impl Executable {
 }
 
 /// The artifact registry + PJRT client + executable cache.
+///
+/// The client is created lazily on the first compile: opening a manifest
+/// and reading input dumps are pure host operations and must keep
+/// working where no PJRT backend exists (e.g. the stub build).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    client: Mutex<Option<xla::PjRtClient>>,
     root: PathBuf,
     artifacts: HashMap<String, ArtifactSpec>,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
@@ -250,9 +263,8 @@ impl Runtime {
                 },
             );
         }
-        let client = xla::PjRtClient::cpu()?;
         Ok(Self {
-            client,
+            client: Mutex::new(None),
             root,
             artifacts,
             cache: Mutex::new(HashMap::new()),
@@ -274,8 +286,22 @@ impl Runtime {
         Self::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
     }
 
+    /// Create (or reuse) the PJRT client.
+    fn client(&self)
+              -> Result<std::sync::MutexGuard<'_, Option<xla::PjRtClient>>>
+    {
+        let mut guard = self.client.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(xla::PjRtClient::cpu()?);
+        }
+        Ok(guard)
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match self.client() {
+            Ok(guard) => guard.as_ref().expect("client").platform_name(),
+            Err(_) => "unavailable".to_string(),
+        }
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -306,7 +332,10 @@ impl Runtime {
                 .ok_or_else(|| anyhow!("bad path {hlo_path:?}"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
+        let exe = {
+            let guard = self.client()?;
+            guard.as_ref().expect("client").compile(&comp)?
+        };
         let exe = Arc::new(Executable { exe, spec });
         self.cache
             .lock()

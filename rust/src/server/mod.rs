@@ -8,6 +8,8 @@
 //! * `run <artifact> [-n ITERS]` — execute one artifact, print timing.
 //! * `serve [--requests N] [--workers W]` — synthetic serving loop through
 //!   the full coordinator (router → batcher → workers), print metrics.
+//! * `plan --bias KIND [...]` — run the Table 1 planner on a synthetic
+//!   bias and print the emitted plan (no artifacts needed).
 //! * `info`                — platform + manifest summary.
 
 use std::collections::HashMap;
@@ -16,9 +18,13 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::bias;
 use crate::coordinator::{Coordinator, CoordinatorConfig, RouteKey, Router};
+use crate::iomodel::Geometry;
+use crate::plan::{BiasSpec, PjrtExecutor, PlanOptions, Planner};
 use crate::runtime::{HostValue, Runtime};
-use crate::util::{bench_loop, human_secs, Xoshiro256};
+use crate::tensor::Tensor;
+use crate::util::{bench_loop, human_bytes, human_secs, Xoshiro256};
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -95,6 +101,10 @@ COMMANDS:
   run <ARTIFACT> [--iters N]   execute one artifact, print timing
   serve [--requests N] [--workers W] [--max-batch B]
                                synthetic serving loop, print metrics
+  plan --bias KIND [--n N] [--m M] [--c C] [--sram ELEMS] [--rank R]
+       [--causal] [--jit]    run the Table 1 planner on a synthetic bias
+                               (KIND: none|alibi|spatial|cos-mult|swin|
+                               pangu|dynamic|dense) and print the plan
   help                         this text
 ";
 
@@ -107,6 +117,7 @@ pub fn run(cli: &Cli) -> Result<String> {
         "verify" => cmd_verify(cli),
         "run" => cmd_run(cli),
         "serve" => cmd_serve(cli),
+        "plan" => cmd_plan(cli),
         other => bail!("unknown command {other}\n{USAGE}"),
     }
 }
@@ -199,17 +210,103 @@ fn cmd_run(cli: &Cli) -> Result<String> {
     ))
 }
 
-/// Synthetic serving workload: route random-length factored-attention
-/// requests through the full stack.
+/// Run the Table 1 planner on a synthetic bias and print the emitted
+/// plan — the `BiasSpec → Planner → AttentionPlan` pipeline as a CLI.
+fn cmd_plan(cli: &Cli) -> Result<String> {
+    let kind = cli.flag("bias").unwrap_or("alibi");
+    let n = cli.flag_usize("n", 256)?;
+    let m = cli.flag_usize("m", n)?;
+    let c = cli.flag_usize("c", 64)?;
+    let sram = cli.flag_usize("sram", 100 * 1024 / 2)?;
+    let causal = cli.flag("causal").is_some();
+    let jit = cli.flag("jit").is_some();
+    let rank_override = match cli.flag("rank") {
+        Some(_) => Some(cli.flag_usize("rank", 0)?),
+        None => None,
+    };
+    let mut rng = Xoshiro256::new(0);
+    let (spec, n, m) = match kind {
+        "none" => (BiasSpec::None, n, m),
+        "alibi" => (BiasSpec::alibi(n, m, 0.25), n, m),
+        "spatial" => {
+            let xq = bias::synthetic_car_cloud(n, 0);
+            let xk = if m == n {
+                xq.clone()
+            } else {
+                bias::synthetic_car_cloud(m, 1)
+            };
+            (BiasSpec::spatial(xq, xk, None), n, m)
+        }
+        "cos-mult" => (BiasSpec::cos_multiplicative(n, m), n, m),
+        "swin" => {
+            let mut tables =
+                bias::swin_relative_bias((12, 12), 1, 0, 6, 0.02);
+            (BiasSpec::static_learned(tables.remove(0)), 144, 144)
+        }
+        "pangu" => {
+            let mut tables =
+                bias::pangu_relative_bias((2, 6, 12), 1, 0, 5, 0.02);
+            (BiasSpec::static_learned(tables.remove(0)), 144, 144)
+        }
+        "dynamic" => {
+            // neural fit is O(steps·N·hidden): keep the CLI snappy
+            let nn = n.min(64);
+            let x = Tensor::from_fn(&[nn, 2], |ix| {
+                let t = ix[0] as f32 / nn as f32;
+                if ix[1] == 0 { (6.28 * t).sin() } else { t }
+            });
+            let w = Tensor::randn(&[2, 2], 0.8, &mut rng);
+            let proj = x.matmul(&w);
+            let target = proj.matmul_t(&proj).map(|vv| (0.5 * vv).tanh());
+            (BiasSpec::dynamic(x.clone(), x, target), nn, nn)
+        }
+        "dense" => {
+            let table = Tensor::randn(&[n, m], 1.0, &mut rng);
+            (BiasSpec::dense(table), n, m)
+        }
+        other => bail!("unknown bias kind {other}\n{USAGE}"),
+    };
+    let geo = Geometry { n, m, c, r: 0, sram };
+    let opts = PlanOptions {
+        causal,
+        prefer_jit: jit,
+        rank_override,
+        verify_exact: false,
+    };
+    let plan = Planner::default().plan(&spec, &geo, &opts)?;
+    Ok(format!(
+        "bias: {kind} (N={n}, M={m}, C={c}, SRAM={sram} elems)\n\
+         plan: {}\n\
+         predicted HBM IO: {:.3e} elems vs dense-bias {:.3e} ({:.1}x)\n\
+         bias storage: {}\n",
+        plan.summary(),
+        plan.predicted_io,
+        plan.dense_io,
+        plan.io_saving(),
+        human_bytes(plan.bias_storage_bytes as u64),
+    ))
+}
+
+/// Synthetic serving workload: route random-length attention requests
+/// through the full stack; the planner picks the artifact variant.
 fn cmd_serve(cli: &Cli) -> Result<String> {
     let n_requests = cli.flag_usize("requests", 64)?;
     let workers = cli.flag_usize("workers", 2)?;
     let max_batch = cli.flag_usize("max-batch", 8)?;
     let rt = Arc::new(Runtime::open_default()?);
     let router = Router::from_runtime(&rt);
-    let key = RouteKey::new("attn", "factored");
+    // the serving bias is exact-closed-form ALiBi: let the planner decide
+    // how it is carried and route to the matching artifact variant
+    let probe = Planner::default().plan(
+        &BiasSpec::alibi(512, 512, 0.25),
+        &Geometry::square(512, 64, 0, 100 * 1024 / 2),
+        &PlanOptions::default(),
+    )?;
+    let variant = PjrtExecutor::variant(&probe.mode);
+    let key = RouteKey::new("attn", variant);
     if router.route(&key, 1).is_none() {
-        bail!("no attn/factored artifacts in manifest; run `make artifacts`");
+        bail!("no attn/{variant} artifacts in manifest; \
+               run `make artifacts`");
     }
     let mut config = CoordinatorConfig::default();
     config.workers = workers;
@@ -307,5 +404,39 @@ mod tests {
     fn help_prints_usage() {
         let cli = Cli::parse(std::iter::empty()).unwrap();
         assert!(run(&cli).unwrap().contains("USAGE"));
+    }
+
+    #[test]
+    fn plan_subcommand_needs_no_artifacts() {
+        let cli = Cli::parse(
+            ["plan", "--bias", "alibi", "--n", "128", "--causal"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let out = run(&cli).unwrap();
+        assert!(out.contains("mode=factored"), "{out}");
+        assert!(out.contains("rank=2"), "{out}");
+    }
+
+    #[test]
+    fn plan_subcommand_jit_mode() {
+        let cli = Cli::parse(
+            ["plan", "--bias", "alibi", "--jit"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        let out = run(&cli).unwrap();
+        assert!(out.contains("mode=jit"), "{out}");
+    }
+
+    #[test]
+    fn plan_subcommand_rejects_unknown_kind() {
+        let cli = Cli::parse(
+            ["plan", "--bias", "wat"].into_iter().map(String::from),
+        )
+        .unwrap();
+        assert!(run(&cli).is_err());
     }
 }

@@ -1,0 +1,29 @@
+//! Shared helpers for artifact-dependent integration tests.
+#![allow(dead_code)] // each test crate uses a subset
+
+use std::sync::Arc;
+
+use flashbias::runtime::Runtime;
+
+/// `None` (→ test skips) when artifacts or the PJRT backend are
+/// unavailable; run `make artifacts` on the accelerator image.
+pub fn runtime() -> Option<Runtime> {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("SKIP: PJRT artifacts unavailable ({e})");
+            return None;
+        }
+    };
+    // the client is lazy: probe it so stub builds skip instead of failing
+    if rt.load("attn_pure_n256").is_err() {
+        eprintln!("SKIP: PJRT backend unavailable");
+        return None;
+    }
+    Some(rt)
+}
+
+/// [`runtime`], wrapped for the coordinator tests.
+pub fn runtime_arc() -> Option<Arc<Runtime>> {
+    runtime().map(Arc::new)
+}

