@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test verify bench examples fmt clippy artifacts clean
+.PHONY: all build test verify bench bench-json examples fmt clippy artifacts clean
 
 all: build
 
@@ -21,6 +21,11 @@ verify: build test
 
 bench:
 	$(CARGO) bench
+
+# Machine-readable bench output: runs the kernel-engine bench and drops
+# BENCH_kernels.json (label, mean, p50, bytes) at the workspace root.
+bench-json:
+	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
 
 examples:
 	$(CARGO) build --release --examples

@@ -1,11 +1,15 @@
-//! Host-side reference attention — the ground truth the PJRT artifacts and
-//! the simulator are cross-checked against.
+//! Host-side reference attention — the dense ground truth the kernel
+//! engine, the PJRT artifacts and the simulator are cross-checked
+//! against.
 //!
-//! All variants of Eq. (1)/(3)/(15): standard, dense additive bias,
-//! factored bias via the Eq. (3) concat trick, causal masking,
-//! multiplicative bias, and a block-streamed online-softmax version that
-//! mirrors the exact recurrence of the L1 Pallas kernels.
+//! [`attention`] and its factored/multiplicative variants materialize
+//! the score matrix the straightforward way (Eq. (1)/(3)/(15)); they are
+//! the oracle for tests. The *streamed* paths — [`online_softmax_attention`]
+//! and [`mha`] — are thin wrappers over the block-tiled multi-threaded
+//! engine in [`crate::kernels`], which owns the one streaming-softmax
+//! compute loop in the crate.
 
+use crate::kernels::{self, KernelConfig};
 use crate::tensor::Tensor;
 
 pub const NEG_INF: f32 = -1e30;
@@ -19,6 +23,47 @@ pub struct AttnOpts {
 fn causal_allowed(i: usize, j: usize, n: usize, m: usize) -> bool {
     // decoder alignment: the mask ends at the key end (j − (m−n) ≤ i)
     j as isize - (m as isize - n as isize) <= i as isize
+}
+
+/// Overwrite masked-future positions of an `(N, M)` score matrix with
+/// [`NEG_INF`] (decoder-aligned causal mask).
+pub fn apply_causal_mask(s: &mut Tensor) {
+    let (n, m) = (s.shape()[0], s.shape()[1]);
+    for i in 0..n {
+        for j in 0..m {
+            if !causal_allowed(i, j, n, m) {
+                s.set2(i, j, NEG_INF);
+            }
+        }
+    }
+}
+
+/// Row softmax with the fully-masked-row guard: a row whose every score
+/// is masked (≤ [`kernels::MASKED`]) yields an exactly-zero output row
+/// instead of a uniform distribution over masked keys — the decoder
+/// alignment with N > M produces such rows.
+fn softmax_rows_guarded(s: &Tensor) -> Tensor {
+    let (n, m) = (s.shape()[0], s.shape()[1]);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let row = s.row(i);
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        if mx <= kernels::MASKED {
+            continue; // fully masked row → zero weights
+        }
+        let orow = &mut out[i * m..(i + 1) * m];
+        let mut sum = 0.0f32;
+        for (o, &x) in orow.iter_mut().zip(row) {
+            let e = (x - mx).exp();
+            *o = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    Tensor::new(&[n, m], out)
 }
 
 /// Reference attention `softmax(q kᵀ/√C + b) v` with optional causal mask.
@@ -44,15 +89,9 @@ pub fn attention(
         s = s.add(b);
     }
     if opts.causal {
-        for i in 0..n {
-            for j in 0..m {
-                if !causal_allowed(i, j, n, m) {
-                    s.set2(i, j, NEG_INF);
-                }
-            }
-        }
+        apply_causal_mask(&mut s);
     }
-    s.softmax_rows().matmul(v)
+    softmax_rows_guarded(&s).matmul(v)
 }
 
 /// FlashBias Eq. (3): factored bias folded into the dot product via
@@ -71,18 +110,11 @@ pub fn attention_factored(
     // [q | √C·φ_q] [k | φ_k]ᵀ / √C  ==  q kᵀ/√C + φ_q φ_kᵀ
     let q_ext = q.concat_cols(&phi_q.scale(sqrt_c));
     let k_ext = k.concat_cols(phi_k);
-    let (n, m) = (q.shape()[0], k.shape()[0]);
     let mut s = q_ext.matmul_t(&k_ext).scale(1.0 / sqrt_c);
     if opts.causal {
-        for i in 0..n {
-            for j in 0..m {
-                if !causal_allowed(i, j, n, m) {
-                    s.set2(i, j, NEG_INF);
-                }
-            }
-        }
+        apply_causal_mask(&mut s);
     }
-    s.softmax_rows().matmul(v)
+    softmax_rows_guarded(&s).matmul(v)
 }
 
 /// Appendix I Eq. (15): multiplicative (Hadamard) bias.
@@ -124,75 +156,36 @@ pub fn attention_multiplicative_factored(
     s.softmax_rows().matmul(v)
 }
 
-/// Block-streamed online-softmax attention (the FlashAttention-2 /
-/// Milakov–Gimelshein recurrence) — validates the accumulator algebra the
-/// Pallas kernels implement, independent of XLA.
+/// Block-streamed online-softmax attention — a thin wrapper over the
+/// tiled kernel engine, kept for its historical key-block signature.
+/// Unlike its pre-engine incarnation it honors `opts.causal` instead of
+/// silently ignoring masking.
 pub fn online_softmax_attention(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     bias: Option<&Tensor>,
     block_k: usize,
+    opts: &AttnOpts,
 ) -> Tensor {
-    let (n, c) = (q.shape()[0], q.shape()[1]);
-    let m = k.shape()[0];
-    let cv = v.shape()[1];
-    let scale = 1.0 / (c as f32).sqrt();
-    let mut m_acc = vec![NEG_INF; n];
-    let mut l_acc = vec![0.0f32; n];
-    let mut o_acc = vec![0.0f32; n * cv];
-    let mut start = 0;
-    while start < m {
-        let stop = (start + block_k).min(m);
-        for i in 0..n {
-            // scores for this block row
-            let mut s_blk = Vec::with_capacity(stop - start);
-            let qrow = q.row(i);
-            for j in start..stop {
-                let krow = k.row(j);
-                let mut dot = 0.0f32;
-                for (a, b) in qrow.iter().zip(krow) {
-                    dot += a * b;
-                }
-                let mut sij = dot * scale;
-                if let Some(b) = bias {
-                    sij += b.at2(i, j);
-                }
-                s_blk.push(sij);
-            }
-            let blk_max =
-                s_blk.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            let m_new = m_acc[i].max(blk_max);
-            let alpha = (m_acc[i] - m_new).exp();
-            let mut l_new = l_acc[i] * alpha;
-            for o in &mut o_acc[i * cv..(i + 1) * cv] {
-                *o *= alpha;
-            }
-            for (jj, &sij) in s_blk.iter().enumerate() {
-                let p = (sij - m_new).exp();
-                l_new += p;
-                let vrow = v.row(start + jj);
-                for (o, &vv) in
-                    o_acc[i * cv..(i + 1) * cv].iter_mut().zip(vrow)
-                {
-                    *o += p * vv;
-                }
-            }
-            m_acc[i] = m_new;
-            l_acc[i] = l_new;
-        }
-        start = stop;
+    let cfg = KernelConfig::default().with_blocks(64, block_k);
+    match bias {
+        Some(b) => kernels::attention_tiled(
+            q,
+            k,
+            v,
+            &kernels::DenseTile::from_tensor(b),
+            opts.causal,
+            &cfg,
+        ),
+        None => kernels::attention_tiled(
+            q, k, v, &kernels::NoBias, opts.causal, &cfg,
+        ),
     }
-    for i in 0..n {
-        let inv = 1.0 / l_acc[i];
-        for o in &mut o_acc[i * cv..(i + 1) * cv] {
-            *o *= inv;
-        }
-    }
-    Tensor::new(&[n, cv], o_acc)
 }
 
-/// Multi-head wrapper: `q/k/v: (H, N, C)`, optional `bias: (H, N, M)`.
+/// Multi-head wrapper over the tiled engine: `q/k/v: (H, N, C)`,
+/// optional `bias: (H, N, M)`. Heads run data-parallel.
 pub fn mha(
     q: &Tensor,
     k: &Tensor,
@@ -200,19 +193,8 @@ pub fn mha(
     bias: Option<&Tensor>,
     opts: &AttnOpts,
 ) -> Tensor {
-    let h = q.shape()[0];
-    let heads: Vec<Tensor> = (0..h)
-        .map(|i| {
-            attention(
-                &q.index0(i),
-                &k.index0(i),
-                &v.index0(i),
-                bias.map(|b| b.index0(i)).as_ref(),
-                opts,
-            )
-        })
-        .collect();
-    Tensor::stack(&heads)
+    kernels::mha_tiled(q, k, v, bias, opts.causal,
+                       &KernelConfig::default())
 }
 
 #[cfg(test)]
@@ -297,15 +279,45 @@ mod tests {
     }
 
     #[test]
+    fn fully_masked_rows_yield_zero_output() {
+        // decoder alignment with N > M: rows 0..N−M see no key at all and
+        // must produce zeros, not a uniform average over masked keys
+        let (q, k, v) = data(7, 4, 4, 13);
+        let out = attention(&q, &k, &v, None, &AttnOpts { causal: true });
+        for i in 0..3 {
+            assert!(out.row(i).iter().all(|&x| x == 0.0), "row {i}");
+        }
+        // the first live row attends exactly to key 0
+        for j in 0..4 {
+            assert!((out.at2(3, j) - v.at2(0, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
     fn online_softmax_matches_full() {
         let (q, k, v) = data(7, 33, 8, 7);
         let mut rng = Xoshiro256::new(8);
         let bias = Tensor::randn(&[7, 33], 1.0, &mut rng);
         let full = attention(&q, &k, &v, Some(&bias), &AttnOpts::default());
         for block_k in [1, 4, 16, 33, 64] {
-            let streamed =
-                online_softmax_attention(&q, &k, &v, Some(&bias), block_k);
+            let streamed = online_softmax_attention(
+                &q, &k, &v, Some(&bias), block_k, &AttnOpts::default());
             assert!(streamed.allclose(&full, 1e-4, 1e-4),
+                    "block_k={block_k}");
+        }
+    }
+
+    #[test]
+    fn online_softmax_honors_causal_mask() {
+        // the regression the engine fixes: the streamed path used to
+        // silently ignore causal masking
+        let (q, k, v) = data(9, 12, 4, 14);
+        let opts = AttnOpts { causal: true };
+        let full = attention(&q, &k, &v, None, &opts);
+        for block_k in [1, 3, 5, 12, 32] {
+            let streamed =
+                online_softmax_attention(&q, &k, &v, None, block_k, &opts);
+            assert!(streamed.allclose(&full, 1e-5, 1e-5),
                     "block_k={block_k}");
         }
     }
@@ -328,7 +340,8 @@ mod tests {
         let bias = Tensor::full(&[5, 8], 200.0);
         let out = attention(&q, &k, &v, Some(&bias), &AttnOpts::default());
         assert!(out.data().iter().all(|x| x.is_finite()));
-        let streamed = online_softmax_attention(&q, &k, &v, Some(&bias), 4);
+        let streamed = online_softmax_attention(
+            &q, &k, &v, Some(&bias), 4, &AttnOpts::default());
         assert!(streamed.allclose(&out, 1e-4, 1e-4));
     }
 
@@ -342,7 +355,7 @@ mod tests {
         assert_eq!(out.shape(), &[3, 6, 4]);
         let h1 = attention(&q.index0(1), &k.index0(1), &v.index0(1), None,
                            &AttnOpts::default());
-        assert!(out.index0(1).allclose(&h1, 1e-6, 1e-6));
+        assert!(out.index0(1).allclose(&h1, 1e-5, 1e-5));
     }
 
     #[test]

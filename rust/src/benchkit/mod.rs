@@ -6,6 +6,9 @@
 //! the row it regenerates, (b) the measured/simulated numbers, so
 //! `cargo bench | tee bench_output.txt` is the EXPERIMENTS.md source.
 
+use std::path::PathBuf;
+
+use crate::jsonlite::Json;
 use crate::runtime::{HostValue, Runtime};
 use crate::util::{human_bytes, human_secs, Stats, Timer};
 
@@ -66,6 +69,51 @@ impl Table {
 
     pub fn rows(&self) -> &[Row] {
         &self.rows
+    }
+
+    /// Machine-readable rows as JSON: `{title, rows: [{label, mean,
+    /// p50, bytes}]}` (bytes is `null` when a row has none).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("label", Json::str(&r.label)),
+                    ("mean", Json::num(r.stats.mean())),
+                    ("p50", Json::num(r.stats.p50())),
+                    (
+                        "bytes",
+                        r.bytes
+                            .map(|b| Json::num(b as f64))
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Write the table as `BENCH_<stem>.json` into `dir` (the CI/tooling
+    /// interchange format next to the pretty print).
+    pub fn write_json_to(&self, dir: impl Into<PathBuf>,
+                         stem: &str) -> std::io::Result<PathBuf> {
+        let path = dir.into().join(format!("BENCH_{stem}.json"));
+        std::fs::write(&path, self.to_json().dump())?;
+        println!("  wrote {}", path.display());
+        Ok(path)
+    }
+
+    /// Write `BENCH_<stem>.json` into `$FLASHBIAS_BENCH_JSON_DIR`
+    /// (default: the current directory — `make bench-json` sets it to
+    /// the workspace root).
+    pub fn write_json(&self, stem: &str) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("FLASHBIAS_BENCH_JSON_DIR")
+            .unwrap_or_else(|_| ".".into());
+        self.write_json_to(dir, stem)
     }
 }
 
@@ -180,5 +228,34 @@ mod tests {
     #[test]
     fn iters_env_override() {
         assert_eq!(iters(7), 7);
+    }
+
+    #[test]
+    fn json_roundtrip_and_file_dump() {
+        let mut t = Table::new("kernels-test");
+        let mut s = Stats::new();
+        s.push(0.25);
+        s.push(0.75);
+        t.row(Row {
+            label: "tiled".into(),
+            stats: s,
+            bytes: Some(2048),
+            note: String::new(),
+        });
+        let j = t.to_json();
+        assert_eq!(j.get("title").as_str(), Some("kernels-test"));
+        let rows = j.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("label").as_str(), Some("tiled"));
+        assert_eq!(rows[0].get("mean").as_f64(), Some(0.5));
+        assert_eq!(rows[0].get("bytes").as_f64(), Some(2048.0));
+        // dump → parse roundtrip through a real file
+        let path = t
+            .write_json_to(std::env::temp_dir(), "kernels_test")
+            .expect("write");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let parsed = crate::jsonlite::Json::parse(&text).expect("parse");
+        assert_eq!(parsed.get("title").as_str(), Some("kernels-test"));
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -11,8 +11,10 @@
 //!   behind the unified `BiasSpec → plan → execute` API).
 //! * [`batcher`] — dynamic batching: requests accumulate per bucket and
 //!   flush on max-batch or deadline, amortizing dispatch overhead.
-//! * [`worker`] — a thread pool executing flushed batches on the shared
-//!   PJRT runtime; bounded queues give backpressure.
+//! * [`worker`] — a thread pool executing flushed batches: PJRT for
+//!   compiled artifacts, or **one batched `(B, H, N, C)` kernel-engine
+//!   call** for plans in the [`HostPlanRegistry`]; bounded queues give
+//!   backpressure.
 //! * [`metrics`] — latency/throughput counters for every stage.
 
 pub mod batcher;
@@ -21,19 +23,55 @@ pub mod router;
 pub mod selector;
 pub mod worker;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::plan::AttentionPlan;
 use crate::runtime::{HostValue, Runtime};
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use router::{RouteKey, Router};
 pub use selector::{SelectorConfig, StrategySelector};
+
+/// Registry of attention plans served directly on the host kernel
+/// engine — no PJRT artifact needed. Plan names share the artifact
+/// namespace; a flushed batch whose name resolves here is stacked into
+/// one batched `(B, H, N, C)` engine call by the worker pool.
+#[derive(Default)]
+pub struct HostPlanRegistry {
+    plans: RwLock<HashMap<String, Arc<AttentionPlan>>>,
+}
+
+impl HostPlanRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&self, name: &str, plan: AttentionPlan) {
+        self.plans
+            .write()
+            .unwrap()
+            .insert(name.to_string(), Arc::new(plan));
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<AttentionPlan>> {
+        self.plans.read().unwrap().get(name).cloned()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.plans.read().unwrap().contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.plans.read().unwrap().keys().cloned().collect()
+    }
+}
 
 /// A unit of work: run `artifact` on `inputs`.
 #[derive(Debug)]
@@ -78,6 +116,7 @@ impl Default for CoordinatorConfig {
 /// The assembled serving stack.
 pub struct Coordinator {
     runtime: Arc<Runtime>,
+    host_plans: Arc<HostPlanRegistry>,
     batcher: DynamicBatcher,
     pool: worker::WorkerPool,
     responses: Receiver<Response>,
@@ -88,14 +127,17 @@ pub struct Coordinator {
 impl Coordinator {
     pub fn new(runtime: Arc<Runtime>, config: CoordinatorConfig) -> Self {
         let metrics = Arc::new(Metrics::new());
+        let host_plans = Arc::new(HostPlanRegistry::new());
         let (pool, responses) = worker::WorkerPool::spawn(
             runtime.clone(),
+            host_plans.clone(),
             config.workers,
             config.queue_depth,
             metrics.clone(),
         );
         Self {
             runtime,
+            host_plans,
             batcher: DynamicBatcher::new(config.batcher),
             pool,
             responses,
@@ -112,12 +154,35 @@ impl Coordinator {
         &self.runtime
     }
 
+    /// Register an [`AttentionPlan`] under an artifact-style name so
+    /// requests for it are served on the host kernel engine — flushed
+    /// batches run as a single batched engine call. Errors if the name
+    /// would shadow a compiled PJRT artifact (the worker resolves host
+    /// plans first).
+    pub fn register_plan(&self, name: &str,
+                         plan: AttentionPlan) -> Result<()> {
+        if self.runtime.spec(name).is_some() {
+            return Err(anyhow!(
+                "{name} already names a compiled PJRT artifact; pick a \
+                 distinct host-plan name"
+            ));
+        }
+        self.host_plans.register(name, plan);
+        Ok(())
+    }
+
+    pub fn host_plans(&self) -> &Arc<HostPlanRegistry> {
+        &self.host_plans
+    }
+
     /// Submit one request; may flush a batch to the workers. Returns the
     /// request id. Errors if the artifact is unknown or the dispatch
     /// queue is full (backpressure).
     pub fn submit(&mut self, artifact: &str,
                   inputs: Vec<HostValue>) -> Result<u64> {
-        if self.runtime.spec(artifact).is_none() {
+        if self.runtime.spec(artifact).is_none()
+            && !self.host_plans.contains(artifact)
+        {
             return Err(anyhow!("unknown artifact {artifact}"));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);

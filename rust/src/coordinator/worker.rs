@@ -1,17 +1,22 @@
 //! Worker pool: threads that pull flushed [`Batch`]es from a bounded
-//! channel and execute them on the shared PJRT runtime. The bounded
-//! channel is the backpressure boundary — when workers fall behind,
-//! `dispatch` errors instead of queueing without bound.
+//! channel and execute them — on the shared PJRT runtime for compiled
+//! artifacts, or as **one batched kernel-engine call** for names found
+//! in the [`HostPlanRegistry`]. The bounded channel is the backpressure
+//! boundary — when workers fall behind, `dispatch` errors instead of
+//! queueing without bound.
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
-use super::{Batch, Metrics, Response};
-use crate::runtime::Runtime;
+use super::{Batch, HostPlanRegistry, Metrics, Request, Response};
+use crate::kernels::{self, KernelConfig};
+use crate::plan::{plan_bias_tile, AttentionPlan, Executor, HostExecutor};
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Tensor;
 
 enum Job {
     Run(Batch),
@@ -28,6 +33,7 @@ impl WorkerPool {
     /// `queue_depth`. Returns the pool and the response channel.
     pub fn spawn(
         runtime: Arc<Runtime>,
+        host_plans: Arc<HostPlanRegistry>,
         workers: usize,
         queue_depth: usize,
         metrics: Arc<Metrics>,
@@ -36,9 +42,14 @@ impl WorkerPool {
         let rx = Arc::new(Mutex::new(rx));
         let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
         let mut handles = Vec::with_capacity(workers.max(1));
+        // divide the machine's core budget across workers so concurrent
+        // engine batches don't oversubscribe the CPU
+        let engine_threads =
+            (kernels::default_threads() / workers.max(1)).max(1);
         for _ in 0..workers.max(1) {
             let rx = rx.clone();
             let runtime = runtime.clone();
+            let host_plans = host_plans.clone();
             let resp_tx: Sender<Response> = resp_tx.clone();
             let metrics = metrics.clone();
             handles.push(std::thread::spawn(move || loop {
@@ -48,7 +59,12 @@ impl WorkerPool {
                 };
                 match job {
                     Ok(Job::Run(batch)) => {
-                        run_batch(&runtime, batch, &resp_tx, &metrics);
+                        if let Some(plan) = host_plans.get(&batch.artifact) {
+                            run_batch_engine(&plan, batch, &resp_tx,
+                                             &metrics, engine_threads);
+                        } else {
+                            run_batch(&runtime, batch, &resp_tx, &metrics);
+                        }
                     }
                     Ok(Job::Stop) | Err(_) => break,
                 }
@@ -108,6 +124,192 @@ fn run_batch(
     }
 }
 
-// Integration tests that exercise the pool against real artifacts live in
-// rust/tests/coordinator_serving.rs; the pool's queue/backpressure logic
-// is covered there end-to-end.
+// ---------------------------------------------------------------------------
+// Host-plan batches: one kernel-engine call per flushed batch
+// ---------------------------------------------------------------------------
+
+/// Payload signature a request stacks under: `(heads, rank, cv)`.
+type StackSig = (usize, usize, usize);
+
+/// Validate one host-plan request's payload (`[q, k, v]` f32 tensors of
+/// rank 2 `(N, C)` or rank 3 `(H, N, C)` matching the plan geometry)
+/// and return its stacking signature.
+fn check_engine_req(plan: &AttentionPlan,
+                    req: &Request) -> Result<StackSig> {
+    let g = &plan.geometry;
+    if req.inputs.len() != 3 {
+        bail!(
+            "host-plan request wants [q, k, v], got {} inputs",
+            req.inputs.len()
+        );
+    }
+    let f32_at = |i: usize| -> Result<&Tensor> {
+        req.inputs[i]
+            .as_f32()
+            .ok_or_else(|| anyhow!("input {i} must be f32"))
+    };
+    let (q, k, v) = (f32_at(0)?, f32_at(1)?, f32_at(2)?);
+    let rank = q.rank();
+    if rank != 2 && rank != 3 {
+        bail!("q must be (N, C) or (H, N, C), got {:?}", q.shape());
+    }
+    if k.rank() != rank || v.rank() != rank {
+        bail!("q/k/v rank mismatch");
+    }
+    let h = if rank == 3 { q.shape()[0] } else { 1 };
+    let cv = v.shape()[rank - 1];
+    let q_ok = q.shape()[rank - 2] == g.n && q.shape()[rank - 1] == g.c;
+    let k_ok = k.shape()[rank - 2] == g.m
+        && k.shape()[rank - 1] == g.c
+        && (rank == 2 || k.shape()[0] == h);
+    let v_ok =
+        v.shape()[rank - 2] == g.m && (rank == 2 || v.shape()[0] == h);
+    if !q_ok || !k_ok || !v_ok {
+        bail!(
+            "payload shapes q{:?} k{:?} v{:?} do not match plan \
+             (N={}, M={}, C={})",
+            q.shape(),
+            k.shape(),
+            v.shape(),
+            g.n,
+            g.m,
+            g.c
+        );
+    }
+    Ok((h, rank, cv))
+}
+
+/// Execute a flushed host-plan batch on the kernel engine: requests are
+/// grouped by stacking signature (almost always one group) and each
+/// group runs as **one** batched `(B, H, N, C)` engine call instead of
+/// request-by-request. The plan's bias is shared by every program
+/// (batch entry × head), matching the per-plan bias semantics of the
+/// serving API.
+fn run_batch_engine(
+    plan: &AttentionPlan,
+    batch: Batch,
+    resp_tx: &Sender<Response>,
+    metrics: &Metrics,
+    engine_threads: usize,
+) {
+    metrics.on_batch(batch.len());
+    let formed = batch.formed;
+    // group by signature so mixed rank-2/rank-3 (or mixed-head) traffic
+    // for the same plan still succeeds — each group stacks independently
+    let mut groups: Vec<(StackSig, Vec<Request>)> = Vec::new();
+    for req in batch.requests {
+        match check_engine_req(plan, &req) {
+            Ok(sig) => {
+                match groups.iter_mut().find(|(s, _)| *s == sig) {
+                    Some((_, reqs)) => reqs.push(req),
+                    None => groups.push((sig, vec![req])),
+                }
+            }
+            Err(e) => {
+                let queue_time = formed.duration_since(req.enqueued);
+                metrics.on_complete(queue_time, Duration::ZERO, false);
+                let _ = resp_tx.send(Response {
+                    id: req.id,
+                    artifact: req.artifact.clone(),
+                    outputs: Err(e),
+                    queue_time,
+                    exec_time: Duration::ZERO,
+                });
+            }
+        }
+    }
+    if plan.multiplicative {
+        // no batched multiplicative tile schedule (Appendix I is dense
+        // math): serve these per request on the host executor
+        for (_, reqs) in groups {
+            for req in reqs {
+                run_multiplicative_req(plan, req, formed, resp_tx,
+                                       metrics);
+            }
+        }
+        return;
+    }
+    for (sig, reqs) in groups {
+        run_engine_group(plan, sig, reqs, formed, resp_tx, metrics,
+                         engine_threads);
+    }
+}
+
+/// Stack one signature group into `(B, H, N, C)` tensors and run it as
+/// a single engine call.
+fn run_engine_group(
+    plan: &AttentionPlan,
+    (h, rank, cv): StackSig,
+    good: Vec<Request>,
+    formed: Instant,
+    resp_tx: &Sender<Response>,
+    metrics: &Metrics,
+    engine_threads: usize,
+) {
+    let g = &plan.geometry;
+    let b = good.len();
+    let mut qd = Vec::with_capacity(b * h * g.n * g.c);
+    let mut kd = Vec::with_capacity(b * h * g.m * g.c);
+    let mut vd = Vec::with_capacity(b * h * g.m * cv);
+    for req in &good {
+        qd.extend_from_slice(req.inputs[0].as_f32().expect("f32 q").data());
+        kd.extend_from_slice(req.inputs[1].as_f32().expect("f32 k").data());
+        vd.extend_from_slice(req.inputs[2].as_f32().expect("f32 v").data());
+    }
+    let qt = Tensor::new(&[b, h, g.n, g.c], qd);
+    let kt = Tensor::new(&[b, h, g.m, g.c], kd);
+    let vt = Tensor::new(&[b, h, g.m, cv], vd);
+    let t0 = Instant::now();
+    let tile = plan_bias_tile(plan);
+    let cfg = KernelConfig::for_geometry(g).with_threads(engine_threads);
+    let out = kernels::attention_batched(&qt, &kt, &vt, tile.as_ref(),
+                                         plan.causal, &cfg);
+    let per_req = t0.elapsed() / b as u32;
+    for (bi, req) in good.into_iter().enumerate() {
+        let queue_time = formed.duration_since(req.enqueued);
+        let slab = out.index0(bi); // (H, N, Cv)
+        let result = if rank == 2 { slab.index0(0) } else { slab };
+        metrics.on_complete(queue_time, per_req, true);
+        let _ = resp_tx.send(Response {
+            id: req.id,
+            artifact: req.artifact,
+            outputs: Ok(vec![HostValue::F32(result)]),
+            queue_time,
+            exec_time: per_req,
+        });
+    }
+}
+
+fn run_multiplicative_req(
+    plan: &AttentionPlan,
+    req: Request,
+    formed: Instant,
+    resp_tx: &Sender<Response>,
+    metrics: &Metrics,
+) {
+    let queue_time = formed.duration_since(req.enqueued);
+    let t0 = Instant::now();
+    let outputs = (|| -> Result<Vec<HostValue>> {
+        let q = req.inputs[0].as_f32().expect("f32 q");
+        let k = req.inputs[1].as_f32().expect("f32 k");
+        let v = req.inputs[2].as_f32().expect("f32 v");
+        if q.rank() != 2 {
+            bail!("multiplicative host plans serve (N, C) payloads only");
+        }
+        let out = HostExecutor.execute(plan, q, k, v)?;
+        Ok(vec![HostValue::F32(out)])
+    })();
+    let exec_time = t0.elapsed();
+    metrics.on_complete(queue_time, exec_time, outputs.is_ok());
+    let _ = resp_tx.send(Response {
+        id: req.id,
+        artifact: req.artifact,
+        outputs,
+        queue_time,
+        exec_time,
+    });
+}
+
+// Integration tests: the PJRT path is exercised end-to-end in
+// rust/tests/coordinator_serving.rs (requires artifacts); the host-plan
+// engine path in rust/tests/host_serving.rs (runs everywhere).

@@ -1,0 +1,717 @@
+//! The block-tiled, multi-threaded attention kernel engine — the one
+//! compute spine shared by the host executor, the simulator's numeric
+//! mirror, the `attention` reference wrappers, and the coordinator's
+//! batched serving path.
+//!
+//! Design (FlashAttention-2 schedule + the FlashBias bias treatment):
+//!
+//! * **Streaming softmax.** The N×M score matrix is never materialized.
+//!   Each query block holds `(m, l, o)` accumulators and streams key/value
+//!   tiles, exactly the Milakov–Gimelshein recurrence the L1 Pallas
+//!   kernels implement.
+//! * **[`BiasTile`] providers.** The bias enters per tile: a dense view
+//!   ([`DenseTile`]), factor strips contracted tile-locally
+//!   ([`FactoredTile`] — the Eq. (3) concat trick evaluated as the extra
+//!   rank-R tile matmul of Corollary 3.7), or a JIT closed form computed
+//!   from tile coordinates with zero bias IO ([`AlibiTile`], Table 8).
+//!   No provider ever materializes the N×M bias.
+//! * **Causal tile classification** (the tile-skipping idea of Sharma &
+//!   Geiping 2024): tiles entirely in the masked future are skipped (and
+//!   every later tile with them), tiles entirely in the past take the
+//!   unmasked fast path, and only the diagonal band pays the per-element
+//!   mask.
+//! * **Data parallelism.** Work is split into (program × query-block)
+//!   jobs executed on a scoped thread pool ([`KernelConfig::threads`],
+//!   `FLASHBIAS_THREADS` to override). Each job owns a disjoint slice of
+//!   the output, so results are bit-identical for any thread count.
+//! * **Masked-row guard.** A query row that never sees a live key (fully
+//!   masked, e.g. decoder alignment with N > M) yields an exactly-zero
+//!   output row, not a uniform average over masked keys.
+//!
+//! Block sizes default to [`KernelConfig::for_geometry`], which derives
+//! them from [`crate::simulator::block_sizes`] — so the simulator's HBM
+//! accounting and the engine's numerics agree on what is loaded per tile.
+
+use crate::attention::NEG_INF;
+use crate::iomodel::Geometry;
+use crate::simulator;
+use crate::tensor::{Tensor, View2};
+
+/// Scores at or below this threshold count as masked when deciding
+/// whether a row saw any live key (½·|NEG_INF| head-room keeps genuine
+/// large-negative biases distinguishable from the mask sentinel).
+pub const MASKED: f32 = -5e29;
+
+// ---------------------------------------------------------------------------
+// Bias providers
+// ---------------------------------------------------------------------------
+
+/// Per-tile bias provider: accumulates a bias tile into a score tile.
+///
+/// Implementations must be cheap to call per tile and must never
+/// materialize the full N×M matrix (the dense provider *views* an
+/// existing one, it does not build it).
+pub trait BiasTile: Sync {
+    /// Add this bias's tile `[q0, q0+bq) × [k0, k0+bk)` into `scores`
+    /// (row-major `bq × bk`, stride `bk`).
+    fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
+                scores: &mut [f32]);
+
+    /// Elements of HBM-resident bias state this provider streams
+    /// (dense table or factor strips; 0 for JIT/no-bias) — the Thm 3.2
+    /// storage column, used by benches for the bytes column.
+    fn resident_elems(&self) -> usize {
+        0
+    }
+}
+
+/// No bias: pure FlashAttention.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoBias;
+
+impl BiasTile for NoBias {
+    fn add_tile(&self, _q0: usize, _k0: usize, _bq: usize, _bk: usize,
+                _scores: &mut [f32]) {
+    }
+}
+
+/// Dense `(N, M)` bias streamed tile-by-tile from an existing table.
+#[derive(Clone, Copy, Debug)]
+pub struct DenseTile<'a> {
+    bias: View2<'a>,
+}
+
+impl<'a> DenseTile<'a> {
+    pub fn new(bias: View2<'a>) -> Self {
+        Self { bias }
+    }
+
+    pub fn from_tensor(bias: &'a Tensor) -> Self {
+        Self { bias: bias.view2() }
+    }
+}
+
+impl BiasTile for DenseTile<'_> {
+    fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
+                scores: &mut [f32]) {
+        for ii in 0..bq {
+            let brow = &self.bias.row(q0 + ii)[k0..k0 + bk];
+            let srow = &mut scores[ii * bk..(ii + 1) * bk];
+            for (s, &b) in srow.iter_mut().zip(brow) {
+                *s += b;
+            }
+        }
+    }
+
+    fn resident_elems(&self) -> usize {
+        self.bias.rows * self.bias.cols
+    }
+}
+
+/// Factored bias `φ_q φ_kᵀ` contracted tile-locally: the Eq. (3) concat
+/// trick, realized as the extra rank-R tile matmul of Corollary 3.7.
+/// Streams only the `(N + M)·R` strips.
+#[derive(Clone, Copy, Debug)]
+pub struct FactoredTile<'a> {
+    phi_q: View2<'a>,
+    phi_k: View2<'a>,
+}
+
+impl<'a> FactoredTile<'a> {
+    pub fn new(phi_q: &'a Tensor, phi_k: &'a Tensor) -> Self {
+        assert_eq!(phi_q.shape()[1], phi_k.shape()[1],
+                   "factor rank mismatch");
+        Self {
+            phi_q: phi_q.view2(),
+            phi_k: phi_k.view2(),
+        }
+    }
+
+    pub fn from_views(phi_q: View2<'a>, phi_k: View2<'a>) -> Self {
+        assert_eq!(phi_q.cols, phi_k.cols, "factor rank mismatch");
+        Self { phi_q, phi_k }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.phi_q.cols
+    }
+}
+
+impl BiasTile for FactoredTile<'_> {
+    fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
+                scores: &mut [f32]) {
+        for ii in 0..bq {
+            let prow = self.phi_q.row(q0 + ii);
+            let srow = &mut scores[ii * bk..(ii + 1) * bk];
+            for (jj, s) in srow.iter_mut().enumerate() {
+                let krow = self.phi_k.row(k0 + jj);
+                let mut acc = 0.0f32;
+                for (a, b) in prow.iter().zip(krow) {
+                    acc += a * b;
+                }
+                *s += acc;
+            }
+        }
+    }
+
+    fn resident_elems(&self) -> usize {
+        (self.phi_q.rows + self.phi_k.rows) * self.phi_q.cols
+    }
+}
+
+/// ALiBi generated in-kernel from tile coordinates — zero bias IO
+/// (Table 8): `b[i, j] = slope · (j − i)`.
+#[derive(Clone, Copy, Debug)]
+pub struct AlibiTile {
+    pub slope: f32,
+}
+
+impl BiasTile for AlibiTile {
+    fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
+                scores: &mut [f32]) {
+        for ii in 0..bq {
+            let base = k0 as f32 - (q0 + ii) as f32;
+            let srow = &mut scores[ii * bk..(ii + 1) * bk];
+            for (jj, s) in srow.iter_mut().enumerate() {
+                *s += self.slope * (base + jj as f32);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Configuration
+// ---------------------------------------------------------------------------
+
+/// Tile and parallelism knobs for the engine.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelConfig {
+    /// Query rows per block (one job per block).
+    pub block_q: usize,
+    /// Key/value rows streamed per tile.
+    pub block_k: usize,
+    /// Worker threads (results are identical for any value).
+    pub threads: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        Self {
+            block_q: 64,
+            block_k: 128,
+            threads: default_threads(),
+        }
+    }
+}
+
+/// `FLASHBIAS_THREADS` override, else the machine's parallelism.
+pub fn default_threads() -> usize {
+    std::env::var("FLASHBIAS_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .or_else(|| {
+            std::thread::available_parallelism().ok().map(|n| n.get())
+        })
+        .unwrap_or(1)
+}
+
+impl KernelConfig {
+    /// Block sizes from the simulator's SRAM model (Appendix A Eq. 10),
+    /// so `simulate_fwd`'s HBM accounting and the engine's schedule
+    /// agree on what is loaded per tile.
+    pub fn for_geometry(g: &Geometry) -> Self {
+        let w = g.c + g.r; // channel width streamed per query token
+        let strip_w = w + g.c + 2; // q (+φ_q) + o accumulator + (m, l)
+        let kv_w = w + g.c; // k (+φ_k) + v per key token
+        let (bq, bk) =
+            simulator::block_sizes(g.sram, strip_w, kv_w, g.n, g.m);
+        Self {
+            block_q: bq,
+            block_k: bk,
+            ..Self::default()
+        }
+    }
+
+    pub fn with_blocks(mut self, block_q: usize, block_k: usize) -> Self {
+        self.block_q = block_q.max(1);
+        self.block_k = block_k.max(1);
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Core schedule
+// ---------------------------------------------------------------------------
+
+/// One independent attention problem: `q: (N, C)`, `k: (M, C)`,
+/// `v: (M, Cv)` plus its bias provider. Heads and batch entries become
+/// separate programs sharing one job pool.
+#[derive(Clone, Copy)]
+struct Program<'a> {
+    q: View2<'a>,
+    k: View2<'a>,
+    v: View2<'a>,
+    bias: &'a dyn BiasTile,
+    causal: bool,
+    scale: f32,
+}
+
+/// A (program, query-block) work item owning its output rows.
+struct Job<'a> {
+    prog: Program<'a>,
+    /// First query row of this block.
+    i0: usize,
+    /// Output rows `[i0, i0 + bq) × Cv`.
+    out: &'a mut [f32],
+}
+
+/// Split programs into query-block jobs and run them on a scoped
+/// thread pool. Each job owns a disjoint output slice, so the result is
+/// independent of the thread count.
+fn execute_programs<'a>(programs: Vec<(Program<'a>, &'a mut [f32])>,
+                        cfg: &KernelConfig) {
+    let bq = cfg.block_q.max(1);
+    let mut jobs: Vec<Job<'a>> = Vec::new();
+    for (prog, out) in programs {
+        if out.is_empty() {
+            continue;
+        }
+        let chunk = (bq * prog.v.cols).max(1);
+        for (bi, block) in out.chunks_mut(chunk).enumerate() {
+            jobs.push(Job {
+                prog,
+                i0: bi * bq,
+                out: block,
+            });
+        }
+    }
+    let threads = cfg.threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        for job in jobs {
+            run_query_block(job, cfg);
+        }
+        return;
+    }
+    let mut queues: Vec<Vec<Job<'a>>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, job) in jobs.into_iter().enumerate() {
+        queues[i % threads].push(job);
+    }
+    std::thread::scope(|s| {
+        for queue in queues {
+            s.spawn(move || {
+                for job in queue {
+                    run_query_block(job, cfg);
+                }
+            });
+        }
+    });
+}
+
+/// The streaming-softmax inner loop for one query block.
+fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
+    let Job { prog, i0, out } = job;
+    let (n, m) = (prog.q.rows, prog.k.rows);
+    let cv = prog.v.cols;
+    let bq = out.len() / cv.max(1);
+    let block_k = cfg.block_k.max(1);
+    // decoder alignment: key j is visible to query i iff j − (m − n) ≤ i
+    let off = m as isize - n as isize;
+    let mut m_acc = vec![NEG_INF; bq];
+    let mut l_acc = vec![0.0f32; bq];
+    out.fill(0.0);
+    let mut score_buf = vec![0.0f32; bq * block_k];
+    let mut j0 = 0usize;
+    while j0 < m {
+        let bk = block_k.min(m - j0);
+        if prog.causal && j0 as isize > (i0 + bq - 1) as isize + off {
+            // tile (and every later tile) entirely in the masked future
+            break;
+        }
+        // only the diagonal band pays the per-element mask
+        let diag = prog.causal
+            && (j0 + bk - 1) as isize > i0 as isize + off;
+        let scores = &mut score_buf[..bq * bk];
+        // s = q kᵀ · scale for this tile
+        for ii in 0..bq {
+            let qrow = prog.q.row(i0 + ii);
+            let srow = &mut scores[ii * bk..(ii + 1) * bk];
+            for (jj, s) in srow.iter_mut().enumerate() {
+                let krow = prog.k.row(j0 + jj);
+                let mut acc = 0.0f32;
+                for (a, b) in qrow.iter().zip(krow) {
+                    acc += a * b;
+                }
+                *s = acc * prog.scale;
+            }
+        }
+        prog.bias.add_tile(i0, j0, bq, bk, scores);
+        if diag {
+            for ii in 0..bq {
+                let limit = i0 as isize + ii as isize + off;
+                let srow = &mut scores[ii * bk..(ii + 1) * bk];
+                for (jj, s) in srow.iter_mut().enumerate() {
+                    if (j0 + jj) as isize > limit {
+                        *s = NEG_INF;
+                    }
+                }
+            }
+        }
+        // online-softmax accumulator update
+        for ii in 0..bq {
+            let srow = &scores[ii * bk..(ii + 1) * bk];
+            let blk_max =
+                srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            if blk_max <= MASKED {
+                // every key in this tile is masked for this row
+                continue;
+            }
+            let m_new = m_acc[ii].max(blk_max);
+            let alpha = (m_acc[ii] - m_new).exp();
+            let orow = &mut out[ii * cv..(ii + 1) * cv];
+            if alpha != 1.0 {
+                l_acc[ii] *= alpha;
+                for o in orow.iter_mut() {
+                    *o *= alpha;
+                }
+            }
+            let mut l = l_acc[ii];
+            for (jj, &sv) in srow.iter().enumerate() {
+                let p = (sv - m_new).exp();
+                if p == 0.0 {
+                    continue;
+                }
+                l += p;
+                let vrow = prog.v.row(j0 + jj);
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += p * vv;
+                }
+            }
+            m_acc[ii] = m_new;
+            l_acc[ii] = l;
+        }
+        j0 += bk;
+    }
+    // normalize; fully-masked rows stay exactly zero
+    for ii in 0..bq {
+        if l_acc[ii] > 0.0 {
+            let inv = 1.0 / l_acc[ii];
+            for o in &mut out[ii * cv..(ii + 1) * cv] {
+                *o *= inv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------------
+
+/// Single-head tiled attention: `q: (N, C)`, `k: (M, C)`, `v: (M, Cv)`.
+pub fn attention_tiled(q: &Tensor, k: &Tensor, v: &Tensor,
+                       bias: &dyn BiasTile, causal: bool,
+                       cfg: &KernelConfig) -> Tensor {
+    let (n, c) = (q.shape()[0], q.shape()[1]);
+    let m = k.shape()[0];
+    assert_eq!(k.shape()[1], c, "k channels");
+    assert_eq!(v.shape()[0], m, "v rows");
+    let cv = v.shape()[1];
+    let scale = 1.0 / (c as f32).sqrt();
+    let mut out = vec![0.0f32; n * cv];
+    let prog = Program {
+        q: q.view2(),
+        k: k.view2(),
+        v: v.view2(),
+        bias,
+        causal,
+        scale,
+    };
+    execute_programs(vec![(prog, out.as_mut_slice())], cfg);
+    Tensor::new(&[n, cv], out)
+}
+
+/// Multi-head tiled attention: `q: (H, N, C)`, `k`/`v: (H, M, C[v])`,
+/// optional per-head dense `bias: (H, N, M)`. Heads and query blocks
+/// run data-parallel on one job pool.
+pub fn mha_tiled(q: &Tensor, k: &Tensor, v: &Tensor,
+                 bias: Option<&Tensor>, causal: bool,
+                 cfg: &KernelConfig) -> Tensor {
+    assert_eq!(q.rank(), 3, "q must be (H, N, C)");
+    let (h, n, c) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let m = k.shape()[1];
+    assert_eq!(k.shape()[0], h, "k heads");
+    assert_eq!(k.shape()[2], c, "k channels");
+    assert_eq!(v.shape()[0], h, "v heads");
+    assert_eq!(v.shape()[1], m, "v rows");
+    let cv = v.shape()[2];
+    if let Some(b) = bias {
+        assert_eq!(b.shape(), &[h, n, m], "bias shape");
+    }
+    let scale = 1.0 / (c as f32).sqrt();
+    let nobias = NoBias;
+    let tiles: Vec<DenseTile<'_>> = match bias {
+        Some(b) => (0..h).map(|i| DenseTile::new(b.view_slab(i))).collect(),
+        None => Vec::new(),
+    };
+    let mut out = vec![0.0f32; h * n * cv];
+    let mut programs = Vec::with_capacity(h);
+    for (hi, block) in out.chunks_mut((n * cv).max(1)).enumerate() {
+        let provider: &dyn BiasTile = if tiles.is_empty() {
+            &nobias
+        } else {
+            &tiles[hi]
+        };
+        programs.push((
+            Program {
+                q: q.view_slab(hi),
+                k: k.view_slab(hi),
+                v: v.view_slab(hi),
+                bias: provider,
+                causal,
+                scale,
+            },
+            block,
+        ));
+    }
+    execute_programs(programs, cfg);
+    Tensor::new(&[h, n, cv], out)
+}
+
+/// Batched entry point: `q: (..., N, C)` with all leading dims (batch,
+/// heads, …) flattened into independent programs sharing one bias
+/// provider — one engine call executes a whole flushed serving batch.
+pub fn attention_batched(q: &Tensor, k: &Tensor, v: &Tensor,
+                         bias: &dyn BiasTile, causal: bool,
+                         cfg: &KernelConfig) -> Tensor {
+    let rank = q.rank();
+    assert!(rank >= 2, "q must be at least rank 2");
+    assert_eq!(k.rank(), rank, "k rank");
+    assert_eq!(v.rank(), rank, "v rank");
+    let n = q.shape()[rank - 2];
+    let c = q.shape()[rank - 1];
+    let m = k.shape()[rank - 2];
+    assert_eq!(k.shape()[rank - 1], c, "k channels");
+    assert_eq!(v.shape()[rank - 2], m, "v rows");
+    let cv = v.shape()[rank - 1];
+    assert_eq!(&q.shape()[..rank - 2], &k.shape()[..rank - 2],
+               "leading dims");
+    assert_eq!(&q.shape()[..rank - 2], &v.shape()[..rank - 2],
+               "leading dims");
+    let slabs: usize = q.shape()[..rank - 2].iter().product();
+    let scale = 1.0 / (c as f32).sqrt();
+    let mut out_shape = q.shape()[..rank - 2].to_vec();
+    out_shape.push(n);
+    out_shape.push(cv);
+    let mut out = vec![0.0f32; slabs * n * cv];
+    let mut programs = Vec::with_capacity(slabs);
+    for (pi, block) in out.chunks_mut((n * cv).max(1)).enumerate() {
+        programs.push((
+            Program {
+                q: q.view_slab(pi),
+                k: k.view_slab(pi),
+                v: v.view_slab(pi),
+                bias,
+                causal,
+                scale,
+            },
+            block,
+        ));
+    }
+    execute_programs(programs, cfg);
+    Tensor::new(&out_shape, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{attention, AttnOpts};
+    use crate::bias::{Alibi, ExactBias};
+    use crate::util::Xoshiro256;
+
+    fn qkv(n: usize, m: usize, c: usize,
+           seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Xoshiro256::new(seed);
+        (
+            Tensor::randn(&[n, c], 1.0, &mut rng),
+            Tensor::randn(&[m, c], 1.0, &mut rng),
+            Tensor::randn(&[m, c], 1.0, &mut rng),
+        )
+    }
+
+    fn cfg(bq: usize, bk: usize) -> KernelConfig {
+        KernelConfig::default().with_blocks(bq, bk).with_threads(2)
+    }
+
+    #[test]
+    fn no_bias_matches_reference() {
+        let (q, k, v) = qkv(17, 23, 8, 0);
+        let reference = attention(&q, &k, &v, None, &AttnOpts::default());
+        for (bq, bk) in [(1, 1), (5, 7), (17, 23), (64, 64)] {
+            let tiled = attention_tiled(&q, &k, &v, &NoBias, false,
+                                        &cfg(bq, bk));
+            assert!(tiled.allclose(&reference, 1e-5, 1e-5),
+                    "bq={bq} bk={bk}");
+        }
+    }
+
+    #[test]
+    fn dense_tile_matches_reference_causal() {
+        let (q, k, v) = qkv(13, 19, 4, 1);
+        let mut rng = Xoshiro256::new(2);
+        let bias = Tensor::randn(&[13, 19], 1.0, &mut rng);
+        let reference =
+            attention(&q, &k, &v, Some(&bias), &AttnOpts { causal: true });
+        let tiled = attention_tiled(&q, &k, &v,
+                                    &DenseTile::from_tensor(&bias), true,
+                                    &cfg(4, 6));
+        assert!(tiled.allclose(&reference, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn factored_tile_equals_dense_tile() {
+        let (q, k, v) = qkv(11, 14, 8, 3);
+        let mut rng = Xoshiro256::new(4);
+        let pq = Tensor::randn(&[11, 3], 0.4, &mut rng);
+        let pk = Tensor::randn(&[14, 3], 0.4, &mut rng);
+        let dense = pq.matmul_t(&pk);
+        let a = attention_tiled(&q, &k, &v,
+                                &DenseTile::from_tensor(&dense), false,
+                                &cfg(3, 5));
+        let b = attention_tiled(&q, &k, &v, &FactoredTile::new(&pq, &pk),
+                                false, &cfg(3, 5));
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn alibi_tile_matches_dense_alibi() {
+        let (q, k, v) = qkv(16, 16, 8, 5);
+        let alibi = Alibi::new(16, 16, 0.25);
+        let reference = attention(&q, &k, &v, Some(&alibi.dense()),
+                                  &AttnOpts { causal: true });
+        let tiled = attention_tiled(&q, &k, &v,
+                                    &AlibiTile { slope: 0.25 }, true,
+                                    &cfg(5, 3));
+        assert!(tiled.allclose(&reference, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let (q, k, v) = qkv(29, 31, 8, 6);
+        let mut rng = Xoshiro256::new(7);
+        let bias = Tensor::randn(&[29, 31], 1.0, &mut rng);
+        let tile = DenseTile::from_tensor(&bias);
+        let base = attention_tiled(&q, &k, &v, &tile, true,
+                                   &cfg(4, 8).with_threads(1));
+        for threads in [2, 3, 8] {
+            let multi = attention_tiled(&q, &k, &v, &tile, true,
+                                        &cfg(4, 8).with_threads(threads));
+            assert!(multi.allclose(&base, 0.0, 0.0), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fully_masked_rows_are_exactly_zero() {
+        // N > M decoder alignment: rows 0..N−M see no key at all
+        let (q, k, v) = qkv(8, 5, 4, 8);
+        let out = attention_tiled(&q, &k, &v, &NoBias, true, &cfg(3, 2));
+        for i in 0..3 {
+            assert!(out.row(i).iter().all(|&x| x == 0.0), "row {i}");
+        }
+        // row N−M sees exactly key 0 → equals v[0]
+        for j in 0..4 {
+            assert!((out.at2(3, j) - v.at2(0, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batched_matches_per_slab() {
+        let mut rng = Xoshiro256::new(9);
+        let (b, h, n, m, c) = (3, 2, 10, 12, 4);
+        let q = Tensor::randn(&[b, h, n, c], 1.0, &mut rng);
+        let k = Tensor::randn(&[b, h, m, c], 1.0, &mut rng);
+        let v = Tensor::randn(&[b, h, m, c], 1.0, &mut rng);
+        let tile = AlibiTile { slope: 0.125 };
+        let out = attention_batched(&q, &k, &v, &tile, true, &cfg(4, 5));
+        assert_eq!(out.shape(), &[b, h, n, c]);
+        let alibi = Alibi::new(n, m, 0.125).dense();
+        for bi in 0..b {
+            for hi in 0..h {
+                let pi = bi * h + hi;
+                let reference = attention(
+                    &q.view_slab(pi).to_tensor(),
+                    &k.view_slab(pi).to_tensor(),
+                    &v.view_slab(pi).to_tensor(),
+                    Some(&alibi),
+                    &AttnOpts { causal: true },
+                );
+                assert!(out
+                    .view_slab(pi)
+                    .to_tensor()
+                    .allclose(&reference, 1e-4, 1e-4));
+            }
+        }
+    }
+
+    #[test]
+    fn mha_tiled_matches_per_head_reference() {
+        let mut rng = Xoshiro256::new(10);
+        let q = Tensor::randn(&[3, 6, 4], 1.0, &mut rng);
+        let k = Tensor::randn(&[3, 8, 4], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 8, 4], 1.0, &mut rng);
+        let bias = Tensor::randn(&[3, 6, 8], 0.5, &mut rng);
+        let out = mha_tiled(&q, &k, &v, Some(&bias), false, &cfg(2, 3));
+        assert_eq!(out.shape(), &[3, 6, 4]);
+        for hi in 0..3 {
+            let reference = attention(
+                &q.index0(hi),
+                &k.index0(hi),
+                &v.index0(hi),
+                Some(&bias.index0(hi)),
+                &AttnOpts::default(),
+            );
+            assert!(out.index0(hi).allclose(&reference, 1e-5, 1e-5));
+        }
+    }
+
+    #[test]
+    fn extreme_bias_stays_finite() {
+        let (q, k, v) = qkv(5, 8, 4, 11);
+        let bias = Tensor::full(&[5, 8], 200.0);
+        let out = attention_tiled(&q, &k, &v,
+                                  &DenseTile::from_tensor(&bias), false,
+                                  &cfg(2, 3));
+        assert!(out.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn for_geometry_blocks_fit_sram() {
+        let g = Geometry {
+            n: 4096,
+            m: 4096,
+            c: 64,
+            r: 16,
+            sram: 100 * 1024 / 2,
+        };
+        let cfg = KernelConfig::for_geometry(&g);
+        assert!(cfg.block_q >= 1 && cfg.block_k >= 1);
+        assert!(cfg.block_q <= g.n && cfg.block_k <= g.m);
+    }
+
+    #[test]
+    fn resident_elems_reporting() {
+        let mut rng = Xoshiro256::new(12);
+        let bias = Tensor::randn(&[6, 7], 1.0, &mut rng);
+        let pq = Tensor::randn(&[6, 2], 1.0, &mut rng);
+        let pk = Tensor::randn(&[7, 2], 1.0, &mut rng);
+        assert_eq!(DenseTile::from_tensor(&bias).resident_elems(), 42);
+        assert_eq!(FactoredTile::new(&pq, &pk).resident_elems(), 26);
+        assert_eq!(AlibiTile { slope: 0.5 }.resident_elems(), 0);
+        assert_eq!(NoBias.resident_elems(), 0);
+    }
+}

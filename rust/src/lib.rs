@@ -29,23 +29,34 @@
 //! # Layers
 //!
 //! * [`tensor`] / [`linalg`] — host-side numeric substrate (dense f32
-//!   tensors, Jacobi SVD, energy spectra).
+//!   tensors, zero-copy [`tensor::View2`] tile views, Jacobi SVD,
+//!   energy spectra).
 //! * [`bias`] — the paper's bias zoo: generators plus exact
 //!   factorizations (the raw material [`plan::BiasSpec`] wraps).
 //! * [`decompose`] — decomposition mechanisms (SVD / neural / low-rank +
 //!   sparse) the planner drives; returns typed errors, never panics.
-//! * [`attention`] — reference attention implementations backing the
-//!   host executor.
+//! * [`kernels`] — **the compute spine**: the block-tiled,
+//!   multi-threaded streaming-softmax engine with per-tile
+//!   [`kernels::BiasTile`] providers (dense view / tile-local factor
+//!   contraction / JIT generation) and causal tile classification.
+//!   Host executor, simulator numerics, the `attention` wrappers and
+//!   the coordinator's batched serving path all drive this one engine.
+//! * [`attention`] — dense reference oracle ([`attention::attention`])
+//!   plus thin engine wrappers ([`attention::mha`],
+//!   [`attention::online_softmax_attention`]).
 //! * [`iomodel`] — analytic HBM-access model (Thm 3.1/3.2, Cor 3.3/3.7);
 //!   the planner's cost gate.
 //! * [`plan`] — **the API**: `BiasSpec` → `Planner` → `AttentionPlan` →
-//!   `Executor` (host / simulator / PJRT).
+//!   `Executor` (host / simulator / PJRT); [`plan::plan_bias_tile`]
+//!   maps a plan's mode onto an engine bias provider.
 //! * [`simulator`] — tiled-execution HBM/SRAM simulator (Figures 3/4)
-//!   behind [`plan::SimExecutor`].
+//!   behind [`plan::SimExecutor`]; its block-size model also sizes the
+//!   engine's tiles, so accounting and numerics share one schedule.
 //! * [`runtime`] — PJRT artifact loading + execution (stubbed outside
 //!   the accelerator image, see [`xla_stub`]).
-//! * [`coordinator`] — serving layer: router, dynamic batcher, metrics;
-//!   strategy selection is delegated to [`plan::Planner`].
+//! * [`coordinator`] — serving layer: router, dynamic batcher, metrics,
+//!   worker pool; host-plan batches execute as one batched
+//!   `(B, H, N, C)` kernel-engine call.
 //! * [`server`] — CLI + config + run loop (including the `plan`
 //!   subcommand).
 pub mod util;
@@ -54,6 +65,7 @@ pub mod linalg;
 pub mod bias;
 pub mod decompose;
 pub mod attention;
+pub mod kernels;
 pub mod iomodel;
 pub mod plan;
 pub mod simulator;

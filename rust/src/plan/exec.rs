@@ -1,29 +1,37 @@
 //! [`Executor`] — one `execute(&plan, q, k, v)` call, three backends.
 //!
-//! * [`HostExecutor`] — the `crate::attention` reference math (ground
-//!   truth; always available).
-//! * [`SimExecutor`] — the tiled-execution HBM/SRAM simulator: computes
-//!   the same output through the block-streamed online-softmax recurrence
-//!   *and* records a [`SimReport`] of the schedule's HBM traffic, so a
-//!   single call yields both numerics and the Figure 3/4 instrument.
+//! * [`HostExecutor`] — the block-tiled multi-threaded kernel engine
+//!   (`crate::kernels`); always available.
+//! * [`SimExecutor`] — the same engine driven with the *simulator's*
+//!   block sizes, plus a [`SimReport`] of the schedule's HBM traffic —
+//!   numerics and accounting agree on what is loaded per tile, so a
+//!   single call yields both the output and the Figure 3/4 instrument.
 //! * [`PjrtExecutor`] — routes the plan to a compiled PJRT artifact
 //!   through the shape-bucket [`Router`] (requires `make artifacts`).
 //!
 //! Backends accept any [`AttentionPlan`]; callers never re-inspect the
-//! bias class or re-wire factor strips by hand.
+//! bias class or re-wire factor strips by hand. The mode → provider
+//! mapping lives in [`plan_bias_tile`]; no executor re-implements a
+//! compute loop of its own (multiplicative plans, which have no tiled
+//! schedule, fall back to the `crate::attention` reference math).
 
 use std::cell::Cell;
 use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::{self, AttnOpts, NEG_INF};
+use crate::attention;
 use crate::coordinator::router::{RouteKey, Router};
+use crate::iomodel::Geometry;
+use crate::kernels::{
+    self, AlibiTile, BiasTile, DenseTile, FactoredTile, KernelConfig,
+    NoBias,
+};
 use crate::runtime::{HostValue, Runtime};
 use crate::simulator::{simulate_fwd, HwModel, SimReport};
 use crate::tensor::Tensor;
 
-use super::planner::{AttentionPlan, ExecMode};
+use super::planner::{AttentionPlan, ExecMode, JitBias};
 
 /// Execute an [`AttentionPlan`] on `q: (N, C)`, `k`, `v: (M, C)`.
 pub trait Executor {
@@ -47,17 +55,54 @@ fn check_shapes(plan: &AttentionPlan, q: &Tensor, k: &Tensor,
     Ok(())
 }
 
-/// Convenience: execute on the host reference backend.
+/// Convenience: execute on the host kernel-engine backend.
 pub fn execute(plan: &AttentionPlan, q: &Tensor, k: &Tensor,
                v: &Tensor) -> Result<Tensor> {
     HostExecutor.execute(plan, q, k, v)
 }
 
+/// The engine-facing view of an additive plan's bias: maps each
+/// [`ExecMode`] to the per-tile provider the kernel engine streams
+/// from. Dense plans view their table, factored plans contract strips
+/// tile-locally, JIT plans generate values from tile coordinates —
+/// nothing is materialized.
+pub fn plan_bias_tile(plan: &AttentionPlan) -> Box<dyn BiasTile + '_> {
+    match &plan.mode {
+        ExecMode::NoBias => Box::new(NoBias),
+        ExecMode::Dense { bias } => Box::new(DenseTile::from_tensor(bias)),
+        ExecMode::Factored { factors } => {
+            Box::new(FactoredTile::new(&factors.phi_q, &factors.phi_k))
+        }
+        ExecMode::Jit { generator } => match *generator {
+            JitBias::Alibi { slope } => Box::new(AlibiTile { slope }),
+        },
+    }
+}
+
+/// Multiplicative plans have no tiled schedule (Appendix I covers the
+/// dense math only): execute them on the reference host math.
+fn execute_multiplicative(plan: &AttentionPlan, q: &Tensor, k: &Tensor,
+                          v: &Tensor) -> Result<Tensor> {
+    match &plan.mode {
+        ExecMode::Dense { bias } => {
+            Ok(attention::attention_multiplicative(q, k, v, bias))
+        }
+        ExecMode::Factored { factors } => {
+            Ok(attention::attention_multiplicative_factored(
+                q, k, v, &factors.phi_q, &factors.phi_k,
+            ))
+        }
+        ExecMode::NoBias | ExecMode::Jit { .. } => bail!(
+            "multiplicative plan without a dense/factored bias mode"
+        ),
+    }
+}
+
 // ---------------------------------------------------------------------------
-// Host reference backend
+// Host kernel-engine backend
 // ---------------------------------------------------------------------------
 
-/// Reference backend over `crate::attention`.
+/// Host backend over the tiled multi-threaded kernel engine.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct HostExecutor;
 
@@ -69,35 +114,13 @@ impl Executor for HostExecutor {
     fn execute(&self, plan: &AttentionPlan, q: &Tensor, k: &Tensor,
                v: &Tensor) -> Result<Tensor> {
         check_shapes(plan, q, k, v)?;
-        let opts = AttnOpts { causal: plan.causal };
-        match &plan.mode {
-            ExecMode::NoBias => {
-                Ok(attention::attention(q, k, v, None, &opts))
-            }
-            ExecMode::Dense { bias } => {
-                if plan.multiplicative {
-                    Ok(attention::attention_multiplicative(q, k, v, bias))
-                } else {
-                    Ok(attention::attention(q, k, v, Some(bias), &opts))
-                }
-            }
-            ExecMode::Factored { factors } => {
-                if plan.multiplicative {
-                    Ok(attention::attention_multiplicative_factored(
-                        q, k, v, &factors.phi_q, &factors.phi_k,
-                    ))
-                } else {
-                    Ok(attention::attention_factored(
-                        q, k, v, &factors.phi_q, &factors.phi_k, &opts,
-                    ))
-                }
-            }
-            ExecMode::Jit { generator } => {
-                let (pq, pk) =
-                    generator.factors(plan.geometry.n, plan.geometry.m);
-                Ok(attention::attention_factored(q, k, v, &pq, &pk, &opts))
-            }
+        if plan.multiplicative {
+            return execute_multiplicative(plan, q, k, v);
         }
+        let tile = plan_bias_tile(plan);
+        let cfg = KernelConfig::for_geometry(&plan.geometry);
+        Ok(kernels::attention_tiled(q, k, v, tile.as_ref(), plan.causal,
+                                    &cfg))
     }
 }
 
@@ -105,13 +128,13 @@ impl Executor for HostExecutor {
 // Tiled-simulator backend
 // ---------------------------------------------------------------------------
 
-/// Tiled-execution backend: numerics through the block-streamed
-/// online-softmax recurrence, HBM accounting through the simulator.
+/// Tiled-execution backend: the same kernel engine, driven with block
+/// sizes derived from the simulator's SRAM model, plus HBM accounting
+/// through [`simulate_fwd`] — the numerics and the report describe the
+/// same tile schedule.
 #[derive(Debug)]
 pub struct SimExecutor {
     pub hw: HwModel,
-    /// Key-block size of the numeric online-softmax mirror.
-    pub block_k: usize,
     last: Cell<Option<SimReport>>,
 }
 
@@ -125,7 +148,6 @@ impl SimExecutor {
     pub fn new(hw: HwModel) -> Self {
         Self {
             hw,
-            block_k: 64,
             last: Cell::new(None),
         }
     }
@@ -149,43 +171,24 @@ impl Executor for SimExecutor {
             // the reference and record no report rather than an
             // additive one that contradicts the plan's own cost model
             self.last.set(None);
-            return HostExecutor.execute(plan, q, k, v);
+            return execute_multiplicative(plan, q, k, v);
         }
         self.last.set(Some(simulate_fwd(
             plan.algorithm(),
             &plan.geometry,
             &self.hw,
         )));
-        let (n, m) = (plan.geometry.n, plan.geometry.m);
-        let bias = plan.materialized_bias();
-        let bias = if plan.causal {
-            Some(causal_masked(bias, n, m))
-        } else {
-            bias
+        // drive the engine with the block sizes the simulator accounted
+        // for (simulate_fwd sizes tiles from hw.sram_elems)
+        let g = Geometry {
+            sram: self.hw.sram_elems,
+            ..plan.geometry
         };
-        Ok(attention::online_softmax_attention(
-            q,
-            k,
-            v,
-            bias.as_ref(),
-            self.block_k,
-        ))
+        let cfg = KernelConfig::for_geometry(&g);
+        let tile = plan_bias_tile(plan);
+        Ok(kernels::attention_tiled(q, k, v, tile.as_ref(), plan.causal,
+                                    &cfg))
     }
-}
-
-/// Fold the decoder-aligned causal mask into a dense bias (the streamed
-/// recurrence has no mask input of its own).
-fn causal_masked(bias: Option<Tensor>, n: usize, m: usize) -> Tensor {
-    let mut b = bias.unwrap_or_else(|| Tensor::zeros(&[n, m]));
-    for i in 0..n {
-        for j in 0..m {
-            // mask ends at the key end: j − (m − n) > i is the future
-            if j as isize - (m as isize - n as isize) > i as isize {
-                b.set2(i, j, NEG_INF);
-            }
-        }
-    }
-    b
 }
 
 // ---------------------------------------------------------------------------
@@ -323,7 +326,7 @@ impl Executor for PjrtExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::iomodel::Geometry;
+    use crate::attention::AttnOpts;
     use crate::plan::{BiasSpec, PlanOptions, Planner};
     use crate::util::Xoshiro256;
 

@@ -42,7 +42,8 @@ mod planner;
 mod spec;
 
 pub use exec::{
-    execute, Executor, HostExecutor, PjrtExecutor, SimExecutor,
+    execute, plan_bias_tile, Executor, HostExecutor, PjrtExecutor,
+    SimExecutor,
 };
 pub use planner::{
     AttentionPlan, Decision, ExecMode, JitBias, PlanError, PlanOptions,

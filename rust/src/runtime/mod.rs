@@ -271,6 +271,19 @@ impl Runtime {
         })
     }
 
+    /// An artifact-less runtime: every `spec()` lookup misses and
+    /// `load()` fails. Lets the coordinator serve host-plan traffic
+    /// (kernel-engine batches) where no compiled artifacts or PJRT
+    /// backend exist.
+    pub fn empty() -> Self {
+        Self {
+            client: Mutex::new(None),
+            root: PathBuf::from("."),
+            artifacts: HashMap::new(),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
     /// Default artifact directory: `$FLASHBIAS_ARTIFACTS` or `artifacts/`
     /// relative to the workspace root.
     pub fn open_default() -> Result<Self> {

@@ -14,6 +14,51 @@ pub struct Tensor {
     data: Vec<f32>,
 }
 
+/// Zero-copy 2-D view into a tensor's storage — the tile currency of the
+/// kernel engine. Row-range and slab views cost a slice borrow, never a
+/// copy, so per-tile access stays allocation-free.
+#[derive(Clone, Copy, Debug)]
+pub struct View2<'a> {
+    pub rows: usize,
+    pub cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> View2<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f32]) -> Self {
+        assert_eq!(rows * cols, data.len(), "view shape mismatch");
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Rows `[start, stop)` as a narrower view (cheap tile slicing).
+    pub fn rows_view(&self, start: usize, stop: usize) -> View2<'a> {
+        View2::new(
+            stop - start,
+            self.cols,
+            &self.data[start * self.cols..stop * self.cols],
+        )
+    }
+
+    /// Materialize the view (test/inspection path).
+    pub fn to_tensor(&self) -> Tensor {
+        Tensor::new(&[self.rows, self.cols], self.data.to_vec())
+    }
+}
+
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Tensor{:?}", self.shape)?;
@@ -128,6 +173,31 @@ impl Tensor {
         debug_assert_eq!(self.rank(), 2);
         let m = self.shape[1];
         &self.data[i * m..(i + 1) * m]
+    }
+
+    /// Zero-copy 2-D view of this rank-2 tensor.
+    pub fn view2(&self) -> View2<'_> {
+        assert_eq!(self.rank(), 2, "view2 needs a rank-2 tensor");
+        View2::new(self.shape[0], self.shape[1], &self.data)
+    }
+
+    /// Zero-copy view of rows `[start, stop)` of a rank-2 tensor.
+    pub fn view_rows(&self, start: usize, stop: usize) -> View2<'_> {
+        assert_eq!(self.rank(), 2, "view_rows needs a rank-2 tensor");
+        let m = self.shape[1];
+        View2::new(stop - start, m, &self.data[start * m..stop * m])
+    }
+
+    /// Zero-copy 2-D view of slab `p` of a `(..., R, C)` tensor whose
+    /// leading dims are flattened: slab `p` is `data[p·R·C .. (p+1)·R·C]`
+    /// viewed as `(R, C)`. For a rank-2 tensor, slab 0 is the whole
+    /// tensor.
+    pub fn view_slab(&self, p: usize) -> View2<'_> {
+        assert!(self.rank() >= 2, "view_slab needs rank ≥ 2");
+        let r = self.shape[self.rank() - 2];
+        let c = self.shape[self.rank() - 1];
+        let sub = r * c;
+        View2::new(r, c, &self.data[p * sub..(p + 1) * sub])
     }
 
     pub fn reshape(&self, shape: &[usize]) -> Tensor {
@@ -495,6 +565,35 @@ mod tests {
     fn arange_and_map() {
         let t = Tensor::arange(4).map(|x| x * x);
         assert_eq!(t.data(), &[0., 1., 4., 9.]);
+    }
+
+    #[test]
+    fn view2_and_row_ranges() {
+        let t = Tensor::from_fn(&[5, 3], |ix| (ix[0] * 10 + ix[1]) as f32);
+        let v = t.view2();
+        assert_eq!((v.rows, v.cols), (5, 3));
+        assert_eq!(v.row(2), &[20., 21., 22.]);
+        assert_eq!(v.at(4, 1), 41.0);
+        let r = t.view_rows(1, 4);
+        assert_eq!(r.rows, 3);
+        assert_eq!(r.row(0), t.row(1));
+        let rr = v.rows_view(2, 5);
+        assert_eq!(rr.row(0), t.row(2));
+        assert!(r.to_tensor().allclose(&t.slice_rows(1, 4), 0.0, 0.0));
+    }
+
+    #[test]
+    fn view_slab_matches_index0() {
+        let mut rng = Xoshiro256::new(5);
+        let t = Tensor::randn(&[2, 3, 4, 5], 1.0, &mut rng);
+        for p in 0..6 {
+            let slab = t.view_slab(p).to_tensor();
+            // flattened (2, 3) leading dims: slab p == reshaped index
+            let flat = t.reshape(&[6, 4, 5]).index0(p);
+            assert!(slab.allclose(&flat, 0.0, 0.0), "slab {p}");
+        }
+        let t2 = Tensor::from_fn(&[3, 2], |ix| ix[0] as f32);
+        assert!(t2.view_slab(0).to_tensor().allclose(&t2, 0.0, 0.0));
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Host-plan serving: the coordinator executes flushed batches as one
+//! batched kernel-engine call — no PJRT artifacts needed, so this is
+//! tier-1 coverage of the router→batcher→worker→engine path.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::attention::{self, AttnOpts};
+use flashbias::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{AttentionPlan, BiasSpec, PlanOptions, Planner};
+use flashbias::runtime::{HostValue, Runtime};
+use flashbias::tensor::Tensor;
+use flashbias::util::Xoshiro256;
+
+const N: usize = 24;
+const M: usize = 24;
+const C: usize = 8;
+const H: usize = 2;
+
+fn alibi_plan(causal: bool) -> AttentionPlan {
+    Planner::default()
+        .plan(
+            &BiasSpec::alibi(N, M, 0.25),
+            &Geometry {
+                n: N,
+                m: M,
+                c: C,
+                r: 0,
+                sram: 100 * 1024 / 2,
+            },
+            &PlanOptions {
+                causal,
+                ..PlanOptions::default()
+            },
+        )
+        .expect("plan")
+}
+
+fn coordinator() -> Coordinator {
+    Coordinator::new(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            queue_depth: 64,
+        },
+    )
+}
+
+fn request_inputs(seed: u64) -> (Vec<HostValue>, Tensor, Tensor, Tensor) {
+    let mut rng = Xoshiro256::new(seed);
+    let q = Tensor::randn(&[H, N, C], 1.0, &mut rng);
+    let k = Tensor::randn(&[H, M, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[H, M, C], 1.0, &mut rng);
+    (
+        vec![
+            HostValue::F32(q.clone()),
+            HostValue::F32(k.clone()),
+            HostValue::F32(v.clone()),
+        ],
+        q,
+        k,
+        v,
+    )
+}
+
+#[test]
+fn batched_engine_serving_matches_reference() {
+    let plan = alibi_plan(true);
+    let bias = plan.materialized_bias().expect("alibi bias");
+    let mut coord = coordinator();
+    coord.register_plan("alibi_host_n24", plan).expect("register");
+
+    let mut payloads = Vec::new();
+    let mut reqs = Vec::new();
+    for i in 0..10u64 {
+        let (inputs, q, k, v) = request_inputs(100 + i);
+        payloads.push((q, k, v));
+        reqs.push(("alibi_host_n24".to_string(), inputs));
+    }
+    let responses = coord.run_burst(reqs).expect("burst");
+    assert_eq!(responses.len(), 10);
+    for resp in &responses {
+        let outs = resp.outputs.as_ref().expect("engine output");
+        let got = outs[0].as_f32().expect("f32 output");
+        assert_eq!(got.shape(), &[H, N, C]);
+        let (q, k, v) = &payloads[resp.id as usize];
+        for h in 0..H {
+            let reference = attention::attention(
+                &q.index0(h),
+                &k.index0(h),
+                &v.index0(h),
+                Some(&bias),
+                &AttnOpts { causal: true },
+            );
+            assert!(
+                got.index0(h).allclose(&reference, 1e-4, 1e-4),
+                "resp {} head {h}",
+                resp.id
+            );
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.submitted(), 10);
+    assert_eq!(m.completed(), 10);
+    coord.shutdown();
+}
+
+#[test]
+fn rank2_payloads_are_served() {
+    let plan = alibi_plan(false);
+    let bias = plan.materialized_bias().expect("alibi bias");
+    let mut coord = coordinator();
+    coord.register_plan("alibi_flat", plan).expect("register");
+    let mut rng = Xoshiro256::new(7);
+    let q = Tensor::randn(&[N, C], 1.0, &mut rng);
+    let k = Tensor::randn(&[M, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[M, C], 1.0, &mut rng);
+    let inputs = vec![
+        HostValue::F32(q.clone()),
+        HostValue::F32(k.clone()),
+        HostValue::F32(v.clone()),
+    ];
+    let responses = coord
+        .run_burst(vec![("alibi_flat".to_string(), inputs)])
+        .expect("burst");
+    let got = responses[0].outputs.as_ref().expect("output")[0]
+        .as_f32()
+        .expect("f32")
+        .clone();
+    assert_eq!(got.shape(), &[N, C]);
+    let reference = attention::attention(&q, &k, &v, Some(&bias),
+                                         &AttnOpts::default());
+    assert!(got.allclose(&reference, 1e-4, 1e-4));
+    coord.shutdown();
+}
+
+#[test]
+fn mixed_rank_batch_serves_both_groups() {
+    // a rank-2 and a rank-3 request for the same plan land in one
+    // flushed batch; the worker stacks them as separate signature
+    // groups and both succeed
+    let plan = alibi_plan(false);
+    let bias = plan.materialized_bias().expect("alibi bias");
+    let mut coord = coordinator();
+    coord.register_plan("alibi_mixed", plan).expect("register");
+    let mut rng = Xoshiro256::new(21);
+    let q2 = Tensor::randn(&[N, C], 1.0, &mut rng);
+    let k2 = Tensor::randn(&[M, C], 1.0, &mut rng);
+    let v2 = Tensor::randn(&[M, C], 1.0, &mut rng);
+    let flat = vec![
+        HostValue::F32(q2.clone()),
+        HostValue::F32(k2.clone()),
+        HostValue::F32(v2.clone()),
+    ];
+    let (headed, q3, k3, v3) = request_inputs(22);
+    let responses = coord
+        .run_burst(vec![
+            ("alibi_mixed".to_string(), flat),
+            ("alibi_mixed".to_string(), headed),
+        ])
+        .expect("burst");
+    assert_eq!(responses.len(), 2);
+    let flat_out = responses[0].outputs.as_ref().expect("rank-2 ok")[0]
+        .as_f32()
+        .expect("f32");
+    let ref_flat = attention::attention(&q2, &k2, &v2, Some(&bias),
+                                        &AttnOpts::default());
+    assert!(flat_out.allclose(&ref_flat, 1e-4, 1e-4));
+    let headed_out = responses[1].outputs.as_ref().expect("rank-3 ok")[0]
+        .as_f32()
+        .expect("f32");
+    for h in 0..H {
+        let reference = attention::attention(
+            &q3.index0(h),
+            &k3.index0(h),
+            &v3.index0(h),
+            Some(&bias),
+            &AttnOpts::default(),
+        );
+        assert!(headed_out.index0(h).allclose(&reference, 1e-4, 1e-4));
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn bad_payload_gets_error_response_not_hang() {
+    let mut coord = coordinator();
+    coord.register_plan("alibi_err", alibi_plan(false)).expect("register");
+    let mut rng = Xoshiro256::new(8);
+    // wrong N: 12 instead of 24
+    let q = Tensor::randn(&[12, C], 1.0, &mut rng);
+    let k = Tensor::randn(&[M, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[M, C], 1.0, &mut rng);
+    let inputs = vec![
+        HostValue::F32(q),
+        HostValue::F32(k),
+        HostValue::F32(v),
+    ];
+    let responses = coord
+        .run_burst(vec![("alibi_err".to_string(), inputs)])
+        .expect("burst completes");
+    assert_eq!(responses.len(), 1);
+    assert!(responses[0].outputs.is_err(), "shape mismatch must error");
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_artifact_still_rejected() {
+    let mut coord = coordinator();
+    assert!(coord.submit("nope", vec![]).is_err());
+    coord.shutdown();
+}

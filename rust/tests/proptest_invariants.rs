@@ -135,7 +135,7 @@ fn prop_online_softmax_block_size_invariant() {
             let full = attention::attention(&q, &k, &v, None,
                                             &AttnOpts::default());
             let streamed = attention::online_softmax_attention(
-                &q, &k, &v, None, block);
+                &q, &k, &v, None, block, &AttnOpts::default());
             streamed.allclose(&full, 1e-4, 1e-4)
         },
     );
