@@ -22,10 +22,12 @@ verify: build test
 bench:
 	$(CARGO) bench
 
-# Machine-readable bench output: runs the kernel-engine bench and drops
-# BENCH_kernels.json (label, mean, p50, bytes) at the workspace root.
+# Machine-readable bench output: runs the kernel-engine bench and the
+# factorstore (cold-vs-warm plan latency) bench, dropping
+# BENCH_kernels.json and BENCH_factorstore.json at the workspace root.
 bench-json:
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
+	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench serving_overhead
 
 examples:
 	$(CARGO) build --release --examples

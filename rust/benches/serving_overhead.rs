@@ -1,28 +1,132 @@
-//! L3 perf bench (EXPERIMENTS.md §Perf): coordinator overhead over raw
-//! PJRT execution — router + batcher + channel + thread hop must cost
-//! <10% of execute time, per the DESIGN.md target.
+//! L3 perf bench (EXPERIMENTS.md §Perf), two sections:
 //!
-//! Perf-pass finding: on the CPU PJRT backend each execute already uses
-//! the whole core pool, so 2 concurrent workers *contend* (per-execute
-//! wall time ~2x) and buy nothing; 1 worker is the right CPU config.
-//! On a real accelerator pool (1 device per worker) more workers scale.
+//! 1. **Plan-time amortization** (no artifacts needed): per-request plan
+//!    latency for a Swin-style learned bias, cold (SVD every request)
+//!    vs warm (FactorStore hit), through the same planner the serving
+//!    stack uses — plus a host-plan serving burst on a coordinator that
+//!    shares the store. Writes `BENCH_factorstore.json`.
+//! 2. **Coordinator overhead over raw PJRT execution** — router +
+//!    batcher + channel + thread hop must cost <10% of execute time,
+//!    per the DESIGN.md target. Skipped gracefully without artifacts.
+//!
+//! Perf-pass finding (section 2): on the CPU PJRT backend each execute
+//! already uses the whole core pool, so 2 concurrent workers *contend*
+//! (per-execute wall time ~2x) and buy nothing; 1 worker is the right
+//! CPU config. On a real accelerator pool (1 device per worker) more
+//! workers scale.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use flashbias::benchkit::{bench_fn, iters, Table};
+use flashbias::bias::swin_relative_bias;
 use flashbias::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig,
 };
-use flashbias::runtime::Runtime;
+use flashbias::factorstore::FactorStore;
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{BiasSpec, PlanOptions, Planner};
+use flashbias::runtime::{HostValue, Runtime};
+use flashbias::tensor::Tensor;
+use flashbias::util::{human_secs, Xoshiro256};
 
-fn main() {
-    println!("SERVING OVERHEAD: coordinator vs raw PJRT");
-    let rt = Arc::new(Runtime::open_default().expect("make artifacts"));
+fn bench_factorstore(it: usize) {
+    println!("FACTORSTORE: per-request plan latency, cold vs warm");
+    let table = swin_relative_bias((12, 12), 1, 0, 6, 0.02).remove(0);
+    let spec = BiasSpec::static_learned(table);
+    let geo = Geometry::square(144, 64, 0, 100 * 1024 / 2);
+    let opts = PlanOptions {
+        rank_override: Some(16), // the paper pins R = 16 for Swin
+        ..PlanOptions::default()
+    };
+    let planner = Planner::default();
+
+    let mut out =
+        Table::new("factorstore: plan latency (swin 144x144, R=16)");
+    out.row(bench_fn("cold plan (SVD every request)", 1, it, || {
+        let plan = planner.plan(&spec, &geo, &opts).expect("plan");
+        assert_eq!(plan.rank(), 16);
+    }));
+
+    let store = Arc::new(FactorStore::unbounded());
+    planner
+        .plan_with_store(&spec, &geo, &opts, &store)
+        .expect("warm the store");
+    out.row(bench_fn("warm plan (store hit)", 1, it, || {
+        let plan = planner
+            .plan_with_store(&spec, &geo, &opts, &store)
+            .expect("plan");
+        assert_eq!(plan.rank(), 16);
+    }));
+    let cold = out.rows()[0].stats.mean();
+    let warm = out.rows()[1].stats.mean();
+    println!(
+        "  cold {} vs warm {} -> {:.0}x lower plan latency",
+        human_secs(cold),
+        human_secs(warm),
+        cold / warm.max(1e-12)
+    );
+    println!("  {}", store.stats().summary());
+
+    // the same store carried through a serving loop: plan_and_register
+    // is a hit, and the burst runs on the host kernel engine
+    let coord = Coordinator::with_store(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+            queue_depth: 64,
+        },
+        store.clone(),
+    );
+    coord
+        .plan_and_register("swin_host", &planner, &spec, &geo, &opts)
+        .expect("register host plan");
+    let mut coord = coord;
+    let mut rng = Xoshiro256::new(17);
+    let q = Tensor::randn(&[144, 64], 1.0, &mut rng);
+    let k = Tensor::randn(&[144, 64], 1.0, &mut rng);
+    let v = Tensor::randn(&[144, 64], 1.0, &mut rng);
+    let inputs = vec![
+        HostValue::F32(q),
+        HostValue::F32(k),
+        HostValue::F32(v),
+    ];
+    let row = bench_fn(
+        "host-plan serving burst (batch=8, warm store)",
+        1,
+        (it / 4).max(2),
+        || {
+            let reqs: Vec<_> = (0..8)
+                .map(|_| ("swin_host".to_string(), inputs.clone()))
+                .collect();
+            let responses = coord.run_burst(reqs).expect("burst");
+            assert_eq!(responses.len(), 8);
+        },
+    );
+    out.row(row);
+    println!("  {}", coord.metrics().summary());
+    coord.shutdown();
+
+    out.write_json("factorstore")
+        .expect("write BENCH_factorstore.json");
+}
+
+fn bench_pjrt_overhead(it: usize) {
+    println!("\nSERVING OVERHEAD: coordinator vs raw PJRT");
+    let rt = match Runtime::open_default() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!("  skipped ({e}); run `make artifacts`");
+            return;
+        }
+    };
     let name = "attn_factored_n512";
     let exe = rt.load_warm(name).expect("warm");
     let inputs = rt.example_inputs(name).expect("inputs");
-    let it = iters(20);
 
     let mut table = Table::new("per-request latency (attn_factored_n512)");
     table.row(bench_fn("raw PJRT execute", 3, it, || {
@@ -56,8 +160,8 @@ fn main() {
         println!(
             "  workers={workers}: per-request {} vs raw {} -> overhead \
              {:+.1}%",
-            flashbias::util::human_secs(per_req),
-            flashbias::util::human_secs(raw),
+            human_secs(per_req),
+            human_secs(raw),
             (per_req / raw - 1.0) * 100.0
         );
         println!("  {}", coord.metrics().summary());
@@ -67,4 +171,10 @@ fn main() {
         "\n  (CPU PJRT saturates all cores per execute; 1 worker avoids \
          pool contention — the <10% overhead target applies there)"
     );
+}
+
+fn main() {
+    let it = iters(20);
+    bench_factorstore(it);
+    bench_pjrt_overhead(it);
 }

@@ -1,10 +1,15 @@
 //! Serving metrics: counters + latency distributions for each pipeline
-//! stage, safe to share across worker threads.
+//! stage, safe to share across worker threads. When a
+//! [`FactorStore`] is attached (every coordinator does this), its
+//! hit/miss/eviction counters ride along in [`Metrics::summary`] and
+//! [`Metrics::to_json`], so plan-time amortization is observable next
+//! to the latency distributions it buys.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::factorstore::FactorStore;
 use crate::util::Stats;
 
 #[derive(Debug, Default)]
@@ -16,11 +21,22 @@ pub struct Metrics {
     batch_sizes: Mutex<Stats>,
     queue_secs: Mutex<Stats>,
     exec_secs: Mutex<Stats>,
+    store: Mutex<Option<Arc<FactorStore>>>,
 }
 
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Surface `store`'s counters in summaries and JSON dumps.
+    pub fn attach_store(&self, store: Arc<FactorStore>) {
+        *self.store.lock().unwrap() = Some(store);
+    }
+
+    /// Snapshot of the attached store's counters, if any.
+    pub fn store_stats(&self) -> Option<crate::factorstore::StoreStats> {
+        self.store.lock().unwrap().as_ref().map(|s| s.stats())
     }
 
     pub fn on_submit(&self) {
@@ -70,11 +86,11 @@ impl Metrics {
         self.exec_secs.lock().unwrap().clone()
     }
 
-    /// One-line human summary.
+    /// One-line human summary (two lines once a store is attached).
     pub fn summary(&self) -> String {
         let q = self.queue_stats();
         let e = self.exec_stats();
-        format!(
+        let mut out = format!(
             "submitted={} completed={} failed={} batches={} \
              mean_batch={:.2} queue_p50={} exec_p50={} exec_p99={}",
             self.submitted(),
@@ -85,7 +101,12 @@ impl Metrics {
             crate::util::human_secs(q.p50()),
             crate::util::human_secs(e.p50()),
             crate::util::human_secs(e.p99()),
-        )
+        );
+        if let Some(s) = self.store_stats() {
+            out.push('\n');
+            out.push_str(&s.summary());
+        }
+        out
     }
 
     /// Metrics as JSON (for the CLI's --metrics-out).
@@ -103,6 +124,12 @@ impl Metrics {
             ("queue_p99_s", Json::num(q.p99())),
             ("exec_p50_s", Json::num(e.p50())),
             ("exec_p99_s", Json::num(e.p99())),
+            (
+                "store",
+                self.store_stats()
+                    .map(|s| s.to_json())
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -139,6 +166,28 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.get("submitted").as_usize(), Some(1));
         assert!(m.summary().contains("completed=1"));
+    }
+
+    #[test]
+    fn attached_store_counters_surface() {
+        use crate::factorstore::{Cached, Fingerprint};
+        use std::sync::Arc;
+        let m = Metrics::new();
+        assert!(m.store_stats().is_none());
+        assert!(m.to_json().get("store").is_null());
+        let store = Arc::new(FactorStore::unbounded());
+        m.attach_store(store.clone());
+        store.get_or_insert_with(Fingerprint(1), || Cached::Rejected {
+            measured_rank: 9,
+        });
+        store.get_or_insert_with(Fingerprint(1), || Cached::Rejected {
+            measured_rank: 9,
+        });
+        let s = m.store_stats().expect("attached");
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(m.summary().contains("store: hits=1"));
+        let j = m.to_json();
+        assert_eq!(j.get("store").get("hits").as_usize(), Some(1));
     }
 
     #[test]

@@ -6,21 +6,24 @@
 //! * [`router`] — shape-bucket routing: a request for sequence length N is
 //!   routed to the smallest compiled artifact bucket ≥ N (with padding),
 //!   per (family, variant).
-//! * [`selector`] — decomposition-strategy selection, delegated to
-//!   [`crate::plan::Planner`] (the Table 1 decision procedure now lives
-//!   behind the unified `BiasSpec → plan → execute` API).
 //! * [`batcher`] — dynamic batching: requests accumulate per bucket and
 //!   flush on max-batch or deadline, amortizing dispatch overhead.
 //! * [`worker`] — a thread pool executing flushed batches: PJRT for
 //!   compiled artifacts, or **one batched `(B, H, N, C)` kernel-engine
 //!   call** for plans in the [`HostPlanRegistry`]; bounded queues give
 //!   backpressure.
-//! * [`metrics`] — latency/throughput counters for every stage.
+//! * [`metrics`] — latency/throughput counters for every stage,
+//!   including the shared factor store's hit/miss/eviction counters.
+//!
+//! Decomposition-strategy selection is the [`crate::plan::Planner`]
+//! (re-exported here as [`StrategySelector`] for the serving layer);
+//! every coordinator owns a [`FactorStore`] shared across its serving
+//! loop, so [`Coordinator::plan_and_register`] amortizes SVD/neural
+//! decomposition across repeated plans and worker threads.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
-pub mod selector;
 pub mod worker;
 
 use std::collections::HashMap;
@@ -31,13 +34,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::plan::AttentionPlan;
+use crate::factorstore::FactorStore;
+use crate::iomodel::Geometry;
+use crate::plan::{AttentionPlan, BiasSpec, PlanOptions, Planner};
 use crate::runtime::{HostValue, Runtime};
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use router::{RouteKey, Router};
-pub use selector::{SelectorConfig, StrategySelector};
+// the serving-layer aliases for the Table 1 policy object (the old
+// `selector` module shim, folded in here)
+pub use crate::plan::{Planner as StrategySelector, SelectorConfig};
 
 /// Registry of attention plans served directly on the host kernel
 /// engine — no PJRT artifact needed. Plan names share the artifact
@@ -117,6 +124,7 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator {
     runtime: Arc<Runtime>,
     host_plans: Arc<HostPlanRegistry>,
+    store: Arc<FactorStore>,
     batcher: DynamicBatcher,
     pool: worker::WorkerPool,
     responses: Receiver<Response>,
@@ -125,8 +133,21 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Coordinator with a private, unbounded [`FactorStore`]. Use
+    /// [`Self::with_store`] to share a (possibly disk-warmed, byte-
+    /// budgeted) store across coordinators or with the CLI.
     pub fn new(runtime: Arc<Runtime>, config: CoordinatorConfig) -> Self {
+        Self::with_store(runtime, config,
+                         Arc::new(FactorStore::unbounded()))
+    }
+
+    /// Coordinator sharing `store` for every decomposition in its
+    /// serving loop; the store's counters surface through
+    /// [`Metrics::summary`] / [`Metrics::to_json`].
+    pub fn with_store(runtime: Arc<Runtime>, config: CoordinatorConfig,
+                      store: Arc<FactorStore>) -> Self {
         let metrics = Arc::new(Metrics::new());
+        metrics.attach_store(store.clone());
         let host_plans = Arc::new(HostPlanRegistry::new());
         let (pool, responses) = worker::WorkerPool::spawn(
             runtime.clone(),
@@ -138,6 +159,7 @@ impl Coordinator {
         Self {
             runtime,
             host_plans,
+            store,
             batcher: DynamicBatcher::new(config.batcher),
             pool,
             responses,
@@ -152,6 +174,27 @@ impl Coordinator {
 
     pub fn runtime(&self) -> &Arc<Runtime> {
         &self.runtime
+    }
+
+    /// The factor store shared across this coordinator's serving loop.
+    pub fn store(&self) -> &Arc<FactorStore> {
+        &self.store
+    }
+
+    /// Plan `spec` through the shared factor store and register the
+    /// result as a host plan under `name` — the serving-layer entry to
+    /// amortized decomposition: repeated calls for the same bias
+    /// content are store hits that share factor strips with every
+    /// previously registered plan.
+    pub fn plan_and_register(&self, name: &str, planner: &Planner,
+                             spec: &BiasSpec, geo: &Geometry,
+                             opts: &PlanOptions)
+                             -> Result<AttentionPlan> {
+        let plan = planner
+            .plan_with_store(spec, geo, opts, &self.store)
+            .map_err(|e| anyhow!("plan {name}: {e}"))?;
+        self.register_plan(name, plan.clone())?;
+        Ok(plan)
     }
 
     /// Register an [`AttentionPlan`] under an artifact-style name so

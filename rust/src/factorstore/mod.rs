@@ -1,0 +1,754 @@
+//! [`FactorStore`] — the amortization layer the paper assumes (§4.3,
+//! Table 4: 4.79 s of offline SVD for SwinV2, ~0.05% once amortized).
+//!
+//! Decomposition used to be a per-`plan()` tax: every call on a
+//! `StaticLearned` table re-ran the full Jacobi SVD, every `Dynamic`
+//! spec re-fitted its neural factor functions. The store turns that
+//! into a content-addressed cache shared across planner, coordinator
+//! and server:
+//!
+//! * **Content-addressed.** Keys are [`Fingerprint`]s: an FNV-1a hash
+//!   of the bias kind + geometry + the exact bytes of its tables /
+//!   sources (see [`crate::plan::BiasSpec::fingerprint`]). The planner
+//!   mixes in the decomposition policy (energy target, rank override,
+//!   neural config) so a different policy never aliases a cached
+//!   result.
+//! * **Thread-safe, decompose-once.** Concurrent `get_or_insert_with`
+//!   calls for the same key run the decomposition exactly once; the
+//!   other callers block on the in-flight cell and share the finished
+//!   [`Factors`] behind an `Arc` (zero copies on a hit).
+//! * **Byte-budget LRU.** Factor strips are Θ((N+M)·R) each (Thm 3.2);
+//!   the store evicts least-recently-used entries once the resident
+//!   bytes exceed the budget, and counts hits / misses / evictions.
+//! * **Persistent.** [`FactorStore::save`] / [`FactorStore::load`]
+//!   round-trip the store through a jsonlite file, so offline
+//!   decomposition (`flashbias warm`) survives process restarts and a
+//!   serving fleet can boot warm.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::decompose::Factors;
+use crate::jsonlite::Json;
+use crate::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Fingerprints
+// ---------------------------------------------------------------------------
+
+/// 64-bit content fingerprint — the store's key currency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint(pub u64);
+
+impl Fingerprint {
+    pub fn as_u64(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// FNV-1a 64-bit streaming hasher (no `std::hash` — we need a stable,
+/// documented digest that survives process restarts and toolchain
+/// upgrades, because fingerprints are persisted in store files).
+#[derive(Clone, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf29ce484222325;
+    const PRIME: u64 = 0x100000001b3;
+
+    pub fn new() -> Self {
+        Self(Self::OFFSET)
+    }
+
+    #[inline]
+    pub fn write_byte(&mut self, b: u8) {
+        self.0 = (self.0 ^ b as u64).wrapping_mul(Self::PRIME);
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.write_byte(b);
+        }
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_bytes(s.as_bytes());
+        self.write_byte(0xff); // delimiter: "ab","c" != "a","bc"
+    }
+
+    pub fn write_u32(&mut self, x: u32) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write_bytes(&x.to_le_bytes());
+    }
+
+    /// Hash f32 payloads by exact bit pattern, one FNV round per 32-bit
+    /// word — 4× fewer multiplies than the byte-wise feed on the hot
+    /// table path (fingerprints re-hash the table on every
+    /// store-addressed plan). A one-ulp perturbation of any entry still
+    /// yields a different fingerprint.
+    pub fn write_f32s(&mut self, xs: &[f32]) {
+        self.write_u64(xs.len() as u64);
+        for &x in xs {
+            self.0 = (self.0 ^ x.to_bits() as u64)
+                .wrapping_mul(Self::PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> Fingerprint {
+        Fingerprint(self.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cached values
+// ---------------------------------------------------------------------------
+
+/// What one decomposition attempt produced — the store caches *outcomes*,
+/// not just factor strips, so a repeated plan skips the spectrum scan
+/// even when the verdict was "stay dense".
+#[derive(Clone, Debug)]
+pub enum Cached {
+    /// Shared factor strips (SVD or neural).
+    Factors(Arc<Factors>),
+    /// The measured spectral rank failed the planner's low-rank test;
+    /// remembered so repeated plans skip the (full-SVD) spectrum scan
+    /// and fall back to dense immediately.
+    Rejected { measured_rank: usize },
+}
+
+impl Cached {
+    /// Resident bytes this entry charges against the store budget.
+    pub fn size_bytes(&self) -> usize {
+        match self {
+            Cached::Factors(f) => f.size_bytes(),
+            Cached::Rejected { .. } => std::mem::size_of::<usize>(),
+        }
+    }
+
+    /// The shared factors, when this entry holds any.
+    pub fn factors(&self) -> Option<&Arc<Factors>> {
+        match self {
+            Cached::Factors(f) => Some(f),
+            Cached::Rejected { .. } => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct Entry {
+    value: Cached,
+    bytes: usize,
+    /// Monotonic recency stamp — larger = more recently used.
+    stamp: u64,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    map: HashMap<u64, Entry>,
+    /// In-flight decompositions: concurrent callers share one cell so
+    /// the closure runs exactly once per key.
+    pending: HashMap<u64, Arc<OnceLock<Cached>>>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Counter snapshot for metrics/CLIs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StoreStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    /// `usize::MAX` = unbounded.
+    pub budget_bytes: usize,
+}
+
+impl StoreStats {
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let budget = if self.budget_bytes == usize::MAX {
+            "unbounded".to_string()
+        } else {
+            crate::util::human_bytes(self.budget_bytes as u64)
+        };
+        format!(
+            "store: hits={} misses={} evictions={} entries={} bytes={} \
+             budget={budget}",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.entries,
+            crate::util::human_bytes(self.bytes as u64),
+        )
+    }
+
+    /// Metrics-dump shape (`coordinator::Metrics::to_json` embeds this).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("hits", Json::num(self.hits as f64)),
+            ("misses", Json::num(self.misses as f64)),
+            ("evictions", Json::num(self.evictions as f64)),
+            ("entries", Json::num(self.entries as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            (
+                "budget_bytes",
+                if self.budget_bytes == usize::MAX {
+                    Json::Null
+                } else {
+                    Json::num(self.budget_bytes as f64)
+                },
+            ),
+        ])
+    }
+}
+
+/// Thread-safe, content-addressed factor store with a byte-budget LRU.
+pub struct FactorStore {
+    inner: Mutex<Inner>,
+    budget_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for FactorStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        write!(
+            f,
+            "FactorStore(entries={}, bytes={}, hits={}, misses={})",
+            s.entries, s.bytes, s.hits, s.misses
+        )
+    }
+}
+
+impl FactorStore {
+    /// Store bounded to `budget_bytes` of resident factor data.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Store with no byte budget (nothing is ever evicted).
+    pub fn unbounded() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    /// Look up a finished entry (LRU touch). Counts a hit or a miss.
+    pub fn get(&self, key: Fingerprint) -> Option<Cached> {
+        let found = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let stamp = inner.tick;
+            inner.map.get_mut(&key.0).map(|e| {
+                e.stamp = stamp;
+                e.value.clone()
+            })
+        };
+        match found {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Get the entry for `key`, running `decompose` to fill it on a
+    /// miss. Concurrent callers for the same key run `decompose`
+    /// exactly once: one caller computes, the rest block on the
+    /// in-flight cell and share the result (each such share counts as a
+    /// hit — they did no decomposition work).
+    pub fn get_or_insert_with(
+        &self,
+        key: Fingerprint,
+        decompose: impl FnOnce() -> Cached,
+    ) -> Cached {
+        let cell = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let stamp = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key.0) {
+                e.stamp = stamp;
+                let v = e.value.clone();
+                drop(inner);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return v;
+            }
+            inner
+                .pending
+                .entry(key.0)
+                .or_insert_with(|| Arc::new(OnceLock::new()))
+                .clone()
+        };
+        // The store lock is NOT held while decomposing: only same-key
+        // callers wait here, everyone else proceeds.
+        let mut ran = false;
+        let value = cell
+            .get_or_init(|| {
+                ran = true;
+                decompose()
+            })
+            .clone();
+        if ran {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut inner = self.inner.lock().unwrap();
+        // Only the cell we actually waited on may be retired: after an
+        // eviction, a *newer* in-flight decomposition for this key can
+        // own a fresh pending cell, and a late waiter from the old one
+        // must not remove it (that would let a third caller re-run the
+        // work) or clobber the map with its stale value.
+        let owns_cell = inner
+            .pending
+            .get(&key.0)
+            .is_some_and(|c| Arc::ptr_eq(c, &cell));
+        if owns_cell {
+            inner.pending.remove(&key.0);
+            if !inner.map.contains_key(&key.0) {
+                self.insert_locked(&mut inner, key.0, value.clone());
+            }
+        }
+        value
+    }
+
+    /// Insert (or replace) an entry directly — the load path.
+    pub fn insert(&self, key: Fingerprint, value: Cached) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(old) = inner.map.remove(&key.0) {
+            inner.bytes -= old.bytes;
+        }
+        self.insert_locked(&mut inner, key.0, value);
+    }
+
+    fn insert_locked(&self, inner: &mut Inner, key: u64, value: Cached) {
+        inner.tick += 1;
+        let stamp = inner.tick;
+        let bytes = value.size_bytes();
+        inner.bytes += bytes;
+        inner.map.insert(key, Entry { value, bytes, stamp });
+        // strict byte budget: evict LRU-first until back under (the
+        // just-inserted entry has the newest stamp, so it goes last)
+        while inner.bytes > self.budget_bytes && !inner.map.is_empty() {
+            let lru = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            match lru {
+                Some(k) => {
+                    if let Some(e) = inner.map.remove(&k) {
+                        inner.bytes -= e.bytes;
+                    }
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().map.is_empty()
+    }
+
+    /// Resident factor bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let inner = self.inner.lock().unwrap();
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: inner.map.len(),
+            bytes: inner.bytes,
+            budget_bytes: self.budget_bytes,
+        }
+    }
+
+    // -- persistence --------------------------------------------------------
+
+    /// Serialize every resident entry to a jsonlite file. Entries are
+    /// written oldest-first so a later [`load`](Self::load) re-inserts
+    /// them in LRU order. Finite f32 payloads survive the text round
+    /// trip exactly (shortest-roundtrip float formatting); entries
+    /// holding non-finite values are skipped — NaN/inf have no JSON
+    /// representation, and writing them would leave a file every later
+    /// `load` rejects. A skipped bias simply decomposes again on demand.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let json = {
+            let inner = self.inner.lock().unwrap();
+            let mut entries: Vec<(&u64, &Entry)> =
+                inner.map.iter().collect();
+            entries.sort_by_key(|(_, e)| e.stamp);
+            let arr: Vec<Json> = entries
+                .iter()
+                .filter(|(_, e)| entry_is_finite(&e.value))
+                .map(|(k, e)| entry_to_json(**k, &e.value))
+                .collect();
+            Json::obj(vec![
+                ("version", Json::num(1.0)),
+                ("entries", Json::Arr(arr)),
+            ])
+        };
+        // atomic replace: a crash mid-write must never leave a
+        // truncated file that bricks every later open() on this path
+        let path = path.as_ref();
+        let tmp = path
+            .with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, json.dump())
+            .map_err(|e| anyhow!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            anyhow!(
+                "rename {} -> {}: {e}",
+                tmp.display(),
+                path.display()
+            )
+        })
+    }
+
+    /// Load a store previously written by [`save`](Self::save).
+    pub fn load(path: impl AsRef<Path>,
+                budget_bytes: usize) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let store = Self::new(budget_bytes);
+        for entry in json.get("entries").as_arr().unwrap_or(&[]) {
+            let (key, value) = entry_from_json(entry)
+                .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+            store.insert(key, value);
+        }
+        Ok(store)
+    }
+
+    /// Load `path` if it exists, else start empty — the CLI's
+    /// `--store PATH` semantics.
+    pub fn open(path: impl AsRef<Path>,
+                budget_bytes: usize) -> Result<Self> {
+        if path.as_ref().exists() {
+            Self::load(path, budget_bytes)
+        } else {
+            Ok(Self::new(budget_bytes))
+        }
+    }
+}
+
+/// Whether an entry's payload is fully finite (serializable as JSON
+/// numbers). Factors from a corrupt table can carry NaN/inf; those are
+/// kept in memory but never persisted.
+fn entry_is_finite(value: &Cached) -> bool {
+    match value {
+        Cached::Factors(f) => {
+            f.rel_err.is_finite()
+                && f.phi_q.data().iter().all(|x| x.is_finite())
+                && f.phi_k.data().iter().all(|x| x.is_finite())
+        }
+        Cached::Rejected { .. } => true,
+    }
+}
+
+fn f32s_to_json(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn json_to_f32s(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected a number array"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow!("non-numeric array element"))
+        })
+        .collect()
+}
+
+fn entry_to_json(key: u64, value: &Cached) -> Json {
+    let key_hex = format!("{:016x}", key);
+    match value {
+        Cached::Factors(f) => Json::obj(vec![
+            ("key", Json::str(&key_hex)),
+            ("kind", Json::str("factors")),
+            ("n", Json::num(f.phi_q.shape()[0] as f64)),
+            ("m", Json::num(f.phi_k.shape()[0] as f64)),
+            ("rank", Json::num(f.rank as f64)),
+            ("rel_err", Json::num(f.rel_err as f64)),
+            ("phi_q", f32s_to_json(f.phi_q.data())),
+            ("phi_k", f32s_to_json(f.phi_k.data())),
+        ]),
+        Cached::Rejected { measured_rank } => Json::obj(vec![
+            ("key", Json::str(&key_hex)),
+            ("kind", Json::str("rejected")),
+            ("measured_rank", Json::num(*measured_rank as f64)),
+        ]),
+    }
+}
+
+fn entry_from_json(j: &Json) -> Result<(Fingerprint, Cached)> {
+    let key_hex = j
+        .get("key")
+        .as_str()
+        .ok_or_else(|| anyhow!("entry without key"))?;
+    let key = u64::from_str_radix(key_hex, 16)
+        .map_err(|_| anyhow!("bad key {key_hex}"))?;
+    let value = match j.get("kind").as_str() {
+        Some("factors") => {
+            let n = j
+                .get("n")
+                .as_usize()
+                .ok_or_else(|| anyhow!("factors entry without n"))?;
+            let m = j
+                .get("m")
+                .as_usize()
+                .ok_or_else(|| anyhow!("factors entry without m"))?;
+            let rank = j
+                .get("rank")
+                .as_usize()
+                .ok_or_else(|| anyhow!("factors entry without rank"))?;
+            let rel_err = j
+                .get("rel_err")
+                .as_f64()
+                .ok_or_else(|| anyhow!("factors entry without rel_err"))?
+                as f32;
+            let pq = json_to_f32s(j.get("phi_q"))?;
+            let pk = json_to_f32s(j.get("phi_k"))?;
+            if pq.len() != n * rank || pk.len() != m * rank {
+                return Err(anyhow!(
+                    "factor payload sizes {}/{} disagree with \
+                     (n={n}, m={m}, rank={rank})",
+                    pq.len(),
+                    pk.len()
+                ));
+            }
+            Cached::Factors(Arc::new(Factors {
+                phi_q: Tensor::new(&[n, rank], pq),
+                phi_k: Tensor::new(&[m, rank], pk),
+                rel_err,
+                rank,
+            }))
+        }
+        Some("rejected") => Cached::Rejected {
+            measured_rank: j
+                .get("measured_rank")
+                .as_usize()
+                .ok_or_else(|| anyhow!("rejected entry without rank"))?,
+        },
+        other => return Err(anyhow!("unknown entry kind {other:?}")),
+    };
+    Ok((Fingerprint(key), value))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bias::{Alibi, ExactBias};
+    use crate::decompose::from_exact;
+
+    fn cached_alibi(n: usize) -> Cached {
+        Cached::Factors(Arc::new(from_exact(&Alibi::new(n, n, 0.5))))
+    }
+
+    #[test]
+    fn fnv_is_stable_and_order_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_str("alibi");
+        a.write_u64(64);
+        let mut b = Fnv64::new();
+        b.write_str("alibi");
+        b.write_u64(64);
+        assert_eq!(a.finish(), b.finish());
+        let mut c = Fnv64::new();
+        c.write_u64(64);
+        c.write_str("alibi");
+        assert_ne!(a.finish(), c.finish());
+        // str delimiter: "ab"+"c" != "a"+"bc"
+        let mut d = Fnv64::new();
+        d.write_str("ab");
+        d.write_str("c");
+        let mut e = Fnv64::new();
+        e.write_str("a");
+        e.write_str("bc");
+        assert_ne!(d.finish(), e.finish());
+    }
+
+    #[test]
+    fn get_or_insert_runs_once_then_hits() {
+        let store = FactorStore::unbounded();
+        let key = Fingerprint(42);
+        let mut calls = 0;
+        for _ in 0..3 {
+            let v = store.get_or_insert_with(key, || {
+                calls += 1;
+                cached_alibi(8)
+            });
+            assert!(v.factors().is_some());
+        }
+        assert_eq!(calls, 1);
+        assert_eq!(store.misses(), 1);
+        assert_eq!(store.hits(), 2);
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget() {
+        // each rank-2 alibi(8) factor pair: (8 + 8) * 2 * 4 = 128 bytes
+        let store = FactorStore::new(300);
+        store.get_or_insert_with(Fingerprint(1), || cached_alibi(8));
+        store.get_or_insert_with(Fingerprint(2), || cached_alibi(8));
+        assert_eq!(store.len(), 2);
+        // touch key 1 so key 2 is the LRU victim
+        assert!(store.get(Fingerprint(1)).is_some());
+        store.get_or_insert_with(Fingerprint(3), || cached_alibi(8));
+        assert_eq!(store.len(), 2);
+        assert!(store.total_bytes() <= 300);
+        assert_eq!(store.evictions(), 1);
+        assert!(store.get(Fingerprint(1)).is_some());
+        assert!(store.get(Fingerprint(2)).is_none(), "LRU must go first");
+        assert!(store.get(Fingerprint(3)).is_some());
+    }
+
+    #[test]
+    fn rejected_entries_are_tiny_and_cacheable() {
+        let store = FactorStore::new(64);
+        store.get_or_insert_with(Fingerprint(9), || Cached::Rejected {
+            measured_rank: 57,
+        });
+        match store.get(Fingerprint(9)) {
+            Some(Cached::Rejected { measured_rank }) => {
+                assert_eq!(measured_rank, 57)
+            }
+            other => panic!("expected rejected entry, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_exact() {
+        let store = FactorStore::unbounded();
+        store.get_or_insert_with(Fingerprint(7), || cached_alibi(12));
+        store.get_or_insert_with(Fingerprint(8), || Cached::Rejected {
+            measured_rank: 33,
+        });
+        let path = std::env::temp_dir().join(format!(
+            "fb_store_unit_{}.json",
+            std::process::id()
+        ));
+        store.save(&path).expect("save");
+        let loaded = FactorStore::load(&path, usize::MAX).expect("load");
+        assert_eq!(loaded.len(), 2);
+        let orig = store.get(Fingerprint(7)).unwrap();
+        let back = loaded.get(Fingerprint(7)).unwrap();
+        let (of, bf) = (orig.factors().unwrap(), back.factors().unwrap());
+        assert_eq!(of.rank, bf.rank);
+        assert_eq!(of.phi_q.data(), bf.phi_q.data());
+        assert_eq!(of.phi_k.data(), bf.phi_k.data());
+        assert!(matches!(
+            loaded.get(Fingerprint(8)),
+            Some(Cached::Rejected { measured_rank: 33 })
+        ));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn save_skips_non_finite_entries_so_load_never_bricks() {
+        let store = FactorStore::unbounded();
+        store.insert(Fingerprint(1), cached_alibi(8));
+        store.insert(
+            Fingerprint(2),
+            Cached::Factors(Arc::new(Factors {
+                phi_q: Tensor::new(&[2, 1], vec![f32::NAN, 1.0]),
+                phi_k: Tensor::new(&[2, 1], vec![0.5, 2.0]),
+                rel_err: 0.0,
+                rank: 1,
+            })),
+        );
+        let path = std::env::temp_dir().join(format!(
+            "fb_store_nan_{}.json",
+            std::process::id()
+        ));
+        store.save(&path).expect("save");
+        let loaded =
+            FactorStore::load(&path, usize::MAX).expect("load succeeds");
+        assert_eq!(loaded.len(), 1, "NaN entry must be skipped");
+        assert!(loaded.get(Fingerprint(1)).is_some());
+        assert!(loaded.get(Fingerprint(2)).is_none());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn open_missing_path_starts_empty() {
+        let path = std::env::temp_dir().join(format!(
+            "fb_store_missing_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let store = FactorStore::open(&path, usize::MAX).expect("open");
+        assert!(store.is_empty());
+    }
+
+    #[test]
+    fn stats_snapshot_and_summary() {
+        let store = FactorStore::new(1 << 20);
+        store.get_or_insert_with(Fingerprint(1), || cached_alibi(8));
+        store.get_or_insert_with(Fingerprint(1), || cached_alibi(8));
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert!(s.bytes > 0);
+        assert!(s.summary().contains("hits=1"));
+        assert_eq!(s.to_json().get("misses").as_usize(), Some(1));
+    }
+}

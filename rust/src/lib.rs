@@ -35,6 +35,15 @@
 //!   factorizations (the raw material [`plan::BiasSpec`] wraps).
 //! * [`decompose`] — decomposition mechanisms (SVD / neural / low-rank +
 //!   sparse) the planner drives; returns typed errors, never panics.
+//!   Large tables at small rank take the randomized range-finder SVD
+//!   (Halko et al.) with the Jacobi kept as the reference oracle.
+//! * [`factorstore`] — **the amortization layer**: a thread-safe,
+//!   content-addressed factor store (byte-budget LRU, hit/miss/eviction
+//!   counters, jsonlite persistence). `Planner::plan_with_store` keys
+//!   SVD/neural outcomes by `BiasSpec::fingerprint()` + policy, so
+//!   repeated plans share factors with zero decomposition work; the
+//!   coordinator shares one store across its serving loop and the CLI
+//!   (`--store`, `warm`) persists it across processes.
 //! * [`kernels`] — **the compute spine**: the block-tiled,
 //!   multi-threaded streaming-softmax engine with per-tile
 //!   [`kernels::BiasTile`] providers (dense view / tile-local factor
@@ -64,6 +73,7 @@ pub mod tensor;
 pub mod linalg;
 pub mod bias;
 pub mod decompose;
+pub mod factorstore;
 pub mod attention;
 pub mod kernels;
 pub mod iomodel;

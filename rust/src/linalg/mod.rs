@@ -1,9 +1,18 @@
 //! Host-side linear algebra: one-sided Jacobi SVD, truncated SVD factors,
-//! singular-value energy spectra and rank-for-energy selection — the
-//! machinery behind the paper's Figures 6/8/9 and the SVD decomposition
-//! strategy (Table 1b).
+//! randomized range-finder SVD (Halko et al., *Finding Structure with
+//! Randomness*), singular-value energy spectra and rank-for-energy
+//! selection — the machinery behind the paper's Figures 6/8/9 and the
+//! SVD decomposition strategy (Table 1b).
+//!
+//! The Jacobi SVD is the exact reference oracle: O(N·M²) per sweep,
+//! fine for the modest tables the planner measures. For large tables at
+//! small target rank, [`randomized_svd`] sketches the range with a
+//! Gaussian projection and runs the Jacobi on an `(R+p) × M` projected
+//! matrix instead — O(N·M·(R+p)) — which `decompose` uses for the cold
+//! path of big factorizations.
 
 use crate::tensor::Tensor;
+use crate::util::Xoshiro256;
 
 /// Full SVD result: `a ≈ u · diag(s) · vᵀ` with `u: (n, k)`, `s: (k,)`,
 /// `v: (m, k)`, `k = min(n, m)`; singular values sorted descending.
@@ -32,11 +41,6 @@ pub fn svd(a: &Tensor) -> Svd {
     for i in 0..m {
         v[i * m + i] = 1.0;
     }
-    let col = |w: &Vec<f64>, j: usize| -> Vec<f64> {
-        (0..n).map(|i| w[i * m + j]).collect()
-    };
-    let _ = col; // (kept simple below; direct indexing)
-
     let eps = 1e-12f64;
     let max_sweeps = 30;
     for _sweep in 0..max_sweeps {
@@ -113,31 +117,125 @@ pub fn svd(a: &Tensor) -> Svd {
     }
 }
 
-/// Truncated SVD factor pair: bias ≈ φ_q φ_kᵀ with
-/// `φ_q = U_R √Σ_R (n × R)`, `φ_k = V_R √Σ_R (m × R)` — Table 1b.
-pub fn svd_factors(a: &Tensor, rank: usize) -> (Tensor, Tensor) {
-    let Svd { u, s, v } = svd(a);
-    let (n, m) = (a.shape()[0], a.shape()[1]);
-    let k = s.len();
-    let r = rank.min(k);
+/// Truncated factor pair from an already-computed SVD:
+/// `φ_q = U_R √Σ_R (n × R)`, `φ_k = V_R √Σ_R (m × R)` — the one place
+/// the Table 1b factor convention lives (the exact and randomized
+/// paths, and the planner's fused scan+truncate, all call this).
+pub fn factors_from_svd(d: &Svd, rank: usize) -> (Tensor, Tensor) {
+    let (n, m) = (d.u.shape()[0], d.v.shape()[0]);
+    let r = rank.min(d.s.len());
     let mut pq = vec![0.0f32; n * r];
     let mut pk = vec![0.0f32; m * r];
     for j in 0..r {
-        let root = s[j].max(0.0).sqrt();
+        let root = d.s[j].max(0.0).sqrt();
         for i in 0..n {
-            pq[i * r + j] = u.at2(i, j) * root;
+            pq[i * r + j] = d.u.at2(i, j) * root;
         }
         for i in 0..m {
-            pk[i * r + j] = v.at2(i, j) * root;
+            pk[i * r + j] = d.v.at2(i, j) * root;
         }
     }
     (Tensor::new(&[n, r], pq), Tensor::new(&[m, r], pk))
 }
 
-/// Cumulative squared-singular-value energy fractions (Remark 3.8).
-pub fn energy_spectrum(a: &Tensor) -> Vec<f64> {
-    let s = svd(a).s;
-    let energies: Vec<f64> = s.iter().map(|&x| (x as f64) * (x as f64)).collect();
+/// Truncated SVD factor pair: bias ≈ φ_q φ_kᵀ (Table 1b).
+pub fn svd_factors(a: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    factors_from_svd(&svd(a), rank)
+}
+
+/// Orthonormalize the columns of a 2-D tensor in place (modified
+/// Gram–Schmidt with f64 accumulation). Columns that become numerically
+/// zero are left as exact zeros — projections onto them contribute
+/// nothing downstream.
+pub fn orthonormalize_columns(t: &mut Tensor) {
+    assert_eq!(t.rank(), 2);
+    let (n, l) = (t.shape()[0], t.shape()[1]);
+    let data = t.data_mut();
+    for j in 0..l {
+        for p in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..n {
+                dot += data[i * l + p] as f64 * data[i * l + j] as f64;
+            }
+            for i in 0..n {
+                let proj = dot * data[i * l + p] as f64;
+                data[i * l + j] -= proj as f32;
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..n {
+            let x = data[i * l + j] as f64;
+            norm += x * x;
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-12 {
+            let inv = (1.0 / norm) as f32;
+            for i in 0..n {
+                data[i * l + j] *= inv;
+            }
+        } else {
+            for i in 0..n {
+                data[i * l + j] = 0.0;
+            }
+        }
+    }
+}
+
+/// Randomized range-finder truncated SVD (Halko–Martinsson–Tropp):
+/// sketch `Y = A·Ω` with a Gaussian `Ω (M × (rank+oversample))`,
+/// orthonormalize, optionally run `power_iters` subspace iterations
+/// (sharpens decaying spectra), then take the exact Jacobi SVD of the
+/// small projected matrix `B = QᵀA` and lift `U = Q·U_B`.
+///
+/// Returns `rank + oversample` (clamped to `min(N, M)`) components,
+/// sorted descending; truncate to `rank` for the Eckart–Young
+/// approximation. Cost is O(N·M·(rank+oversample)) per pass instead of
+/// the Jacobi's O(N·M²) — the fast cold path for large bias tables.
+/// Falls back to the exact [`svd`] when the sketch would be as wide as
+/// the matrix.
+pub fn randomized_svd(a: &Tensor, rank: usize, oversample: usize,
+                      power_iters: usize,
+                      rng: &mut Xoshiro256) -> Svd {
+    assert_eq!(a.rank(), 2);
+    let (n, m) = (a.shape()[0], a.shape()[1]);
+    let k = n.min(m);
+    let l = (rank + oversample).max(1).min(k);
+    if l >= k {
+        return svd(a);
+    }
+    let omega = Tensor::randn(&[m, l], 1.0, rng);
+    let mut q = a.matmul(&omega); // (n, l)
+    orthonormalize_columns(&mut q);
+    if power_iters > 0 {
+        let at = a.t();
+        for _ in 0..power_iters {
+            let mut z = at.matmul(&q); // (m, l)
+            orthonormalize_columns(&mut z);
+            q = a.matmul(&z); // (n, l)
+            orthonormalize_columns(&mut q);
+        }
+    }
+    let b = q.t().matmul(a); // (l, m), l < m
+    let Svd { u: ub, s, v } = svd(&b); // ub (l, l), v (m, l)
+    let u = q.matmul(&ub); // (n, l)
+    Svd { u, s, v }
+}
+
+/// Truncated factor pair from the randomized SVD, in the same
+/// `φ_q = U_R √Σ_R`, `φ_k = V_R √Σ_R` convention as [`svd_factors`].
+pub fn randomized_svd_factors(a: &Tensor, rank: usize, oversample: usize,
+                              power_iters: usize, rng: &mut Xoshiro256)
+                              -> (Tensor, Tensor) {
+    factors_from_svd(
+        &randomized_svd(a, rank, oversample, power_iters, rng),
+        rank,
+    )
+}
+
+/// Cumulative squared-singular-value energy fractions of a spectrum.
+pub fn spectrum_energy(s: &[f32]) -> Vec<f64> {
+    let energies: Vec<f64> =
+        s.iter().map(|&x| (x as f64) * (x as f64)).collect();
     let total: f64 = energies.iter().sum::<f64>().max(1e-300);
     let mut cum = 0.0;
     energies
@@ -149,10 +247,22 @@ pub fn energy_spectrum(a: &Tensor) -> Vec<f64> {
         .collect()
 }
 
+/// Cumulative squared-singular-value energy fractions (Remark 3.8).
+pub fn energy_spectrum(a: &Tensor) -> Vec<f64> {
+    spectrum_energy(&svd(a).s)
+}
+
+/// Smallest R keeping ≥ `target` energy, from an existing spectrum —
+/// lets callers that already hold an [`Svd`] scan and truncate with
+/// one decomposition instead of two.
+pub fn rank_for_energy_in(s: &[f32], target: f64) -> usize {
+    let cum = spectrum_energy(s);
+    cum.iter().position(|&c| c >= target).map_or(cum.len(), |p| p + 1)
+}
+
 /// Smallest R whose truncated SVD keeps ≥ `target` energy (Figure 8).
 pub fn rank_for_energy(a: &Tensor, target: f64) -> usize {
-    let cum = energy_spectrum(a);
-    cum.iter().position(|&c| c >= target).map_or(cum.len(), |p| p + 1)
+    rank_for_energy_in(&svd(a).s, target)
 }
 
 /// Numerical rank: #singular values above `tol * s_max`.
@@ -314,5 +424,71 @@ mod tests {
         let a = Tensor::zeros(&[6, 4]);
         let d = svd(&a);
         assert!(d.s.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn orthonormalize_columns_gives_orthonormal_basis() {
+        let mut rng = Xoshiro256::new(10);
+        let mut t = Tensor::randn(&[30, 6], 1.0, &mut rng);
+        orthonormalize_columns(&mut t);
+        let gram = t.t().matmul(&t);
+        assert!(gram.allclose(&Tensor::eye(6), 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn orthonormalize_zeroes_dependent_columns() {
+        // two identical columns: the second must collapse to zero
+        let t0 = Tensor::from_fn(&[8, 2], |ix| (ix[0] + 1) as f32);
+        let mut t = t0.clone();
+        orthonormalize_columns(&mut t);
+        for i in 0..8 {
+            assert_eq!(t.at2(i, 1), 0.0, "row {i}");
+        }
+    }
+
+    #[test]
+    fn randomized_svd_recovers_exact_lowrank() {
+        let mut rng = Xoshiro256::new(11);
+        let p = Tensor::randn(&[64, 4], 1.0, &mut rng);
+        let q = Tensor::randn(&[48, 4], 1.0, &mut rng);
+        let a = p.matmul_t(&q);
+        let (pq, pk) = randomized_svd_factors(&a, 4, 8, 2, &mut rng);
+        assert_eq!(pq.shape(), &[64, 4]);
+        assert_eq!(pk.shape(), &[48, 4]);
+        assert!(reconstruction_error(&a, &pq, &pk) < 1e-3);
+    }
+
+    #[test]
+    fn randomized_svd_matches_jacobi_on_decaying_spectrum() {
+        let mut rng = Xoshiro256::new(12);
+        // smooth + small noise: the Swin-like spectral profile
+        let base = Tensor::randn(&[60, 6], 1.0, &mut rng);
+        let a = base
+            .matmul_t(&base)
+            .add(&Tensor::randn(&[60, 60], 0.01, &mut rng));
+        for r in [2usize, 4, 6] {
+            let (pq, pk) = randomized_svd_factors(&a, r, 8, 2, &mut rng);
+            let rand_err = reconstruction_error(&a, &pq, &pk) as f64;
+            let (jq, jk) = svd_factors(&a, r);
+            let jacobi_err = reconstruction_error(&a, &jq, &jk) as f64;
+            // the sketch can't beat Eckart–Young; it must come close
+            assert!(rand_err + 1e-4 >= jacobi_err, "rank {r}");
+            assert!(
+                rand_err <= jacobi_err + 0.05,
+                "rank {r}: randomized {rand_err} vs jacobi {jacobi_err}"
+            );
+        }
+    }
+
+    #[test]
+    fn randomized_svd_wide_sketch_falls_back_exact() {
+        let mut rng = Xoshiro256::new(13);
+        let a = Tensor::randn(&[10, 8], 1.0, &mut rng);
+        // rank + oversample ≥ min dim → exact Jacobi result
+        let d = randomized_svd(&a, 6, 8, 0, &mut rng);
+        let exact = svd(&a);
+        for (x, y) in d.s.iter().zip(&exact.s) {
+            assert!((x - y).abs() < 1e-5);
+        }
     }
 }

@@ -26,10 +26,15 @@
 //! ```
 //!
 //! * [`BiasSpec`] — the whole bias zoo (closed-form, static learned,
-//!   dynamic, opaque dense) with uniform metadata.
+//!   dynamic, opaque dense) with uniform metadata, plus a content
+//!   [`BiasSpec::fingerprint`] for store addressing.
 //! * [`Planner`] — Table 1 decision procedure + the `iomodel` cost gate;
 //!   emits an [`AttentionPlan`] (mode = dense / factored / JIT, effective
 //!   rank, predicted HBM IO, factor storage).
+//!   [`Planner::plan_with_store`] amortizes the expensive rows (SVD,
+//!   neural fits) through a [`crate::factorstore::FactorStore`]: a
+//!   repeated plan for the same bias content is a cache hit sharing the
+//!   stored strips, with zero decomposition work.
 //! * [`Executor`] — one `execute(&plan, q, k, v)` call over three
 //!   backends: host reference, tiled simulator, PJRT runtime.
 //!

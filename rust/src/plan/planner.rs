@@ -18,12 +18,23 @@
 //! the Corollary I.2 threshold, the planner keeps the dense matrix. The
 //! emitted plan records the decision, the effective geometry, predicted
 //! HBM traffic for plan-vs-dense, and the factor storage bill (Thm 3.2).
+//!
+//! Decomposition work (SVD of a static table, a neural fit on token
+//! sources — the expensive Table 1b/1c rows) can be amortized through a
+//! [`FactorStore`]: [`Planner::plan_with_store`] keys the outcome by the
+//! spec's content fingerprint plus the decomposition policy, so a
+//! repeated plan for the same bias is a cache hit that shares the stored
+//! strips (`Arc`-shared, zero copies) and performs **no** SVD/neural
+//! work — the paper's "decompose offline once" cost model (Table 4).
+
+use std::sync::Arc;
 
 use crate::bias::ExactBias;
 use crate::decompose::{
-    decompose, DecomposeError, Factors, NeuralDecomposition, RankSelect,
-    Strategy,
+    decompose, uses_randomized_svd, DecomposeError, Factors, NeuralConfig,
+    NeuralDecomposition, RankSelect, Strategy,
 };
+use crate::factorstore::{Cached, FactorStore, Fingerprint, Fnv64};
 use crate::iomodel::{self, Geometry};
 use crate::linalg;
 use crate::simulator::Algorithm;
@@ -96,7 +107,10 @@ pub enum ExecMode {
     /// Stream the dense `(N, M)` matrix.
     Dense { bias: Tensor },
     /// Stream factor strips and fold them into the dot product (Eq. 3).
-    Factored { factors: Factors },
+    /// The strips sit behind an `Arc` so plans cloned across the serving
+    /// stack — and plans minted from a warm [`FactorStore`] — share one
+    /// copy of the factor data.
+    Factored { factors: Arc<Factors> },
     /// Generate the factor strips in-kernel from block coordinates —
     /// zero bias IO (Table 8).
     Jit { generator: JitBias },
@@ -280,6 +294,26 @@ impl Planner {
     /// rank of whatever mode it picks.
     pub fn plan(&self, spec: &BiasSpec, geo: &Geometry,
                 opts: &PlanOptions) -> Result<AttentionPlan, PlanError> {
+        self.plan_impl(spec, geo, opts, None)
+    }
+
+    /// [`Self::plan`], with SVD/neural decomposition amortized through a
+    /// [`FactorStore`]. Repeated plans for the same
+    /// [`BiasSpec::StaticLearned`] / [`BiasSpec::Dynamic`] /
+    /// [`BiasSpec::Dense`] content under the same policy are store hits:
+    /// they share the cached strips (`Arc`-pointer-equal across plans)
+    /// and perform no SVD, spectrum scan, or neural fit. Closed-form
+    /// biases are never stored — their factors cost O((N+M)·R) to
+    /// regenerate, cheaper than a lookup of the same size.
+    pub fn plan_with_store(&self, spec: &BiasSpec, geo: &Geometry,
+                           opts: &PlanOptions, store: &FactorStore)
+                           -> Result<AttentionPlan, PlanError> {
+        self.plan_impl(spec, geo, opts, Some(store))
+    }
+
+    fn plan_impl(&self, spec: &BiasSpec, geo: &Geometry,
+                 opts: &PlanOptions, store: Option<&FactorStore>)
+                 -> Result<AttentionPlan, PlanError> {
         if let Some((n, m)) = spec.shape() {
             if (n, m) != (geo.n, geo.m) {
                 return Err(PlanError::ShapeMismatch {
@@ -335,12 +369,12 @@ impl Planner {
                 } else {
                     0.0
                 };
-                let factors = Factors {
+                let factors = Arc::new(Factors {
                     phi_q,
                     phi_k,
                     rel_err,
                     rank,
-                };
+                });
                 self.emit(
                     ExecMode::Factored { factors },
                     Decision::Exact { rank },
@@ -352,7 +386,7 @@ impl Planner {
             }
             BiasSpec::StaticLearned { table }
             | BiasSpec::Dense { table } => {
-                self.plan_measured(spec, table, geo, opts)
+                self.plan_measured(spec, table, geo, opts, store)
             }
             BiasSpec::Dynamic {
                 sources_q,
@@ -363,58 +397,134 @@ impl Planner {
                 if let Some(r) = opts.rank_override {
                     cfg.rank = r;
                 }
-                let mut rng = Xoshiro256::new(cfg.seed);
-                let nd = NeuralDecomposition::fit(
-                    sources_q, sources_k, bias, &cfg, &mut rng,
-                );
-                let phi_q = nd.phi_q(sources_q);
-                let phi_k = nd.phi_k(sources_k);
-                let rel_err =
-                    linalg::reconstruction_error(bias, &phi_q, &phi_k);
-                let factors = Factors {
-                    phi_q,
-                    phi_k,
-                    rel_err,
-                    rank: cfg.rank,
+                let fit = || {
+                    let mut rng = Xoshiro256::new(cfg.seed);
+                    let nd = NeuralDecomposition::fit(
+                        sources_q, sources_k, bias, &cfg, &mut rng,
+                    );
+                    let phi_q = nd.phi_q(sources_q);
+                    let phi_k = nd.phi_k(sources_k);
+                    let rel_err =
+                        linalg::reconstruction_error(bias, &phi_q, &phi_k);
+                    Arc::new(Factors {
+                        phi_q,
+                        phi_k,
+                        rel_err,
+                        rank: cfg.rank,
+                    })
                 };
+                let factors = match store {
+                    Some(s) => {
+                        let key = neural_key(spec, &cfg);
+                        let cached = s.get_or_insert_with(key, || {
+                            Cached::Factors(fit())
+                        });
+                        match cached.factors() {
+                            Some(f) => f.clone(),
+                            // a neural key never stores a rejection;
+                            // refit defensively rather than panic
+                            None => fit(),
+                        }
+                    }
+                    None => fit(),
+                };
+                let (rank, rel_err) = (factors.rank, factors.rel_err);
                 self.emit(
                     ExecMode::Factored { factors },
-                    Decision::Neural {
-                        rank: cfg.rank,
-                        rel_err,
-                    },
+                    Decision::Neural { rank, rel_err },
                     spec,
                     geo,
                     opts,
-                    cfg.rank,
+                    rank,
                 )
             }
         }
     }
 
     /// Static-learned / opaque path: measure the spectral rank, apply the
-    /// §4.3 low-rank test, SVD or fall back to dense.
+    /// §4.3 low-rank test, SVD or fall back to dense. With a store, the
+    /// whole measure→decide→decompose step is keyed on the table's
+    /// content fingerprint + the SVD policy: a hit re-emits the cached
+    /// outcome (shared factors *or* the remembered rejection) without
+    /// touching the spectrum.
     fn plan_measured(&self, spec: &BiasSpec, table: &Tensor, geo: &Geometry,
-                     opts: &PlanOptions)
+                     opts: &PlanOptions, store: Option<&FactorStore>)
                      -> Result<AttentionPlan, PlanError> {
         let full_rank = geo.n.min(geo.m);
-        let measured =
-            linalg::rank_for_energy(table, self.config.energy_target);
         let limit = (full_rank as f64 * self.config.max_rank_fraction)
             .ceil() as usize;
-        let (rank, rank_ok) = match opts.rank_override {
-            Some(r) => (r, true),
-            None => (measured, measured <= limit),
+        let decompose_now = || {
+            let svd_at = |rank: usize| {
+                let mut rng = Xoshiro256::new(self.config.neural.seed);
+                Arc::new(
+                    decompose(table,
+                              &Strategy::Svd(RankSelect::Fixed(rank)),
+                              &mut rng)
+                        .expect("SVD strategy never errors")
+                        .expect("SVD always yields factors"),
+                )
+            };
+            match opts.rank_override {
+                // a pinned rank bypasses the fraction test, so skip the
+                // spectrum scan (itself a full SVD) entirely — and for
+                // large tables `decompose` takes the randomized path
+                Some(rank) => Cached::Factors(svd_at(rank)),
+                None => {
+                    // one Jacobi SVD serves both the spectrum scan and
+                    // the truncation (the cold path used to pay it
+                    // twice: rank_for_energy + svd_factors)
+                    let full = linalg::svd(table);
+                    let measured = linalg::rank_for_energy_in(
+                        &full.s,
+                        self.config.energy_target,
+                    );
+                    if measured <= limit {
+                        let (phi_q, phi_k) =
+                            linalg::factors_from_svd(&full, measured);
+                        let rel_err = linalg::reconstruction_error(
+                            table, &phi_q, &phi_k,
+                        );
+                        Cached::Factors(Arc::new(Factors {
+                            phi_q,
+                            phi_k,
+                            rel_err,
+                            rank: measured,
+                        }))
+                    } else {
+                        Cached::Rejected {
+                            measured_rank: measured,
+                        }
+                    }
+                }
+            }
         };
-        if !rank_ok {
-            return self.emit(
+        let cached = match store {
+            Some(s) => {
+                s.get_or_insert_with(svd_key(spec, &self.config, opts),
+                                     decompose_now)
+            }
+            None => decompose_now(),
+        };
+        match cached {
+            Cached::Factors(factors) => {
+                let (rank, rel_err) = (factors.rank, factors.rel_err);
+                self.emit(
+                    ExecMode::Factored { factors },
+                    Decision::Svd { rank, rel_err },
+                    spec,
+                    geo,
+                    opts,
+                    rank,
+                )
+            }
+            Cached::Rejected { measured_rank } => self.emit(
                 ExecMode::Dense {
                     bias: table.clone(),
                 },
                 Decision::DenseFallback {
-                    measured_rank: measured,
+                    measured_rank,
                     reason: format!(
-                        "rank@{:.3} = {measured} > limit {limit}",
+                        "rank@{:.3} = {measured_rank} > limit {limit}",
                         self.config.energy_target
                     ),
                 },
@@ -422,22 +532,8 @@ impl Planner {
                 geo,
                 opts,
                 0,
-            );
+            ),
         }
-        let mut rng = Xoshiro256::new(self.config.neural.seed);
-        let factors =
-            decompose(table, &Strategy::Svd(RankSelect::Fixed(rank)),
-                      &mut rng)?
-                .expect("SVD always yields factors");
-        let rel_err = factors.rel_err;
-        self.emit(
-            ExecMode::Factored { factors },
-            Decision::Svd { rank, rel_err },
-            spec,
-            geo,
-            opts,
-            rank,
-        )
     }
 
     /// Final cost-model gate + plan assembly. A factored/JIT candidate
@@ -542,6 +638,55 @@ impl Planner {
     }
 }
 
+/// Store key for the measured/SVD path: the spec's content fingerprint
+/// mixed with every policy knob that changes the outcome (energy target,
+/// rank fraction, rank override — and, when the randomized range finder
+/// can fire, the sketch seed). Distinct policies never alias.
+fn svd_key(spec: &BiasSpec, config: &SelectorConfig,
+           opts: &PlanOptions) -> Fingerprint {
+    let mut h = Fnv64::new();
+    h.write_str("svd");
+    h.write_u64(spec.fingerprint().as_u64());
+    match opts.rank_override {
+        Some(r) => {
+            // a pinned rank makes the energy/fraction knobs irrelevant
+            // — keying on them would split identical cached work
+            h.write_str("rank");
+            h.write_u64(r as u64);
+            // large tables at a pinned small rank decompose through the
+            // seeded randomized sketch: different seeds yield
+            // bit-different factors, so they must not share an entry
+            if let Some((n, m)) = spec.shape() {
+                if uses_randomized_svd(n, m, r) {
+                    h.write_u64(config.neural.seed);
+                }
+            }
+        }
+        None => {
+            h.write_str("energy");
+            h.write_u64(config.energy_target.to_bits());
+            h.write_u64(config.max_rank_fraction.to_bits());
+        }
+    }
+    h.finish()
+}
+
+/// Store key for the neural path: content fingerprint + the full fit
+/// configuration (a different seed or step budget is a different fit).
+fn neural_key(spec: &BiasSpec, cfg: &NeuralConfig) -> Fingerprint {
+    let mut h = Fnv64::new();
+    h.write_str("neural");
+    h.write_u64(spec.fingerprint().as_u64());
+    h.write_u64(cfg.rank as u64);
+    h.write_u64(cfg.hidden as u64);
+    h.write_u64(cfg.steps as u64);
+    h.write_u32(cfg.lr.to_bits());
+    h.write_u32(cfg.lr_decay.to_bits());
+    h.write_u64(cfg.lr_decay_every as u64);
+    h.write_u64(cfg.seed);
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -612,6 +757,63 @@ mod tests {
         assert!(matches!(plan.mode, ExecMode::NoBias));
         assert_eq!(plan.algorithm(), Algorithm::Flash);
         assert_eq!(plan.rank(), 0);
+    }
+
+    #[test]
+    fn store_hit_shares_factors_pointer_equal() {
+        use crate::factorstore::FactorStore;
+        let mut rng = Xoshiro256::new(5);
+        let a = Tensor::randn(&[32, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[32, 4], 1.0, &mut rng);
+        let spec = BiasSpec::static_learned(a.matmul_t(&b));
+        let store = FactorStore::unbounded();
+        let planner = Planner::default();
+        let opts = PlanOptions {
+            rank_override: Some(4),
+            ..PlanOptions::default()
+        };
+        let p1 = planner
+            .plan_with_store(&spec, &geo(32, 32), &opts, &store)
+            .unwrap();
+        let p2 = planner
+            .plan_with_store(&spec, &geo(32, 32), &opts, &store)
+            .unwrap();
+        assert_eq!(store.misses(), 1);
+        assert_eq!(store.hits(), 1);
+        match (&p1.mode, &p2.mode) {
+            (
+                ExecMode::Factored { factors: f1 },
+                ExecMode::Factored { factors: f2 },
+            ) => assert!(Arc::ptr_eq(f1, f2), "warm plan must share"),
+            other => panic!("expected factored plans, got {other:?}"),
+        }
+        // a different policy is a different key, not a stale hit
+        let p3 = planner
+            .plan_with_store(&spec, &geo(32, 32),
+                             &PlanOptions::default(), &store)
+            .unwrap();
+        assert_eq!(store.misses(), 2);
+        assert!(matches!(p3.decision, Decision::Svd { .. }));
+    }
+
+    #[test]
+    fn store_caches_dense_fallback_verdict() {
+        use crate::factorstore::FactorStore;
+        let mut rng = Xoshiro256::new(1);
+        let spec =
+            BiasSpec::dense(Tensor::randn(&[48, 48], 1.0, &mut rng));
+        let store = FactorStore::unbounded();
+        let planner = Planner::default();
+        for _ in 0..2 {
+            let plan = planner
+                .plan_with_store(&spec, &geo(48, 48),
+                                 &PlanOptions::default(), &store)
+                .unwrap();
+            assert!(matches!(plan.decision,
+                             Decision::DenseFallback { .. }));
+        }
+        assert_eq!(store.misses(), 1, "the rank scan must be cached too");
+        assert_eq!(store.hits(), 1);
     }
 
     #[test]

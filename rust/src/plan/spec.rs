@@ -9,6 +9,7 @@
 //! planner's job.
 
 use crate::bias::{Alibi, CosMultiplicative, ExactBias, SpatialDistance};
+use crate::factorstore::{Fingerprint, Fnv64};
 use crate::tensor::Tensor;
 
 /// One bias from the paper's zoo, in planner-consumable form.
@@ -149,6 +150,53 @@ impl BiasSpec {
         }
     }
 
+    /// Content fingerprint: kind + geometry + the exact bit patterns of
+    /// whatever data defines this bias (tables, token sources, slopes).
+    /// Two specs with the same fingerprint produce identical factors, so
+    /// the [`crate::factorstore::FactorStore`] can share one
+    /// decomposition between them; perturbing a single table entry by
+    /// one ulp changes the fingerprint.
+    ///
+    /// The fingerprint deliberately excludes planning *policy* (energy
+    /// target, rank override, neural config) — the planner mixes those
+    /// into its store keys itself, so one bias can coexist in the store
+    /// under several decomposition policies.
+    pub fn fingerprint(&self) -> Fingerprint {
+        let mut h = Fnv64::new();
+        h.write_str(self.kind());
+        if let Some((n, m)) = self.shape() {
+            h.write_u64(n as u64);
+            h.write_u64(m as u64);
+        }
+        match self {
+            BiasSpec::None | BiasSpec::CosMultiplicative { .. } => {}
+            BiasSpec::Alibi { slope, .. } => h.write_u32(slope.to_bits()),
+            BiasSpec::Spatial(s) => {
+                h.write_f32s(s.xq.data());
+                h.write_f32s(s.xk.data());
+                match &s.alpha {
+                    Some(a) => {
+                        h.write_str("alpha");
+                        h.write_f32s(a);
+                    }
+                    None => h.write_str("unweighted"),
+                }
+            }
+            BiasSpec::StaticLearned { table }
+            | BiasSpec::Dense { table } => h.write_f32s(table.data()),
+            BiasSpec::Dynamic {
+                sources_q,
+                sources_k,
+                bias,
+            } => {
+                h.write_f32s(sources_q.data());
+                h.write_f32s(sources_k.data());
+                h.write_f32s(bias.data());
+            }
+        }
+        h.finish()
+    }
+
     /// Materialize the dense `(N, M)` matrix. `None` only for
     /// [`BiasSpec::None`]. For closed-form biases this is O(NM) — the
     /// planner avoids calling it unless it must fall back to dense.
@@ -226,5 +274,44 @@ mod tests {
     fn none_spec_is_shapeless() {
         assert_eq!(BiasSpec::None.shape(), None);
         assert!(BiasSpec::None.materialize().is_none());
+    }
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let mut rng = Xoshiro256::new(11);
+        let t = Tensor::randn(&[12, 12], 1.0, &mut rng);
+        // same content → same key
+        assert_eq!(
+            BiasSpec::static_learned(t.clone()).fingerprint(),
+            BiasSpec::static_learned(t.clone()).fingerprint()
+        );
+        // same table, different kind → different key
+        assert_ne!(
+            BiasSpec::static_learned(t.clone()).fingerprint(),
+            BiasSpec::dense(t.clone()).fingerprint()
+        );
+        // one-element perturbation → different key
+        let mut t2 = t.clone();
+        t2.set2(3, 5, t2.at2(3, 5) + 1e-6);
+        assert_ne!(
+            BiasSpec::static_learned(t).fingerprint(),
+            BiasSpec::static_learned(t2).fingerprint()
+        );
+    }
+
+    #[test]
+    fn fingerprint_covers_geometry_and_params() {
+        assert_ne!(
+            BiasSpec::alibi(64, 64, 0.25).fingerprint(),
+            BiasSpec::alibi(64, 64, 0.5).fingerprint()
+        );
+        assert_ne!(
+            BiasSpec::alibi(64, 64, 0.25).fingerprint(),
+            BiasSpec::alibi(64, 128, 0.25).fingerprint()
+        );
+        assert_eq!(
+            BiasSpec::alibi(64, 64, 0.25).fingerprint(),
+            BiasSpec::alibi(64, 64, 0.25).fingerprint()
+        );
     }
 }

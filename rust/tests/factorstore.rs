@@ -1,0 +1,357 @@
+//! FactorStore integration: fingerprint stability, decompose-exactly-once
+//! under concurrency, byte-budget LRU, persistence round-trips, and the
+//! acceptance criterion of ISSUE 4 — a repeated `Planner` plan for the
+//! same `StaticLearned`/`Dynamic` content through the store performs
+//! zero SVD/neural work (hit counter increments, factors are shared).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use flashbias::bias::swin_relative_bias;
+use flashbias::decompose::NeuralConfig;
+use flashbias::factorstore::{Cached, FactorStore, Fingerprint};
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{
+    BiasSpec, Decision, ExecMode, PlanOptions, Planner, SelectorConfig,
+};
+use flashbias::tensor::Tensor;
+use flashbias::util::Xoshiro256;
+
+const SRAM: usize = 100 * 1024 / 2;
+
+fn geo(n: usize, m: usize) -> Geometry {
+    Geometry { n, m, c: 32, r: 0, sram: SRAM }
+}
+
+/// An exactly low-rank learned table (rank-`r` product plus a tiny
+/// full-rank tail) — the planner reliably lands on `Decision::Svd`.
+fn lowrank_table(n: usize, r: usize, seed: u64) -> Tensor {
+    let mut rng = Xoshiro256::new(seed);
+    let a = Tensor::randn(&[n, r], 1.0, &mut rng);
+    let b = Tensor::randn(&[n, r], 1.0, &mut rng);
+    a.matmul_t(&b).add(&Tensor::randn(&[n, n], 1e-4, &mut rng))
+}
+
+// ---------------------------------------------------------------------------
+// Fingerprints
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fingerprint_stable_across_clones_and_sensitive_to_content() {
+    let table = swin_relative_bias((8, 8), 1, 0, 6, 0.02).remove(0);
+    let a = BiasSpec::static_learned(table.clone());
+    let b = BiasSpec::static_learned(table.clone());
+    assert_eq!(a.fingerprint(), b.fingerprint());
+
+    // one-element perturbation → new key
+    let mut perturbed = table.clone();
+    perturbed.set2(2, 7, perturbed.at2(2, 7) + 1e-6);
+    assert_ne!(
+        a.fingerprint(),
+        BiasSpec::static_learned(perturbed).fingerprint()
+    );
+
+    // same table under a different kind → new key
+    assert_ne!(a.fingerprint(), BiasSpec::dense(table).fingerprint());
+}
+
+#[test]
+fn fingerprint_covers_dynamic_sources() {
+    let mut rng = Xoshiro256::new(3);
+    let xq = Tensor::randn(&[10, 2], 1.0, &mut rng);
+    let xk = Tensor::randn(&[12, 2], 1.0, &mut rng);
+    let bias = Tensor::randn(&[10, 12], 1.0, &mut rng);
+    let a = BiasSpec::dynamic(xq.clone(), xk.clone(), bias.clone());
+    let b = BiasSpec::dynamic(xq.clone(), xk.clone(), bias.clone());
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    let mut xq2 = xq.clone();
+    xq2.set2(0, 0, xq2.at2(0, 0) + 1e-6);
+    assert_ne!(
+        a.fingerprint(),
+        BiasSpec::dynamic(xq2, xk, bias).fingerprint()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Concurrency: decompose exactly once
+// ---------------------------------------------------------------------------
+
+#[test]
+fn concurrent_get_or_decompose_runs_exactly_once() {
+    let store = Arc::new(FactorStore::unbounded());
+    let calls = Arc::new(AtomicUsize::new(0));
+    let key = Fingerprint(0xDECAF);
+    let threads = 8;
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let store = store.clone();
+            let calls = calls.clone();
+            std::thread::spawn(move || {
+                store.get_or_insert_with(key, || {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    // hold the in-flight cell long enough that the
+                    // other threads genuinely contend on it
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(30),
+                    );
+                    let mut rng = Xoshiro256::new(1);
+                    let pq = Tensor::randn(&[16, 2], 1.0, &mut rng);
+                    let pk = Tensor::randn(&[16, 2], 1.0, &mut rng);
+                    Cached::Factors(Arc::new(
+                        flashbias::decompose::Factors {
+                            phi_q: pq,
+                            phi_k: pk,
+                            rel_err: 0.0,
+                            rank: 2,
+                        },
+                    ))
+                })
+            })
+        })
+        .collect();
+    let results: Vec<Cached> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(calls.load(Ordering::SeqCst), 1,
+               "decomposition must run exactly once");
+    assert_eq!(store.misses(), 1);
+    assert_eq!(store.hits(), threads as u64 - 1);
+    // everyone shares the same Arc
+    let first = results[0].factors().unwrap();
+    for r in &results[1..] {
+        assert!(Arc::ptr_eq(first, r.factors().unwrap()));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LRU eviction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lru_eviction_respects_byte_budget() {
+    // rank-1 strips on an (n, n) bias cost (n + n)·1·4 bytes
+    let entry = |n: usize| {
+        let mut rng = Xoshiro256::new(n as u64);
+        Cached::Factors(Arc::new(flashbias::decompose::Factors {
+            phi_q: Tensor::randn(&[n, 1], 1.0, &mut rng),
+            phi_k: Tensor::randn(&[n, 1], 1.0, &mut rng),
+            rel_err: 0.0,
+            rank: 1,
+        }))
+    };
+    // each entry: 32·4 = 128 bytes; budget holds two
+    let store = FactorStore::new(300);
+    store.get_or_insert_with(Fingerprint(1), || entry(16));
+    store.get_or_insert_with(Fingerprint(2), || entry(16));
+    assert_eq!(store.len(), 2);
+    assert_eq!(store.total_bytes(), 256);
+    // touch 1 → 2 becomes the LRU victim of the next insert
+    assert!(store.get(Fingerprint(1)).is_some());
+    store.get_or_insert_with(Fingerprint(3), || entry(16));
+    assert!(store.total_bytes() <= 300);
+    assert_eq!(store.evictions(), 1);
+    assert!(store.get(Fingerprint(2)).is_none(), "LRU evicted");
+    assert!(store.get(Fingerprint(1)).is_some());
+    assert!(store.get(Fingerprint(3)).is_some());
+    // an evicted key decomposes again on next demand
+    store.get_or_insert_with(Fingerprint(2), || entry(16));
+    assert!(store.get(Fingerprint(2)).is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Persistence: save → load → plan round-trips identical factors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn save_load_plan_roundtrips_identical_factors() {
+    let n = 48;
+    let spec = BiasSpec::static_learned(lowrank_table(n, 5, 42));
+    let planner = Planner::default();
+    let opts = PlanOptions::default();
+
+    let store = FactorStore::unbounded();
+    let plan_cold = planner
+        .plan_with_store(&spec, &geo(n, n), &opts, &store)
+        .expect("cold plan");
+    let cold = match &plan_cold.mode {
+        ExecMode::Factored { factors } => factors.clone(),
+        other => panic!("expected SVD plan, got {other:?}"),
+    };
+
+    let path = std::env::temp_dir().join(format!(
+        "fb_roundtrip_{}.json",
+        std::process::id()
+    ));
+    store.save(&path).expect("save");
+    let loaded =
+        FactorStore::load(&path, usize::MAX).expect("load store");
+    let _ = std::fs::remove_file(&path);
+
+    let plan_warm = planner
+        .plan_with_store(&spec, &geo(n, n), &opts, &loaded)
+        .expect("warm plan");
+    assert_eq!(loaded.hits(), 1, "loaded store must hit");
+    assert_eq!(loaded.misses(), 0);
+    match &plan_warm.mode {
+        ExecMode::Factored { factors } => {
+            assert_eq!(factors.rank, cold.rank);
+            assert_eq!(factors.phi_q.data(), cold.phi_q.data(),
+                       "φ_q must round-trip exactly");
+            assert_eq!(factors.phi_k.data(), cold.phi_k.data(),
+                       "φ_k must round-trip exactly");
+            assert_eq!(factors.rel_err, cold.rel_err);
+        }
+        other => panic!("expected SVD plan, got {other:?}"),
+    }
+    match (&plan_cold.decision, &plan_warm.decision) {
+        (
+            Decision::Svd { rank: r1, rel_err: e1 },
+            Decision::Svd { rank: r2, rel_err: e2 },
+        ) => {
+            assert_eq!(r1, r2);
+            assert_eq!(e1, e2);
+        }
+        other => panic!("expected matching SVD decisions: {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: warm plans do zero decomposition work and share factors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_static_plan_is_pointer_equal_to_stored_factors() {
+    let n = 40;
+    let spec = BiasSpec::static_learned(lowrank_table(n, 4, 7));
+    let store = FactorStore::unbounded();
+    let planner = Planner::default();
+    let opts = PlanOptions::default();
+    let p1 = planner
+        .plan_with_store(&spec, &geo(n, n), &opts, &store)
+        .unwrap();
+    assert_eq!((store.misses(), store.hits()), (1, 0));
+    let p2 = planner
+        .plan_with_store(&spec, &geo(n, n), &opts, &store)
+        .unwrap();
+    assert_eq!((store.misses(), store.hits()), (1, 1),
+               "second plan must be a pure hit");
+    let (f1, f2) = match (&p1.mode, &p2.mode) {
+        (
+            ExecMode::Factored { factors: f1 },
+            ExecMode::Factored { factors: f2 },
+        ) => (f1, f2),
+        other => panic!("expected factored plans, got {other:?}"),
+    };
+    assert!(Arc::ptr_eq(f1, f2),
+            "warm plan must share the stored factor allocation");
+}
+
+#[test]
+fn warm_dynamic_plan_skips_the_neural_fit() {
+    let n = 24;
+    let x = Tensor::from_fn(&[n, 2], |ix| {
+        let t = ix[0] as f32 / n as f32;
+        if ix[1] == 0 { (6.28 * t).sin() } else { t }
+    });
+    let target = x.matmul_t(&x).map(|v| v.tanh());
+    let spec = BiasSpec::dynamic(x.clone(), x, target);
+    let planner = Planner::new(SelectorConfig {
+        neural: NeuralConfig {
+            rank: 4,
+            hidden: 12,
+            steps: 60,
+            lr: 5e-3,
+            ..NeuralConfig::default()
+        },
+        ..SelectorConfig::default()
+    });
+    let store = FactorStore::unbounded();
+    let geometry = Geometry { n, m: n, c: 16, r: 0, sram: SRAM };
+    let opts = PlanOptions::default();
+    let p1 = planner
+        .plan_with_store(&spec, &geometry, &opts, &store)
+        .unwrap();
+    let p2 = planner
+        .plan_with_store(&spec, &geometry, &opts, &store)
+        .unwrap();
+    assert_eq!((store.misses(), store.hits()), (1, 1));
+    assert!(matches!(p2.decision, Decision::Neural { rank: 4, .. }));
+    match (&p1.mode, &p2.mode) {
+        (
+            ExecMode::Factored { factors: f1 },
+            ExecMode::Factored { factors: f2 },
+        ) => assert!(Arc::ptr_eq(f1, f2)),
+        other => panic!("expected factored plans, got {other:?}"),
+    }
+}
+
+#[test]
+fn store_plans_execute_identically_to_storeless_plans() {
+    // the store must be an invisible optimization: same plan, same math
+    let n = 32;
+    let spec = BiasSpec::static_learned(lowrank_table(n, 3, 9));
+    let planner = Planner::default();
+    let opts = PlanOptions::default();
+    let store = FactorStore::unbounded();
+    let direct = planner.plan(&spec, &geo(n, n), &opts).unwrap();
+    // plan twice so the executed plan is the warm (shared-factor) one
+    planner
+        .plan_with_store(&spec, &geo(n, n), &opts, &store)
+        .unwrap();
+    let warm = planner
+        .plan_with_store(&spec, &geo(n, n), &opts, &store)
+        .unwrap();
+    let mut rng = Xoshiro256::new(11);
+    let q = Tensor::randn(&[n, 32], 1.0, &mut rng);
+    let k = Tensor::randn(&[n, 32], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, 32], 1.0, &mut rng);
+    let out_direct =
+        flashbias::plan::execute(&direct, &q, &k, &v).unwrap();
+    let out_warm = flashbias::plan::execute(&warm, &q, &k, &v).unwrap();
+    assert!(out_warm.allclose(&out_direct, 0.0, 0.0),
+            "store-backed execution must be bit-identical");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator: one store shared across the serving loop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn coordinator_plan_and_register_shares_the_store() {
+    use flashbias::coordinator::{Coordinator, CoordinatorConfig};
+    use flashbias::runtime::Runtime;
+
+    let store = Arc::new(FactorStore::unbounded());
+    let coord = Coordinator::with_store(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig::default(),
+        store.clone(),
+    );
+    let n = 36;
+    let spec = BiasSpec::static_learned(lowrank_table(n, 4, 13));
+    let planner = Planner::default();
+    let opts = PlanOptions::default();
+    coord
+        .plan_and_register("swin_a", &planner, &spec, &geo(n, n), &opts)
+        .expect("register a");
+    coord
+        .plan_and_register("swin_b", &planner, &spec, &geo(n, n), &opts)
+        .expect("register b");
+    assert_eq!(store.misses(), 1,
+               "two registrations of one bias decompose once");
+    assert_eq!(store.hits(), 1);
+    let (pa, pb) = (
+        coord.host_plans().get("swin_a").unwrap(),
+        coord.host_plans().get("swin_b").unwrap(),
+    );
+    match (&pa.mode, &pb.mode) {
+        (
+            ExecMode::Factored { factors: f1 },
+            ExecMode::Factored { factors: f2 },
+        ) => assert!(Arc::ptr_eq(f1, f2),
+                     "registered plans share factor storage"),
+        other => panic!("expected factored plans, got {other:?}"),
+    }
+    // the coordinator's metrics expose the store counters
+    assert!(coord.metrics().summary().contains("store: hits=1"));
+    coord.shutdown();
+}

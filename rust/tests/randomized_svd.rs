@@ -1,0 +1,116 @@
+//! Randomized range-finder SVD vs the Jacobi reference oracle: across
+//! random shapes and target ranks, the sketch's reconstruction error
+//! must sit within the Eckart–Young optimum plus a small tolerance —
+//! and it can never beat the optimum.
+
+use flashbias::linalg::{
+    eckart_young_error, randomized_svd_factors, reconstruction_error,
+    svd_factors,
+};
+use flashbias::proplite::{forall, gen_dim, Config};
+use flashbias::tensor::Tensor;
+use flashbias::util::Xoshiro256;
+
+#[derive(Clone, Debug)]
+struct Case {
+    n: usize,
+    m: usize,
+    /// intrinsic rank of the synthetic table
+    r0: usize,
+    /// target truncation rank
+    rank: usize,
+    noise: f32,
+    seed: u64,
+}
+
+fn shrink_case(c: &Case) -> Vec<Case> {
+    let mut out = Vec::new();
+    for (n, m) in [(c.n / 2, c.m), (c.n, c.m / 2)] {
+        if n >= 12 && m >= 12 {
+            out.push(Case { n, m, ..c.clone() });
+        }
+    }
+    if c.rank > 1 {
+        out.push(Case { rank: c.rank / 2, ..c.clone() });
+    }
+    out
+}
+
+/// Low-rank-plus-noise table: the spectral shape of learned biases
+/// (Figure 8) at test-friendly sizes.
+fn synthetic_table(c: &Case) -> Tensor {
+    let mut rng = Xoshiro256::new(c.seed);
+    let a = Tensor::randn(&[c.n, c.r0], 1.0, &mut rng);
+    let b = Tensor::randn(&[c.m, c.r0], 1.0, &mut rng);
+    a.matmul_t(&b)
+        .add(&Tensor::randn(&[c.n, c.m], c.noise, &mut rng))
+}
+
+fn randomized_within_eckart_young(case: &Case) -> bool {
+    let table = synthetic_table(case);
+    let mut rng = Xoshiro256::new(case.seed ^ 0xABCD);
+    let (pq, pk) =
+        randomized_svd_factors(&table, case.rank, 8, 2, &mut rng);
+    let err = reconstruction_error(&table, &pq, &pk) as f64;
+    let optimum = eckart_young_error(&table, case.rank);
+    // can't beat the optimum (up to f32/f64 spectrum jitter, ~5e-3 per
+    // the eckart_young_matches_actual_truncation unit test), and must
+    // come close to it
+    err + 0.01 >= optimum && err <= optimum + 0.05
+}
+
+#[test]
+fn prop_randomized_svd_tracks_eckart_young_bound() {
+    forall(
+        Config::default().cases(15).seed(0xA11CE),
+        |rng| Case {
+            n: gen_dim(rng, 16, 72),
+            m: gen_dim(rng, 16, 72),
+            r0: gen_dim(rng, 2, 6),
+            rank: gen_dim(rng, 1, 8),
+            noise: 0.01,
+            seed: rng.next_u64(),
+        },
+        shrink_case,
+        randomized_within_eckart_young,
+    );
+}
+
+#[test]
+fn prop_randomized_matches_jacobi_at_intrinsic_rank() {
+    // truncating AT the intrinsic rank: both factorizations recover the
+    // table up to the injected noise floor
+    forall(
+        Config::default().cases(10).seed(0xB0B),
+        |rng| Case {
+            n: gen_dim(rng, 20, 64),
+            m: gen_dim(rng, 20, 64),
+            r0: gen_dim(rng, 2, 5),
+            rank: 0, // overwritten below
+            noise: 0.0,
+            seed: rng.next_u64(),
+        },
+        |_| Vec::new(),
+        |case| {
+            let case = Case { rank: case.r0, ..case.clone() };
+            let table = synthetic_table(&case);
+            let mut rng = Xoshiro256::new(case.seed ^ 0x5EED);
+            let (pq, pk) =
+                randomized_svd_factors(&table, case.rank, 8, 2,
+                                       &mut rng);
+            let (jq, jk) = svd_factors(&table, case.rank);
+            let rand_err = reconstruction_error(&table, &pq, &pk);
+            let jacobi_err = reconstruction_error(&table, &jq, &jk);
+            rand_err < 1e-3 && jacobi_err < 1e-3
+        },
+    );
+}
+
+#[test]
+fn randomized_factor_shapes_match_contract() {
+    let mut rng = Xoshiro256::new(4);
+    let a = Tensor::randn(&[40, 28], 1.0, &mut rng);
+    let (pq, pk) = randomized_svd_factors(&a, 5, 8, 1, &mut rng);
+    assert_eq!(pq.shape(), &[40, 5]);
+    assert_eq!(pk.shape(), &[28, 5]);
+}
