@@ -23,8 +23,10 @@ bench:
 	$(CARGO) bench
 
 # Machine-readable bench output: runs the kernel-engine bench and the
-# factorstore (cold-vs-warm plan latency) bench, dropping
-# BENCH_kernels.json and BENCH_factorstore.json at the workspace root.
+# factorstore benches (cold-vs-warm plan latency, plus plan latency by
+# store tier: resident vs spill vs remote vs cold SVD), dropping
+# BENCH_kernels.json, BENCH_factorstore.json and BENCH_store_tiers.json
+# at the workspace root.
 bench-json:
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench serving_overhead

@@ -48,6 +48,9 @@ fn serve_variant(rt: &Arc<Runtime>, variant: &str) -> anyhow::Result<()> {
     let mut rng = Xoshiro256::new(7);
     let t0 = Instant::now();
     let mut submitted = 0usize;
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    let mut exec_total = Duration::ZERO;
     for _ in 0..REQUESTS {
         let want_n = 1 + rng.next_below(max_n as u64) as usize;
         let (artifact, bucket) = router.route(&key, want_n).unwrap();
@@ -63,29 +66,41 @@ fn serve_variant(rt: &Arc<Runtime>, variant: &str) -> anyhow::Result<()> {
             }
         }
         let _ = bucket;
-        loop {
-            match coord.submit(artifact, inputs.clone()) {
-                Ok(_) => break,
-                Err(_) => {
-                    // backpressure: drain one response and retry
-                    let _ = coord.recv_timeout(Duration::from_millis(100));
+        // bounded backpressure retry; responses drained while waiting
+        // still count toward completion (and a non-retryable error —
+        // unknown artifact, stopped pool — propagates instead of
+        // spinning forever)
+        flashbias::server::submit_with_retry(
+            &mut coord,
+            artifact,
+            inputs,
+            |resp| {
+                match &resp.outputs {
+                    Ok(_) => exec_total += resp.exec_time,
+                    Err(_) => failed += 1,
                 }
-            }
-        }
+                completed += 1;
+            },
+        )?;
         submitted += 1;
     }
     coord.flush_all()?;
-    let mut completed = 0usize;
-    let mut exec_total = Duration::ZERO;
     while completed < submitted {
         match coord.recv_timeout(Duration::from_secs(120)) {
             Some(resp) => {
-                resp.outputs?;
-                exec_total += resp.exec_time;
+                // same accounting as the drain path above: record the
+                // failure, keep draining, report after
+                match &resp.outputs {
+                    Ok(_) => exec_total += resp.exec_time,
+                    Err(_) => failed += 1,
+                }
                 completed += 1;
             }
             None => anyhow::bail!("serve loop stalled"),
         }
+    }
+    if failed > 0 {
+        anyhow::bail!("{failed} of {submitted} requests failed");
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = coord.metrics();

@@ -1,11 +1,15 @@
-//! L3 perf bench (EXPERIMENTS.md §Perf), two sections:
+//! L3 perf bench (EXPERIMENTS.md §Perf), three sections:
 //!
 //! 1. **Plan-time amortization** (no artifacts needed): per-request plan
 //!    latency for a Swin-style learned bias, cold (SVD every request)
 //!    vs warm (FactorStore hit), through the same planner the serving
 //!    stack uses — plus a host-plan serving burst on a coordinator that
 //!    shares the store. Writes `BENCH_factorstore.json`.
-//! 2. **Coordinator overhead over raw PJRT execution** — router +
+//! 2. **Store tiers** (no artifacts needed): plan latency by the tier
+//!    that supplies the factors — resident hit vs spill-file reload vs
+//!    remote fetch from a loopback `FactorService` vs a cold full SVD.
+//!    Writes `BENCH_store_tiers.json`.
+//! 3. **Coordinator overhead over raw PJRT execution** — router +
 //!    batcher + channel + thread hop must cost <10% of execute time,
 //!    per the DESIGN.md target. Skipped gracefully without artifacts.
 //!
@@ -23,7 +27,7 @@ use flashbias::bias::swin_relative_bias;
 use flashbias::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig,
 };
-use flashbias::factorstore::FactorStore;
+use flashbias::factorstore::{FactorService, FactorStore, RemoteStore};
 use flashbias::iomodel::Geometry;
 use flashbias::plan::{BiasSpec, PlanOptions, Planner};
 use flashbias::runtime::{HostValue, Runtime};
@@ -115,6 +119,118 @@ fn bench_factorstore(it: usize) {
         .expect("write BENCH_factorstore.json");
 }
 
+/// Plan latency by the tier that supplies the factors (ISSUE 5
+/// acceptance): a budgeted store under eviction pressure must serve
+/// spill hits — never a repeated SVD — and a store pointed at a peer's
+/// `FactorService` must plan with zero local SVD work.
+fn bench_store_tiers(it: usize) {
+    println!("\nSTORE TIERS: plan latency by serving tier");
+    // two distinct swin heads so an LRU budget sized for one entry
+    // alternates them through the spill tier
+    let table_a = swin_relative_bias((12, 12), 1, 0, 6, 0.02).remove(0);
+    let table_b = swin_relative_bias((12, 12), 1, 1, 6, 0.02).remove(0);
+    let spec_a = BiasSpec::static_learned(table_a);
+    let spec_b = BiasSpec::static_learned(table_b);
+    let geo = Geometry::square(144, 64, 0, 100 * 1024 / 2);
+    let opts = PlanOptions {
+        rank_override: Some(16), // the paper pins R = 16 for Swin
+        ..PlanOptions::default()
+    };
+    let planner = Planner::default();
+    let mut out =
+        Table::new("store tiers: plan latency (swin 144x144, R=16)");
+
+    // cold: the full SVD on every plan (what a storeless fleet pays)
+    out.row(bench_fn("cold plan (full SVD)", 1, it, || {
+        let plan = planner.plan(&spec_a, &geo, &opts).expect("plan");
+        assert_eq!(plan.rank(), 16);
+    }));
+
+    // resident hit: warm store, zero decomposition work
+    let resident = FactorStore::unbounded();
+    planner
+        .plan_with_store(&spec_a, &geo, &opts, &resident)
+        .expect("warm");
+    out.row(bench_fn("resident hit", 1, it, || {
+        planner
+            .plan_with_store(&spec_a, &geo, &opts, &resident)
+            .expect("plan");
+    }));
+
+    // spill hit: the budget holds one entry's strips, so planning A
+    // and B alternately reloads each from the spill file every time —
+    // one disk read per plan, and misses stays at the initial 2
+    let strips_bytes: usize = (144 + 144) * 16 * 4;
+    let spill_path = std::env::temp_dir().join(format!(
+        "fb_bench_spill_{}.jsonl",
+        std::process::id()
+    ));
+    let spilling = FactorStore::new(strips_bytes + 64)
+        .spill_to(&spill_path)
+        .expect("spill file");
+    planner
+        .plan_with_store(&spec_a, &geo, &opts, &spilling)
+        .expect("warm a");
+    planner
+        .plan_with_store(&spec_b, &geo, &opts, &spilling)
+        .expect("warm b");
+    // warming left b resident and a spilled: start with a so every
+    // sample (including the very first) crosses the spill tier
+    let mut flip = true;
+    out.row(bench_fn("spill hit (reload from disk)", 2, it, || {
+        let spec = if flip { &spec_a } else { &spec_b };
+        flip = !flip;
+        planner
+            .plan_with_store(spec, &geo, &opts, &spilling)
+            .expect("plan");
+    }));
+    assert_eq!(
+        spilling.misses(),
+        2,
+        "eviction pressure must never re-run a decomposition"
+    );
+    println!("  {}", spilling.stats().summary());
+
+    // remote hit: a fresh store per plan fetches from a loopback
+    // FactorService instead of decomposing (the fleet-warming path)
+    let leader = Arc::new(FactorStore::unbounded());
+    planner
+        .plan_with_store(&spec_a, &geo, &opts, &leader)
+        .expect("warm leader");
+    let service = FactorService::serve(leader, "127.0.0.1:0")
+        .expect("factor service");
+    let addr = service.addr().to_string();
+    out.row(bench_fn("remote hit (loopback fetch)", 1, it, || {
+        let follower = FactorStore::unbounded()
+            .with_remote(RemoteStore::new(addr.clone()));
+        let plan = planner
+            .plan_with_store(&spec_a, &geo, &opts, &follower)
+            .expect("plan");
+        assert_eq!(plan.rank(), 16);
+        assert_eq!(follower.misses(), 0, "no SVD work on the follower");
+        assert_eq!(follower.remote_hits(), 1);
+    }));
+    println!("  factor service served {} lookups", service.served());
+    service.shutdown();
+    let _ = std::fs::remove_file(&spill_path);
+
+    let mean = |i: usize| out.rows()[i].stats.mean();
+    let (cold, res, spill, rem) = (mean(0), mean(1), mean(2), mean(3));
+    println!(
+        "  cold {} | resident {} ({:.0}x) | spill {} ({:.0}x) | \
+         remote {} ({:.0}x)",
+        human_secs(cold),
+        human_secs(res),
+        cold / res.max(1e-12),
+        human_secs(spill),
+        cold / spill.max(1e-12),
+        human_secs(rem),
+        cold / rem.max(1e-12),
+    );
+    out.write_json("store_tiers")
+        .expect("write BENCH_store_tiers.json");
+}
+
 fn bench_pjrt_overhead(it: usize) {
     println!("\nSERVING OVERHEAD: coordinator vs raw PJRT");
     let rt = match Runtime::open_default() {
@@ -176,5 +292,6 @@ fn bench_pjrt_overhead(it: usize) {
 fn main() {
     let it = iters(20);
     bench_factorstore(it);
+    bench_store_tiers(it);
     bench_pjrt_overhead(it);
 }

@@ -105,6 +105,21 @@ impl DynamicBatcher {
             .collect()
     }
 
+    /// Return a flushed batch's requests to the *front* of their bucket
+    /// — dispatch refused it, so the next flush re-emits them first,
+    /// preserving submission order. The bucket may transiently exceed
+    /// `max_batch`; the oversized flush that follows is legal (workers
+    /// take batches of any size).
+    pub fn unflush(&mut self, batch: Batch) {
+        if batch.requests.is_empty() {
+            return;
+        }
+        let queue = self.pending.entry(batch.artifact).or_default();
+        let mut requests = batch.requests;
+        requests.append(queue);
+        *queue = requests;
+    }
+
     fn take_bucket(&mut self, key: &str) -> Option<Batch> {
         let queue = self.pending.get_mut(key)?;
         if queue.is_empty() {
@@ -183,6 +198,25 @@ mod tests {
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].artifact, "a");
         assert_eq!(b.pending_len(), 1);
+    }
+
+    #[test]
+    fn unflush_requeues_at_the_front() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+        });
+        b.push(req(0, "a"));
+        let batch = b.push(req(1, "a")).expect("flushes");
+        b.push(req(2, "a"));
+        // dispatch refused the batch: put it back, order preserved
+        b.unflush(batch);
+        assert_eq!(b.pending_len(), 3);
+        let batch = b.flush_all().pop().expect("one bucket");
+        assert_eq!(
+            batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Serving metrics: counters + latency distributions for each pipeline
 //! stage, safe to share across worker threads. When a
 //! [`FactorStore`] is attached (every coordinator does this), its
-//! hit/miss/eviction counters ride along in [`Metrics::summary`] and
-//! [`Metrics::to_json`], so plan-time amortization is observable next
-//! to the latency distributions it buys.
+//! tier counters — hits, misses, evictions, spill hits, remote hits —
+//! ride along in [`Metrics::summary`] and [`Metrics::to_json`], so
+//! plan-time amortization (and which tier supplied it) is observable
+//! next to the latency distributions it buys.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -186,8 +187,14 @@ mod tests {
         let s = m.store_stats().expect("attached");
         assert_eq!((s.hits, s.misses), (1, 1));
         assert!(m.summary().contains("store: hits=1"));
+        assert!(m.summary().contains("spill_hits=0"));
         let j = m.to_json();
         assert_eq!(j.get("store").get("hits").as_usize(), Some(1));
+        // the tier counters ride along for dashboards
+        assert_eq!(j.get("store").get("spill_hits").as_usize(), Some(0));
+        assert_eq!(j.get("store").get("remote_hits").as_usize(),
+                   Some(0));
+        assert_eq!(j.get("store").get("spilled").as_usize(), Some(0));
     }
 
     #[test]

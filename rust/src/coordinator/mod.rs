@@ -13,13 +13,17 @@
 //!   call** for plans in the [`HostPlanRegistry`]; bounded queues give
 //!   backpressure.
 //! * [`metrics`] — latency/throughput counters for every stage,
-//!   including the shared factor store's hit/miss/eviction counters.
+//!   including the shared factor store's tier counters (hits, misses,
+//!   evictions, spill hits, remote hits).
 //!
 //! Decomposition-strategy selection is the [`crate::plan::Planner`]
 //! (re-exported here as [`StrategySelector`] for the serving layer);
 //! every coordinator owns a [`FactorStore`] shared across its serving
 //! loop, so [`Coordinator::plan_and_register`] amortizes SVD/neural
-//! decomposition across repeated plans and worker threads.
+//! decomposition across repeated plans and worker threads. The store
+//! can be tiered: a byte budget spills evictions to disk, and
+//! [`Coordinator::serve_store`] exports it over TCP so a fleet of
+//! coordinators warms from one decomposition.
 
 pub mod batcher;
 pub mod metrics;
@@ -34,7 +38,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
-use crate::factorstore::FactorStore;
+use crate::factorstore::{FactorService, FactorStore};
 use crate::iomodel::Geometry;
 use crate::plan::{AttentionPlan, BiasSpec, PlanOptions, Planner};
 use crate::runtime::{HostValue, Runtime};
@@ -42,6 +46,7 @@ use crate::runtime::{HostValue, Runtime};
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use router::{RouteKey, Router};
+pub use worker::DispatchError;
 // the serving-layer aliases for the Table 1 policy object (the old
 // `selector` module shim, folded in here)
 pub use crate::plan::{Planner as StrategySelector, SelectorConfig};
@@ -79,6 +84,45 @@ impl HostPlanRegistry {
         self.plans.read().unwrap().keys().cloned().collect()
     }
 }
+
+/// Why [`Coordinator::try_submit`] refused a request. Only
+/// [`SubmitError::Backpressure`] is retryable — drain a response and
+/// resubmit; anything else must be propagated, not spun on.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Not in the PJRT manifest or the host-plan registry.
+    UnknownArtifact(String),
+    /// The dispatch queue is full; the request was NOT accepted (no
+    /// request is ever silently dropped) and its `inputs` ride back so
+    /// the caller retries by moving them, not by pre-cloning every
+    /// submit on the hot path. Drain a response, retry.
+    Backpressure { inputs: Vec<HostValue> },
+    /// The worker pool has stopped.
+    Stopped,
+}
+
+impl SubmitError {
+    /// The one refusal worth retrying.
+    pub fn is_backpressure(&self) -> bool {
+        matches!(self, SubmitError::Backpressure { .. })
+    }
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownArtifact(name) => {
+                write!(f, "unknown artifact {name}")
+            }
+            SubmitError::Backpressure { .. } => {
+                write!(f, "dispatch queue full (backpressure)")
+            }
+            SubmitError::Stopped => write!(f, "worker pool stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A unit of work: run `artifact` on `inputs`.
 #[derive(Debug)]
@@ -181,6 +225,16 @@ impl Coordinator {
         &self.store
     }
 
+    /// Serve this coordinator's factor store to the fleet: peers that
+    /// attach a [`crate::factorstore::RemoteStore`] pointed at the
+    /// returned service's address plan shared biases with zero SVD
+    /// work (`remote_hits` instead of `misses`). Bind `"host:0"` for
+    /// an ephemeral port.
+    pub fn serve_store(&self, addr: impl std::net::ToSocketAddrs)
+                       -> Result<FactorService> {
+        FactorService::serve(self.store.clone(), addr)
+    }
+
     /// Plan `spec` through the shared factor store and register the
     /// result as a host plan under `name` — the serving-layer entry to
     /// amortized decomposition: repeated calls for the same bias
@@ -218,15 +272,29 @@ impl Coordinator {
         &self.host_plans
     }
 
-    /// Submit one request; may flush a batch to the workers. Returns the
-    /// request id. Errors if the artifact is unknown or the dispatch
-    /// queue is full (backpressure).
+    /// Submit one request; may flush a batch to the workers. Returns
+    /// the request id. [`anyhow`]-typed wrapper around
+    /// [`Self::try_submit`] (the `Display` of a backpressure refusal
+    /// contains `"backpressure"`).
     pub fn submit(&mut self, artifact: &str,
                   inputs: Vec<HostValue>) -> Result<u64> {
+        self.try_submit(artifact, inputs).map_err(Into::into)
+    }
+
+    /// Submit one request with a typed refusal, so callers can tell
+    /// retryable backpressure apart from fatal errors. On
+    /// [`SubmitError::Backpressure`] the request is handed back whole:
+    /// it is not queued, and any previously accepted requests in the
+    /// refused batch are returned to the batcher — nothing is dropped.
+    pub fn try_submit(&mut self, artifact: &str,
+                      inputs: Vec<HostValue>)
+                      -> Result<u64, SubmitError> {
         if self.runtime.spec(artifact).is_none()
             && !self.host_plans.contains(artifact)
         {
-            return Err(anyhow!("unknown artifact {artifact}"));
+            return Err(SubmitError::UnknownArtifact(
+                artifact.to_string(),
+            ));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request {
@@ -235,26 +303,54 @@ impl Coordinator {
             inputs,
             enqueued: Instant::now(),
         };
-        self.metrics.on_submit();
         if let Some(batch) = self.batcher.push(req) {
-            self.pool.dispatch(batch)?;
+            match self.pool.dispatch(batch) {
+                Ok(()) => {}
+                Err(DispatchError::Backpressure(mut batch)) => {
+                    // our request is the one that filled the batch —
+                    // pop it (the caller owns the retry, and gets its
+                    // inputs back) and requeue the previously accepted
+                    // rest
+                    let mine = batch.requests.pop();
+                    debug_assert_eq!(
+                        mine.as_ref().map(|r| r.id),
+                        Some(id)
+                    );
+                    self.batcher.unflush(batch);
+                    return Err(SubmitError::Backpressure {
+                        inputs: mine
+                            .map(|r| r.inputs)
+                            .unwrap_or_default(),
+                    });
+                }
+                Err(DispatchError::Stopped(_)) => {
+                    return Err(SubmitError::Stopped);
+                }
+            }
         }
+        self.metrics.on_submit();
         Ok(id)
     }
 
     /// Flush any batches whose deadline has passed (call periodically, or
-    /// after the last submit of a burst).
+    /// after the last submit of a burst). Blocks for queue space: these
+    /// requests were already accepted, so they must reach the workers.
     pub fn flush_due(&mut self) -> Result<()> {
         for batch in self.batcher.flush_due(Instant::now()) {
-            self.pool.dispatch(batch)?;
+            self.pool
+                .dispatch_blocking(batch)
+                .map_err(|_| anyhow!("worker pool stopped"))?;
         }
         Ok(())
     }
 
-    /// Force-flush everything.
+    /// Force-flush everything. Blocks for queue space (see
+    /// [`Self::flush_due`]).
     pub fn flush_all(&mut self) -> Result<()> {
         for batch in self.batcher.flush_all() {
-            self.pool.dispatch(batch)?;
+            self.pool
+                .dispatch_blocking(batch)
+                .map_err(|_| anyhow!("worker pool stopped"))?;
         }
         Ok(())
     }
@@ -268,15 +364,56 @@ impl Coordinator {
         }
     }
 
+    /// Submit with bounded backpressure retries — the one retry policy
+    /// every serving caller shares. A refused submit drains one
+    /// response for up to `drain_timeout` (handed to `drained`; the
+    /// caller must account for it) and retries with the handed-back
+    /// inputs (moved, never cloned); any non-backpressure error
+    /// propagates immediately instead of spinning, and a wedged worker
+    /// pool surfaces as an error after 1000 rounds.
+    pub fn submit_with_retry(
+        &mut self,
+        artifact: &str,
+        mut inputs: Vec<HostValue>,
+        drain_timeout: Duration,
+        mut drained: impl FnMut(Response),
+    ) -> Result<u64> {
+        const MAX_RETRIES: usize = 1000;
+        for _ in 0..MAX_RETRIES {
+            match self.try_submit(artifact, inputs) {
+                Ok(id) => return Ok(id),
+                Err(SubmitError::Backpressure { inputs: back }) => {
+                    inputs = back;
+                    if let Some(r) = self.recv_timeout(drain_timeout) {
+                        drained(r);
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Err(anyhow!(
+            "submit {artifact}: backpressure persisted after \
+             {MAX_RETRIES} retries"
+        ))
+    }
+
     /// Convenience: submit a burst, flush, and collect all responses.
+    /// Backpressure inside the burst is absorbed (bounded) by draining
+    /// responses early and retrying, so a burst larger than the
+    /// dispatch queue still completes.
     pub fn run_burst(&mut self, reqs: Vec<(String, Vec<HostValue>)>)
                      -> Result<Vec<Response>> {
         let n = reqs.len();
+        let mut out = Vec::with_capacity(n);
         for (artifact, inputs) in reqs {
-            self.submit(&artifact, inputs)?;
+            self.submit_with_retry(
+                &artifact,
+                inputs,
+                Duration::from_millis(20),
+                |r| out.push(r),
+            )?;
         }
         self.flush_all()?;
-        let mut out = Vec::with_capacity(n);
         let deadline = Instant::now() + Duration::from_secs(600);
         while out.len() < n {
             let remaining = deadline

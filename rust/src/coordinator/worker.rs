@@ -23,6 +23,16 @@ enum Job {
     Stop,
 }
 
+/// Why a dispatch was refused — the batch rides along so the caller can
+/// requeue it instead of dropping its requests on the floor.
+#[derive(Debug)]
+pub enum DispatchError {
+    /// The bounded queue is full; retry after the workers drain.
+    Backpressure(Batch),
+    /// The worker pool has stopped.
+    Stopped(Batch),
+}
+
 pub struct WorkerPool {
     tx: SyncSender<Job>,
     handles: Vec<JoinHandle<()>>,
@@ -73,17 +83,30 @@ impl WorkerPool {
         (Self { tx, handles }, resp_rx)
     }
 
-    /// Enqueue a batch; errors when the queue is full (backpressure).
-    pub fn dispatch(&self, batch: Batch) -> Result<()> {
+    /// Enqueue a batch without blocking; a refusal hands the batch back
+    /// so its requests are never lost.
+    pub fn dispatch(&self, batch: Batch) -> Result<(), DispatchError> {
         match self.tx.try_send(Job::Run(batch)) {
             Ok(()) => Ok(()),
-            Err(TrySendError::Full(_)) => {
-                Err(anyhow!("dispatch queue full (backpressure)"))
+            Err(TrySendError::Full(Job::Run(b))) => {
+                Err(DispatchError::Backpressure(b))
             }
-            Err(TrySendError::Disconnected(_)) => {
-                Err(anyhow!("worker pool stopped"))
+            Err(TrySendError::Disconnected(Job::Run(b))) => {
+                Err(DispatchError::Stopped(b))
             }
+            Err(_) => unreachable!("dispatch only sends Job::Run"),
         }
+    }
+
+    /// Enqueue a batch, waiting for queue space — the flush paths use
+    /// this so an already-accepted request can never be dropped by a
+    /// momentarily full queue (workers are draining it concurrently).
+    pub fn dispatch_blocking(&self, batch: Batch)
+                             -> Result<(), DispatchError> {
+        self.tx.send(Job::Run(batch)).map_err(|e| match e.0 {
+            Job::Run(b) => DispatchError::Stopped(b),
+            Job::Stop => unreachable!("dispatch only sends Job::Run"),
+        })
     }
 
     /// Stop all workers after draining in-flight jobs.

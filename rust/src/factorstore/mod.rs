@@ -17,16 +17,32 @@
 //!   calls for the same key run the decomposition exactly once; the
 //!   other callers block on the in-flight cell and share the finished
 //!   [`Factors`] behind an `Arc` (zero copies on a hit).
-//! * **Byte-budget LRU.** Factor strips are Θ((N+M)·R) each (Thm 3.2);
-//!   the store evicts least-recently-used entries once the resident
-//!   bytes exceed the budget, and counts hits / misses / evictions.
+//! * **Byte-budget LRU with a spill tier.** Factor strips are
+//!   Θ((N+M)·R) each (Thm 3.2); the store evicts least-recently-used
+//!   entries once the resident bytes exceed the budget. With a spill
+//!   file attached ([`FactorStore::spill_to`]) evicted entries move
+//!   down a memory tier instead of being dropped: they are appended to
+//!   the file (same jsonlite entry encoding as [`FactorStore::save`])
+//!   and reloaded on demand — a budgeted store degrades to one disk
+//!   read (`spill_hits`), never to a repeated SVD.
+//! * **Sharing tier.** A [`remote::RemoteStore`] client attached via
+//!   [`FactorStore::attach_remote`] is consulted on a local+spill miss
+//!   before decomposing; fetched factors are cached locally
+//!   (`remote_hits`). The serving side is [`remote::FactorService`] —
+//!   lookup-by-fingerprint over a length-prefixed jsonlite TCP
+//!   protocol — so a fleet warms from one decomposition.
 //! * **Persistent.** [`FactorStore::save`] / [`FactorStore::load`]
-//!   round-trip the store through a jsonlite file, so offline
-//!   decomposition (`flashbias warm`) survives process restarts and a
-//!   serving fleet can boot warm.
+//!   round-trip the store (resident *and* spilled entries) through a
+//!   jsonlite file, so offline decomposition (`flashbias warm`)
+//!   survives process restarts and a serving fleet can boot warm.
+//!
+//! Lookup order is always resident → spill → remote → decompose.
+
+pub mod remote;
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -35,6 +51,8 @@ use anyhow::{anyhow, Result};
 use crate::decompose::Factors;
 use crate::jsonlite::Json;
 use crate::tensor::Tensor;
+
+pub use remote::{FactorService, RemoteStore};
 
 // ---------------------------------------------------------------------------
 // Fingerprints
@@ -171,8 +189,32 @@ struct Inner {
     /// In-flight decompositions: concurrent callers share one cell so
     /// the closure runs exactly once per key.
     pending: HashMap<u64, Arc<OnceLock<Cached>>>,
+    /// Spill-tier index: key → (offset, byte length) of the entry's
+    /// jsonlite record in the spill file.
+    spill_index: HashMap<u64, (u64, u64)>,
+    /// Entries displaced by the budget whose spill-file append has not
+    /// completed yet (the write happens outside the lock). Staged here
+    /// so that, at every instant, an entry is visible in at least one
+    /// tier — lookups serve from it and `save` persists it; without
+    /// this, a concurrent `save` in the eviction window would silently
+    /// drop the entry from the persisted file.
+    spilling: HashMap<u64, Cached>,
     bytes: usize,
     tick: u64,
+}
+
+/// The append-only spill file behind the eviction tier. Offsets of
+/// already-written records never move, so the index in [`Inner`] stays
+/// valid across appends; re-spilling a key overwrites its index slot
+/// and leaves the old record as dead bytes (compaction is a rewrite
+/// via [`FactorStore::save`]).
+#[derive(Debug)]
+struct SpillFile {
+    file: std::fs::File,
+    /// Append position (we also seek for reads, so the OS cursor is
+    /// not authoritative).
+    end: u64,
+    path: PathBuf,
 }
 
 /// Counter snapshot for metrics/CLIs.
@@ -181,7 +223,15 @@ pub struct StoreStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Resident misses served by reloading a spilled entry (one disk
+    /// read instead of a repeated decomposition).
+    pub spill_hits: u64,
+    /// Local+spill misses served by fetching from a peer's
+    /// [`remote::FactorService`] instead of decomposing.
+    pub remote_hits: u64,
     pub entries: usize,
+    /// Entries currently living in the spill tier.
+    pub spilled: usize,
     pub bytes: usize,
     /// `usize::MAX` = unbounded.
     pub budget_bytes: usize,
@@ -196,12 +246,15 @@ impl StoreStats {
             crate::util::human_bytes(self.budget_bytes as u64)
         };
         format!(
-            "store: hits={} misses={} evictions={} entries={} bytes={} \
-             budget={budget}",
+            "store: hits={} misses={} evictions={} spill_hits={} \
+             remote_hits={} entries={} spilled={} bytes={} budget={budget}",
             self.hits,
             self.misses,
             self.evictions,
+            self.spill_hits,
+            self.remote_hits,
             self.entries,
+            self.spilled,
             crate::util::human_bytes(self.bytes as u64),
         )
     }
@@ -212,7 +265,10 @@ impl StoreStats {
             ("hits", Json::num(self.hits as f64)),
             ("misses", Json::num(self.misses as f64)),
             ("evictions", Json::num(self.evictions as f64)),
+            ("spill_hits", Json::num(self.spill_hits as f64)),
+            ("remote_hits", Json::num(self.remote_hits as f64)),
             ("entries", Json::num(self.entries as f64)),
+            ("spilled", Json::num(self.spilled as f64)),
             ("bytes", Json::num(self.bytes as f64)),
             (
                 "budget_bytes",
@@ -226,13 +282,19 @@ impl StoreStats {
     }
 }
 
-/// Thread-safe, content-addressed factor store with a byte-budget LRU.
+/// Thread-safe, content-addressed factor store with a byte-budget LRU,
+/// an optional spill-to-disk eviction tier, and an optional remote
+/// sharing tier.
 pub struct FactorStore {
     inner: Mutex<Inner>,
+    spill: Option<Mutex<SpillFile>>,
+    remote: Mutex<Option<RemoteStore>>,
     budget_bytes: usize,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    spill_hits: AtomicU64,
+    remote_hits: AtomicU64,
 }
 
 impl std::fmt::Debug for FactorStore {
@@ -240,10 +302,19 @@ impl std::fmt::Debug for FactorStore {
         let s = self.stats();
         write!(
             f,
-            "FactorStore(entries={}, bytes={}, hits={}, misses={})",
-            s.entries, s.bytes, s.hits, s.misses
+            "FactorStore(entries={}, spilled={}, bytes={}, hits={}, \
+             misses={})",
+            s.entries, s.spilled, s.bytes, s.hits, s.misses
         )
     }
+}
+
+/// How a `get_or_insert_with` miss was ultimately filled — decides
+/// which counter ticks.
+enum Fill {
+    Spill,
+    Remote,
+    Decomposed,
 }
 
 impl FactorStore {
@@ -251,10 +322,14 @@ impl FactorStore {
     pub fn new(budget_bytes: usize) -> Self {
         Self {
             inner: Mutex::new(Inner::default()),
+            spill: None,
+            remote: Mutex::new(None),
             budget_bytes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            spill_hits: AtomicU64::new(0),
+            remote_hits: AtomicU64::new(0),
         }
     }
 
@@ -263,8 +338,53 @@ impl FactorStore {
         Self::new(usize::MAX)
     }
 
-    /// Look up a finished entry (LRU touch). Counts a hit or a miss.
+    /// Attach a spill file: from now on, byte-budget evictions append
+    /// the entry to `path` (truncated here — the spill tier is process
+    /// scratch, not the persistent store file) instead of dropping it,
+    /// and lookups fall back to the spill index on a resident miss.
+    pub fn spill_to(mut self, path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| anyhow!("spill file {}: {e}", path.display()))?;
+        self.spill = Some(Mutex::new(SpillFile { file, end: 0, path }));
+        Ok(self)
+    }
+
+    /// Attach a sharing-tier client: local+spill misses in
+    /// [`Self::get_or_insert_with`] consult this peer before running
+    /// the decomposition, and cache what it returns locally.
+    pub fn attach_remote(&self, remote: RemoteStore) {
+        *self.remote.lock().unwrap() = Some(remote);
+    }
+
+    /// Builder form of [`Self::attach_remote`].
+    pub fn with_remote(self, remote: RemoteStore) -> Self {
+        self.attach_remote(remote);
+        self
+    }
+
+    /// The attached sharing-tier client, if any.
+    pub fn remote(&self) -> Option<RemoteStore> {
+        self.remote.lock().unwrap().clone()
+    }
+
+    /// Look up a finished entry (LRU touch), falling back to the spill
+    /// tier on a resident miss — a spilled entry is reloaded from disk,
+    /// made resident again, and counted as a `spill_hit`. Counts a hit
+    /// or a miss otherwise.
     pub fn get(&self, key: Fingerprint) -> Option<Cached> {
+        self.lookup(key, true)
+    }
+
+    /// One lookup body behind both [`Self::get`] and [`Self::peek`]:
+    /// resident touch, then spill reload + re-insert; `counted` decides
+    /// whether the tier counters tick.
+    fn lookup(&self, key: Fingerprint, counted: bool) -> Option<Cached> {
         let found = {
             let mut inner = self.inner.lock().unwrap();
             inner.tick += 1;
@@ -274,23 +394,42 @@ impl FactorStore {
                 e.value.clone()
             })
         };
-        match found {
-            Some(v) => {
+        if let Some(v) = found {
+            if counted {
                 self.hits.fetch_add(1, Ordering::Relaxed);
-                Some(v)
             }
-            None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
+            return Some(v);
         }
+        if let Some(v) = self.spill_take(key) {
+            if counted {
+                self.spill_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            self.insert(key, v.clone());
+            return Some(v);
+        }
+        if counted {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        None
     }
 
-    /// Get the entry for `key`, running `decompose` to fill it on a
-    /// miss. Concurrent callers for the same key run `decompose`
-    /// exactly once: one caller computes, the rest block on the
+    /// [`Self::get`] without touching the hit/miss counters — the
+    /// lookup path for *peer* traffic ([`remote::FactorService`]), so
+    /// a follower probing for content the leader lacks does not mark
+    /// the leader's store dirty or masquerade as local SVD work in its
+    /// metrics. Serves the resident and spill tiers (a spilled entry
+    /// is made resident again, uncounted).
+    pub fn peek(&self, key: Fingerprint) -> Option<Cached> {
+        self.lookup(key, false)
+    }
+
+    /// Get the entry for `key`, working down the tiers on a resident
+    /// miss: reload from the spill file (`spill_hits`), fetch from the
+    /// attached remote peer (`remote_hits`), and only then run
+    /// `decompose` (`misses`). Concurrent callers for the same key do
+    /// the fill exactly once: one caller works, the rest block on the
     /// in-flight cell and share the result (each such share counts as a
-    /// hit — they did no decomposition work).
+    /// hit — they did no decomposition or IO work).
     pub fn get_or_insert_with(
         &self,
         key: Fingerprint,
@@ -313,72 +452,213 @@ impl FactorStore {
                 .or_insert_with(|| Arc::new(OnceLock::new()))
                 .clone()
         };
-        // The store lock is NOT held while decomposing: only same-key
+        // The store lock is NOT held while filling: only same-key
         // callers wait here, everyone else proceeds.
-        let mut ran = false;
+        let mut fill: Option<Fill> = None;
         let value = cell
             .get_or_init(|| {
-                ran = true;
+                if let Some(v) = self.spill_take(key) {
+                    fill = Some(Fill::Spill);
+                    return v;
+                }
+                if let Some(v) = self.remote_fetch(key) {
+                    fill = Some(Fill::Remote);
+                    return v;
+                }
+                fill = Some(Fill::Decomposed);
                 decompose()
             })
             .clone();
-        if ran {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        }
-        let mut inner = self.inner.lock().unwrap();
-        // Only the cell we actually waited on may be retired: after an
-        // eviction, a *newer* in-flight decomposition for this key can
-        // own a fresh pending cell, and a late waiter from the old one
-        // must not remove it (that would let a third caller re-run the
-        // work) or clobber the map with its stale value.
-        let owns_cell = inner
-            .pending
-            .get(&key.0)
-            .is_some_and(|c| Arc::ptr_eq(c, &cell));
-        if owns_cell {
-            inner.pending.remove(&key.0);
-            if !inner.map.contains_key(&key.0) {
-                self.insert_locked(&mut inner, key.0, value.clone());
+        match fill {
+            // we waited on another caller's in-flight fill
+            None => self.hits.fetch_add(1, Ordering::Relaxed),
+            Some(Fill::Spill) => {
+                self.spill_hits.fetch_add(1, Ordering::Relaxed)
             }
-        }
+            Some(Fill::Remote) => {
+                self.remote_hits.fetch_add(1, Ordering::Relaxed)
+            }
+            Some(Fill::Decomposed) => {
+                self.misses.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+        let evicted = {
+            let mut inner = self.inner.lock().unwrap();
+            // Only the cell we actually waited on may be retired: after
+            // an eviction, a *newer* in-flight decomposition for this
+            // key can own a fresh pending cell, and a late waiter from
+            // the old one must not remove it (that would let a third
+            // caller re-run the work) or clobber the map with its stale
+            // value.
+            let owns_cell = inner
+                .pending
+                .get(&key.0)
+                .is_some_and(|c| Arc::ptr_eq(c, &cell));
+            if owns_cell {
+                inner.pending.remove(&key.0);
+                if !inner.map.contains_key(&key.0) {
+                    self.insert_locked(&mut inner, key.0, value.clone())
+                } else {
+                    // already resident (another path re-inserted it):
+                    // retire any staging slot a spill reload left
+                    inner.spilling.remove(&key.0);
+                    Vec::new()
+                }
+            } else {
+                Vec::new()
+            }
+        };
+        self.spill_evicted(evicted);
         value
     }
 
     /// Insert (or replace) an entry directly — the load path.
     pub fn insert(&self, key: Fingerprint, value: Cached) {
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(old) = inner.map.remove(&key.0) {
-            inner.bytes -= old.bytes;
-        }
-        self.insert_locked(&mut inner, key.0, value);
+        let evicted = {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(old) = inner.map.remove(&key.0) {
+                inner.bytes -= old.bytes;
+            }
+            self.insert_locked(&mut inner, key.0, value)
+        };
+        self.spill_evicted(evicted);
     }
 
-    fn insert_locked(&self, inner: &mut Inner, key: u64, value: Cached) {
+    /// Insert under the lock, returning the entries the byte budget
+    /// displaced. With a spill tier the caller hands them to
+    /// [`Self::spill_evicted`] AFTER releasing the lock — serializing
+    /// factor strips to disk must not stall every concurrent lookup.
+    #[must_use]
+    fn insert_locked(&self, inner: &mut Inner, key: u64,
+                     value: Cached) -> Vec<(u64, Cached)> {
         inner.tick += 1;
         let stamp = inner.tick;
         let bytes = value.size_bytes();
         inner.bytes += bytes;
+        // an entry becoming resident covers every lower tier: drop its
+        // (now redundant) spill-index and staging slots
+        inner.spill_index.remove(&key);
+        inner.spilling.remove(&key);
         inner.map.insert(key, Entry { value, bytes, stamp });
-        // strict byte budget: evict LRU-first until back under (the
-        // just-inserted entry has the newest stamp, so it goes last)
-        while inner.bytes > self.budget_bytes && !inner.map.is_empty() {
+        // strict byte budget: evict LRU-first until back under — but
+        // never the entry we are inserting. An entry larger than the
+        // whole budget used to evict *itself* right here, so every
+        // later plan re-ran the full SVD (silent thrash); instead it
+        // stays resident, over budget, until a later insert displaces
+        // it into the spill tier.
+        let mut evicted = Vec::new();
+        while inner.bytes > self.budget_bytes {
             let lru = inner
                 .map
                 .iter()
+                .filter(|(k, _)| **k != key)
                 .min_by_key(|(_, e)| e.stamp)
                 .map(|(k, _)| *k);
-            match lru {
-                Some(k) => {
-                    if let Some(e) = inner.map.remove(&k) {
-                        inner.bytes -= e.bytes;
-                    }
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
+            let Some(k) = lru else { break };
+            if let Some(e) = inner.map.remove(&k) {
+                inner.bytes -= e.bytes;
+                // spill tier: hand the entry down a level instead of
+                // dropping it — staged in `spilling` under this lock
+                // (still visible to lookups and `save`), appended to
+                // the file by the caller outside the lock
+                if self.spill.is_some() {
+                    inner.spilling.insert(k, e.value.clone());
+                    evicted.push((k, e.value));
                 }
-                None => break,
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        evicted
+    }
+
+    /// Append displaced entries to the spill file, publish their index
+    /// slots, and retire their staging slots. The file IO runs WITHOUT
+    /// the store lock held; the `spilling` staging map keeps the
+    /// entries visible to lookups and `save` throughout. Non-finite
+    /// payloads have no JSON form and are dropped, exactly as in
+    /// [`Self::save`].
+    fn spill_evicted(&self, evicted: Vec<(u64, Cached)>) {
+        if evicted.is_empty() {
+            return;
+        }
+        let Some(spill) = &self.spill else { return };
+        let mut locs = Vec::with_capacity(evicted.len());
+        for (k, v) in &evicted {
+            if let Some(loc) = spill_append(spill, *k, v) {
+                locs.push((*k, loc));
             }
         }
+        let mut inner = self.inner.lock().unwrap();
+        for (k, _) in &evicted {
+            inner.spilling.remove(k);
+        }
+        for (k, loc) in locs {
+            // the key may have been re-filled and be resident again by
+            // now — never shadow a live entry with a stale spill slot
+            if !inner.map.contains_key(&k) {
+                inner.spill_index.insert(k, loc);
+            }
+        }
+    }
+
+    /// Reload `key` from the spill tier. An entry still staged for
+    /// spilling (its file append is in flight on another thread) is
+    /// served straight from the staging map. A successful file reload
+    /// moves the entry index→staging atomically with respect to the
+    /// store lock, so a concurrent [`Self::save`] always sees it in
+    /// some tier until the caller re-inserts it (insertion retires the
+    /// staging slot). An IO/parse failure consumes the slot and
+    /// degrades to a miss (the caller decomposes again).
+    fn spill_take(&self, key: Fingerprint) -> Option<Cached> {
+        self.spill.as_ref()?;
+        let loc = {
+            let inner = self.inner.lock().unwrap();
+            if let Some(v) = inner.spilling.get(&key.0) {
+                return Some(v.clone());
+            }
+            *inner.spill_index.get(&key.0)?
+        };
+        let parsed = self.spill_read_at(loc);
+        let mut inner = self.inner.lock().unwrap();
+        // consume the slot only if it still points at what we read — a
+        // concurrent re-spill owns the newer record
+        if inner.spill_index.get(&key.0) == Some(&loc) {
+            inner.spill_index.remove(&key.0);
+        }
+        match parsed {
+            Some((k, v)) if k == key => {
+                // stay visible to save()/lookups until re-inserted
+                inner.spilling.insert(key.0, v.clone());
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Read and decode one spill record without touching the index.
+    fn spill_read_at(&self, (offset, len): (u64, u64))
+                     -> Option<(Fingerprint, Cached)> {
+        let spill = self.spill.as_ref()?;
+        let text = {
+            let mut f = spill.lock().unwrap();
+            if f.file.seek(SeekFrom::Start(offset)).is_err() {
+                return None;
+            }
+            let mut buf = vec![0u8; len as usize];
+            if f.file.read_exact(&mut buf).is_err() {
+                return None;
+            }
+            String::from_utf8(buf).ok()?
+        };
+        let json = Json::parse(&text).ok()?;
+        entry_from_json(&json).ok()
+    }
+
+    /// Fetch `key` from the attached sharing-tier peer, if any.
+    /// Network/protocol failures degrade to `None` (decompose locally).
+    fn remote_fetch(&self, key: Fingerprint) -> Option<Cached> {
+        let remote = self.remote.lock().unwrap().clone()?;
+        remote.fetch(key)
     }
 
     pub fn len(&self) -> usize {
@@ -406,13 +686,36 @@ impl FactorStore {
         self.evictions.load(Ordering::Relaxed)
     }
 
+    pub fn spill_hits(&self) -> u64 {
+        self.spill_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn remote_hits(&self) -> u64 {
+        self.remote_hits.load(Ordering::Relaxed)
+    }
+
+    /// Entries currently living in the spill tier.
+    pub fn spilled(&self) -> usize {
+        self.inner.lock().unwrap().spill_index.len()
+    }
+
+    /// The attached spill file's path, if a spill tier is configured.
+    pub fn spill_path(&self) -> Option<PathBuf> {
+        self.spill
+            .as_ref()
+            .map(|s| s.lock().unwrap().path.clone())
+    }
+
     pub fn stats(&self) -> StoreStats {
         let inner = self.inner.lock().unwrap();
         StoreStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             evictions: self.evictions.load(Ordering::Relaxed),
+            spill_hits: self.spill_hits.load(Ordering::Relaxed),
+            remote_hits: self.remote_hits.load(Ordering::Relaxed),
             entries: inner.map.len(),
+            spilled: inner.spill_index.len(),
             bytes: inner.bytes,
             budget_bytes: self.budget_bytes,
         }
@@ -420,29 +723,56 @@ impl FactorStore {
 
     // -- persistence --------------------------------------------------------
 
-    /// Serialize every resident entry to a jsonlite file. Entries are
-    /// written oldest-first so a later [`load`](Self::load) re-inserts
-    /// them in LRU order. Finite f32 payloads survive the text round
-    /// trip exactly (shortest-roundtrip float formatting); entries
-    /// holding non-finite values are skipped — NaN/inf have no JSON
+    /// Serialize every resident *and spilled* entry to a jsonlite file.
+    /// Spilled entries are written first, then residents oldest-first,
+    /// so a later [`load`](Self::load) re-inserts them in LRU order
+    /// (cold spill content is the first to re-spill under a budget).
+    /// Finite f32 payloads survive the text round trip exactly
+    /// (shortest-roundtrip float formatting); entries holding
+    /// non-finite values are skipped — NaN/inf have no JSON
     /// representation, and writing them would leave a file every later
     /// `load` rejects. A skipped bias simply decomposes again on demand.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let json = {
+        let (resident, in_transit, spill_locs) = {
             let inner = self.inner.lock().unwrap();
             let mut entries: Vec<(&u64, &Entry)> =
                 inner.map.iter().collect();
             entries.sort_by_key(|(_, e)| e.stamp);
-            let arr: Vec<Json> = entries
+            let resident: Vec<Json> = entries
                 .iter()
                 .filter(|(_, e)| entry_is_finite(&e.value))
                 .map(|(k, e)| entry_to_json(**k, &e.value))
                 .collect();
-            Json::obj(vec![
-                ("version", Json::num(1.0)),
-                ("entries", Json::Arr(arr)),
-            ])
+            // entries mid-flight to the spill file (staged, append not
+            // finished) are persisted too — a checkpoint taken in the
+            // eviction window must not lose them
+            let in_transit: Vec<Json> = inner
+                .spilling
+                .iter()
+                .filter(|(k, _)| !inner.map.contains_key(k))
+                .filter(|(_, v)| entry_is_finite(v))
+                .map(|(k, v)| entry_to_json(*k, v))
+                .collect();
+            let spill_locs: Vec<(u64, u64)> =
+                inner.spill_index.values().copied().collect();
+            (resident, in_transit, spill_locs)
         };
+        let mut arr = Vec::with_capacity(
+            spill_locs.len() + in_transit.len() + resident.len(),
+        );
+        for loc in spill_locs {
+            if let Some((k, v)) = self.spill_read_at(loc) {
+                if entry_is_finite(&v) {
+                    arr.push(entry_to_json(k.0, &v));
+                }
+            }
+        }
+        arr.extend(in_transit);
+        arr.extend(resident);
+        let json = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("entries", Json::Arr(arr)),
+        ]);
         // atomic replace: a crash mid-write must never leave a
         // truncated file that bricks every later open() on this path
         let path = path.as_ref();
@@ -462,18 +792,27 @@ impl FactorStore {
     /// Load a store previously written by [`save`](Self::save).
     pub fn load(path: impl AsRef<Path>,
                 budget_bytes: usize) -> Result<Self> {
+        let store = Self::new(budget_bytes);
+        store.absorb(path)?;
+        Ok(store)
+    }
+
+    /// Merge every entry of a store file into this store. Unlike
+    /// [`load`](Self::load), this runs on an already-configured store,
+    /// so a byte-budgeted store with a spill tier attached spills the
+    /// overflow of a large file instead of dropping it.
+    pub fn absorb(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
         let json = Json::parse(&text)
             .map_err(|e| anyhow!("{}: {e}", path.display()))?;
-        let store = Self::new(budget_bytes);
         for entry in json.get("entries").as_arr().unwrap_or(&[]) {
             let (key, value) = entry_from_json(entry)
                 .map_err(|e| anyhow!("{}: {e}", path.display()))?;
-            store.insert(key, value);
+            self.insert(key, value);
         }
-        Ok(store)
+        Ok(())
     }
 
     /// Load `path` if it exists, else start empty — the CLI's
@@ -488,10 +827,38 @@ impl FactorStore {
     }
 }
 
+/// Append one entry record to the spill file, returning its
+/// `(offset, len)` location. Non-finite payloads (no JSON form) and IO
+/// failures return `None` — the entry is simply dropped, as before the
+/// spill tier existed.
+fn spill_append(spill: &Mutex<SpillFile>, key: u64,
+                value: &Cached) -> Option<(u64, u64)> {
+    if !entry_is_finite(value) {
+        return None;
+    }
+    let text = entry_to_json(key, value).dump();
+    let mut f = spill.lock().unwrap();
+    let offset = f.end;
+    if f.file.seek(SeekFrom::Start(offset)).is_err() {
+        return None;
+    }
+    if f.file.write_all(text.as_bytes()).is_err() {
+        return None;
+    }
+    if f.file.write_all(b"\n").is_err() {
+        // the record may be half-written; advance past it so the next
+        // append starts clean, but don't index the torn record
+        f.end = offset + text.len() as u64 + 1;
+        return None;
+    }
+    f.end = offset + text.len() as u64 + 1;
+    Some((offset, text.len() as u64))
+}
+
 /// Whether an entry's payload is fully finite (serializable as JSON
 /// numbers). Factors from a corrupt table can carry NaN/inf; those are
 /// kept in memory but never persisted.
-fn entry_is_finite(value: &Cached) -> bool {
+pub(crate) fn entry_is_finite(value: &Cached) -> bool {
     match value {
         Cached::Factors(f) => {
             f.rel_err.is_finite()
@@ -518,7 +885,7 @@ fn json_to_f32s(j: &Json) -> Result<Vec<f32>> {
         .collect()
 }
 
-fn entry_to_json(key: u64, value: &Cached) -> Json {
+pub(crate) fn entry_to_json(key: u64, value: &Cached) -> Json {
     let key_hex = format!("{:016x}", key);
     match value {
         Cached::Factors(f) => Json::obj(vec![
@@ -539,7 +906,7 @@ fn entry_to_json(key: u64, value: &Cached) -> Json {
     }
 }
 
-fn entry_from_json(j: &Json) -> Result<(Fingerprint, Cached)> {
+pub(crate) fn entry_from_json(j: &Json) -> Result<(Fingerprint, Cached)> {
     let key_hex = j
         .get("key")
         .as_str()
@@ -663,6 +1030,104 @@ mod tests {
     }
 
     #[test]
+    fn oversized_entry_is_never_self_evicted() {
+        // a rank-2 alibi(8) entry is 128 bytes — more than this whole
+        // budget; it used to evict itself right after insertion, so
+        // every later plan re-ran the decomposition (silent thrash)
+        let store = FactorStore::new(64);
+        let mut calls = 0;
+        for _ in 0..3 {
+            store.get_or_insert_with(Fingerprint(5), || {
+                calls += 1;
+                cached_alibi(8)
+            });
+        }
+        assert_eq!(calls, 1, "oversized entry must stay resident");
+        assert_eq!(store.evictions(), 0);
+        assert!(store.get(Fingerprint(5)).is_some());
+        // a later insert displaces it (dropped — no spill configured)
+        store.get_or_insert_with(Fingerprint(6), || cached_alibi(8));
+        assert_eq!(store.evictions(), 1);
+        assert!(store.get(Fingerprint(6)).is_some());
+    }
+
+    #[test]
+    fn spill_tier_reloads_evicted_entries() {
+        let path = std::env::temp_dir().join(format!(
+            "fb_spill_unit_{}.jsonl",
+            std::process::id()
+        ));
+        // budget holds two 128-byte entries
+        let store = FactorStore::new(300).spill_to(&path).expect("spill");
+        let original = cached_alibi(8);
+        store.get_or_insert_with(Fingerprint(1), || original.clone());
+        store.get_or_insert_with(Fingerprint(2), || cached_alibi(8));
+        store.get_or_insert_with(Fingerprint(3), || cached_alibi(8));
+        assert_eq!(store.evictions(), 1);
+        assert_eq!(store.spilled(), 1, "evicted entry moved to spill");
+        // key 1 reloads from disk — one read, not a new decomposition
+        let mut calls = 0;
+        let back = store.get_or_insert_with(Fingerprint(1), || {
+            calls += 1;
+            cached_alibi(8)
+        });
+        assert_eq!(calls, 0, "spill hit must not re-decompose");
+        assert_eq!(store.spill_hits(), 1);
+        assert_eq!(store.misses(), 3);
+        let (of, bf) = (
+            original.factors().unwrap(),
+            back.factors().unwrap(),
+        );
+        assert_eq!(of.phi_q.data(), bf.phi_q.data(),
+                   "spill round trip must be exact");
+        assert_eq!(of.phi_k.data(), bf.phi_k.data());
+        // reloading key 1 displaced another entry into the spill
+        assert_eq!(store.spilled(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn plain_get_falls_back_to_spill() {
+        let path = std::env::temp_dir().join(format!(
+            "fb_spill_get_{}.jsonl",
+            std::process::id()
+        ));
+        let store = FactorStore::new(150).spill_to(&path).expect("spill");
+        store.get_or_insert_with(Fingerprint(1), || cached_alibi(8));
+        store.get_or_insert_with(Fingerprint(2), || cached_alibi(8));
+        assert_eq!(store.spilled(), 1);
+        assert!(store.get(Fingerprint(1)).is_some(),
+                "get must reload from spill");
+        assert_eq!(store.spill_hits(), 1);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn save_includes_spilled_entries() {
+        let spill = std::env::temp_dir().join(format!(
+            "fb_spill_save_{}.jsonl",
+            std::process::id()
+        ));
+        let store =
+            FactorStore::new(150).spill_to(&spill).expect("spill");
+        store.get_or_insert_with(Fingerprint(1), || cached_alibi(8));
+        store.get_or_insert_with(Fingerprint(2), || cached_alibi(8));
+        assert_eq!((store.len(), store.spilled()), (1, 1));
+        let path = std::env::temp_dir().join(format!(
+            "fb_store_spillsave_{}.json",
+            std::process::id()
+        ));
+        store.save(&path).expect("save");
+        let loaded = FactorStore::load(&path, usize::MAX).expect("load");
+        assert_eq!(loaded.len(), 2,
+                   "save must persist the spill tier too");
+        assert!(loaded.get(Fingerprint(1)).is_some());
+        assert!(loaded.get(Fingerprint(2)).is_some());
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(spill);
+    }
+
+    #[test]
     fn rejected_entries_are_tiny_and_cacheable() {
         let store = FactorStore::new(64);
         store.get_or_insert_with(Fingerprint(9), || Cached::Rejected {
@@ -727,6 +1192,36 @@ mod tests {
         assert!(loaded.get(Fingerprint(1)).is_some());
         assert!(loaded.get(Fingerprint(2)).is_none());
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn absorb_under_budget_spills_overflow_instead_of_dropping() {
+        let store = FactorStore::unbounded();
+        store.insert(Fingerprint(1), cached_alibi(8));
+        store.insert(Fingerprint(2), cached_alibi(8));
+        store.insert(Fingerprint(3), cached_alibi(8));
+        let path = std::env::temp_dir().join(format!(
+            "fb_absorb_{}.json",
+            std::process::id()
+        ));
+        store.save(&path).expect("save");
+        let spill = std::env::temp_dir().join(format!(
+            "fb_absorb_spill_{}.jsonl",
+            std::process::id()
+        ));
+        // budget holds one 128-byte entry; the other two must land in
+        // the spill tier, not on the floor
+        let budgeted =
+            FactorStore::new(150).spill_to(&spill).expect("spill");
+        budgeted.absorb(&path).expect("absorb");
+        assert_eq!(budgeted.len() + budgeted.spilled(), 3,
+                   "a budgeted load must not drop entries");
+        for k in [1u64, 2, 3] {
+            assert!(budgeted.get(Fingerprint(k)).is_some(),
+                    "key {k} must be reachable");
+        }
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(spill);
     }
 
     #[test]

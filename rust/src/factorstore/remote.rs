@@ -1,0 +1,412 @@
+//! Cross-node factor sharing — the store's third tier.
+//!
+//! The paper's amortization argument (Table 4: pay the SVD once, serve
+//! forever) extends across a fleet: one coordinator decomposes, every
+//! peer fetches the finished strips instead of re-paying the SVD. Two
+//! halves:
+//!
+//! * [`FactorService`] — serves lookup-by-fingerprint from a
+//!   [`FactorStore`] (resident *and* spill tiers) over a TCP listener.
+//! * [`RemoteStore`] — the client a planner/coordinator store consults
+//!   on a local+spill miss ([`FactorStore::attach_remote`]); fetched
+//!   entries are cached locally, so each peer pays one network round
+//!   trip per bias, ever.
+//!
+//! The wire protocol is length-prefixed jsonlite: a 4-byte
+//! little-endian frame length followed by one JSON document, the same
+//! entry encoding [`FactorStore::save`] uses (finite f32 payloads
+//! round-trip exactly). Requests are `{"op":"get","key":"<16-hex>"}`;
+//! responses are `{"found":true,"entry":{...}}`, `{"found":false}`, or
+//! `{"error":"..."}`. Any network or protocol failure on the client
+//! degrades to a miss — the caller decomposes locally, never blocks on
+//! a dead peer (10 s IO timeouts).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream,
+    ToSocketAddrs,
+};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{
+    entry_from_json, entry_is_finite, entry_to_json, Cached, FactorStore,
+    Fingerprint,
+};
+use crate::jsonlite::Json;
+
+/// Upper bound on one *response* frame — a (16k + 16k) · r=512 factor
+/// pair prints well under this; anything bigger is a protocol error,
+/// not a factor.
+const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+/// Upper bound on one inbound *request* frame on the service side.
+/// Requests are ~60 bytes of JSON; honoring the response-sized cap for
+/// unauthenticated inbound traffic would let any peer make the server
+/// allocate 256 MiB per connection from a 4-byte length prefix.
+const MAX_REQUEST_BYTES: u32 = 64 * 1024;
+
+/// Per-connection read/write timeout: a dead peer costs one timeout,
+/// then the caller falls back to decomposing locally.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bound on establishing a connection — a black-holed peer (firewalled
+/// host, dead route) must cost seconds, not the OS's multi-minute TCP
+/// connect timeout, before the caller decomposes locally.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+// ---------------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed jsonlite frame.
+pub fn write_frame(w: &mut impl Write, json: &Json) -> Result<()> {
+    let payload = json.dump();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES as usize {
+        bail!("frame of {} bytes exceeds the {MAX_FRAME_BYTES} limit",
+              bytes.len());
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed jsonlite frame (response-sized cap).
+/// `Ok(None)` is a clean EOF (the peer closed between requests); a
+/// torn frame is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
+    read_frame_limited(r, MAX_FRAME_BYTES)
+}
+
+/// [`read_frame`] with an explicit size cap — the service reads
+/// *requests* with the small [`MAX_REQUEST_BYTES`] cap so a hostile
+/// length prefix cannot force a huge allocation.
+pub fn read_frame_limited(r: &mut impl Read,
+                          max_bytes: u32) -> Result<Option<Json>> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => {
+            return Ok(None);
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len);
+    if len > max_bytes {
+        bail!("frame of {len} bytes exceeds the {max_bytes} limit");
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    let text = std::str::from_utf8(&buf)
+        .map_err(|e| anyhow!("non-utf8 frame: {e}"))?;
+    Ok(Some(
+        Json::parse(text).map_err(|e| anyhow!("bad frame: {e}"))?,
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Serves factor lookups from a [`FactorStore`] over TCP. Bind with
+/// `"127.0.0.1:0"` for an ephemeral port ([`Self::addr`] reports the
+/// bound address). The accept loop and each connection run on their
+/// own threads; dropping (or [`Self::shutdown`]) stops the listener.
+pub struct FactorService {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl FactorService {
+    /// Bind `addr` and start serving lookups from `store`.
+    pub fn serve(store: Arc<FactorStore>,
+                 addr: impl ToSocketAddrs) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("factor service bind: {e}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let (stop, served) = (stop.clone(), served.clone());
+            std::thread::spawn(move || {
+                accept_loop(listener, store, stop, served)
+            })
+        };
+        Ok(Self {
+            addr,
+            stop,
+            served,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Lookups answered with a factor entry so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting connections and join the accept thread.
+    pub fn shutdown(self) {
+        // Drop does the work
+    }
+}
+
+impl Drop for FactorService {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection; an
+        // unspecified bind address (0.0.0.0 / ::) is not connectable
+        // everywhere, so aim the wake at loopback on the same port
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let woke =
+            TcpStream::connect_timeout(&wake, CONNECT_TIMEOUT).is_ok();
+        if let Some(h) = self.handle.take() {
+            if woke {
+                let _ = h.join();
+            }
+            // wake failed: the accept thread stays parked in accept()
+            // with the stop flag set — it exits on the next connection
+            // or with the process; joining would hang forever
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, store: Arc<FactorStore>,
+               stop: Arc<AtomicBool>, served: Arc<AtomicU64>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                // a persistent accept error (fd exhaustion, EMFILE)
+                // fails instantly — back off instead of busy-spinning
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let store = store.clone();
+        let served = served.clone();
+        std::thread::spawn(move || {
+            let _ = handle_conn(stream, &store, &served);
+        });
+    }
+}
+
+/// One connection: answer request frames until the peer closes.
+fn handle_conn(mut stream: TcpStream, store: &FactorStore,
+               served: &AtomicU64) -> Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    while let Some(req) =
+        read_frame_limited(&mut stream, MAX_REQUEST_BYTES)?
+    {
+        let resp = answer(&req, store, served);
+        write_frame(&mut stream, &resp)?;
+    }
+    Ok(())
+}
+
+fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+fn answer(req: &Json, store: &FactorStore, served: &AtomicU64) -> Json {
+    match req.get("op").as_str() {
+        Some("get") => {
+            let Some(hex) = req.get("key").as_str() else {
+                return error_json("get without key");
+            };
+            let Ok(key) = u64::from_str_radix(hex, 16) else {
+                return error_json("malformed key");
+            };
+            // peek serves resident AND spill tiers and touches LRU
+            // recency (a shared factor is a hot factor) but counts
+            // nothing: peer probes must not mark the leader's store
+            // dirty or pose as local SVD work in its metrics
+            match store.peek(Fingerprint(key)) {
+                Some(v) if entry_is_finite(&v) => {
+                    served.fetch_add(1, Ordering::Relaxed);
+                    Json::obj(vec![
+                        ("found", Json::Bool(true)),
+                        ("entry", entry_to_json(key, &v)),
+                    ])
+                }
+                _ => Json::obj(vec![("found", Json::Bool(false))]),
+            }
+        }
+        _ => error_json("unknown op (expected \"get\")"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client half of the sharing tier: fetches entries by fingerprint from
+/// a peer's [`FactorService`]. One connection per fetch — each bias is
+/// fetched at most once per process (the local store caches it), so
+/// connection reuse buys nothing.
+#[derive(Clone, Debug)]
+pub struct RemoteStore {
+    addr: String,
+}
+
+impl RemoteStore {
+    pub fn new(addr: impl Into<String>) -> Self {
+        Self { addr: addr.into() }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Fetch `key`, degrading every failure (network, protocol, peer
+    /// miss) to `None` so the caller falls back to decomposing locally.
+    pub fn fetch(&self, key: Fingerprint) -> Option<Cached> {
+        self.try_fetch(key).ok().flatten()
+    }
+
+    /// Fetch `key`, surfacing transport/protocol errors.
+    pub fn try_fetch(&self, key: Fingerprint)
+                     -> Result<Option<Cached>> {
+        // connect_timeout needs a resolved SocketAddr; plain connect
+        // would wait out the OS's multi-minute TCP timeout on a
+        // black-holed peer
+        let addr = self
+            .addr
+            .as_str()
+            .to_socket_addrs()
+            .map_err(|e| anyhow!("resolve {}: {e}", self.addr))?
+            .next()
+            .ok_or_else(|| {
+                anyhow!("{}: resolved to no address", self.addr)
+            })?;
+        let mut stream = TcpStream::connect_timeout(&addr,
+                                                    CONNECT_TIMEOUT)
+            .map_err(|e| anyhow!("connect {}: {e}", self.addr))?;
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let req = Json::obj(vec![
+            ("op", Json::str("get")),
+            ("key", Json::str(&format!("{key}"))),
+        ]);
+        write_frame(&mut stream, &req)?;
+        let resp = read_frame(&mut stream)?
+            .ok_or_else(|| anyhow!("{}: peer closed mid-request",
+                                   self.addr))?;
+        if let Some(msg) = resp.get("error").as_str() {
+            bail!("factor service {}: {msg}", self.addr);
+        }
+        if resp.get("found").as_bool() != Some(true) {
+            return Ok(None);
+        }
+        let (got, value) = entry_from_json(resp.get("entry"))?;
+        if got != key {
+            bail!("factor service {} answered key {got} for {key}",
+                  self.addr);
+        }
+        Ok(Some(value))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let json = Json::obj(vec![
+            ("op", Json::str("get")),
+            ("key", Json::str("00000000000000ff")),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &json).unwrap();
+        assert_eq!(&buf[..4], &(buf.len() as u32 - 4).to_le_bytes()[..]);
+        let back = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(back.get("op").as_str(), Some("get"));
+        assert_eq!(back.get("key").as_str(), Some("00000000000000ff"));
+    }
+
+    #[test]
+    fn read_frame_clean_eof_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame(&mut Cursor::new(empty)).unwrap().is_none());
+    }
+
+    #[test]
+    fn read_frame_rejects_oversized_prefix() {
+        let bytes = u32::MAX.to_le_bytes();
+        assert!(read_frame(&mut Cursor::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn service_request_cap_rejects_huge_prefix_without_allocating() {
+        // a response-sized (256 MiB) length prefix on the REQUEST path
+        // must be refused at the small request cap, not allocated
+        let bytes = MAX_FRAME_BYTES.to_le_bytes();
+        assert!(read_frame_limited(&mut Cursor::new(&bytes),
+                                   MAX_REQUEST_BYTES)
+            .is_err());
+    }
+
+    #[test]
+    fn torn_frame_is_an_error_not_eof() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(b"short");
+        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn answer_handles_malformed_requests() {
+        let store = FactorStore::unbounded();
+        let served = AtomicU64::new(0);
+        let bad_op = Json::obj(vec![("op", Json::str("put"))]);
+        assert!(answer(&bad_op, &store, &served)
+            .get("error")
+            .as_str()
+            .is_some());
+        let no_key = Json::obj(vec![("op", Json::str("get"))]);
+        assert!(answer(&no_key, &store, &served)
+            .get("error")
+            .as_str()
+            .is_some());
+        let bad_key = Json::obj(vec![
+            ("op", Json::str("get")),
+            ("key", Json::str("zz")),
+        ]);
+        assert!(answer(&bad_key, &store, &served)
+            .get("error")
+            .as_str()
+            .is_some());
+        let miss = Json::obj(vec![
+            ("op", Json::str("get")),
+            ("key", Json::str("0000000000000001")),
+        ]);
+        assert_eq!(answer(&miss, &store, &served).get("found").as_bool(),
+                   Some(false));
+        assert_eq!(served.load(Ordering::Relaxed), 0);
+    }
+}

@@ -38,12 +38,15 @@
 //!   Large tables at small rank take the randomized range-finder SVD
 //!   (Halko et al.) with the Jacobi kept as the reference oracle.
 //! * [`factorstore`] — **the amortization layer**: a thread-safe,
-//!   content-addressed factor store (byte-budget LRU, hit/miss/eviction
-//!   counters, jsonlite persistence). `Planner::plan_with_store` keys
-//!   SVD/neural outcomes by `BiasSpec::fingerprint()` + policy, so
-//!   repeated plans share factors with zero decomposition work; the
-//!   coordinator shares one store across its serving loop and the CLI
-//!   (`--store`, `warm`) persists it across processes.
+//!   content-addressed *tiered* factor store (resident byte-budget LRU
+//!   → spill-to-disk eviction → cross-node sharing over TCP →
+//!   decompose; per-tier counters; jsonlite persistence).
+//!   `Planner::plan_with_store` keys SVD/neural outcomes by
+//!   `BiasSpec::fingerprint()` + policy, so repeated plans share
+//!   factors with zero decomposition work; the coordinator shares one
+//!   store across its serving loop (and can export it to the fleet via
+//!   `Coordinator::serve_store`), and the CLI (`--store*`, `warm`)
+//!   persists it across processes.
 //! * [`kernels`] — **the compute spine**: the block-tiled,
 //!   multi-threaded streaming-softmax engine with per-tile
 //!   [`kernels::BiasTile`] providers (dense view / tile-local factor

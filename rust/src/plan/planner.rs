@@ -26,6 +26,12 @@
 //! repeated plan for the same bias is a cache hit that shares the stored
 //! strips (`Arc`-shared, zero copies) and performs **no** SVD/neural
 //! work — the paper's "decompose offline once" cost model (Table 4).
+//! The store itself is tiered (resident → spill file → remote peer →
+//! decompose), so a planner behind a byte-budgeted or fleet-shared
+//! store still never repeats a decomposition it can reload from disk
+//! or fetch from a peer's [`crate::factorstore::FactorService`]; the
+//! decomposition closure the planner hands over runs only when every
+//! tier misses.
 
 use std::sync::Arc;
 

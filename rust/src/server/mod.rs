@@ -14,19 +14,28 @@
 //!   factor store (the paper's offline SVD, Table 4, as a command).
 //! * `info`                — platform + manifest summary.
 //!
-//! `plan` and `serve` take `--store PATH` to amortize SVD/neural
-//! decomposition through a persistent [`crate::factorstore::FactorStore`]
-//! (loaded if present, saved back on exit).
+//! `plan`, `serve` and `warm` share the tiered-store flags: `--store
+//! PATH` amortizes SVD/neural decomposition through a persistent
+//! [`crate::factorstore::FactorStore`] (loaded if present, saved back on
+//! exit), `--store-budget BYTES` bounds resident factor bytes with
+//! evictions spilling to a process-private scratch file instead of
+//! being dropped, and
+//! `--store-remote ADDR` warms from a peer's
+//! [`crate::factorstore::FactorService`] (started by `serve
+//! --store-serve ADDR`) before decomposing locally.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::bias;
-use crate::coordinator::{Coordinator, CoordinatorConfig, RouteKey, Router};
-use crate::factorstore::FactorStore;
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, Response, RouteKey, Router,
+};
+use crate::factorstore::{FactorStore, RemoteStore};
 use crate::iomodel::Geometry;
 use crate::plan::{BiasSpec, PjrtExecutor, PlanOptions, Planner};
 use crate::runtime::{HostValue, Runtime};
@@ -41,8 +50,14 @@ pub struct Cli {
     pub flags: HashMap<String, String>,
 }
 
+/// Flags that never take a value: `--verbose x` must not swallow the
+/// positional `x` (a boolean flag used to eat the following artifact
+/// name). `--flag=value` remains available to force any value.
+const BOOL_FLAGS: &[&str] = &["causal", "jit", "verbose"];
+
 impl Cli {
-    /// Hand-rolled parser: `cmd pos1 --flag value --bool-flag`.
+    /// Hand-rolled parser: `cmd pos1 --flag value --flag=value
+    /// --bool-flag`.
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
         let mut it = args.into_iter().peekable();
         let command = it.next().unwrap_or_else(|| "help".to_string());
@@ -52,9 +67,19 @@ impl Cli {
         };
         while let Some(arg) = it.next() {
             if let Some(name) = arg.strip_prefix("--") {
-                let value = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
-                    _ => "true".to_string(),
+                if let Some((k, v)) = name.split_once('=') {
+                    cli.flags.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                let value = if BOOL_FLAGS.contains(&name) {
+                    "true".to_string()
+                } else {
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            it.next().unwrap()
+                        }
+                        _ => "true".to_string(),
+                    }
                 };
                 cli.flags.insert(name.to_string(), value);
             } else {
@@ -66,6 +91,16 @@ impl Cli {
 
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
+    }
+
+    /// Boolean flag semantics: absent = false, present = true, and an
+    /// explicit `--flag=false` / `--flag=0` turns it back off.
+    pub fn flag_bool(&self, name: &str) -> bool {
+        match self.flag(name) {
+            None => false,
+            Some("false") | Some("0") => false,
+            Some(_) => true,
+        }
     }
 
     pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
@@ -107,22 +142,35 @@ COMMANDS:
   verify [--only REGEX-ISH]    replay artifacts vs recorded outputs
   run <ARTIFACT> [--iters N]   execute one artifact, print timing
   serve [--requests N] [--workers W] [--max-batch B] [--store PATH]
+        [--store-budget BYTES] [--store-remote ADDR] [--store-serve ADDR]
                                synthetic serving loop, print metrics
                                (--store loads/saves a persistent factor
                                store; the coordinator's host-plan
                                registrations decompose through it, so a
-                               warmed file plans with zero SVD work)
+                               warmed file plans with zero SVD work;
+                               --store-serve exports the store to the
+                               fleet over TCP)
   plan --bias KIND [--n N] [--m M] [--c C] [--sram ELEMS] [--rank R]
-       [--causal] [--jit] [--store PATH]
+       [--causal] [--jit] [--store PATH] [--store-budget BYTES]
+       [--store-remote ADDR]
                                run the Table 1 planner on a synthetic bias
                                (KIND: none|alibi|spatial|cos-mult|swin|
                                pangu|dynamic|dense) and print the plan;
                                --store amortizes SVD/neural work through
                                an on-disk factor store
   warm --store PATH [--zoo swin,pangu] [--layers L] [--heads H] [--rank R]
+       [--store-budget BYTES] [--store-remote ADDR]
                                pre-decompose a bias zoo into the factor
-                               store (the Table 4 offline SVD, once)
+                               store (the Table 4 offline SVD, once);
+                               --store-remote fetches from a peer's
+                               factor service instead of re-running SVDs
   help                         this text
+
+STORE TIERS: lookups fall resident -> spill file -> remote peer ->
+  decompose. --store-budget caps resident bytes; evictions append to a
+  process-private spill scratch file (PATH.spill.<pid>_<seq>, cleaned
+  up on exit) and reload on demand (one disk read, never a repeated
+  SVD).
 ";
 
 /// Entry point used by main.rs (and tested directly).
@@ -228,6 +276,108 @@ fn cmd_run(cli: &Cli) -> Result<String> {
     ))
 }
 
+/// A factor store assembled from the shared CLI flags.
+struct CliStore {
+    store: Arc<FactorStore>,
+    /// `--store PATH`, when given (saves go here).
+    path: Option<String>,
+    /// Process-private scratch spill file (any `--store-budget` run):
+    /// removed when the command finishes, so repeated CLI runs don't
+    /// litter the disk — the in-memory spill index dies with the
+    /// process, making the file useless afterwards anyway.
+    scratch_spill: Option<String>,
+}
+
+impl Drop for CliStore {
+    fn drop(&mut self) {
+        if let Some(p) = &self.scratch_spill {
+            // unlink-while-open is fine on unix; best-effort elsewhere
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl CliStore {
+    /// Whether this run added content worth persisting: a local
+    /// decomposition or a factor fetched from a peer.
+    fn dirty(&self) -> bool {
+        let s = self.store.stats();
+        s.misses > 0 || s.remote_hits > 0
+    }
+
+    /// Save back to `--store PATH` when content arrived; returns the
+    /// human-readable disposition for the command output.
+    fn save_if_dirty(&self) -> Result<String> {
+        match &self.path {
+            Some(path) if self.dirty() => {
+                self.store.save(path)?;
+                Ok(format!(" (saved to {path})"))
+            }
+            Some(path) => Ok(format!(" ({path} unchanged)")),
+            None => Ok(String::new()),
+        }
+    }
+}
+
+/// Assemble the tiered factor store the `--store`, `--store-budget`
+/// and `--store-remote` flags describe; `None` when no store flag was
+/// given. A budget enables the spill tier in a **process-private**
+/// scratch file (`PATH.spill.<pid>_<seq>` next to the store, or in the
+/// temp dir without a path) — the spill index lives in memory, so the
+/// file is meaningless to any other process, and a shared name would
+/// let a second serving process truncate the first one's live spill.
+fn store_from_flags(cli: &Cli) -> Result<Option<CliStore>> {
+    let path = cli.flag("store").map(str::to_string);
+    let remote = cli.flag("store-remote").map(str::to_string);
+    let budgeted = cli.flag("store-budget").is_some();
+    if path.is_none() && remote.is_none() && !budgeted {
+        return Ok(None);
+    }
+    let budget = cli.flag_usize("store-budget", usize::MAX)?;
+    let mut store = FactorStore::new(budget);
+    let mut scratch_spill = None;
+    if budget != usize::MAX {
+        // pid + per-process sequence: concurrent stores (a second
+        // serving process on the same --store, parallel tests, library
+        // use) must never share — and truncate — a live spill file
+        static SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed);
+        let pid = std::process::id();
+        // attach the spill tier BEFORE absorbing the file, so a store
+        // file larger than the budget spills its overflow instead of
+        // dropping it
+        let spill = match &path {
+            Some(p) => format!("{p}.spill.{pid}_{seq}"),
+            None => std::env::temp_dir()
+                .join(format!("flashbias_spill_{pid}_{seq}.jsonl"))
+                .to_string_lossy()
+                .into_owned(),
+        };
+        scratch_spill = Some(spill.clone());
+        store = store.spill_to(&spill)?;
+    }
+    if let Some(p) = &path {
+        if std::path::Path::new(p).exists() {
+            if let Err(e) = store.absorb(p) {
+                // the CliStore that would clean the scratch spill up
+                // on Drop is not built yet — don't leak the file
+                if let Some(s) = &scratch_spill {
+                    let _ = std::fs::remove_file(s);
+                }
+                return Err(e);
+            }
+        }
+    }
+    if let Some(addr) = remote {
+        store.attach_remote(RemoteStore::new(addr));
+    }
+    Ok(Some(CliStore {
+        store: Arc::new(store),
+        path,
+        scratch_spill,
+    }))
+}
+
 /// Run the Table 1 planner on a synthetic bias and print the emitted
 /// plan — the `BiasSpec → Planner → AttentionPlan` pipeline as a CLI.
 fn cmd_plan(cli: &Cli) -> Result<String> {
@@ -236,8 +386,8 @@ fn cmd_plan(cli: &Cli) -> Result<String> {
     let m = cli.flag_usize("m", n)?;
     let c = cli.flag_usize("c", 64)?;
     let sram = cli.flag_usize("sram", 100 * 1024 / 2)?;
-    let causal = cli.flag("causal").is_some();
-    let jit = cli.flag("jit").is_some();
+    let causal = cli.flag_bool("causal");
+    let jit = cli.flag_bool("jit");
     let rank_override = match cli.flag("rank") {
         Some(_) => Some(cli.flag_usize("rank", 0)?),
         None => None,
@@ -292,21 +442,16 @@ fn cmd_plan(cli: &Cli) -> Result<String> {
         verify_exact: false,
     };
     let planner = Planner::default();
-    let (plan, store_note) = match cli.flag("store") {
-        Some(path) => {
-            let store = FactorStore::open(path, usize::MAX)?;
+    let (plan, store_note) = match store_from_flags(cli)? {
+        Some(cs) => {
             let plan = planner.plan_with_store(&spec, &geo, &opts,
-                                               &store)?;
-            let stats = store.stats();
-            // rewrite the file only when something new was decomposed —
-            // a pure-hit plan leaves a warmed store untouched
-            let disposition = if stats.misses > 0 {
-                store.save(path)?;
-                format!(" (saved to {path})")
-            } else {
-                format!(" ({path} unchanged)")
-            };
-            (plan, format!("{}{disposition}\n", stats.summary()))
+                                               &cs.store)?;
+            // rewrite the file only when new content arrived (a local
+            // decomposition or a remote fetch) — a pure-hit plan
+            // leaves a warmed store untouched
+            let disposition = cs.save_if_dirty()?;
+            (plan,
+             format!("{}{disposition}\n", cs.store.stats().summary()))
         }
         None => (planner.plan(&spec, &geo, &opts)?, String::new()),
     };
@@ -328,10 +473,10 @@ fn cmd_plan(cli: &Cli) -> Result<String> {
 /// file) start warm — Table 4's "4.79 s of offline SVD, once" as a
 /// command. Re-running is idempotent: already-stored biases are hits.
 fn cmd_warm(cli: &Cli) -> Result<String> {
-    let path = cli
-        .flag("store")
-        .ok_or_else(|| anyhow!("warm needs --store PATH\n{USAGE}"))?
-        .to_string();
+    let cs = match store_from_flags(cli)? {
+        Some(cs) if cs.path.is_some() => cs,
+        _ => bail!("warm needs --store PATH\n{USAGE}"),
+    };
     let layers = cli.flag_usize("layers", 4)?;
     let heads = cli.flag_usize("heads", 4)?;
     let zoo = cli.flag("zoo").unwrap_or("swin,pangu");
@@ -339,7 +484,7 @@ fn cmd_warm(cli: &Cli) -> Result<String> {
         Some(_) => Some(cli.flag_usize("rank", 0)?),
         None => None,
     };
-    let store = FactorStore::open(&path, usize::MAX)?;
+    let store = &cs.store;
     let planner = Planner::default();
     let opts = PlanOptions {
         rank_override,
@@ -368,25 +513,99 @@ fn cmd_warm(cli: &Cli) -> Result<String> {
                     &BiasSpec::static_learned(table),
                     &geo,
                     &opts,
-                    &store,
+                    store,
                 )?;
                 planned += 1;
             }
         }
     }
-    let stats = store.stats();
-    let disposition = if stats.misses > 0 {
-        store.save(&path)?;
-        format!("(saved to {path})")
-    } else {
-        // idempotent re-warm: everything was already on disk
-        format!("({path} unchanged — all hits)")
-    };
+    // idempotent re-warm: a pure-hit pass leaves the file untouched;
+    // remote fetches count as new content and are persisted
+    let disposition = cs.save_if_dirty()?;
     Ok(format!(
-        "warmed {planned} biases ({zoo}) in {}\n{} {disposition}\n",
+        "warmed {planned} biases ({zoo}) in {}\n{}{disposition}\n",
         human_secs(timer.elapsed_secs()),
-        stats.summary(),
+        store.stats().summary(),
     ))
+}
+
+/// Submit with bounded backpressure retries — the CLI's spelling of
+/// [`Coordinator::submit_with_retry`] (50 ms drain rounds, so 1000
+/// retries bound the wait at ~50 s against a fully wedged worker
+/// pool). A refused submit drains one response (handed to `drained` —
+/// the caller must account for it) and retries; any non-backpressure
+/// error propagates immediately instead of spinning forever (an
+/// unknown artifact used to wedge the serving loop here).
+pub fn submit_with_retry(
+    coord: &mut Coordinator,
+    artifact: &str,
+    inputs: Vec<HostValue>,
+    drained: impl FnMut(Response),
+) -> Result<u64> {
+    coord.submit_with_retry(artifact, inputs,
+                            Duration::from_millis(50), drained)
+}
+
+/// What [`serve_loop`] observed; failures are reported after cleanup.
+struct ServeOutcome {
+    submitted: usize,
+    completed: usize,
+    failures: Vec<String>,
+    wall_secs: f64,
+}
+
+/// The serving loop proper, separated from `cmd_serve` so every exit —
+/// success, submit error, failed response, timeout — flows back
+/// through the same shutdown/save cleanup in the caller.
+fn serve_loop(
+    coord: &mut Coordinator,
+    rt: &Runtime,
+    router: &Router,
+    key: &RouteKey,
+    n_requests: usize,
+) -> Result<ServeOutcome> {
+    let mut rng = Xoshiro256::new(42);
+    let t0 = std::time::Instant::now();
+    let max_n = router.max_bucket(key).unwrap();
+    let mut submitted = 0usize;
+    let mut completed = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    for _ in 0..n_requests {
+        let want_n = 1 + rng.next_below(max_n as u64) as usize;
+        let (artifact, _bucket) = router.route(key, want_n).unwrap();
+        let inputs = rt.example_inputs(artifact)?;
+        // responses drained while absorbing backpressure still count:
+        // dropping them used to leave the completion loop short
+        submit_with_retry(coord, artifact, inputs, |resp| {
+            if let Err(e) = &resp.outputs {
+                failures.push(format!("request {}: {e}", resp.id));
+            }
+            completed += 1;
+        })?;
+        submitted += 1;
+    }
+    coord.flush_all()?;
+    while completed < submitted {
+        match coord.recv_timeout(Duration::from_secs(60)) {
+            Some(resp) => {
+                // a failed response is recorded, not returned early —
+                // the remaining in-flight work still gets drained
+                if let Err(e) = &resp.outputs {
+                    failures.push(format!("request {}: {e}", resp.id));
+                }
+                completed += 1;
+            }
+            None => bail!(
+                "serve loop timed out ({completed}/{submitted} done)"
+            ),
+        }
+    }
+    Ok(ServeOutcome {
+        submitted,
+        completed,
+        failures,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
 }
 
 /// Synthetic serving workload: route random-length attention requests
@@ -397,13 +616,14 @@ fn cmd_serve(cli: &Cli) -> Result<String> {
     let max_batch = cli.flag_usize("max-batch", 8)?;
     let rt = Arc::new(Runtime::open_default()?);
     let router = Router::from_runtime(&rt);
-    // one factor store shared by the probe plan and the whole serving
-    // loop; --store makes it persistent across processes
-    let store_path = cli.flag("store").map(str::to_string);
-    let store = Arc::new(match &store_path {
-        Some(p) => FactorStore::open(p, usize::MAX)?,
-        None => FactorStore::unbounded(),
-    });
+    // one tiered factor store shared by the probe plan and the whole
+    // serving loop; --store makes it persistent across processes,
+    // --store-budget/--store-remote add the spill/sharing tiers
+    let cli_store = store_from_flags(cli)?;
+    let store = cli_store
+        .as_ref()
+        .map(|cs| cs.store.clone())
+        .unwrap_or_else(|| Arc::new(FactorStore::unbounded()));
     // the serving bias is exact-closed-form ALiBi: let the planner decide
     // how it is carried and route to the matching artifact variant
     let probe = Planner::default().plan_with_store(
@@ -423,12 +643,13 @@ fn cmd_serve(cli: &Cli) -> Result<String> {
     config.batcher.max_batch = max_batch;
     let mut coord = Coordinator::with_store(rt.clone(), config,
                                             store.clone());
-    // with a persistent store, the serving loop's decomposition work is
-    // amortized across processes: register a Swin host plan through the
-    // shared store — a cold run pays its SVD once, a run booted from a
-    // warmed file plans it with zero SVD work (see the store counters
-    // in the metrics line)
-    if store_path.is_some() {
+    // with a store that outlives this process (a file or a peer), the
+    // serving loop's decomposition work is amortized across the fleet:
+    // register a Swin host plan through the shared store — a cold run
+    // pays its SVD once, a run booted from a warmed file or a peer's
+    // factor service plans it with zero SVD work (see the store
+    // counters in the metrics line)
+    if cli_store.is_some() {
         let table =
             bias::swin_relative_bias((12, 12), 1, 0, 6, 0.02).remove(0);
         coord.plan_and_register(
@@ -439,50 +660,61 @@ fn cmd_serve(cli: &Cli) -> Result<String> {
             &PlanOptions::default(),
         )?;
     }
-    let mut rng = Xoshiro256::new(42);
-    let t0 = std::time::Instant::now();
-    let max_n = router.max_bucket(&key).unwrap();
-    let mut submitted = 0usize;
-    for _ in 0..n_requests {
-        let want_n = 1 + rng.next_below(max_n as u64) as usize;
-        let (artifact, _bucket) = router.route(&key, want_n).unwrap();
-        let inputs = rt.example_inputs(artifact)?;
-        // retry on backpressure: drain a few responses then resubmit
-        loop {
-            match coord.submit(artifact, inputs.clone()) {
-                Ok(_) => break,
-                Err(_) => {
-                    let _ = coord.recv_timeout(Duration::from_millis(50));
-                }
-            }
+    // export the store to the fleet when asked; a bind failure flows
+    // through the same cleanup as every other error below — an early
+    // `?` here would skip shutdown and discard a dirty store's SVD work
+    let mut service = None;
+    let outcome = match cli
+        .flag("store-serve")
+        .map(|addr| coord.serve_store(addr))
+        .transpose()
+    {
+        Ok(svc) => {
+            service = svc;
+            serve_loop(&mut coord, &rt, &router, &key, n_requests)
         }
-        submitted += 1;
-    }
-    coord.flush_all()?;
-    let mut completed = 0usize;
-    while completed < submitted {
-        match coord.recv_timeout(Duration::from_secs(60)) {
-            Some(resp) => {
-                resp.outputs?;
-                completed += 1;
-            }
-            None => bail!("serve loop timed out"),
-        }
-    }
-    let wall = t0.elapsed().as_secs_f64();
+        Err(e) => Err(e),
+    };
+    // cleanup runs on EVERY path — an early error used to leak worker
+    // threads and discard a warmed store's decomposition work
     let summary = coord.metrics().summary();
     let json = coord.metrics().to_json().dump();
     coord.shutdown();
-    if let Some(p) = &store_path {
-        if store.stats().misses > 0 {
-            store.save(p)?;
+    let service_note = match service {
+        Some(svc) => {
+            let note = format!(
+                "factor service {} served {} lookups\n",
+                svc.addr(),
+                svc.served()
+            );
+            svc.shutdown();
+            note
         }
+        None => String::new(),
+    };
+    // the save is attempted on every path, but a save failure must not
+    // mask the serve loop's own error or the recorded request failures
+    // — those are the diagnostics this cleanup exists to preserve
+    let saved = cli_store.as_ref().map(|cs| cs.save_if_dirty());
+    let outcome = outcome?;
+    if !outcome.failures.is_empty() {
+        bail!(
+            "{} of {} requests failed (first: {})\n{summary}",
+            outcome.failures.len(),
+            outcome.submitted,
+            outcome.failures[0]
+        );
+    }
+    if let Some(s) = saved {
+        s?;
     }
     Ok(format!(
-        "served {completed}/{submitted} requests in {:.2}s \
-         ({:.1} req/s)\n{summary}\nmetrics: {json}\n",
-        wall,
-        completed as f64 / wall
+        "served {}/{} requests in {:.2}s ({:.1} req/s)\n\
+         {service_note}{summary}\nmetrics: {json}\n",
+        outcome.completed,
+        outcome.submitted,
+        outcome.wall_secs,
+        outcome.completed as f64 / outcome.wall_secs
     ))
 }
 
@@ -504,6 +736,60 @@ mod tests {
         assert_eq!(cli.flag("verbose"), Some("true"));
         assert_eq!(cli.flag_usize("iters", 1).unwrap(), 5);
         assert_eq!(cli.flag_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn cli_bool_flags_do_not_swallow_positionals() {
+        // `--verbose` used to consume the artifact name as its value
+        let cli = Cli::parse(
+            ["run", "--verbose", "attn_pure_n256"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cli.positional, vec!["attn_pure_n256"]);
+        assert_eq!(cli.flag("verbose"), Some("true"));
+        let cli = Cli::parse(
+            ["plan", "--causal", "swin", "--jit", "x"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cli.positional, vec!["swin", "x"]);
+        assert_eq!(cli.flag("causal"), Some("true"));
+        assert_eq!(cli.flag("jit"), Some("true"));
+    }
+
+    #[test]
+    fn cli_equals_form_flags() {
+        let cli = Cli::parse(
+            [
+                "serve",
+                "--requests=9",
+                "--store=factors.json",
+                "--store-budget=4096",
+                "--causal=false",
+            ]
+            .into_iter()
+            .map(String::from),
+        )
+        .unwrap();
+        assert_eq!(cli.flag_usize("requests", 0).unwrap(), 9);
+        assert_eq!(cli.flag("store"), Some("factors.json"));
+        assert_eq!(cli.flag_usize("store-budget", 0).unwrap(), 4096);
+        // `=` overrides even a boolean flag's implicit value, and the
+        // boolean accessor honors it
+        assert_eq!(cli.flag("causal"), Some("false"));
+        assert!(!cli.flag_bool("causal"));
+        assert!(!cli.flag_bool("missing"));
+        let cli = Cli::parse(
+            ["plan", "--causal", "--jit=true"]
+                .into_iter()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(cli.flag_bool("causal"));
+        assert!(cli.flag_bool("jit"));
     }
 
     #[test]
@@ -609,6 +895,26 @@ mod tests {
         assert!(out.contains("hits=1"), "{out}");
         assert!(out.contains("misses=0"), "{out}");
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn plan_with_budget_but_no_path_uses_scratch_spill() {
+        // a budget without --store still plans: the spill tier lands
+        // in a temp scratch file, and the oversized single entry stays
+        // resident instead of self-evicting into an SVD loop
+        let cli = Cli::parse(
+            [
+                "plan", "--bias", "swin", "--rank", "16",
+                "--store-budget", "1024",
+            ]
+            .into_iter()
+            .map(String::from),
+        )
+        .unwrap();
+        let out = run(&cli).unwrap();
+        assert!(out.contains("mode=factored"), "{out}");
+        assert!(out.contains("misses=1"), "{out}");
+        assert!(out.contains("spilled=0"), "{out}");
     }
 
     #[test]

@@ -157,6 +157,90 @@ fn lru_eviction_respects_byte_budget() {
     assert!(store.get(Fingerprint(2)).is_some());
 }
 
+#[test]
+fn oversized_entry_never_thrashes_the_decomposition() {
+    // an entry larger than the whole budget used to evict itself right
+    // after insertion, so every later plan silently re-ran the SVD
+    let n = 40;
+    let spec = BiasSpec::static_learned(lowrank_table(n, 4, 21));
+    // rank-4 strips on (40, 40): (40 + 40) * 4 * 4 = 1280 bytes
+    let store = FactorStore::new(256);
+    let planner = Planner::default();
+    let opts = PlanOptions {
+        rank_override: Some(4),
+        ..PlanOptions::default()
+    };
+    for _ in 0..3 {
+        let plan = planner
+            .plan_with_store(&spec, &geo(n, n), &opts, &store)
+            .unwrap();
+        assert!(matches!(plan.mode, ExecMode::Factored { .. }));
+    }
+    assert_eq!(store.misses(), 1,
+               "the oversized entry must stay resident, not re-SVD");
+    assert_eq!(store.hits(), 2);
+    assert_eq!(store.evictions(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Spill tier: eviction pressure degrades to a disk read, never an SVD
+// ---------------------------------------------------------------------------
+
+#[test]
+fn budgeted_store_under_pressure_spills_instead_of_redecomposing() {
+    let spill = std::env::temp_dir().join(format!(
+        "fb_it_spill_{}.jsonl",
+        std::process::id()
+    ));
+    let n = 40;
+    let spec_a = BiasSpec::static_learned(lowrank_table(n, 4, 31));
+    let spec_b = BiasSpec::static_learned(lowrank_table(n, 4, 32));
+    // budget holds exactly one rank-4 pair (1280 bytes): planning the
+    // two specs alternately keeps evicting the other into the spill
+    let store = FactorStore::new(1280 + 64)
+        .spill_to(&spill)
+        .expect("spill file");
+    let planner = Planner::default();
+    let opts = PlanOptions {
+        rank_override: Some(4),
+        ..PlanOptions::default()
+    };
+    let first = planner
+        .plan_with_store(&spec_a, &geo(n, n), &opts, &store)
+        .unwrap();
+    planner
+        .plan_with_store(&spec_b, &geo(n, n), &opts, &store)
+        .unwrap();
+    assert_eq!(store.misses(), 2);
+    for round in 0..3 {
+        let pa = planner
+            .plan_with_store(&spec_a, &geo(n, n), &opts, &store)
+            .unwrap();
+        planner
+            .plan_with_store(&spec_b, &geo(n, n), &opts, &store)
+            .unwrap();
+        assert_eq!(
+            store.misses(),
+            2,
+            "round {round}: eviction pressure must never re-run an SVD"
+        );
+        // the reloaded strips are bit-identical to the original SVD
+        match (&first.mode, &pa.mode) {
+            (
+                ExecMode::Factored { factors: f0 },
+                ExecMode::Factored { factors: f1 },
+            ) => {
+                assert_eq!(f0.phi_q.data(), f1.phi_q.data());
+                assert_eq!(f0.phi_k.data(), f1.phi_k.data());
+            }
+            other => panic!("expected factored plans, got {other:?}"),
+        }
+    }
+    assert_eq!(store.spill_hits(), 6, "two spill reloads per round");
+    assert!(store.evictions() >= 6);
+    let _ = std::fs::remove_file(spill);
+}
+
 // ---------------------------------------------------------------------------
 // Persistence: save → load → plan round-trips identical factors
 // ---------------------------------------------------------------------------

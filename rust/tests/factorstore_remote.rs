@@ -1,0 +1,201 @@
+//! Sharing-tier integration (tier-1, artifact-free): a loopback
+//! `FactorService` smoke test, the `RemoteStore` round trip, and the
+//! ISSUE 5 acceptance criterion — a second coordinator pointed at a
+//! peer's factor service plans a Swin bias with `misses=0` SVD work.
+
+use std::sync::Arc;
+
+use flashbias::bias::swin_relative_bias;
+use flashbias::coordinator::{Coordinator, CoordinatorConfig};
+use flashbias::factorstore::{
+    Cached, FactorService, FactorStore, Fingerprint, RemoteStore,
+};
+use flashbias::iomodel::Geometry;
+use flashbias::plan::{BiasSpec, ExecMode, PlanOptions, Planner};
+use flashbias::runtime::Runtime;
+use flashbias::tensor::Tensor;
+use flashbias::util::Xoshiro256;
+
+const SRAM: usize = 100 * 1024 / 2;
+
+fn lowrank_spec(n: usize, r: usize, seed: u64) -> BiasSpec {
+    let mut rng = Xoshiro256::new(seed);
+    let a = Tensor::randn(&[n, r], 1.0, &mut rng);
+    let b = Tensor::randn(&[n, r], 1.0, &mut rng);
+    BiasSpec::static_learned(
+        a.matmul_t(&b).add(&Tensor::randn(&[n, n], 1e-4, &mut rng)),
+    )
+}
+
+#[test]
+fn loopback_service_smoke() {
+    // artifact-free loopback round trip: known key found, unknown miss
+    let leader_store = Arc::new(FactorStore::unbounded());
+    let store = leader_store.clone();
+    let mut rng = Xoshiro256::new(2);
+    let original = Arc::new(flashbias::decompose::Factors {
+        phi_q: Tensor::randn(&[12, 3], 1.0, &mut rng),
+        phi_k: Tensor::randn(&[12, 3], 1.0, &mut rng),
+        rel_err: 0.25,
+        rank: 3,
+    });
+    store.insert(Fingerprint(0xBEEF), Cached::Factors(original.clone()));
+    let service =
+        FactorService::serve(store, "127.0.0.1:0").expect("serve");
+    let client = RemoteStore::new(service.addr().to_string());
+
+    let fetched = client
+        .try_fetch(Fingerprint(0xBEEF))
+        .expect("transport ok")
+        .expect("entry found");
+    let f = fetched.factors().expect("factors entry");
+    assert_eq!(f.rank, 3);
+    assert_eq!(f.phi_q.data(), original.phi_q.data(),
+               "factors must round-trip the wire exactly");
+    assert_eq!(f.phi_k.data(), original.phi_k.data());
+    assert_eq!(f.rel_err, original.rel_err);
+
+    assert!(client
+        .try_fetch(Fingerprint(0xDEAD))
+        .expect("transport ok")
+        .is_none());
+    assert_eq!(service.served(), 1);
+    // peer traffic must not pollute the leader's own counters: a
+    // follower probing for unknown content would otherwise mark a
+    // fully warm store dirty (and pose as local SVD work)
+    let stats = leader_store.stats();
+    assert_eq!((stats.hits, stats.misses), (0, 0),
+               "service lookups are uncounted peeks");
+    service.shutdown();
+}
+
+#[test]
+fn rejected_verdicts_share_over_the_wire_too() {
+    // a remembered dense-fallback verdict is as valuable as factors:
+    // the peer skips the whole spectrum scan
+    let store = Arc::new(FactorStore::unbounded());
+    store.insert(Fingerprint(7), Cached::Rejected { measured_rank: 99 });
+    let service =
+        FactorService::serve(store, "127.0.0.1:0").expect("serve");
+    let client = RemoteStore::new(service.addr().to_string());
+    match client.try_fetch(Fingerprint(7)).expect("transport ok") {
+        Some(Cached::Rejected { measured_rank }) => {
+            assert_eq!(measured_rank, 99)
+        }
+        other => panic!("expected rejected verdict, got {other:?}"),
+    }
+    service.shutdown();
+}
+
+#[test]
+fn dead_peer_degrades_to_local_decomposition() {
+    // nothing listens here: the fetch fails fast and the store falls
+    // back to running the SVD itself
+    let store = FactorStore::unbounded()
+        .with_remote(RemoteStore::new("127.0.0.1:9"));
+    let n = 32;
+    let spec = lowrank_spec(n, 3, 5);
+    let geo = Geometry { n, m: n, c: 32, r: 0, sram: SRAM };
+    let plan = Planner::default()
+        .plan_with_store(&spec, &geo, &PlanOptions::default(), &store)
+        .expect("plan");
+    assert!(matches!(plan.mode, ExecMode::Factored { .. }));
+    assert_eq!(store.misses(), 1, "decomposed locally");
+    assert_eq!(store.remote_hits(), 0);
+}
+
+#[test]
+fn two_stores_share_one_factor_service() {
+    let n = 40;
+    let spec = lowrank_spec(n, 4, 17);
+    let geo = Geometry { n, m: n, c: 32, r: 0, sram: SRAM };
+    let opts = PlanOptions::default();
+    let planner = Planner::default();
+
+    let leader = Arc::new(FactorStore::unbounded());
+    let cold = planner
+        .plan_with_store(&spec, &geo, &opts, &leader)
+        .expect("leader plan");
+    assert_eq!(leader.misses(), 1);
+    let service =
+        FactorService::serve(leader.clone(), "127.0.0.1:0")
+            .expect("serve");
+
+    let follower = FactorStore::unbounded()
+        .with_remote(RemoteStore::new(service.addr().to_string()));
+    let warm = planner
+        .plan_with_store(&spec, &geo, &opts, &follower)
+        .expect("follower plan");
+    assert_eq!(follower.misses(), 0, "the follower does no SVD work");
+    assert_eq!(follower.remote_hits(), 1);
+    match (&cold.mode, &warm.mode) {
+        (
+            ExecMode::Factored { factors: f0 },
+            ExecMode::Factored { factors: f1 },
+        ) => {
+            assert_eq!(f0.rank, f1.rank);
+            assert_eq!(f0.phi_q.data(), f1.phi_q.data(),
+                       "shared strips must be bit-identical");
+            assert_eq!(f0.phi_k.data(), f1.phi_k.data());
+        }
+        other => panic!("expected factored plans, got {other:?}"),
+    }
+    // fetched once, cached locally: the next plan is a resident hit
+    planner
+        .plan_with_store(&spec, &geo, &opts, &follower)
+        .expect("second follower plan");
+    assert_eq!(follower.remote_hits(), 1, "no second network trip");
+    assert_eq!(follower.hits(), 1);
+    service.shutdown();
+}
+
+/// ISSUE 5 acceptance: a second *coordinator* pointed at a peer's
+/// `FactorService` plans a Swin bias with zero SVD work.
+#[test]
+fn second_coordinator_warms_from_the_fleet() {
+    let table = swin_relative_bias((12, 12), 1, 0, 6, 0.02).remove(0);
+    let spec = BiasSpec::static_learned(table);
+    let geo = Geometry::square(144, 64, 0, SRAM);
+    // the paper pins R = 16 for Swin; also keeps the test fast
+    let opts = PlanOptions {
+        rank_override: Some(16),
+        ..PlanOptions::default()
+    };
+    let planner = Planner::default();
+
+    let leader = Coordinator::with_store(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig::default(),
+        Arc::new(FactorStore::unbounded()),
+    );
+    leader
+        .plan_and_register("swin_host", &planner, &spec, &geo, &opts)
+        .expect("leader pays the SVD once");
+    assert_eq!(leader.store().misses(), 1);
+    let service = leader.serve_store("127.0.0.1:0").expect("serve");
+
+    let follower_store = Arc::new(
+        FactorStore::unbounded()
+            .with_remote(RemoteStore::new(service.addr().to_string())),
+    );
+    let follower = Coordinator::with_store(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig::default(),
+        follower_store.clone(),
+    );
+    let plan = follower
+        .plan_and_register("swin_host", &planner, &spec, &geo, &opts)
+        .expect("follower plans through the fleet");
+    assert_eq!(follower_store.misses(), 0,
+               "misses=0: the follower performed no SVD work");
+    assert_eq!(follower_store.remote_hits(), 1);
+    assert_eq!(plan.rank(), 16);
+    // the tier counters surface in the serving metrics
+    assert!(follower
+        .metrics()
+        .summary()
+        .contains("remote_hits=1"));
+    service.shutdown();
+    follower.shutdown();
+    leader.shutdown();
+}

@@ -217,3 +217,90 @@ fn unknown_artifact_still_rejected() {
     assert!(coord.submit("nope", vec![]).is_err());
     coord.shutdown();
 }
+
+#[test]
+fn submit_errors_are_typed_for_retry_decisions() {
+    use flashbias::coordinator::SubmitError;
+    let mut coord = coordinator();
+    match coord.try_submit("nope", vec![]) {
+        Err(SubmitError::UnknownArtifact(name)) => {
+            assert_eq!(name, "nope")
+        }
+        other => panic!("expected UnknownArtifact, got {other:?}"),
+    }
+    assert!(!SubmitError::UnknownArtifact("x".into()).is_backpressure());
+    let bp = SubmitError::Backpressure { inputs: vec![] };
+    assert!(bp.is_backpressure());
+    // the anyhow wrapper keeps the backpressure marker visible for
+    // string-matching callers
+    assert!(format!("{bp}").contains("backpressure"));
+    coord.shutdown();
+}
+
+#[test]
+fn submit_retry_propagates_non_backpressure_errors() {
+    // the serving loop's retry used to spin forever on ANY submit
+    // error, including "unknown artifact" — it must fail fast instead
+    let mut coord = coordinator();
+    let t0 = std::time::Instant::now();
+    let err = flashbias::server::submit_with_retry(
+        &mut coord,
+        "no_such_artifact",
+        vec![],
+        |_| {},
+    )
+    .expect_err("unknown artifact must propagate");
+    assert!(format!("{err}").contains("no_such_artifact"));
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "must not spin on a non-retryable error");
+    coord.shutdown();
+}
+
+#[test]
+fn backpressure_retry_accounts_for_every_response() {
+    // queue_depth=1 + max_batch=1 + 1 worker: submits outrun the
+    // queue, so submit_with_retry must absorb refusals by draining —
+    // and every drained response must still be accounted for
+    let plan = alibi_plan(false);
+    let mut coord = Coordinator::new(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 1,
+            queue_depth: 1,
+        },
+    );
+    coord.register_plan("alibi_bp", plan).expect("register");
+    let total = 24u64;
+    let mut drained = 0usize;
+    for i in 0..total {
+        let (inputs, _, _, _) = request_inputs(400 + i);
+        flashbias::server::submit_with_retry(
+            &mut coord,
+            "alibi_bp",
+            inputs,
+            |resp| {
+                assert!(resp.outputs.is_ok());
+                drained += 1;
+            },
+        )
+        .expect("backpressure is retryable");
+    }
+    coord.flush_all().expect("flush");
+    let mut completed = drained;
+    while completed < total as usize {
+        match coord.recv_timeout(Duration::from_secs(30)) {
+            Some(resp) => {
+                assert!(resp.outputs.is_ok());
+                completed += 1;
+            }
+            None => panic!(
+                "lost responses: {completed}/{total} (drained {drained})"
+            ),
+        }
+    }
+    coord.shutdown();
+}
