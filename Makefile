@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test verify bench bench-json examples fmt clippy artifacts clean
+.PHONY: all build test verify bench bench-json examples fmt clippy lint lint-json artifacts clean
 
 all: build
 
@@ -39,6 +39,18 @@ fmt:
 
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
+
+# flashlint: the in-repo static analyzer for the serving core's
+# concurrency and panic-safety invariants (rust/src/lint/). Non-zero
+# exit on any unsuppressed finding; `make lint-json` drops the
+# machine-readable report at the workspace root (gitignored).
+lint:
+	$(CARGO) run --release --bin flashlint -- rust/src
+
+lint-json:
+	$(CARGO) run --release --bin flashlint -- --json rust/src > flashlint.json || \
+		{ cat flashlint.json; exit 1; }
+	cat flashlint.json
 
 # AOT-compile the HLO artifacts + input/output dumps (needs the python
 # jax toolchain from the accelerator image).

@@ -1,0 +1,139 @@
+//! flashlint CLI: run the in-repo static-analysis pass over a source
+//! tree and report violations of the serving-core invariants.
+//!
+//! ```text
+//! flashlint [--json] [--hotpath FILE] [--list-rules] [PATH...]
+//! ```
+//!
+//! PATH defaults to `rust/src` (falling back to `src` when run from
+//! inside `rust/`). Exit codes: 0 clean, 1 unsuppressed findings,
+//! 2 usage or I/O error.
+
+use flashbias::lint;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    json: bool,
+    list_rules: bool,
+    hotpath: Option<PathBuf>,
+    paths: Vec<PathBuf>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        json: false,
+        list_rules: false,
+        hotpath: None,
+        paths: Vec::new(),
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--json" => args.json = true,
+            "--list-rules" => args.list_rules = true,
+            "--hotpath" => match it.next() {
+                Some(p) => args.hotpath = Some(PathBuf::from(p)),
+                None => return Err("--hotpath requires a FILE".to_string()),
+            },
+            "-h" | "--help" => {
+                return Err(
+                    "usage: flashlint [--json] [--hotpath FILE] \
+                     [--list-rules] [PATH...]"
+                        .to_string(),
+                )
+            }
+            other if other.starts_with('-') => {
+                return Err(format!("unknown flag `{other}`"))
+            }
+            other => args.paths.push(PathBuf::from(other)),
+        }
+    }
+    Ok(args)
+}
+
+fn default_root() -> PathBuf {
+    let preferred = PathBuf::from("rust/src");
+    if preferred.is_dir() {
+        preferred
+    } else {
+        PathBuf::from("src")
+    }
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("flashlint: {msg}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if args.list_rules {
+        for (name, summary, _) in lint::RULES {
+            println!("{name:18} {summary}");
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let cfg = match &args.hotpath {
+        None => lint::LintConfig::default(),
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(text) => lint::LintConfig {
+                hotpath_roots: lint::parse_hotpath(&text),
+            },
+            Err(e) => {
+                eprintln!("flashlint: cannot read {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        },
+    };
+
+    let roots = if args.paths.is_empty() {
+        vec![default_root()]
+    } else {
+        args.paths.clone()
+    };
+
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for root in &roots {
+        let files = match lint::collect_rs_files(root) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("flashlint: cannot walk {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        };
+        for path in files {
+            match std::fs::read_to_string(&path) {
+                Ok(src) => {
+                    sources.push((path.display().to_string(), src))
+                }
+                Err(e) => {
+                    eprintln!(
+                        "flashlint: cannot read {}: {e}",
+                        path.display()
+                    );
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    }
+    if sources.is_empty() {
+        eprintln!("flashlint: no .rs files found under the given paths");
+        return ExitCode::from(2);
+    }
+
+    let report = lint::lint_sources(&sources, &cfg);
+    if args.json {
+        println!("{}", lint::render_json(&report));
+    } else {
+        print!("{}", lint::render_text(&report));
+    }
+    if report.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -7,13 +7,14 @@
 //! next to the latency distributions it buys.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::factorstore::FactorStore;
+use crate::util::sync::Mutex;
 use crate::util::Stats;
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
@@ -25,6 +26,21 @@ pub struct Metrics {
     store: Mutex<Option<Arc<FactorStore>>>,
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_sizes: Mutex::new("metrics.batch_sizes", Stats::default()),
+            queue_secs: Mutex::new("metrics.queue_secs", Stats::default()),
+            exec_secs: Mutex::new("metrics.exec_secs", Stats::default()),
+            store: Mutex::new("metrics.store", None),
+        }
+    }
+}
+
 impl Metrics {
     pub fn new() -> Self {
         Self::default()
@@ -32,12 +48,15 @@ impl Metrics {
 
     /// Surface `store`'s counters in summaries and JSON dumps.
     pub fn attach_store(&self, store: Arc<FactorStore>) {
-        *self.store.lock().unwrap() = Some(store);
+        *self.store.lock_recover() = Some(store);
     }
 
-    /// Snapshot of the attached store's counters, if any.
+    /// Snapshot of the attached store's counters, if any. Holds
+    /// `metrics.store` across the store's own counter reads — the one
+    /// legitimate cross-module lock-order edge the audit records
+    /// (`metrics.store` → `factorstore.inner`).
     pub fn store_stats(&self) -> Option<crate::factorstore::StoreStats> {
-        self.store.lock().unwrap().as_ref().map(|s| s.stats())
+        self.store.lock_recover().as_ref().map(|s| s.stats())
     }
 
     pub fn on_submit(&self) {
@@ -46,7 +65,7 @@ impl Metrics {
 
     pub fn on_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_sizes.lock().unwrap().push(size as f64);
+        self.batch_sizes.lock_recover().push(size as f64);
     }
 
     pub fn on_complete(&self, queue: Duration, exec: Duration, ok: bool) {
@@ -55,8 +74,8 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
-        self.queue_secs.lock().unwrap().push(queue.as_secs_f64());
-        self.exec_secs.lock().unwrap().push(exec.as_secs_f64());
+        self.queue_secs.lock_recover().push(queue.as_secs_f64());
+        self.exec_secs.lock_recover().push(exec.as_secs_f64());
     }
 
     pub fn submitted(&self) -> u64 {
@@ -76,15 +95,15 @@ impl Metrics {
     }
 
     pub fn mean_batch_size(&self) -> f64 {
-        self.batch_sizes.lock().unwrap().mean()
+        self.batch_sizes.lock_recover().mean()
     }
 
     pub fn queue_stats(&self) -> Stats {
-        self.queue_secs.lock().unwrap().clone()
+        self.queue_secs.lock_recover().clone()
     }
 
     pub fn exec_stats(&self) -> Stats {
-        self.exec_secs.lock().unwrap().clone()
+        self.exec_secs.lock_recover().clone()
     }
 
     /// One-line human summary (two lines once a store is attached).

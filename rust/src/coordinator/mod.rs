@@ -33,7 +33,7 @@ pub mod worker;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -42,6 +42,7 @@ use crate::factorstore::{FactorService, FactorStore};
 use crate::iomodel::Geometry;
 use crate::plan::{AttentionPlan, BiasSpec, PlanOptions, Planner};
 use crate::runtime::{HostValue, Runtime};
+use crate::util::sync::RwLock;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
@@ -55,9 +56,16 @@ pub use crate::plan::{Planner as StrategySelector, SelectorConfig};
 /// engine — no PJRT artifact needed. Plan names share the artifact
 /// namespace; a flushed batch whose name resolves here is stacked into
 /// one batched `(B, H, N, C)` engine call by the worker pool.
-#[derive(Default)]
 pub struct HostPlanRegistry {
     plans: RwLock<HashMap<String, Arc<AttentionPlan>>>,
+}
+
+impl Default for HostPlanRegistry {
+    fn default() -> Self {
+        Self {
+            plans: RwLock::new("coordinator.host_plans", HashMap::new()),
+        }
+    }
 }
 
 impl HostPlanRegistry {
@@ -67,21 +75,20 @@ impl HostPlanRegistry {
 
     pub fn register(&self, name: &str, plan: AttentionPlan) {
         self.plans
-            .write()
-            .unwrap()
+            .write_recover()
             .insert(name.to_string(), Arc::new(plan));
     }
 
     pub fn get(&self, name: &str) -> Option<Arc<AttentionPlan>> {
-        self.plans.read().unwrap().get(name).cloned()
+        self.plans.read_recover().get(name).cloned()
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.plans.read().unwrap().contains_key(name)
+        self.plans.read_recover().contains_key(name)
     }
 
     pub fn names(&self) -> Vec<String> {
-        self.plans.read().unwrap().keys().cloned().collect()
+        self.plans.read_recover().keys().cloned().collect()
     }
 }
 

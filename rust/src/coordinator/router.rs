@@ -38,7 +38,7 @@ impl Router {
     pub fn from_runtime(rt: &Runtime) -> Self {
         let mut router = Router::default();
         for name in rt.names() {
-            let spec = rt.spec(name).unwrap();
+            let Some(spec) = rt.spec(name) else { continue };
             if spec.family().is_empty() {
                 continue;
             }

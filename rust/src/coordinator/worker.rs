@@ -6,7 +6,7 @@
 //! queueing without bound.
 
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -17,6 +17,7 @@ use crate::kernels::{self, KernelConfig};
 use crate::plan::{plan_bias_tile, AttentionPlan, Executor, HostExecutor};
 use crate::runtime::{HostValue, Runtime};
 use crate::tensor::Tensor;
+use crate::util::sync::Mutex;
 
 enum Job {
     Run(Batch),
@@ -49,7 +50,7 @@ impl WorkerPool {
         metrics: Arc<Metrics>,
     ) -> (Self, Receiver<Response>) {
         let (tx, rx) = sync_channel::<Job>(queue_depth.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(Mutex::new("coordinator.worker_rx", rx));
         let (resp_tx, resp_rx) = std::sync::mpsc::channel::<Response>();
         let mut handles = Vec::with_capacity(workers.max(1));
         // divide the machine's core budget across workers so concurrent
@@ -64,7 +65,7 @@ impl WorkerPool {
             let metrics = metrics.clone();
             handles.push(std::thread::spawn(move || loop {
                 let job = {
-                    let guard = rx.lock().unwrap();
+                    let guard = rx.lock_recover();
                     guard.recv()
                 };
                 match job {
@@ -269,6 +270,7 @@ fn run_engine_group(
     metrics: &Metrics,
     engine_threads: usize,
 ) {
+    // flashlint: allow-fn(hot-path-panic) every request in `good` passed check_engine_req, which proved the three inputs exist and are f32
     let g = &plan.geometry;
     let b = good.len();
     let mut qd = Vec::with_capacity(b * h * g.n * g.c);
@@ -310,6 +312,7 @@ fn run_multiplicative_req(
     resp_tx: &Sender<Response>,
     metrics: &Metrics,
 ) {
+    // flashlint: allow-fn(hot-path-panic) callers route here only after check_engine_req validated the [q, k, v] f32 payload
     let queue_time = formed.duration_since(req.enqueued);
     let t0 = Instant::now();
     let outputs = (|| -> Result<Vec<HostValue>> {

@@ -243,7 +243,7 @@ impl LowRankSparse {
                 .collect();
             if keep > 0 && keep < entries.len() {
                 entries.select_nth_unstable_by(keep - 1, |a, b| {
-                    b.2.abs().partial_cmp(&a.2.abs()).unwrap()
+                    b.2.abs().total_cmp(&a.2.abs())
                 });
             }
             entries.truncate(keep);
@@ -255,6 +255,7 @@ impl LowRankSparse {
                 phi_k: pk,
             });
         }
+        // flashlint: allow(hot-path-panic) the loop above runs iters.max(1) >= 1 passes, so factors is always Some here
         let factors = factors.unwrap();
         let mut approx = factors.reconstruct();
         for &(i, j, v) in &sparse {

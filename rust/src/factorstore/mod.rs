@@ -44,9 +44,11 @@ use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use anyhow::{anyhow, Result};
+
+use crate::util::sync::{check_blocking, Mutex};
 
 use crate::decompose::Factors;
 use crate::jsonlite::Json;
@@ -321,9 +323,9 @@ impl FactorStore {
     /// Store bounded to `budget_bytes` of resident factor data.
     pub fn new(budget_bytes: usize) -> Self {
         Self {
-            inner: Mutex::new(Inner::default()),
+            inner: Mutex::new("factorstore.inner", Inner::default()),
             spill: None,
-            remote: Mutex::new(None),
+            remote: Mutex::new("factorstore.remote", None),
             budget_bytes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -351,7 +353,7 @@ impl FactorStore {
             .truncate(true)
             .open(&path)
             .map_err(|e| anyhow!("spill file {}: {e}", path.display()))?;
-        self.spill = Some(Mutex::new(SpillFile { file, end: 0, path }));
+        self.spill = Some(Mutex::new("factorstore.spill", SpillFile { file, end: 0, path }));
         Ok(self)
     }
 
@@ -359,7 +361,7 @@ impl FactorStore {
     /// [`Self::get_or_insert_with`] consult this peer before running
     /// the decomposition, and cache what it returns locally.
     pub fn attach_remote(&self, remote: RemoteStore) {
-        *self.remote.lock().unwrap() = Some(remote);
+        *self.remote.lock_recover() = Some(remote);
     }
 
     /// Builder form of [`Self::attach_remote`].
@@ -370,7 +372,7 @@ impl FactorStore {
 
     /// The attached sharing-tier client, if any.
     pub fn remote(&self) -> Option<RemoteStore> {
-        self.remote.lock().unwrap().clone()
+        self.remote.lock_recover().clone()
     }
 
     /// Look up a finished entry (LRU touch), falling back to the spill
@@ -386,7 +388,7 @@ impl FactorStore {
     /// whether the tier counters tick.
     fn lookup(&self, key: Fingerprint, counted: bool) -> Option<Cached> {
         let found = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock_recover();
             inner.tick += 1;
             let stamp = inner.tick;
             inner.map.get_mut(&key.0).map(|e| {
@@ -436,7 +438,7 @@ impl FactorStore {
         decompose: impl FnOnce() -> Cached,
     ) -> Cached {
         let cell = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock_recover();
             inner.tick += 1;
             let stamp = inner.tick;
             if let Some(e) = inner.map.get_mut(&key.0) {
@@ -483,7 +485,7 @@ impl FactorStore {
             }
         };
         let evicted = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock_recover();
             // Only the cell we actually waited on may be retired: after
             // an eviction, a *newer* in-flight decomposition for this
             // key can own a fresh pending cell, and a late waiter from
@@ -515,7 +517,7 @@ impl FactorStore {
     /// Insert (or replace) an entry directly — the load path.
     pub fn insert(&self, key: Fingerprint, value: Cached) {
         let evicted = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock_recover();
             if let Some(old) = inner.map.remove(&key.0) {
                 inner.bytes -= old.bytes;
             }
@@ -588,7 +590,7 @@ impl FactorStore {
                 locs.push((*k, loc));
             }
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         for (k, _) in &evicted {
             inner.spilling.remove(k);
         }
@@ -612,14 +614,14 @@ impl FactorStore {
     fn spill_take(&self, key: Fingerprint) -> Option<Cached> {
         self.spill.as_ref()?;
         let loc = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.inner.lock_recover();
             if let Some(v) = inner.spilling.get(&key.0) {
                 return Some(v.clone());
             }
             *inner.spill_index.get(&key.0)?
         };
         let parsed = self.spill_read_at(loc);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock_recover();
         // consume the slot only if it still points at what we read — a
         // concurrent re-spill owns the newer record
         if inner.spill_index.get(&key.0) == Some(&loc) {
@@ -638,9 +640,14 @@ impl FactorStore {
     /// Read and decode one spill record without touching the index.
     fn spill_read_at(&self, (offset, len): (u64, u64))
                      -> Option<(Fingerprint, Cached)> {
+        // flashlint: allow-fn(io-under-lock) the spill-file lock exists to serialize this seek+read pair; the store's global lock is never held here (enforced at runtime by check_blocking)
         let spill = self.spill.as_ref()?;
         let text = {
-            let mut f = spill.lock().unwrap();
+            let mut f = spill.lock_recover();
+            check_blocking(
+                "factorstore::spill_read_at",
+                &["factorstore.spill"],
+            );
             if f.file.seek(SeekFrom::Start(offset)).is_err() {
                 return None;
             }
@@ -656,22 +663,25 @@ impl FactorStore {
 
     /// Fetch `key` from the attached sharing-tier peer, if any.
     /// Network/protocol failures degrade to `None` (decompose locally).
+    /// The client is cloned out of its lock first: the socket round
+    /// trip must never run under any store lock.
     fn remote_fetch(&self, key: Fingerprint) -> Option<Cached> {
-        let remote = self.remote.lock().unwrap().clone()?;
+        let remote = self.remote.lock_recover().clone()?;
+        check_blocking("factorstore::remote_fetch", &[]);
         remote.fetch(key)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.lock_recover().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.inner.lock().unwrap().map.is_empty()
+        self.inner.lock_recover().map.is_empty()
     }
 
     /// Resident factor bytes.
     pub fn total_bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.inner.lock_recover().bytes
     }
 
     pub fn hits(&self) -> u64 {
@@ -696,18 +706,18 @@ impl FactorStore {
 
     /// Entries currently living in the spill tier.
     pub fn spilled(&self) -> usize {
-        self.inner.lock().unwrap().spill_index.len()
+        self.inner.lock_recover().spill_index.len()
     }
 
     /// The attached spill file's path, if a spill tier is configured.
     pub fn spill_path(&self) -> Option<PathBuf> {
         self.spill
             .as_ref()
-            .map(|s| s.lock().unwrap().path.clone())
+            .map(|s| s.lock_recover().path.clone())
     }
 
     pub fn stats(&self) -> StoreStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock_recover();
         StoreStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
@@ -734,7 +744,7 @@ impl FactorStore {
     /// `load` rejects. A skipped bias simply decomposes again on demand.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let (resident, in_transit, spill_locs) = {
-            let inner = self.inner.lock().unwrap();
+            let inner = self.inner.lock_recover();
             let mut entries: Vec<(&u64, &Entry)> =
                 inner.map.iter().collect();
             entries.sort_by_key(|(_, e)| e.stamp);
@@ -775,6 +785,7 @@ impl FactorStore {
         ]);
         // atomic replace: a crash mid-write must never leave a
         // truncated file that bricks every later open() on this path
+        check_blocking("factorstore::save", &[]);
         let path = path.as_ref();
         let tmp = path
             .with_extension(format!("tmp.{}", std::process::id()));
@@ -803,6 +814,7 @@ impl FactorStore {
     /// overflow of a large file instead of dropping it.
     pub fn absorb(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
+        check_blocking("factorstore::absorb", &[]);
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
         let json = Json::parse(&text)
@@ -833,11 +845,13 @@ impl FactorStore {
 /// spill tier existed.
 fn spill_append(spill: &Mutex<SpillFile>, key: u64,
                 value: &Cached) -> Option<(u64, u64)> {
+    // flashlint: allow-fn(io-under-lock) the spill-file lock exists to serialize this seek+append pair; callers hold no other lock here (enforced at runtime by check_blocking)
     if !entry_is_finite(value) {
         return None;
     }
     let text = entry_to_json(key, value).dump();
-    let mut f = spill.lock().unwrap();
+    let mut f = spill.lock_recover();
+    check_blocking("factorstore::spill_append", &["factorstore.spill"]);
     let offset = f.end;
     if f.file.seek(SeekFrom::Start(offset)).is_err() {
         return None;
@@ -886,6 +900,9 @@ fn json_to_f32s(j: &Json) -> Result<Vec<f32>> {
 }
 
 pub(crate) fn entry_to_json(key: u64, value: &Cached) -> Json {
+    // Every caller filters through entry_is_finite first; this is the
+    // last line of defense before floats reach a persisted file.
+    debug_assert!(entry_is_finite(value), "non-finite factors at {key:#x}");
     let key_hex = format!("{:016x}", key);
     match value {
         Cached::Factors(f) => Json::obj(vec![

@@ -33,11 +33,17 @@ impl fmt::Display for ParseError {
 
 impl std::error::Error for ParseError {}
 
+/// Recursion limit for nested arrays/objects: deep enough for any real
+/// manifest or store file, shallow enough that adversarial input (e.g.
+/// `[[[[…`) errors out long before the thread stack is at risk.
+pub const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, ParseError> {
         let mut p = Parser {
             bytes: s.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -133,7 +139,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity; `format!` would emit an
+                    // unparseable token and corrupt the document.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     out.push_str(&format!("{}", *x as i64));
                 } else {
                     out.push_str(&format!("{}", x));
@@ -185,6 +195,7 @@ impl Json {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -213,11 +224,22 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), ParseError> {
+    fn eat(&mut self, b: u8) -> Result<(), ParseError> {
         if self.bump() == Some(b) {
             Ok(())
         } else {
             Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    /// Track container nesting; errors past [`MAX_DEPTH`] so hostile
+    /// input cannot blow the parse stack.
+    fn enter(&mut self) -> Result<(), ParseError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            Err(self.err("nesting deeper than 128 levels"))
+        } else {
+            Ok(())
         }
     }
 
@@ -244,7 +266,14 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'{')?;
+        self.enter()?;
+        let v = self.object_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn object_inner(&mut self) -> Result<Json, ParseError> {
+        self.eat(b'{')?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -255,7 +284,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.eat(b':')?;
             self.skip_ws();
             let val = self.value()?;
             map.insert(key, val);
@@ -269,7 +298,14 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, ParseError> {
-        self.expect(b'[')?;
+        self.enter()?;
+        let v = self.array_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn array_inner(&mut self) -> Result<Json, ParseError> {
+        self.eat(b'[')?;
         let mut arr = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -289,7 +325,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, ParseError> {
-        self.expect(b'"')?;
+        self.eat(b'"')?;
         let mut s = String::new();
         loop {
             match self.bump() {
@@ -363,7 +399,8 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))

@@ -1,3 +1,8 @@
+// `forbid` is impossible here: runtime/ needs two `unsafe impl Send/Sync`
+// for the PJRT handle types (documented at the impls). `deny` + local,
+// justified `#[allow(unsafe_code)]` keeps every other module unsafe-free.
+#![deny(unsafe_code)]
+
 //! FlashBias: fast computation of attention with bias.
 //!
 //! Rust/JAX/Pallas three-layer reproduction of "FlashBias: Fast
@@ -71,6 +76,10 @@
 //!   `(B, H, N, C)` kernel-engine call.
 //! * [`server`] — CLI + config + run loop (including the `plan`
 //!   subcommand).
+//! * [`lint`] — flashlint, the in-repo static-analysis pass enforcing
+//!   the serving core's concurrency and panic-safety invariants
+//!   (tokenizer, rules R1–R5, hot-path call-graph); paired with the
+//!   [`util::sync`] runtime lock-order audit.
 pub mod util;
 pub mod tensor;
 pub mod linalg;
@@ -89,3 +98,4 @@ pub mod runtime;
 pub mod coordinator;
 pub mod server;
 pub mod benchkit;
+pub mod lint;

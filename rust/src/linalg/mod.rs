@@ -94,7 +94,7 @@ pub fn svd(a: &Tensor) -> Svd {
         }
         *sig = sum.sqrt();
     }
-    order.sort_by(|&a, &b| sigmas[b].partial_cmp(&sigmas[a]).unwrap());
+    order.sort_by(|&a, &b| sigmas[b].total_cmp(&sigmas[a]));
 
     let mut u_data = vec![0.0f32; n * m];
     let mut v_data = vec![0.0f32; m * m];

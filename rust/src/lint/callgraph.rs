@@ -1,0 +1,177 @@
+//! R5: panic sites reachable from the serving hot path.
+//!
+//! flashlint has no type information, so the call graph is name-level:
+//! an identifier followed by `(` inside a function body is an edge from
+//! that function's *name* to the callee's *name*. Reachability is then
+//! a BFS over names, seeded by the checked-in hot-path manifest
+//! (`src/lint/hotpath.txt`). This over-approximates — a call to
+//! `x.get(…)` reaches every repo function named `get` — which is the
+//! right bias for a safety net: everything the serving loop *could*
+//! reach must be panic-free or carry an annotated justification.
+
+use super::rules::{calls_in_range, FileAnalysis, Finding};
+use super::tokenizer::{is_ident, is_punct, TokKind};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+/// Macros that are always a panic at runtime.
+const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented"];
+
+/// Compute R5 findings across all files. Returns `(file_index, finding)`
+/// pairs so the caller can route them through per-file suppression.
+pub fn hot_path_findings(
+    files: &[FileAnalysis],
+    roots: &[String],
+) -> Vec<(usize, Finding)> {
+    // name -> [(file idx, span idx)] over non-test fns.
+    let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for (fi, fa) in files.iter().enumerate() {
+        for (si, span) in fa.fn_spans.iter().enumerate() {
+            if !span.is_test {
+                by_name.entry(span.name.as_str()).or_default().push((fi, si));
+            }
+        }
+    }
+
+    // BFS over fn names; remember which caller first reached each name.
+    let mut reached_via: BTreeMap<String, String> = BTreeMap::new();
+    let mut queue: VecDeque<String> = VecDeque::new();
+    for r in roots {
+        if by_name.contains_key(r.as_str())
+            && !reached_via.contains_key(r.as_str())
+        {
+            reached_via.insert(r.clone(), "<hot-path manifest>".to_string());
+            queue.push_back(r.clone());
+        }
+    }
+    let mut visited_spans: BTreeSet<(usize, usize)> = BTreeSet::new();
+    while let Some(name) = queue.pop_front() {
+        let Some(sites) = by_name.get(name.as_str()) else { continue };
+        for &(fi, si) in sites {
+            if !visited_spans.insert((fi, si)) {
+                continue;
+            }
+            let fa = &files[fi];
+            let span = &fa.fn_spans[si];
+            for callee in span_calls(fa, si) {
+                if by_name.contains_key(callee.as_str())
+                    && !reached_via.contains_key(&callee)
+                {
+                    reached_via.insert(callee.clone(), name.clone());
+                    queue.push_back(callee);
+                }
+            }
+        }
+    }
+
+    // Scan every reached span for panic sites.
+    let mut out = Vec::new();
+    for &(fi, si) in &visited_spans {
+        let fa = &files[fi];
+        let span = &fa.fn_spans[si];
+        let t = &fa.toks;
+        for i in span.body_open..=span.body_close {
+            if fa.test_mask[i] || t[i].kind != TokKind::Ident {
+                continue;
+            }
+            // Only sites attributed to this span, not a nested fn.
+            if let Some(inner) = super::rules::innermost_fn(fa, i) {
+                if inner.kw != span.kw {
+                    continue;
+                }
+            }
+            let site = if (is_ident(&t[i], "unwrap")
+                || is_ident(&t[i], "expect"))
+                && i > 0
+                && is_punct(&t[i - 1], '.')
+                && i + 1 < t.len()
+                && is_punct(&t[i + 1], '(')
+            {
+                Some(format!(".{}()", t[i].text))
+            } else if PANIC_MACROS.contains(&t[i].text.as_str())
+                && i + 1 < t.len()
+                && is_punct(&t[i + 1], '!')
+            {
+                Some(format!("{}!", t[i].text))
+            } else {
+                None
+            };
+            if let Some(site) = site {
+                let via = chain(&reached_via, &span.name);
+                out.push((
+                    fi,
+                    Finding {
+                        rule: "hot-path-panic",
+                        line: t[i].line,
+                        message: format!(
+                            "`{site}` in fn `{}`, reachable from the \
+                             serving hot path ({via})",
+                            span.name
+                        ),
+                    },
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Call sites attributed to span `si` (excluding nested fn bodies).
+fn span_calls(fa: &FileAnalysis, si: usize) -> Vec<String> {
+    let span = &fa.fn_spans[si];
+    let mut calls =
+        calls_in_range(fa, span.body_open + 1, span.body_close);
+    // Remove calls that actually live in a nested fn defined inside us.
+    let nested: Vec<(usize, usize)> = fa
+        .fn_spans
+        .iter()
+        .filter(|s| s.kw != span.kw && s.kw > span.body_open && s.body_close < span.body_close)
+        .map(|s| (s.kw, s.body_close))
+        .collect();
+    if !nested.is_empty() {
+        calls = calls_outside_nested(fa, span, &nested);
+    }
+    calls.sort();
+    calls.dedup();
+    calls
+}
+
+fn calls_outside_nested(
+    fa: &FileAnalysis,
+    span: &super::rules::FnSpan,
+    nested: &[(usize, usize)],
+) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut i = span.body_open + 1;
+    while i < span.body_close {
+        if let Some(&(_, close)) =
+            nested.iter().find(|&&(kw, _)| kw == i)
+        {
+            i = close + 1;
+            continue;
+        }
+        out.extend(calls_in_range(fa, i, i + 1));
+        i += 1;
+    }
+    out
+}
+
+/// Render a short `root <- … <- name` provenance chain for diagnostics.
+fn chain(reached_via: &BTreeMap<String, String>, name: &str) -> String {
+    let mut parts = vec![name.to_string()];
+    let mut cur = name.to_string();
+    for _ in 0..6 {
+        match reached_via.get(&cur) {
+            Some(prev) if prev != "<hot-path manifest>" => {
+                parts.push(prev.clone());
+                cur = prev.clone();
+            }
+            _ => break,
+        }
+    }
+    parts.reverse();
+    if parts.len() == 1 {
+        format!("root `{}`", parts[0])
+    } else {
+        format!("via `{}`", parts.join(" -> "))
+    }
+}

@@ -1,0 +1,307 @@
+//! flashlint: a dependency-free static-analysis pass for the serving
+//! core's concurrency and panic-safety invariants.
+//!
+//! The rules encode bug classes found by hand in past reviews:
+//!
+//! | rule | checks |
+//! |------|--------|
+//! | `lock-unwrap` | `.lock()/.read()/.write()` result unwrapped in `coordinator/`, `server/`, `factorstore/`, `runtime/` (poison cascade) |
+//! | `raw-sync` | raw `std::sync::{Mutex,RwLock}` use outside the `util::sync` shim, or a lock constructed without an audit name |
+//! | `io-under-lock` | file/socket I/O lexically inside a lock-guard live range in `factorstore/` |
+//! | `nonfinite-persist` | factor-serializing calls in `factorstore/` whose enclosing function never checks finiteness |
+//! | `hot-path-panic` | `panic!`/`unwrap`/`expect`/`todo!`/`unimplemented!` reachable from the hot-path manifest |
+//!
+//! Findings can be suppressed in place with an annotation comment that
+//! must carry a reason (see [`rules::AllowForm`]): `allow` covers the
+//! next line, `allow-fn` the enclosing function, `allow-file` the file.
+//! A malformed or reasonless annotation is itself reported (`bad-allow`)
+//! and cannot be suppressed.
+//!
+//! Run it via `make lint` or directly:
+//!
+//! ```text
+//! cargo run --release --bin flashlint -- rust/src
+//! cargo run --release --bin flashlint -- --json rust/src
+//! ```
+//!
+//! Exit code 0 = clean, 1 = unsuppressed findings, 2 = usage/IO error.
+
+pub mod callgraph;
+pub mod rules;
+pub mod tokenizer;
+
+use crate::jsonlite::Json;
+use std::path::{Path, PathBuf};
+
+/// Rule registry: (name, one-line summary, fix hint).
+pub const RULES: &[(&str, &str, &str)] = &[
+    (
+        "lock-unwrap",
+        "lock result unwrapped in the serving core",
+        "use util::sync wrappers: lock_recover()/read_recover()/write_recover()",
+    ),
+    (
+        "raw-sync",
+        "raw std::sync lock outside the util::sync shim",
+        "construct locks via util::sync::{Mutex,RwLock}::new(\"module.role\", value)",
+    ),
+    (
+        "io-under-lock",
+        "file/socket I/O inside a lock-guard live range",
+        "copy the data out, drop the guard, then do the I/O (or scope the guard in a block)",
+    ),
+    (
+        "nonfinite-persist",
+        "factor floats persisted without a finiteness guard",
+        "call entry_is_finite()/is_finite() before serializing, and skip or reject non-finite factors",
+    ),
+    (
+        "hot-path-panic",
+        "panic site reachable from the serving hot path",
+        "return a typed error (or prove the invariant and add a flashlint allow annotation with the proof)",
+    ),
+    (
+        "bad-allow",
+        "malformed flashlint allow annotation",
+        "use `// flashlint: allow(rule) reason`, allow-fn(...) or allow-file(...); the reason is mandatory",
+    ),
+];
+
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+    pub hint: &'static str,
+}
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LintConfig {
+    /// Hot-path root function names for R5.
+    pub hotpath_roots: Vec<String>,
+}
+
+impl Default for LintConfig {
+    fn default() -> Self {
+        Self {
+            hotpath_roots: parse_hotpath(default_hotpath_manifest()),
+        }
+    }
+}
+
+/// The checked-in hot-path manifest (`src/lint/hotpath.txt`).
+pub fn default_hotpath_manifest() -> &'static str {
+    include_str!("hotpath.txt")
+}
+
+/// Parse a manifest: one fn name per line, `#` comments, blanks ignored.
+pub fn parse_hotpath(text: &str) -> Vec<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+fn hint_for(rule: &str) -> &'static str {
+    RULES
+        .iter()
+        .find(|(name, _, _)| *name == rule)
+        .map(|(_, _, hint)| *hint)
+        .unwrap_or("")
+}
+
+/// Lint a set of `(path, contents)` pairs. R1–R4 run per file; R5 runs
+/// over the whole set so cross-file reachability works.
+pub fn lint_sources(files: &[(String, String)], cfg: &LintConfig) -> Report {
+    let analyses: Vec<rules::FileAnalysis> = files
+        .iter()
+        .map(|(path, src)| rules::analyze(path, src))
+        .collect();
+
+    let mut raw: Vec<(usize, rules::Finding)> = Vec::new();
+    for (fi, fa) in analyses.iter().enumerate() {
+        for f in rules::r1_lock_unwrap(fa) {
+            raw.push((fi, f));
+        }
+        for f in rules::r2_raw_sync(fa) {
+            raw.push((fi, f));
+        }
+        for f in rules::r3_io_under_lock(fa) {
+            raw.push((fi, f));
+        }
+        for f in rules::r4_nonfinite_persist(fa) {
+            raw.push((fi, f));
+        }
+    }
+    raw.extend(callgraph::hot_path_findings(&analyses, &cfg.hotpath_roots));
+
+    let mut report = Report {
+        files_scanned: files.len(),
+        ..Report::default()
+    };
+    for (fi, f) in raw {
+        let fa = &analyses[fi];
+        // bad-allow is never suppressible; everything else honors allows.
+        if f.rule != "bad-allow" && rules::is_suppressed(fa, f.rule, f.line) {
+            report.suppressed += 1;
+            continue;
+        }
+        report.diagnostics.push(Diagnostic {
+            file: fa.path.clone(),
+            line: f.line,
+            rule: f.rule,
+            message: f.message,
+            hint: hint_for(f.rule),
+        });
+    }
+    // Malformed annotations are diagnostics too.
+    for fa in &analyses {
+        for f in &fa.bad_allows {
+            report.diagnostics.push(Diagnostic {
+                file: fa.path.clone(),
+                line: f.line,
+                rule: f.rule,
+                message: f.message.clone(),
+                hint: hint_for(f.rule),
+            });
+        }
+    }
+    report
+        .diagnostics
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+}
+
+/// Recursively collect `.rs` files under `root` (or `root` itself if it
+/// is a file), skipping `vendor/`, `target/`, and hidden directories.
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    if root.is_file() {
+        out.push(root.to_path_buf());
+        return Ok(out);
+    }
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for path in entries {
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("");
+            if path.is_dir() {
+                if name == "vendor" || name == "target" || name.starts_with('.')
+                {
+                    continue;
+                }
+                stack.push(path);
+            } else if name.ends_with(".rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Human-readable rendering, one line per finding plus a summary.
+pub fn render_text(report: &Report) -> String {
+    let mut out = String::new();
+    for d in &report.diagnostics {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}\n    hint: {}\n",
+            d.file, d.line, d.rule, d.message, d.hint
+        ));
+    }
+    out.push_str(&format!(
+        "flashlint: {} finding(s), {} suppressed, {} file(s) scanned\n",
+        report.diagnostics.len(),
+        report.suppressed,
+        report.files_scanned
+    ));
+    out
+}
+
+/// Machine-readable rendering (single JSON object).
+pub fn render_json(report: &Report) -> String {
+    let diags: Vec<Json> = report
+        .diagnostics
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("file", Json::str(&d.file)),
+                ("line", Json::num(d.line as f64)),
+                ("rule", Json::str(d.rule)),
+                ("message", Json::str(&d.message)),
+                ("hint", Json::str(d.hint)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("files_scanned", Json::num(report.files_scanned as f64)),
+        ("suppressed", Json::num(report.suppressed as f64)),
+        ("violations", Json::num(report.diagnostics.len() as f64)),
+        ("diagnostics", Json::Arr(diags)),
+    ])
+    .dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, src: &str) -> Report {
+        lint_sources(
+            &[(path.to_string(), src.to_string())],
+            &LintConfig::default(),
+        )
+    }
+
+    #[test]
+    fn manifest_parses_and_has_roots() {
+        let roots = parse_hotpath(default_hotpath_manifest());
+        assert!(roots.len() >= 10);
+        assert!(roots.iter().any(|r| r == "serve_loop"));
+        assert!(roots.iter().all(|r| !r.starts_with('#')));
+    }
+
+    #[test]
+    fn clean_file_is_clean() {
+        let r = lint_one(
+            "src/coordinator/mod.rs",
+            "pub fn quiet() -> usize { 1 + 1 }",
+        );
+        assert!(r.clean(), "{:?}", r.diagnostics);
+    }
+
+    #[test]
+    fn json_rendering_is_parseable() {
+        let r = lint_one(
+            "src/factorstore/x.rs",
+            "fn f(m: &M) { m.lock().unwrap(); }",
+        );
+        assert_eq!(r.diagnostics.len(), 1);
+        let j = crate::jsonlite::Json::parse(&render_json(&r))
+            .expect("valid json");
+        assert_eq!(j.get("violations").as_usize(), Some(1));
+        let d = &j.get("diagnostics").as_arr().expect("arr")[0];
+        assert_eq!(d.get("rule").as_str(), Some("lock-unwrap"));
+    }
+}

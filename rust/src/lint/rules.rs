@@ -1,0 +1,728 @@
+//! Per-file analysis and the lexical rules R1–R4.
+//!
+//! Everything here works on the token stream from
+//! [`super::tokenizer`]: brace matching gives block structure, a scan
+//! for `fn` gives function spans, `#[cfg(test)]` / `#[test]` regions
+//! are masked out, and each rule is a small pattern matcher over token
+//! windows. R5 (hot-path reachability) lives in [`super::callgraph`].
+
+use super::tokenizer::{is_ident, is_punct, tokenize, Comment, Tok, TokKind};
+
+/// A raw rule hit, before suppression is applied.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub line: u32,
+    pub message: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllowForm {
+    /// Suppresses on the annotation's line and the following line.
+    Line,
+    /// Suppresses within the enclosing function span.
+    Fn,
+    /// Suppresses for the whole file.
+    File,
+}
+
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub form: AllowForm,
+    pub rule: String,
+    pub line: u32,
+}
+
+/// A `fn` item: token span of its body plus source lines.
+#[derive(Clone, Debug)]
+pub struct FnSpan {
+    pub name: String,
+    /// Token index of the `fn` keyword.
+    pub kw: usize,
+    pub body_open: usize,
+    pub body_close: usize,
+    pub start_line: u32,
+    pub end_line: u32,
+    pub is_test: bool,
+}
+
+pub struct FileAnalysis {
+    pub path: String,
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+    pub allows: Vec<Allow>,
+    pub bad_allows: Vec<Finding>,
+    /// Per-token: true if inside a `#[cfg(test)]` mod/fn or `#[test]` fn.
+    pub test_mask: Vec<bool>,
+    pub fn_spans: Vec<FnSpan>,
+    /// Per-token: index of the matching `}` of the innermost enclosing
+    /// `{` (None at top level).
+    pub enclosing_close: Vec<Option<usize>>,
+}
+
+const SYNC_TYPES: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "MutexGuard",
+    "RwLockReadGuard",
+    "RwLockWriteGuard",
+];
+
+const LOCK_ACQUIRE: &[&str] = &[
+    "lock",
+    "try_lock",
+    "read",
+    "try_read",
+    "write",
+    "try_write",
+    "lock_recover",
+    "try_lock_recover",
+    "read_recover",
+    "write_recover",
+];
+
+const IO_METHODS: &[&str] = &[
+    "write_all",
+    "read_exact",
+    "flush",
+    "seek",
+    "sync_all",
+    "set_len",
+    "read_to_string",
+    "read_to_end",
+];
+
+const IO_TYPES: &[&str] = &["File", "OpenOptions", "TcpStream", "TcpListener"];
+
+const FS_FNS: &[&str] = &[
+    "write",
+    "read",
+    "read_to_string",
+    "rename",
+    "remove_file",
+    "copy",
+    "create_dir_all",
+    "remove_dir_all",
+];
+
+/// Serializer entry points that persist factor floats (R4).
+const PERSIST_FNS: &[&str] = &["entry_to_json", "f32s_to_json"];
+
+const KEYWORDS: &[&str] = &[
+    "as", "box", "break", "const", "continue", "crate", "dyn", "else",
+    "enum", "extern", "fn", "for", "if", "impl", "in", "let", "loop",
+    "match", "mod", "move", "mut", "pub", "ref", "return", "self", "Self",
+    "static", "struct", "super", "trait", "type", "unsafe", "use", "where",
+    "while",
+];
+
+pub fn is_rule_name(name: &str) -> bool {
+    matches!(
+        name,
+        "lock-unwrap"
+            | "raw-sync"
+            | "io-under-lock"
+            | "nonfinite-persist"
+            | "hot-path-panic"
+    )
+}
+
+/// Normalize a path for scope checks (`\` → `/`).
+fn norm(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+fn in_scope(path: &str, dirs: &[&str]) -> bool {
+    let p = norm(path);
+    dirs.iter().any(|d| p.contains(d))
+}
+
+pub fn analyze(path: &str, src: &str) -> FileAnalysis {
+    let (toks, comments) = tokenize(src);
+    let n = toks.len();
+
+    // --- brace matching -----------------------------------------------------
+    // open_match[i] = index of the `}` closing the `{` at i.
+    let mut open_match: Vec<Option<usize>> = vec![None; n];
+    let mut enclosing_open: Vec<Option<usize>> = vec![None; n];
+    {
+        let mut stack: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if is_punct(&toks[i], '}') {
+                enclosing_open[i] = stack.last().copied();
+                if let Some(open) = stack.pop() {
+                    open_match[open] = Some(i);
+                }
+            } else {
+                enclosing_open[i] = stack.last().copied();
+                if is_punct(&toks[i], '{') {
+                    stack.push(i);
+                }
+            }
+        }
+    }
+    let enclosing_close: Vec<Option<usize>> = (0..n)
+        .map(|i| enclosing_open[i].and_then(|o| open_match[o]))
+        .collect();
+
+    // --- test regions -------------------------------------------------------
+    let mut test_mask = vec![false; n];
+    let mut i = 0usize;
+    while i + 2 < n {
+        // #[cfg(test)] or #[test]
+        if is_punct(&toks[i], '#') && is_punct(&toks[i + 1], '[') {
+            let is_cfg_test = i + 6 < n
+                && is_ident(&toks[i + 2], "cfg")
+                && is_punct(&toks[i + 3], '(')
+                && is_ident(&toks[i + 4], "test")
+                && is_punct(&toks[i + 5], ')')
+                && is_punct(&toks[i + 6], ']');
+            let is_test_attr = i + 3 < n
+                && is_ident(&toks[i + 2], "test")
+                && is_punct(&toks[i + 3], ']');
+            if is_cfg_test || is_test_attr {
+                // Find the end of this attribute, then skip any further
+                // attributes, then mask the following mod/fn body.
+                let mut j = skip_attr(&toks, i);
+                while j + 1 < n
+                    && is_punct(&toks[j], '#')
+                    && is_punct(&toks[j + 1], '[')
+                {
+                    j = skip_attr(&toks, j);
+                }
+                // Scan to the item's opening brace (mod/fn/impl...).
+                let mut k = j;
+                while k < n
+                    && !is_punct(&toks[k], '{')
+                    && !is_punct(&toks[k], ';')
+                {
+                    k += 1;
+                }
+                if k < n && is_punct(&toks[k], '{') {
+                    if let Some(close) = open_match[k] {
+                        for t in test_mask.iter_mut().take(close + 1).skip(i) {
+                            *t = true;
+                        }
+                        i = close + 1;
+                        continue;
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+
+    // --- fn spans -----------------------------------------------------------
+    let mut fn_spans: Vec<FnSpan> = Vec::new();
+    for i in 0..n {
+        if !is_ident(&toks[i], "fn") {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if name_tok.kind != TokKind::Ident {
+            continue;
+        }
+        // Walk to the body `{` (or `;` for bodiless decls).
+        let mut k = i + 2;
+        let mut body_open = None;
+        while k < n {
+            if is_punct(&toks[k], '{') {
+                body_open = Some(k);
+                break;
+            }
+            if is_punct(&toks[k], ';') {
+                break;
+            }
+            k += 1;
+        }
+        let Some(open) = body_open else { continue };
+        let Some(close) = open_match[open] else { continue };
+        fn_spans.push(FnSpan {
+            name: name_tok.text.clone(),
+            kw: i,
+            body_open: open,
+            body_close: close,
+            start_line: toks[i].line,
+            end_line: toks[close].line,
+            is_test: test_mask[i],
+        });
+    }
+
+    // --- allow annotations --------------------------------------------------
+    let mut allows = Vec::new();
+    let mut bad_allows = Vec::new();
+    for c in &comments {
+        parse_allow(c, &mut allows, &mut bad_allows);
+    }
+
+    FileAnalysis {
+        path: path.to_string(),
+        toks,
+        comments,
+        allows,
+        bad_allows,
+        test_mask,
+        fn_spans,
+        enclosing_close,
+    }
+}
+
+/// Skip one `#[...]` attribute starting at the `#`; returns the index
+/// just past its closing `]`.
+fn skip_attr(toks: &[Tok], at: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = at + 1;
+    while j < toks.len() {
+        if is_punct(&toks[j], '[') {
+            depth += 1;
+        } else if is_punct(&toks[j], ']') {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Parse a `// flashlint: allow*(rule) reason` annotation. Doc comments
+/// (`///`, `//!`) are prose and never parsed.
+fn parse_allow(c: &Comment, allows: &mut Vec<Allow>, bad: &mut Vec<Finding>) {
+    let body = match c.text.strip_prefix("//") {
+        Some(rest) => rest,
+        None => return, // block comment: not an annotation carrier
+    };
+    if body.starts_with('/') || body.starts_with('!') {
+        return; // doc comment
+    }
+    let body = body.trim_start();
+    let Some(rest) = body.strip_prefix("flashlint:") else {
+        return;
+    };
+    let rest = rest.trim_start();
+    let (form, rest) = if let Some(r) = rest.strip_prefix("allow-fn") {
+        (AllowForm::Fn, r)
+    } else if let Some(r) = rest.strip_prefix("allow-file") {
+        (AllowForm::File, r)
+    } else if let Some(r) = rest.strip_prefix("allow") {
+        (AllowForm::Line, r)
+    } else {
+        bad.push(Finding {
+            rule: "bad-allow",
+            line: c.line,
+            message: format!(
+                "malformed flashlint annotation (expected \
+                 allow/allow-fn/allow-file): `{}`",
+                c.text.trim()
+            ),
+        });
+        return;
+    };
+    let rest = rest.trim_start();
+    let ok = rest.strip_prefix('(').and_then(|r| {
+        r.split_once(')')
+            .map(|(rule, reason)| (rule.trim().to_string(), reason.trim()))
+    });
+    let Some((rule, reason)) = ok else {
+        bad.push(Finding {
+            rule: "bad-allow",
+            line: c.line,
+            message: format!(
+                "malformed flashlint annotation (missing `(rule)`): `{}`",
+                c.text.trim()
+            ),
+        });
+        return;
+    };
+    if !is_rule_name(&rule) {
+        bad.push(Finding {
+            rule: "bad-allow",
+            line: c.line,
+            message: format!("unknown flashlint rule `{rule}` in annotation"),
+        });
+        return;
+    }
+    if reason.is_empty() {
+        bad.push(Finding {
+            rule: "bad-allow",
+            line: c.line,
+            message: format!(
+                "flashlint allow({rule}) requires a reason after the \
+                 closing paren"
+            ),
+        });
+        return;
+    }
+    allows.push(Allow {
+        form,
+        rule,
+        line: c.line,
+    });
+}
+
+/// Is the finding at `line` suppressed by one of the file's allows?
+pub fn is_suppressed(fa: &FileAnalysis, rule: &str, line: u32) -> bool {
+    fa.allows.iter().any(|a| {
+        if a.rule != rule {
+            return false;
+        }
+        match a.form {
+            AllowForm::Line => a.line == line || a.line + 1 == line,
+            AllowForm::File => true,
+            AllowForm::Fn => fa.fn_spans.iter().any(|s| {
+                s.start_line <= a.line
+                    && a.line <= s.end_line
+                    && s.start_line <= line
+                    && line <= s.end_line
+            }),
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// R1: lock().unwrap() — poison cascade
+// ---------------------------------------------------------------------------
+
+pub fn r1_lock_unwrap(fa: &FileAnalysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_scope(
+        &fa.path,
+        &["coordinator/", "server/", "factorstore/", "runtime/"],
+    ) {
+        return out;
+    }
+    let t = &fa.toks;
+    for i in 1..t.len() {
+        if fa.test_mask[i] {
+            continue;
+        }
+        if t[i].kind == TokKind::Ident
+            && LOCK_ACQUIRE.contains(&t[i].text.as_str())
+            && is_punct(&t[i - 1], '.')
+            && i + 5 < t.len()
+            && is_punct(&t[i + 1], '(')
+            && is_punct(&t[i + 2], ')')
+            && is_punct(&t[i + 3], '.')
+            && (is_ident(&t[i + 4], "unwrap") || is_ident(&t[i + 4], "expect"))
+            && is_punct(&t[i + 5], '(')
+        {
+            out.push(Finding {
+                rule: "lock-unwrap",
+                line: t[i].line,
+                message: format!(
+                    "`.{}().{}()` on a lock result: one panicked holder \
+                     poisons the lock and cascades through the serving loop",
+                    t[i].text,
+                    t[i + 4].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R2: raw std::sync lock usage outside util::sync
+// ---------------------------------------------------------------------------
+
+pub fn r2_raw_sync(fa: &FileAnalysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if norm(&fa.path).ends_with("util/sync.rs") {
+        return out;
+    }
+    let t = &fa.toks;
+    let n = t.len();
+    let mut i = 0usize;
+    while i < n {
+        if fa.test_mask[i] {
+            i += 1;
+            continue;
+        }
+        // `use ... ;` statements naming std::sync lock types.
+        if is_ident(&t[i], "use") {
+            let mut j = i + 1;
+            let (mut has_std, mut has_sync, mut sync_ty) =
+                (false, false, None::<&str>);
+            while j < n && !is_punct(&t[j], ';') {
+                if is_ident(&t[j], "std") {
+                    has_std = true;
+                } else if is_ident(&t[j], "sync") {
+                    has_sync = true;
+                } else if t[j].kind == TokKind::Ident {
+                    if let Some(ty) =
+                        SYNC_TYPES.iter().find(|ty| t[j].text == **ty)
+                    {
+                        sync_ty = Some(ty);
+                    }
+                }
+                j += 1;
+            }
+            if has_std && has_sync {
+                if let Some(ty) = sync_ty {
+                    out.push(Finding {
+                        rule: "raw-sync",
+                        line: t[i].line,
+                        message: format!(
+                            "import of raw `std::sync::{ty}` — serving-core \
+                             locks must go through the util::sync shim"
+                        ),
+                    });
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Inline qualified path std::sync::Mutex etc.
+        if i + 5 < n
+            && is_ident(&t[i], "std")
+            && is_punct(&t[i + 1], ':')
+            && is_punct(&t[i + 2], ':')
+            && is_ident(&t[i + 3], "sync")
+            && is_punct(&t[i + 4], ':')
+            && is_punct(&t[i + 5], ':')
+            && i + 6 < n
+            && SYNC_TYPES.contains(&t[i + 6].text.as_str())
+        {
+            out.push(Finding {
+                rule: "raw-sync",
+                line: t[i].line,
+                message: format!(
+                    "raw `std::sync::{}` path — serving-core locks must go \
+                     through the util::sync shim",
+                    t[i + 6].text
+                ),
+            });
+            i += 7;
+            continue;
+        }
+        // Mutex::new(<non-literal>): either a raw std lock brought in by
+        // a `use`, or a util::sync wrapper missing its audit name.
+        if i + 3 < n
+            && (is_ident(&t[i], "Mutex") || is_ident(&t[i], "RwLock"))
+            && is_punct(&t[i + 1], ':')
+            && is_punct(&t[i + 2], ':')
+            && is_ident(&t[i + 3], "new")
+            && i + 4 < n
+            && is_punct(&t[i + 4], '(')
+            && t.get(i + 5).map(|tk| tk.kind != TokKind::Str).unwrap_or(true)
+        {
+            out.push(Finding {
+                rule: "raw-sync",
+                line: t[i].line,
+                message: format!(
+                    "`{}::new` without a name literal — use \
+                     util::sync::{}::new(\"module.role\", value)",
+                    t[i].text, t[i].text
+                ),
+            });
+            i += 5;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R3: I/O lexically inside a lock-guard live range (factorstore/)
+// ---------------------------------------------------------------------------
+
+pub fn r3_io_under_lock(fa: &FileAnalysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_scope(&fa.path, &["factorstore/"]) {
+        return out;
+    }
+    let t = &fa.toks;
+    let n = t.len();
+    let mut flagged: std::collections::BTreeSet<usize> =
+        std::collections::BTreeSet::new();
+    for i in 1..n {
+        if fa.test_mask[i] {
+            continue;
+        }
+        // A guard acquisition: `.lock_recover()`, `.read()`, ... (no-arg).
+        let acquire = t[i].kind == TokKind::Ident
+            && LOCK_ACQUIRE.contains(&t[i].text.as_str())
+            && is_punct(&t[i - 1], '.')
+            && i + 2 < n
+            && is_punct(&t[i + 1], '(')
+            && is_punct(&t[i + 2], ')');
+        if !acquire {
+            continue;
+        }
+        // Statement start: token after the previous `;`/`{`/`}`.
+        let mut stmt_start = i;
+        while stmt_start > 0 {
+            let p = &t[stmt_start - 1];
+            if is_punct(p, ';') || is_punct(p, '{') || is_punct(p, '}') {
+                break;
+            }
+            stmt_start -= 1;
+        }
+        let let_bound =
+            (stmt_start..i).any(|k| is_ident(&t[k], "let"));
+        let mut range_end = if let_bound {
+            // Guard lives to the end of the enclosing block...
+            fa.enclosing_close[i].unwrap_or(n - 1)
+        } else {
+            // ...or, for a temporary, to the end of the statement.
+            let mut depth = 0i32;
+            let mut k = i + 3;
+            loop {
+                if k >= n {
+                    break n - 1;
+                }
+                if is_punct(&t[k], '{') {
+                    depth += 1;
+                } else if is_punct(&t[k], '}') {
+                    depth -= 1;
+                    if depth < 0 {
+                        break k;
+                    }
+                } else if is_punct(&t[k], ';') && depth == 0 {
+                    break k;
+                }
+                k += 1;
+            }
+        };
+        // ...unless it is dropped early.
+        if let_bound {
+            let name = (stmt_start..i)
+                .find(|&k| is_ident(&t[k], "let"))
+                .and_then(|k| {
+                    (k + 1..i).find(|&m| {
+                        t[m].kind == TokKind::Ident && t[m].text != "mut"
+                    })
+                })
+                .map(|m| t[m].text.clone());
+            if let Some(name) = name {
+                for k in i..range_end.min(n.saturating_sub(3)) {
+                    if is_ident(&t[k], "drop")
+                        && is_punct(&t[k + 1], '(')
+                        && is_ident(&t[k + 2], &name)
+                        && is_punct(&t[k + 3], ')')
+                    {
+                        range_end = k;
+                        break;
+                    }
+                }
+            }
+        }
+        // Scan the live range for I/O markers.
+        for k in (i + 3)..range_end.min(n) {
+            if fa.test_mask[k] || t[k].kind != TokKind::Ident {
+                continue;
+            }
+            let txt = t[k].text.as_str();
+            let io_method = IO_METHODS.contains(&txt)
+                && k > 0
+                && is_punct(&t[k - 1], '.');
+            let io_type = IO_TYPES.contains(&txt)
+                && k + 2 < n
+                && is_punct(&t[k + 1], ':')
+                && is_punct(&t[k + 2], ':');
+            let fs_call = txt == "fs"
+                && k + 3 < n
+                && is_punct(&t[k + 1], ':')
+                && is_punct(&t[k + 2], ':')
+                && FS_FNS.contains(&t[k + 3].text.as_str());
+            if io_method || io_type || fs_call {
+                if flagged.insert(k) {
+                    out.push(Finding {
+                        rule: "io-under-lock",
+                        line: t[k].line,
+                        message: format!(
+                            "`{}` inside the live range of the lock guard \
+                             acquired via `.{}()` on line {} — file/socket \
+                             I/O under a lock stalls every other holder",
+                            txt, t[i].text, t[i].line
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R4: persisting factor floats without a finiteness guard (factorstore/)
+// ---------------------------------------------------------------------------
+
+pub fn r4_nonfinite_persist(fa: &FileAnalysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_scope(&fa.path, &["factorstore/"]) {
+        return out;
+    }
+    let t = &fa.toks;
+    for i in 0..t.len() {
+        if fa.test_mask[i] {
+            continue;
+        }
+        let is_call = t[i].kind == TokKind::Ident
+            && PERSIST_FNS.contains(&t[i].text.as_str())
+            && i + 1 < t.len()
+            && is_punct(&t[i + 1], '(')
+            && !(i > 0 && is_ident(&t[i - 1], "fn"));
+        if !is_call {
+            continue;
+        }
+        let span = innermost_fn(fa, i);
+        let guarded = span
+            .map(|s| {
+                (s.body_open..=s.body_close).any(|k| {
+                    is_ident(&t[k], "entry_is_finite")
+                        || is_ident(&t[k], "is_finite")
+                })
+            })
+            .unwrap_or(false);
+        if !guarded {
+            out.push(Finding {
+                rule: "nonfinite-persist",
+                line: t[i].line,
+                message: format!(
+                    "`{}` serializes factor floats but the enclosing \
+                     function never checks finiteness — NaN/Inf factors \
+                     must not reach the persisted store",
+                    t[i].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// Innermost `fn` span whose body contains token `i`.
+pub fn innermost_fn(fa: &FileAnalysis, i: usize) -> Option<&FnSpan> {
+    fa.fn_spans
+        .iter()
+        .filter(|s| s.body_open < i && i < s.body_close)
+        .min_by_key(|s| s.body_close - s.body_open)
+}
+
+/// Bare call sites in a token range: identifiers immediately followed by
+/// `(` that are neither definitions, keywords, nor macro invocations.
+pub fn calls_in_range(
+    fa: &FileAnalysis,
+    from: usize,
+    to: usize,
+) -> Vec<String> {
+    let t = &fa.toks;
+    let mut out = Vec::new();
+    for i in from..to.min(t.len().saturating_sub(1)) {
+        if t[i].kind != TokKind::Ident {
+            continue;
+        }
+        if KEYWORDS.contains(&t[i].text.as_str()) {
+            continue;
+        }
+        if i > 0 && is_ident(&t[i - 1], "fn") {
+            continue;
+        }
+        if is_punct(&t[i + 1], '(') {
+            out.push(t[i].text.clone());
+        }
+    }
+    out
+}

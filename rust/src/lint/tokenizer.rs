@@ -1,0 +1,364 @@
+//! A lightweight, lossy Rust tokenizer for flashlint.
+//!
+//! No `syn` in the vendored universe, and the rules only need
+//! line/token-level structure: identifiers, single-char punctuation,
+//! literals, and comments (kept separately so allow-annotations can be
+//! parsed). Multi-char operators arrive as adjacent single-char `Punct`
+//! tokens (`::` is `:` `:`), which the rule matchers account for.
+//!
+//! The scanner understands the constructs that would otherwise corrupt
+//! a naive token stream: nested block comments, string/char literals
+//! with escapes, raw and byte strings (`r#"…"#`, `b"…"`), lifetimes vs
+//! char literals, and numeric literals with exponents.
+
+/// Token kind. `Punct` carries exactly one character.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// 1-based source line of the token's first character.
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    pub text: String,
+}
+
+/// Tokenize `src`, returning code tokens and comments separately.
+pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comments (incl. /// and //!).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            comments.push(Comment {
+                line,
+                text: src[start..i].to_string(),
+            });
+            continue;
+        }
+        // Block comments, nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment {
+                line: start_line,
+                text: src[start..i].to_string(),
+            });
+            continue;
+        }
+        // Plain string literal.
+        if c == b'"' {
+            let start_line = line;
+            let start = i;
+            i += 1;
+            while i < n {
+                match b[i] {
+                    b'\\' => {
+                        if i + 1 < n && b[i + 1] == b'\n' {
+                            line += 1;
+                        }
+                        i += 2;
+                    }
+                    b'"' => {
+                        i += 1;
+                        break;
+                    }
+                    b'\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            toks.push(Tok {
+                line: start_line,
+                kind: TokKind::Str,
+                text: src[start..i.min(n)].to_string(),
+            });
+            continue;
+        }
+        // Identifier (or raw/byte-string prefix).
+        if c.is_ascii_alphabetic() || c == b'_' || c >= 0x80 {
+            let start = i;
+            while i < n
+                && (b[i].is_ascii_alphanumeric() || b[i] == b'_' || b[i] >= 0x80)
+            {
+                i += 1;
+            }
+            let text = &src[start..i];
+            let is_raw_prefix = matches!(text, "r" | "b" | "br" | "rb")
+                && i < n
+                && (b[i] == b'"' || (text != "b" && b[i] == b'#'));
+            if is_raw_prefix {
+                // Raw / byte string: count hashes, then find `"` + hashes.
+                let start_line = line;
+                let mut hashes = 0usize;
+                while i < n && b[i] == b'#' {
+                    hashes += 1;
+                    i += 1;
+                }
+                if i < n && b[i] == b'"' {
+                    i += 1;
+                    'scan: while i < n {
+                        if b[i] == b'\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if b[i] == b'"' {
+                            let mut j = i + 1;
+                            let mut seen = 0usize;
+                            while j < n && b[j] == b'#' && seen < hashes {
+                                seen += 1;
+                                j += 1;
+                            }
+                            if seen == hashes {
+                                i = j;
+                                break 'scan;
+                            }
+                        }
+                        i += 1;
+                    }
+                }
+                toks.push(Tok {
+                    line: start_line,
+                    kind: TokKind::Str,
+                    text: src[start..i.min(n)].to_string(),
+                });
+            } else {
+                toks.push(Tok {
+                    line,
+                    kind: TokKind::Ident,
+                    text: text.to_string(),
+                });
+            }
+            continue;
+        }
+        // Numeric literal (handles hex, floats, exponents, suffixes).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n {
+                let d = b[i];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    i += 1;
+                } else if d == b'.'
+                    && i + 1 < n
+                    && b[i + 1].is_ascii_digit()
+                    && !src[start..i].contains('.')
+                {
+                    i += 1;
+                } else if (d == b'+' || d == b'-')
+                    && i > start
+                    && (b[i - 1] == b'e' || b[i - 1] == b'E')
+                    && !src[start..i].starts_with("0x")
+                {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok {
+                line,
+                kind: TokKind::Num,
+                text: src[start..i].to_string(),
+            });
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_ascii_alphabetic() || b[i + 1] == b'_')
+                && (i + 2 >= n || b[i + 2] != b'\'');
+            if is_lifetime {
+                let start = i;
+                i += 1;
+                while i < n
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    line,
+                    kind: TokKind::Lifetime,
+                    text: src[start..i].to_string(),
+                });
+            } else {
+                let start = i;
+                i += 1;
+                while i < n {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'\'' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => break, // malformed; bail on the line
+                        _ => i += 1,
+                    }
+                }
+                toks.push(Tok {
+                    line,
+                    kind: TokKind::Char,
+                    text: src[start..i.min(n)].to_string(),
+                });
+            }
+            continue;
+        }
+        // Everything else: single-char punctuation.
+        toks.push(Tok {
+            line,
+            kind: TokKind::Punct,
+            text: (c as char).to_string(),
+        });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// True if `t` is the identifier `name`.
+pub fn is_ident(t: &Tok, name: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == name
+}
+
+/// True if `t` is the punctuation character `ch`.
+pub fn is_punct(t: &Tok, ch: char) -> bool {
+    t.kind == TokKind::Punct && t.text.len() == 1 && t.text.starts_with(ch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn basic_tokens_and_lines() {
+        let (toks, comments) = tokenize("let x = 1;\n// hi\nlet y = x;");
+        assert!(toks.iter().any(|t| is_ident(t, "x") && t.line == 1));
+        assert!(toks.iter().any(|t| is_ident(t, "y") && t.line == 3));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].line, 2);
+        assert_eq!(comments[0].text, "// hi");
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let ids = idents(r#"let s = "let fake = unwrap";"#);
+        assert_eq!(ids, vec!["let", "s"]);
+    }
+
+    #[test]
+    fn raw_strings_and_byte_strings() {
+        let (toks, _) = tokenize("let s = r#\"has \"quotes\" inside\"#; x");
+        assert!(toks.iter().any(|t| is_ident(t, "x")));
+        let (toks, _) = tokenize("let b = b\"bytes\"; y");
+        assert!(toks.iter().any(|t| is_ident(t, "y")));
+        // `r` alone as an identifier must not eat a following `#`.
+        let ids = idents("let r = 1; rank");
+        assert!(ids.contains(&"r".to_string()));
+        assert!(ids.contains(&"rank".to_string()));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let (toks, comments) = tokenize("/* a /* b */ c */ real");
+        assert_eq!(toks.len(), 1);
+        assert!(is_ident(&toks[0], "real"));
+        assert_eq!(comments.len(), 1);
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let (toks, _) = tokenize("fn f<'a>(x: &'a str, c: char) { let y = 'z'; }");
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+        assert!(toks
+            .iter()
+            .any(|t| t.kind == TokKind::Char && t.text == "'z'"));
+    }
+
+    #[test]
+    fn numbers_with_exponents() {
+        let (toks, _) = tokenize("let x = 1.5e-3 + 0xFF + 2_000usize;");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3", "0xFF", "2_000usize"]);
+    }
+
+    #[test]
+    fn range_does_not_glue_numbers() {
+        let (toks, _) = tokenize("for i in 0..5 {}");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "5"]);
+    }
+
+    #[test]
+    fn escaped_quotes_in_strings() {
+        let ids = idents("let s = \"a \\\" b\"; tail");
+        assert!(ids.contains(&"tail".to_string()));
+    }
+}

@@ -17,12 +17,13 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::jsonlite::Json;
 use crate::tensor::Tensor;
+use crate::util::sync::{Mutex, MutexGuard};
 use crate::xla_stub as xla;
 
 /// Element type of an artifact input/output.
@@ -159,7 +160,11 @@ pub struct Executable {
     pub spec: ArtifactSpec,
 }
 
+// The crate is `deny(unsafe_code)`; these impls are the documented
+// exception (see the safety note above).
+#[allow(unsafe_code)]
 unsafe impl Send for Executable {}
+#[allow(unsafe_code)]
 unsafe impl Sync for Executable {}
 
 impl Executable {
@@ -213,7 +218,12 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
+// Same exception as [`Executable`]: the PJRT client handle is a raw
+// pointer behind a thread-safe C API; all mutation goes through the
+// `runtime.client` lock.
+#[allow(unsafe_code)]
 unsafe impl Send for Runtime {}
+#[allow(unsafe_code)]
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
@@ -264,10 +274,10 @@ impl Runtime {
             );
         }
         Ok(Self {
-            client: Mutex::new(None),
+            client: Mutex::new("runtime.client", None),
             root,
             artifacts,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new("runtime.cache", HashMap::new()),
         })
     }
 
@@ -277,10 +287,10 @@ impl Runtime {
     /// backend exist.
     pub fn empty() -> Self {
         Self {
-            client: Mutex::new(None),
+            client: Mutex::new("runtime.client", None),
             root: PathBuf::from("."),
             artifacts: HashMap::new(),
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new("runtime.cache", HashMap::new()),
         }
     }
 
@@ -299,11 +309,12 @@ impl Runtime {
         Self::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
     }
 
-    /// Create (or reuse) the PJRT client.
+    /// Create (or reuse) the PJRT client. On `Ok`, the guard is
+    /// guaranteed to hold `Some`.
     fn client(&self)
-              -> Result<std::sync::MutexGuard<'_, Option<xla::PjRtClient>>>
+              -> Result<MutexGuard<'_, Option<xla::PjRtClient>>>
     {
-        let mut guard = self.client.lock().unwrap();
+        let mut guard = self.client.lock_recover();
         if guard.is_none() {
             *guard = Some(xla::PjRtClient::cpu()?);
         }
@@ -312,7 +323,10 @@ impl Runtime {
 
     pub fn platform(&self) -> String {
         match self.client() {
-            Ok(guard) => guard.as_ref().expect("client").platform_name(),
+            Ok(guard) => guard
+                .as_ref()
+                .map(|c| c.platform_name())
+                .unwrap_or_else(|| "unavailable".to_string()),
             Err(_) => "unavailable".to_string(),
         }
     }
@@ -330,7 +344,7 @@ impl Runtime {
 
     /// Compile (or fetch from cache) an artifact's executable.
     pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+        if let Some(exe) = self.cache.lock_recover().get(name) {
             return Ok(exe.clone());
         }
         let spec = self
@@ -347,12 +361,14 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = {
             let guard = self.client()?;
-            guard.as_ref().expect("client").compile(&comp)?
+            guard
+                .as_ref()
+                .ok_or_else(|| anyhow!("PJRT client unavailable"))?
+                .compile(&comp)?
         };
         let exe = Arc::new(Executable { exe, spec });
         self.cache
-            .lock()
-            .unwrap()
+            .lock_recover()
             .insert(name.to_string(), exe.clone());
         Ok(exe)
     }
@@ -368,18 +384,20 @@ impl Runtime {
         if bytes.len() != expect {
             bail!("{file}: {} bytes, expected {expect}", bytes.len());
         }
+        // chunks_exact(4) guarantees 4-byte windows, so indexing here
+        // cannot go out of bounds (and needs no unwrap).
         Ok(match spec.dtype {
             Dtype::F32 => {
                 let data: Vec<f32> = bytes
                     .chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
                 HostValue::F32(Tensor::new(&spec.shape, data))
             }
             Dtype::I32 => {
                 let data: Vec<i32> = bytes
                     .chunks_exact(4)
-                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect();
                 HostValue::I32(data, spec.shape.clone())
             }

@@ -74,12 +74,8 @@ impl Cli {
                 let value = if BOOL_FLAGS.contains(&name) {
                     "true".to_string()
                 } else {
-                    match it.peek() {
-                        Some(v) if !v.starts_with("--") => {
-                            it.next().unwrap()
-                        }
-                        _ => "true".to_string(),
-                    }
+                    it.next_if(|v| !v.starts_with("--"))
+                        .unwrap_or_else(|| "true".to_string())
                 };
                 cli.flags.insert(name.to_string(), value);
             } else {
@@ -201,7 +197,7 @@ fn cmd_list() -> Result<String> {
     let rt = Runtime::open_default()?;
     let mut out = String::new();
     for name in rt.names() {
-        let spec = rt.spec(name).unwrap();
+        let Some(spec) = rt.spec(name) else { continue };
         out.push_str(&format!(
             "{name:32} family={:12} variant={:10} n={}\n",
             spec.family(),
@@ -232,7 +228,7 @@ fn cmd_verify(cli: &Cli) -> Result<String> {
         if !filter.is_empty() && !name.contains(filter) {
             continue;
         }
-        let spec = rt.spec(name).unwrap();
+        let Some(spec) = rt.spec(name) else { continue };
         if spec.outputs.is_empty() {
             continue;
         }
@@ -265,6 +261,7 @@ fn cmd_run(cli: &Cli) -> Result<String> {
     let rt = Runtime::open_default()?;
     let exe = rt.load_warm(artifact)?;
     let inputs = rt.example_inputs(artifact)?;
+    // flashlint: allow-fn(hot-path-panic) load_warm already executed these exact inputs once; a repeat failing mid-bench is unrecoverable and aborting beats reporting fake timings
     let stats = bench_loop(1, iters, || {
         exe.run(&inputs).expect("execute");
     });
@@ -566,13 +563,17 @@ fn serve_loop(
 ) -> Result<ServeOutcome> {
     let mut rng = Xoshiro256::new(42);
     let t0 = std::time::Instant::now();
-    let max_n = router.max_bucket(key).unwrap();
+    let max_n = router
+        .max_bucket(key)
+        .ok_or_else(|| anyhow!("no artifacts routable for {key:?}"))?;
     let mut submitted = 0usize;
     let mut completed = 0usize;
     let mut failures: Vec<String> = Vec::new();
     for _ in 0..n_requests {
         let want_n = 1 + rng.next_below(max_n as u64) as usize;
-        let (artifact, _bucket) = router.route(key, want_n).unwrap();
+        let (artifact, _bucket) = router
+            .route(key, want_n)
+            .ok_or_else(|| anyhow!("no bucket for n={want_n}"))?;
         let inputs = rt.example_inputs(artifact)?;
         // responses drained while absorbing backpressure still count:
         // dropping them used to leave the completion loop short

@@ -5,6 +5,8 @@
 //! The vendored-crate universe has no `rand`/`statrs`; everything the
 //! benches and the coordinator need is implemented here.
 
+pub mod sync;
+
 use std::time::{Duration, Instant};
 
 /// SplitMix64: tiny, fast, full-period seeding PRNG (Steele et al.).
@@ -178,7 +180,7 @@ impl Stats {
             return f64::NAN;
         }
         let mut sorted = self.samples.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let rank =
             ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
         sorted[rank - 1]

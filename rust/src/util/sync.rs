@@ -1,0 +1,591 @@
+//! Instrumented, poison-recovering lock wrappers for the serving core.
+//!
+//! Every lock in `factorstore/`, `coordinator/`, and `runtime/` goes
+//! through this shim instead of `std::sync` directly (enforced by the
+//! `raw-sync` flashlint rule). The wrappers add two things on top of the
+//! std primitives:
+//!
+//! 1. **Poison recovery.** `lock_recover()` / `read_recover()` /
+//!    `write_recover()` never return `Err`: if another thread panicked
+//!    while holding the lock, the wrapper logs the event once (per lock)
+//!    and takes the inner data anyway. A single panicked worker must not
+//!    wedge the whole coordinator — every shared structure here is
+//!    either idempotently rebuildable (caches, metrics) or protected by
+//!    its own content checks (the factor store verifies finiteness and
+//!    shape on read), so continuing past a poisoned lock is safe.
+//!
+//! 2. **Lock-order auditing.** Under `cfg(debug_assertions)` or the
+//!    `sync-audit` feature, each named lock records *held → attempted*
+//!    edges into a process-global lock-order graph, and
+//!    [`check_blocking`] records any lock held while entering a blocking
+//!    region (file or socket I/O). Tests (`rust/tests/sync_audit.rs`)
+//!    hammer the serving paths concurrently and assert the graph stays
+//!    acyclic and the blocking-violation list stays empty. In release
+//!    builds without the feature all audit hooks compile to nothing.
+//!
+//! The audit is name-based: locks constructed with the same `&'static
+//! str` name are one node in the graph, which is exactly what we want —
+//! the ordering invariant is between *roles* ("factorstore.inner" before
+//! "factorstore.spill"), not between instances.
+
+#![allow(clippy::new_without_default)]
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, Ordering};
+
+// This module *is* the shim the raw-sync lint rule points everyone at,
+// so it is the one place allowed to touch std::sync lock types directly.
+// flashlint: allow-file(raw-sync) util::sync is the shim itself
+
+/// Named, poison-recovering `std::sync::Mutex` wrapper.
+pub struct Mutex<T> {
+    name: &'static str,
+    inner: std::sync::Mutex<T>,
+    poison_logged: AtomicBool,
+}
+
+impl<T> Mutex<T> {
+    /// `name` identifies this lock in the audit graph and in poison
+    /// logs; use a stable `module.role` form, e.g. `"factorstore.inner"`.
+    pub fn new(name: &'static str, value: T) -> Self {
+        Self {
+            name,
+            inner: std::sync::Mutex::new(value),
+            poison_logged: AtomicBool::new(false),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Acquire the lock, recovering (and logging once) if it is poisoned.
+    pub fn lock_recover(&self) -> MutexGuard<'_, T> {
+        audit::on_attempt(self.name);
+        let guard = match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.log_poison();
+                poisoned.into_inner()
+            }
+        };
+        audit::on_acquire(self.name);
+        MutexGuard {
+            name: self.name,
+            inner: guard,
+        }
+    }
+
+    /// Non-blocking acquire; `None` if the lock is currently held.
+    /// Poison still recovers rather than erroring.
+    pub fn try_lock_recover(&self) -> Option<MutexGuard<'_, T>> {
+        let guard = match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(std::sync::TryLockError::Poisoned(poisoned)) => {
+                self.log_poison();
+                poisoned.into_inner()
+            }
+            Err(std::sync::TryLockError::WouldBlock) => return None,
+        };
+        audit::on_acquire(self.name);
+        Some(MutexGuard {
+            name: self.name,
+            inner: guard,
+        })
+    }
+
+    fn log_poison(&self) {
+        if !self.poison_logged.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[util::sync] lock `{}` was poisoned by a panicked \
+                 thread; recovering with the inner data",
+                self.name
+            );
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("Mutex");
+        d.field("name", &self.name);
+        match self.inner.try_lock() {
+            Ok(g) => d.field("data", &&*g).finish(),
+            Err(_) => d.field("data", &"<locked>").finish(),
+        }
+    }
+}
+
+/// Guard returned by [`Mutex::lock_recover`]; pops the audit stack on drop.
+pub struct MutexGuard<'a, T> {
+    name: &'static str,
+    inner: std::sync::MutexGuard<'a, T>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        audit::on_release(self.name);
+    }
+}
+
+/// Named, poison-recovering `std::sync::RwLock` wrapper.
+pub struct RwLock<T> {
+    name: &'static str,
+    inner: std::sync::RwLock<T>,
+    poison_logged: AtomicBool,
+}
+
+impl<T> RwLock<T> {
+    pub fn new(name: &'static str, value: T) -> Self {
+        Self {
+            name,
+            inner: std::sync::RwLock::new(value),
+            poison_logged: AtomicBool::new(false),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn read_recover(&self) -> RwLockReadGuard<'_, T> {
+        audit::on_attempt(self.name);
+        let guard = match self.inner.read() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.log_poison();
+                poisoned.into_inner()
+            }
+        };
+        audit::on_acquire(self.name);
+        RwLockReadGuard {
+            name: self.name,
+            inner: guard,
+        }
+    }
+
+    pub fn write_recover(&self) -> RwLockWriteGuard<'_, T> {
+        audit::on_attempt(self.name);
+        let guard = match self.inner.write() {
+            Ok(g) => g,
+            Err(poisoned) => {
+                self.log_poison();
+                poisoned.into_inner()
+            }
+        };
+        audit::on_acquire(self.name);
+        RwLockWriteGuard {
+            name: self.name,
+            inner: guard,
+        }
+    }
+
+    fn log_poison(&self) {
+        if !self.poison_logged.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "[util::sync] rwlock `{}` was poisoned by a panicked \
+                 thread; recovering with the inner data",
+                self.name
+            );
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("RwLock");
+        d.field("name", &self.name);
+        match self.inner.try_read() {
+            Ok(g) => d.field("data", &&*g).finish(),
+            Err(_) => d.field("data", &"<locked>").finish(),
+        }
+    }
+}
+
+pub struct RwLockReadGuard<'a, T> {
+    name: &'static str,
+    inner: std::sync::RwLockReadGuard<'a, T>,
+}
+
+impl<T> Deref for RwLockReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> Drop for RwLockReadGuard<'_, T> {
+    fn drop(&mut self) {
+        audit::on_release(self.name);
+    }
+}
+
+pub struct RwLockWriteGuard<'a, T> {
+    name: &'static str,
+    inner: std::sync::RwLockWriteGuard<'a, T>,
+}
+
+impl<T> Deref for RwLockWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for RwLockWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+impl<T> Drop for RwLockWriteGuard<'_, T> {
+    fn drop(&mut self) {
+        audit::on_release(self.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// audit surface (no-ops unless debug_assertions or feature = "sync-audit")
+// ---------------------------------------------------------------------------
+
+/// True when the lock-order/blocking audit is compiled in.
+pub const fn audit_enabled() -> bool {
+    cfg!(any(debug_assertions, feature = "sync-audit"))
+}
+
+/// Declare that the caller is about to enter a blocking region (file or
+/// socket I/O, long sleep). Any lock currently held by this thread that
+/// is not in `allowed` is recorded as a blocking violation. The `allowed`
+/// list is for locks whose *purpose* is to serialize that I/O (e.g. the
+/// spill-file lock).
+#[inline]
+pub fn check_blocking(site: &str, allowed: &[&str]) {
+    audit::check_blocking(site, allowed);
+}
+
+/// All distinct `held → attempted` lock-order edges observed so far.
+pub fn order_edges() -> Vec<(String, String)> {
+    audit::edges()
+}
+
+/// Search the observed lock-order graph for a cycle; returns the node
+/// sequence (first node repeated at the end) if one exists.
+pub fn find_order_cycle() -> Option<Vec<String>> {
+    let edges = order_edges();
+    let mut adj: std::collections::BTreeMap<&str, Vec<&str>> =
+        std::collections::BTreeMap::new();
+    for (a, b) in &edges {
+        adj.entry(a.as_str()).or_default().push(b.as_str());
+    }
+    // Iterative DFS with tri-color marking; a back edge closes a cycle.
+    let mut color: std::collections::BTreeMap<&str, u8> =
+        std::collections::BTreeMap::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for &start in &nodes {
+        if color.get(start).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        let mut path: Vec<&str> = Vec::new();
+        let mut stack: Vec<(&str, usize)> = vec![(start, 0)];
+        loop {
+            let (node, idx) = match stack.last() {
+                Some(&(n, i)) => (n, i),
+                None => break,
+            };
+            if idx == 0 {
+                color.insert(node, 1);
+                path.push(node);
+            }
+            let succs: &[&str] =
+                adj.get(node).map(|v| v.as_slice()).unwrap_or(&[]);
+            if idx < succs.len() {
+                if let Some(top) = stack.last_mut() {
+                    top.1 += 1;
+                }
+                let succ = succs[idx];
+                match color.get(succ).copied().unwrap_or(0) {
+                    0 => stack.push((succ, 0)),
+                    1 => {
+                        // Back edge: slice the cycle out of the path.
+                        let from = path
+                            .iter()
+                            .position(|&n| n == succ)
+                            .unwrap_or(0);
+                        let mut cycle: Vec<String> = path[from..]
+                            .iter()
+                            .map(|s| s.to_string())
+                            .collect();
+                        cycle.push(succ.to_string());
+                        return Some(cycle);
+                    }
+                    _ => {}
+                }
+            } else {
+                color.insert(node, 2);
+                path.pop();
+                stack.pop();
+            }
+        }
+    }
+    None
+}
+
+/// All recorded lock-held-across-blocking-call violations.
+pub fn blocking_violations() -> Vec<String> {
+    audit::blocking_violations()
+}
+
+/// Clear the audit state (edges + violations). Test-scoped helper.
+pub fn reset_audit() {
+    audit::reset()
+}
+
+#[cfg(any(debug_assertions, feature = "sync-audit"))]
+mod audit {
+    use std::cell::RefCell;
+    use std::collections::BTreeSet;
+    use std::sync::{Mutex, OnceLock};
+
+    thread_local! {
+        /// Names of locks this thread currently holds, in acquire order.
+        static HELD: RefCell<Vec<&'static str>> =
+            const { RefCell::new(Vec::new()) };
+    }
+
+    #[derive(Default)]
+    struct State {
+        edges: BTreeSet<(&'static str, &'static str)>,
+        blocking: Vec<String>,
+    }
+
+    fn state() -> &'static Mutex<State> {
+        static STATE: OnceLock<Mutex<State>> = OnceLock::new();
+        STATE.get_or_init(|| Mutex::new(State::default()))
+    }
+
+    fn with_state<R>(f: impl FnOnce(&mut State) -> R) -> R {
+        // The audit's own mutex is a leaf: it is only taken inside these
+        // short helpers, which never call back into wrapper locks, so it
+        // cannot participate in an ordering cycle. Recover from poison
+        // so an audit assertion failure cannot cascade.
+        let mut st = state().lock().unwrap_or_else(|p| p.into_inner());
+        f(&mut st)
+    }
+
+    pub(super) fn on_attempt(name: &'static str) {
+        let new_edges: Vec<(&'static str, &'static str)> = HELD.with(|h| {
+            h.borrow()
+                .iter()
+                .filter(|&&held| held != name)
+                .map(|&held| (held, name))
+                .collect()
+        });
+        if new_edges.is_empty() {
+            return;
+        }
+        with_state(|st| {
+            for e in new_edges {
+                st.edges.insert(e);
+            }
+        });
+    }
+
+    pub(super) fn on_acquire(name: &'static str) {
+        HELD.with(|h| h.borrow_mut().push(name));
+    }
+
+    pub(super) fn on_release(name: &'static str) {
+        HELD.with(|h| {
+            let mut v = h.borrow_mut();
+            if let Some(pos) = v.iter().rposition(|&n| n == name) {
+                v.remove(pos);
+            }
+        });
+    }
+
+    pub(super) fn check_blocking(site: &str, allowed: &[&str]) {
+        let offending: Vec<&'static str> = HELD.with(|h| {
+            h.borrow()
+                .iter()
+                .copied()
+                .filter(|n| !allowed.contains(n))
+                .collect()
+        });
+        if offending.is_empty() {
+            return;
+        }
+        with_state(|st| {
+            for name in offending {
+                st.blocking
+                    .push(format!("{site} entered while holding `{name}`"));
+            }
+        });
+    }
+
+    pub(super) fn edges() -> Vec<(String, String)> {
+        with_state(|st| {
+            st.edges
+                .iter()
+                .map(|&(a, b)| (a.to_string(), b.to_string()))
+                .collect()
+        })
+    }
+
+    pub(super) fn blocking_violations() -> Vec<String> {
+        with_state(|st| st.blocking.clone())
+    }
+
+    pub(super) fn reset() {
+        with_state(|st| {
+            st.edges.clear();
+            st.blocking.clear();
+        });
+    }
+}
+
+#[cfg(not(any(debug_assertions, feature = "sync-audit")))]
+mod audit {
+    #[inline(always)]
+    pub(super) fn on_attempt(_name: &'static str) {}
+    #[inline(always)]
+    pub(super) fn on_acquire(_name: &'static str) {}
+    #[inline(always)]
+    pub(super) fn on_release(_name: &'static str) {}
+    #[inline(always)]
+    pub(super) fn check_blocking(_site: &str, _allowed: &[&str]) {}
+    pub(super) fn edges() -> Vec<(String, String)> {
+        Vec::new()
+    }
+    pub(super) fn blocking_violations() -> Vec<String> {
+        Vec::new()
+    }
+    pub(super) fn reset() {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that reset or assert on the process-global audit state must
+    /// not interleave with each other.
+    fn audit_test_guard() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        GATE.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn lock_recover_roundtrip() {
+        let m = Mutex::new("test.basic", 41);
+        *m.lock_recover() += 1;
+        assert_eq!(*m.lock_recover(), 42);
+        assert_eq!(m.name(), "test.basic");
+    }
+
+    #[test]
+    fn rwlock_read_write() {
+        let l = RwLock::new("test.rw", vec![1, 2]);
+        l.write_recover().push(3);
+        assert_eq!(l.read_recover().len(), 3);
+    }
+
+    #[test]
+    fn poisoned_mutex_recovers() {
+        let m = std::sync::Arc::new(Mutex::new("test.poison", 7));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock_recover();
+            panic!("poison it");
+        })
+        .join();
+        // The panic above poisons the inner std mutex; recovery must
+        // still hand the data back.
+        assert_eq!(*m.lock_recover(), 7);
+    }
+
+    #[test]
+    fn try_lock_sees_contention() {
+        let m = Mutex::new("test.try", 0);
+        let g = m.lock_recover();
+        assert!(m.try_lock_recover().is_none());
+        drop(g);
+        assert!(m.try_lock_recover().is_some());
+    }
+
+    #[test]
+    fn debug_formats_without_deadlock() {
+        let m = Mutex::new("test.debug", 5);
+        let g = m.lock_recover();
+        let s = format!("{m:?}");
+        assert!(s.contains("test.debug"));
+        assert!(s.contains("<locked>"));
+        drop(g);
+        assert!(format!("{m:?}").contains('5'));
+    }
+
+    #[test]
+    fn audit_records_edges_and_cycles() {
+        if !audit_enabled() {
+            return;
+        }
+        let _gate = audit_test_guard();
+        reset_audit();
+        let a = Mutex::new("test.edge_a", ());
+        let b = Mutex::new("test.edge_b", ());
+        {
+            let _ga = a.lock_recover();
+            let _gb = b.lock_recover();
+        }
+        let edges = order_edges();
+        assert!(edges
+            .iter()
+            .any(|(x, y)| x == "test.edge_a" && y == "test.edge_b"));
+        assert!(find_order_cycle().is_none(), "a->b alone is acyclic");
+        // Take them in the opposite order: now the graph has a 2-cycle.
+        {
+            let _gb = b.lock_recover();
+            let _ga = a.lock_recover();
+        }
+        let cycle = find_order_cycle().expect("inversion forms a cycle");
+        assert!(cycle.len() >= 3);
+        assert_eq!(cycle.first(), cycle.last());
+        reset_audit();
+    }
+
+    #[test]
+    fn blocking_check_flags_held_locks() {
+        if !audit_enabled() {
+            return;
+        }
+        let _gate = audit_test_guard();
+        reset_audit();
+        let m = Mutex::new("test.blocker", ());
+        {
+            let _g = m.lock_recover();
+            check_blocking("tests::fake_io", &["some.other"]);
+        }
+        let v = blocking_violations();
+        assert!(v.iter().any(|s| s.contains("test.blocker")));
+        // Allowed locks are not violations.
+        reset_audit();
+        {
+            let _g = m.lock_recover();
+            check_blocking("tests::fake_io", &["test.blocker"]);
+        }
+        assert!(blocking_violations().is_empty());
+        reset_audit();
+    }
+}

@@ -1,0 +1,56 @@
+// Seeded flashlint violation corpus.
+//
+// This file is NOT compiled into the crate: it lives outside `src/` and
+// is loaded with `include_str!` by `tests/flashlint_rules.rs`, which
+// lints it under the synthetic path `src/factorstore/seeded.rs` so every
+// path-scoped rule (R1, R3, R4) applies. Each item below exercises one
+// rule; the test asserts per-rule diagnostic counts, so keep the set of
+// violations in sync with `EXPECTED` over there if you edit this file.
+
+use std::sync::Mutex; // raw-sync: raw std::sync import
+
+// lock-unwrap: one panicked holder poisons the lock for everyone.
+pub fn poison_prone(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap()
+}
+
+// raw-sync: a lock constructed without an audit name literal.
+pub fn unnamed_lock() -> Mutex<u32> {
+    Mutex::new(0)
+}
+
+// io-under-lock: file write inside the guard's live range.
+pub fn io_under_guard(file_lock: &SpillLock, buf: &[u8]) {
+    let mut g = file_lock.lock_recover();
+    g.file.write_all(buf).ok();
+}
+
+// nonfinite-persist: serializing factors with no finiteness check in
+// the enclosing function.
+pub fn persist_unchecked(key: u64, value: &Cached) -> Json {
+    entry_to_json(key, value)
+}
+
+// hot-path-panic: `serve_loop` is a root in the hot-path manifest, so
+// both the .expect() here and the panic! in the helper it calls are
+// reachable panic sites.
+pub fn serve_loop() {
+    let spec = lookup_spec().expect("spec must exist");
+    helper(spec);
+}
+
+fn helper(x: u32) {
+    if x == 0 {
+        panic!("boom");
+    }
+}
+
+// Suppression proof: the same lock-unwrap pattern as `poison_prone`,
+// silenced by a line-form allow with a reason. The test asserts this
+// contributes to `suppressed`, not to the diagnostics.
+pub fn suppressed_ok(m: &Mutex<u32>) -> u32 {
+    // flashlint: allow(lock-unwrap) seeded corpus: proves line-form suppression works
+    *m.lock().unwrap()
+}
+
+// flashlint: allow(no-such-rule) malformed on purpose: unknown rule name

@@ -1,0 +1,184 @@
+//! Self-test for flashlint: a seeded violation corpus proves every rule
+//! fires, the suppression forms work, and — the real acceptance gate —
+//! the repo's own sources lint clean.
+//!
+//! The corpus lives at `testdata/flashlint/seeded.rs` (outside `src/`,
+//! so cargo never compiles it) and is linted under a synthetic
+//! `src/factorstore/` path so the path-scoped rules apply.
+
+use flashbias::lint::{collect_rs_files, lint_sources, render_json, LintConfig, Report};
+
+const SEEDED: &str = include_str!("../testdata/flashlint/seeded.rs");
+
+fn lint_one(path: &str, src: &str) -> Report {
+    lint_sources(&[(path.to_string(), src.to_string())], &LintConfig::default())
+}
+
+fn count(report: &Report, rule: &str) -> usize {
+    report.diagnostics.iter().filter(|d| d.rule == rule).count()
+}
+
+fn seeded_report() -> Report {
+    lint_one("src/factorstore/seeded.rs", SEEDED)
+}
+
+#[test]
+fn every_rule_fires_on_the_seeded_corpus() {
+    let r = seeded_report();
+    // One entry per (rule, expected count); keep in sync with the
+    // corpus comments in testdata/flashlint/seeded.rs.
+    let expected: &[(&str, usize)] = &[
+        ("lock-unwrap", 1),      // poison_prone
+        ("raw-sync", 2),         // std::sync import + unnamed Mutex::new
+        ("io-under-lock", 1),    // write_all under the guard
+        ("nonfinite-persist", 1),// entry_to_json without a guard
+        ("hot-path-panic", 2),   // .expect in serve_loop, panic! in helper
+        ("bad-allow", 1),        // unknown rule name in an annotation
+    ];
+    for &(rule, n) in expected {
+        assert_eq!(
+            count(&r, rule),
+            n,
+            "rule {rule}: expected {n} diagnostic(s), got {:#?}",
+            r.diagnostics
+        );
+    }
+    let total: usize = expected.iter().map(|&(_, n)| n).sum();
+    assert_eq!(r.diagnostics.len(), total, "{:#?}", r.diagnostics);
+    assert!(!r.clean());
+}
+
+#[test]
+fn line_allow_suppresses_and_is_counted() {
+    // The corpus carries exactly one legitimate suppression: the
+    // allow(lock-unwrap) line in `suppressed_ok`.
+    let r = seeded_report();
+    assert_eq!(r.suppressed, 1);
+    // ...and the suppressed site must not also appear as a diagnostic:
+    // only `poison_prone` contributes a lock-unwrap.
+    assert_eq!(count(&r, "lock-unwrap"), 1);
+}
+
+#[test]
+fn hot_path_provenance_names_the_root() {
+    let r = seeded_report();
+    let panics: Vec<&str> = r
+        .diagnostics
+        .iter()
+        .filter(|d| d.rule == "hot-path-panic")
+        .map(|d| d.message.as_str())
+        .collect();
+    assert!(panics.iter().any(|m| m.contains("root `serve_loop`")),
+            "{panics:?}");
+    assert!(panics.iter().any(|m| m.contains("serve_loop -> helper")),
+            "{panics:?}");
+}
+
+#[test]
+fn fn_allow_suppresses_whole_function() {
+    let src = "\
+pub fn risky(m: &M) -> u32 {
+    // flashlint: allow-fn(lock-unwrap) test: fn-form covers later lines too
+    let a = *m.lock().unwrap();
+    let b = *m.lock().unwrap();
+    a + b
+}
+pub fn still_flagged(m: &M) -> u32 {
+    *m.lock().unwrap()
+}
+";
+    let r = lint_one("src/coordinator/x.rs", src);
+    assert_eq!(r.suppressed, 2, "{:#?}", r.diagnostics);
+    assert_eq!(count(&r, "lock-unwrap"), 1);
+    assert_eq!(r.diagnostics[0].line, 8);
+}
+
+#[test]
+fn file_allow_suppresses_whole_file() {
+    let src = "\
+// flashlint: allow-file(lock-unwrap) test: file-form covers everything
+pub fn a(m: &M) -> u32 { *m.lock().unwrap() }
+pub fn b(m: &M) -> u32 { *m.lock().unwrap() }
+";
+    let r = lint_one("src/server/x.rs", src);
+    assert!(r.clean(), "{:#?}", r.diagnostics);
+    assert_eq!(r.suppressed, 2);
+}
+
+#[test]
+fn reasonless_allow_is_bad_and_does_not_suppress() {
+    let src = "\
+pub fn a(m: &M) -> u32 {
+    // flashlint: allow(lock-unwrap)
+    *m.lock().unwrap()
+}
+";
+    let r = lint_one("src/runtime/x.rs", src);
+    assert_eq!(count(&r, "bad-allow"), 1, "{:#?}", r.diagnostics);
+    assert_eq!(count(&r, "lock-unwrap"), 1, "reasonless allow must not suppress");
+    assert_eq!(r.suppressed, 0);
+}
+
+#[test]
+fn allow_for_wrong_rule_does_not_suppress() {
+    let src = "\
+pub fn a(m: &M) -> u32 {
+    // flashlint: allow(io-under-lock) wrong rule on purpose
+    *m.lock().unwrap()
+}
+";
+    let r = lint_one("src/factorstore/x.rs", src);
+    assert_eq!(count(&r, "lock-unwrap"), 1, "{:#?}", r.diagnostics);
+    assert_eq!(r.suppressed, 0);
+}
+
+#[test]
+fn test_code_is_exempt() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t(m: &M) { m.lock().unwrap(); }
+}
+";
+    let r = lint_one("src/coordinator/x.rs", src);
+    assert!(r.clean(), "{:#?}", r.diagnostics);
+}
+
+#[test]
+fn json_report_roundtrips_through_jsonlite() {
+    let r = seeded_report();
+    let j = flashbias::jsonlite::Json::parse(&render_json(&r)).expect("valid json");
+    assert_eq!(j.get("violations").as_usize(), Some(r.diagnostics.len()));
+    assert_eq!(j.get("suppressed").as_usize(), Some(1));
+    let diags = j.get("diagnostics").as_arr().expect("array");
+    assert_eq!(diags.len(), r.diagnostics.len());
+    assert!(diags.iter().all(|d| d.get("rule").as_str().is_some()
+        && d.get("line").as_usize().is_some()
+        && d.get("hint").as_str().is_some()));
+}
+
+/// The acceptance gate: the crate's own sources must lint clean. This is
+/// the same scan `make lint` / the CI analysis job runs, executed here
+/// so `cargo test` alone catches a regression.
+#[test]
+fn repo_sources_lint_clean() {
+    // Integration tests run with CWD = the package root (rust/).
+    let paths = collect_rs_files(std::path::Path::new("src")).expect("walk src/");
+    assert!(paths.len() >= 20, "suspiciously few sources: {paths:?}");
+    let files: Vec<(String, String)> = paths
+        .iter()
+        .map(|p| {
+            (
+                p.to_string_lossy().replace('\\', "/"),
+                std::fs::read_to_string(p).expect("read source"),
+            )
+        })
+        .collect();
+    let r = lint_sources(&files, &LintConfig::default());
+    assert!(
+        r.clean(),
+        "flashlint found unsuppressed violations in the tree:\n{}",
+        flashbias::lint::render_text(&r)
+    );
+}

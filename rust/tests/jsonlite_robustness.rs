@@ -1,0 +1,272 @@
+//! Adversarial-input robustness for the jsonlite codec and the remote
+//! frame protocol built on it: malformed documents, truncations, deep
+//! nesting, non-finite floats, and hostile length prefixes must all
+//! surface as typed errors — never a panic, stack overflow, or huge
+//! allocation. Driven by proplite where the input space is worth
+//! sampling.
+
+use std::io::Cursor;
+
+use flashbias::factorstore::remote::{read_frame_limited, write_frame};
+use flashbias::jsonlite::{Json, MAX_DEPTH};
+use flashbias::proplite::{forall, shrink_usize, Config};
+use flashbias::util::Xoshiro256;
+
+/// A corpus of valid documents to mutate.
+const VALID_DOCS: &[&str] = &[
+    "null",
+    "true",
+    "-12.5e3",
+    "\"str with \\\"escapes\\\" and \\u00e9\"",
+    "[1, 2, [3, null], {\"k\": false}]",
+    "{\"version\": 1, \"entries\": [{\"key\": \"0xbeef\", \"rank\": 3, \
+     \"phi_q\": [0.5, -1.25], \"rel_err\": 0.01}]}",
+    "{}",
+    "[]",
+];
+
+/// Random printable-ish mutation of a valid doc: truncate, flip bytes,
+/// or splice. Always valid UTF-8 (parse takes &str).
+fn mutate(rng: &mut Xoshiro256) -> String {
+    let doc = VALID_DOCS[rng.next_below(VALID_DOCS.len() as u64) as usize];
+    let mut bytes = doc.as_bytes().to_vec();
+    match rng.next_below(3) {
+        0 => {
+            let cut = rng.next_below(bytes.len() as u64 + 1) as usize;
+            bytes.truncate(cut);
+        }
+        1 => {
+            for _ in 0..=rng.next_below(4) {
+                if bytes.is_empty() {
+                    break;
+                }
+                let at = rng.next_below(bytes.len() as u64) as usize;
+                bytes[at] = b' ' + (rng.next_below(94) as u8); // printable
+            }
+        }
+        _ => {
+            let at = rng.next_below(bytes.len() as u64 + 1) as usize;
+            let junk: &[u8] = [
+                &b"{"[..], &b"]"[..], &b"\""[..], &b",,"[..], &b"1e"[..],
+                &b"\\u"[..],
+            ][rng.next_below(6) as usize];
+            bytes.splice(at..at, junk.iter().copied());
+        }
+    }
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[test]
+fn mutated_documents_never_panic_the_parser() {
+    forall(
+        Config::default().cases(2000).seed(0xA11),
+        mutate,
+        |_| Vec::new(), // any panic IS the failure; nothing to shrink
+        |s| {
+            // Ok or Err both fine — reaching a verdict is the property.
+            let _ = Json::parse(s);
+            true
+        },
+    );
+}
+
+#[test]
+fn strict_prefixes_of_structural_docs_are_typed_errors() {
+    let doc = VALID_DOCS[5]; // the nested store-file-shaped object
+    forall(
+        Config::default().cases(200),
+        |rng| 1 + rng.next_below(doc.len() as u64 - 1) as usize,
+        shrink_usize,
+        |&cut| {
+            // A structural doc's closing brace is its last byte, so
+            // every strict prefix must fail with a ParseError…
+            let err = match Json::parse(&doc[..cut]) {
+                Err(e) => e,
+                Ok(v) => panic!("prefix of {cut} bytes parsed as {v:?}"),
+            };
+            // …that points inside the input and renders.
+            err.pos <= cut && !err.to_string().is_empty()
+        },
+    );
+}
+
+#[test]
+fn nesting_is_capped_exactly_at_max_depth() {
+    let nested = |d: usize| format!("{}0{}", "[".repeat(d), "]".repeat(d));
+    assert!(Json::parse(&nested(MAX_DEPTH)).is_ok());
+    let err = Json::parse(&nested(MAX_DEPTH + 1)).expect_err("over the cap");
+    assert!(err.msg.contains("nesting"), "{err}");
+    // Mixed object/array nesting counts every level.
+    let mixed = format!(
+        "{}0{}",
+        "[{\"k\":".repeat(MAX_DEPTH / 2 + 1),
+        "}]".repeat(MAX_DEPTH / 2 + 1)
+    );
+    assert!(Json::parse(&mixed).is_err());
+}
+
+#[test]
+fn unclosed_deep_nesting_cannot_blow_the_stack() {
+    // Without the depth cap this recursed ~200k frames deep. The cap
+    // must reject it as a parse error, not a crash.
+    for pattern in ["[", "[0,", "{\"k\":"] {
+        let hostile = pattern.repeat(200_000);
+        assert!(Json::parse(&hostile).is_err(), "pattern {pattern:?}");
+    }
+}
+
+#[test]
+fn known_nasty_inputs_error_without_panicking() {
+    let nasty = [
+        "", " ", "\t\n", "nul", "tru", "falsehood", "-", "+1",
+        ".5", "--1", "0x10", "1e", "1e+", "\"unterminated", "\"\\", "\"\\q\"",
+        "\"\\u12\"", "\"\\uZZZZ\"", "{", "}", "[", "]", "[1,]", "[,1]",
+        "{\"a\"}", "{\"a\":}", "{:1}", "{1:2}", "{\"a\":1,}", "[1 2]",
+        "1 2", "null null", "\u{0}",
+    ];
+    for s in nasty {
+        assert!(Json::parse(s).is_err(), "expected error for {s:?}");
+    }
+    // Absurd exponents and digit runs must resolve (to a finite or
+    // infinite f64) without panicking; which verdict is unspecified.
+    let digits = "9".repeat(400);
+    for s in ["1e999", "-1e999", digits.as_str()] {
+        let _ = Json::parse(s);
+    }
+}
+
+#[test]
+fn non_finite_floats_dump_as_null_and_reparse() {
+    for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        assert_eq!(Json::num(x).dump(), "null");
+    }
+    // The exec_p99-shaped failure: a metrics dump whose percentiles are
+    // NaN (no samples yet) must still be a valid document end to end.
+    let dump = Json::obj(vec![
+        ("exec_p99_s", Json::num(f64::NAN)),
+        ("queue_p50_s", Json::num(f64::INFINITY)),
+        ("completed", Json::num(3.0)),
+    ])
+    .dump();
+    let back = Json::parse(&dump).expect("must reparse");
+    assert!(back.get("exec_p99_s").is_null());
+    assert!(back.get("queue_p50_s").is_null());
+    assert_eq!(back.get("completed").as_usize(), Some(3));
+}
+
+/// Random bounded-depth document generator for the roundtrip property.
+fn gen_doc(rng: &mut Xoshiro256, depth: usize) -> Json {
+    match rng.next_below(if depth == 0 { 4 } else { 6 }) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_below(2) == 0),
+        2 => {
+            // finite floats only: non-finite intentionally dump as null
+            let x = (rng.next_below(2_000_001) as f64 - 1_000_000.0) / 64.0;
+            Json::Num(x)
+        }
+        3 => {
+            let len = rng.next_below(8) as usize;
+            Json::Str(
+                (0..len)
+                    .map(|_| {
+                        char::from(b' ' + rng.next_below(94) as u8)
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr(
+            (0..rng.next_below(4)).map(|_| gen_doc(rng, depth - 1)).collect(),
+        ),
+        _ => Json::Obj(
+            (0..rng.next_below(4))
+                .map(|i| (format!("k{i}"), gen_doc(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn dump_parse_roundtrip_is_identity() {
+    forall(
+        Config::default().cases(500).seed(0xD0C),
+        |rng| gen_doc(rng, 4),
+        |_| Vec::new(),
+        |doc| Json::parse(&doc.dump()).map(|v| v == *doc).unwrap_or(false),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Remote frame codec: hostile length prefixes and torn frames
+// ---------------------------------------------------------------------------
+
+const TEST_CAP: u32 = 64 * 1024;
+
+#[test]
+fn hostile_length_prefix_is_rejected_before_allocation() {
+    // 4 GiB announced, 4 bytes present: must fail on the cap check, not
+    // by attempting the allocation or waiting for bytes.
+    for announced in [TEST_CAP + 1, 1 << 30, u32::MAX] {
+        let mut wire = announced.to_le_bytes().to_vec();
+        wire.extend_from_slice(b"ha!!");
+        let err = read_frame_limited(&mut Cursor::new(&wire), TEST_CAP)
+            .expect_err("over-cap frame must be rejected");
+        assert!(err.to_string().contains("limit"), "{err}");
+    }
+}
+
+#[test]
+fn torn_frames_error_and_clean_eof_is_none() {
+    let mut wire = Vec::new();
+    write_frame(
+        &mut wire,
+        &Json::obj(vec![("op", Json::str("get")), ("key", Json::str("0xbeef"))]),
+    )
+    .expect("write frame");
+    let total = wire.len();
+    assert!(total > 8);
+    forall(
+        Config::default().cases(200),
+        |rng| rng.next_below(total as u64) as usize,
+        shrink_usize,
+        |&cut| {
+            let torn = &wire[..cut];
+            match read_frame_limited(&mut Cursor::new(torn), TEST_CAP) {
+                // nothing-or-partial-prefix reads as clean EOF between
+                // frames…
+                Ok(None) => cut < 4,
+                // …a full prefix with a torn payload is a hard error…
+                Err(_) => cut >= 4,
+                // …and a parse can never succeed short of the full frame.
+                Ok(Some(v)) => panic!("torn frame at {cut} parsed: {v:?}"),
+            }
+        },
+    );
+}
+
+#[test]
+fn frame_roundtrip_under_the_request_cap() {
+    let doc = Json::obj(vec![
+        ("op", Json::str("get")),
+        ("key", Json::str("0xffffffffffffffff")),
+    ]);
+    let mut wire = Vec::new();
+    write_frame(&mut wire, &doc).expect("write");
+    let back = read_frame_limited(&mut Cursor::new(&wire), TEST_CAP)
+        .expect("read")
+        .expect("one frame");
+    assert_eq!(back, doc);
+    // A second read on the drained stream is the clean-EOF case.
+    let mut cur = Cursor::new(&wire);
+    let _ = read_frame_limited(&mut cur, TEST_CAP).expect("read");
+    assert!(read_frame_limited(&mut cur, TEST_CAP).expect("eof").is_none());
+}
+
+#[test]
+fn non_utf8_frame_payload_is_a_typed_error() {
+    let payload: &[u8] = &[0xFF, 0xFE, 0x80, 0x81];
+    let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(payload);
+    let err = read_frame_limited(&mut Cursor::new(&wire), TEST_CAP)
+        .expect_err("non-utf8 payload");
+    assert!(err.to_string().contains("utf8"), "{err}");
+}
