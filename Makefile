@@ -7,7 +7,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: all build test verify bench bench-json examples fmt clippy lint lint-json artifacts clean
+.PHONY: all build test verify bench bench-json bench-check bench-baseline examples fmt clippy lint lint-json artifacts clean
 
 all: build
 
@@ -30,6 +30,19 @@ bench:
 bench-json:
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench serving_overhead
+	$(CARGO) run --release --bin bench_check -- --report
+
+# Perf-regression gate: re-run the kernel-engine bench and fail if any
+# single-thread row's ratio against the dense oracle drifted more than
+# 15% above BENCH_kernels.baseline.json. `make bench-baseline`
+# re-records the baseline (run on a quiet machine, then commit it).
+bench-check:
+	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
+	$(CARGO) run --release --bin bench_check
+
+bench-baseline:
+	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
+	$(CARGO) run --release --bin bench_check -- --write-baseline
 
 examples:
 	$(CARGO) build --release --examples

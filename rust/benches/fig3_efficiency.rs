@@ -21,7 +21,7 @@ use flashbias::runtime::Runtime;
 use flashbias::simulator::{
     simulate_fwd, simulate_train_step, Algorithm, HwModel,
 };
-use flashbias::tensor::Tensor;
+use flashbias::tensor::{Strip, StripDType, Tensor};
 use flashbias::util::{human_bytes, Xoshiro256};
 
 const ALGS: [(Algorithm, &str); 4] = [
@@ -126,6 +126,53 @@ fn host_engine() {
         let jit_tile = AlibiTile { slope: 0.0625 };
         let mut row = bench_fn(&format!("tiled-jit n{n}"), 1, it, || {
             kernels::attention_tiled(&q, &k, &v, &jit_tile, false, &cfg);
+        });
+        row.bytes = Some(0);
+        table.row(row);
+
+        // single-thread rows: the CI perf gate (`make bench-check`)
+        // compares their means as ratios against the same-n
+        // reference-dense oracle, so the gated quantity is
+        // machine-independent raw microkernel speed, not core count
+        let cfg1 = cfg.with_threads(1);
+        let mut row = bench_fn(&format!("tiled-dense-1t n{n}"), 1, it,
+                               || {
+            kernels::attention_tiled(&q, &k, &v, &dense_tile, false,
+                                     &cfg1);
+        });
+        row.bytes = Some(4 * dense_tile.resident_elems() as u64);
+        table.row(row);
+        let mut row = bench_fn(&format!("tiled-factored-1t n{n}"), 1,
+                               it, || {
+            kernels::attention_tiled(&q, &k, &v, &fact_tile, false,
+                                     &cfg1);
+        });
+        row.bytes = Some(4 * fact_tile.resident_elems() as u64);
+        table.row(row);
+        // reduced-precision strips: same contraction, half the bias HBM
+        let (sq, sk) = (
+            Strip::quantize(&pq, StripDType::Bf16),
+            Strip::quantize(&pk, StripDType::Bf16),
+        );
+        let bf_tile = FactoredTile::from_strips(&sq, &sk);
+        let cfg_bf = KernelConfig::for_geometry_dtype(
+            &Geometry::square(n, c, alibi.rank(),
+                              HwModel::default().sram_elems),
+            StripDType::Bf16,
+        )
+        .with_threads(1);
+        let mut row = bench_fn(
+            &format!("tiled-factored-bf16-1t n{n}"), 1, it, || {
+                kernels::attention_tiled(&q, &k, &v, &bf_tile, false,
+                                         &cfg_bf);
+            },
+        );
+        row.bytes = Some(bf_tile.resident_bytes() as u64);
+        table.row(row);
+        let mut row = bench_fn(&format!("tiled-jit-1t n{n}"), 1, it,
+                               || {
+            kernels::attention_tiled(&q, &k, &v, &jit_tile, false,
+                                     &cfg1);
         });
         row.bytes = Some(0);
         table.row(row);

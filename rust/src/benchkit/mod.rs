@@ -196,6 +196,155 @@ pub fn iters(default: usize) -> usize {
         .unwrap_or(default)
 }
 
+// ---------------------------------------------------------------------------
+// CI perf-regression gate (`make bench-check` / the bench_check bin)
+//
+// The gated quantity is a *ratio*: each single-thread engine row's mean
+// divided by the same-n single-thread dense oracle's mean, both from
+// one BENCH_kernels.json run. Ratios cancel the host's absolute speed,
+// so one checked-in baseline (BENCH_kernels.baseline.json) gates every
+// machine; only the relative cost of the microkernel paths is pinned.
+// ---------------------------------------------------------------------------
+
+/// Default regression slack: a gated ratio may drift up to 15% above
+/// its checked-in baseline before the gate fails.
+pub const GATE_SLACK: f64 = 0.15;
+
+/// One gated quantity: a `…-1t n<N>` row's mean over the
+/// `reference-dense n<N>` mean (< 1.0 ⇒ faster than the dense oracle).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeedRatio {
+    pub label: String,
+    pub ratio: f64,
+}
+
+/// Verdict for one baseline entry after comparing against a fresh run.
+#[derive(Clone, Debug)]
+pub struct GateOutcome {
+    pub label: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// `current ≤ baseline · (1 + slack)`.
+    pub ok: bool,
+}
+
+/// Extract the gated ratios from a `Table::to_json` document: every
+/// row whose label carries the single-thread marker `-1t ` is paired
+/// with the `reference-dense n<N>` row of the same `n<N>` suffix.
+pub fn speed_ratios(table: &Json) -> Result<Vec<SpeedRatio>, String> {
+    let rows = table
+        .get("rows")
+        .as_arr()
+        .ok_or("bench json has no `rows` array")?;
+    let mut means: Vec<(String, f64)> = Vec::new();
+    for r in rows {
+        let label = r
+            .get("label")
+            .as_str()
+            .ok_or("bench row without a `label`")?;
+        let mean = r
+            .get("mean")
+            .as_f64()
+            .ok_or_else(|| format!("row `{label}` has no `mean`"))?;
+        means.push((label.to_string(), mean));
+    }
+    let mean_of = |l: &str| {
+        means.iter().find(|(ml, _)| ml == l).map(|&(_, m)| m)
+    };
+    let mut out = Vec::new();
+    for (label, mean) in &means {
+        let Some(pos) = label.find("-1t ") else { continue };
+        let suffix = &label[pos + 4..]; // "n512", "n2048", …
+        let reference = format!("reference-dense {suffix}");
+        let ref_mean = mean_of(&reference).ok_or_else(|| {
+            format!("row `{label}` has no `{reference}` to normalize by")
+        })?;
+        if !(ref_mean > 0.0) || !mean.is_finite() {
+            return Err(format!(
+                "degenerate means for `{label}`: {mean} / {ref_mean}"
+            ));
+        }
+        out.push(SpeedRatio {
+            label: label.clone(),
+            ratio: mean / ref_mean,
+        });
+    }
+    if out.is_empty() {
+        return Err("no single-thread (`-1t`) rows to gate".into());
+    }
+    Ok(out)
+}
+
+/// Serialize a baseline document: `{title, slack, ratios: [{label,
+/// ratio}]}`.
+pub fn ratios_to_json(title: &str, slack: f64,
+                      ratios: &[SpeedRatio]) -> Json {
+    let rows = ratios
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("label", Json::str(&r.label)),
+                ("ratio", Json::num(r.ratio)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("title", Json::str(title)),
+        ("slack", Json::num(slack)),
+        ("ratios", Json::Arr(rows)),
+    ])
+}
+
+/// Parse a baseline document; returns `(slack, ratios)`.
+pub fn ratios_from_json(doc: &Json)
+                        -> Result<(f64, Vec<SpeedRatio>), String> {
+    let slack = doc.get("slack").as_f64().unwrap_or(GATE_SLACK);
+    let rows = doc
+        .get("ratios")
+        .as_arr()
+        .ok_or("baseline json has no `ratios` array")?;
+    let mut out = Vec::new();
+    for r in rows {
+        let label = r
+            .get("label")
+            .as_str()
+            .ok_or("baseline entry without a `label`")?;
+        let ratio = r
+            .get("ratio")
+            .as_f64()
+            .ok_or_else(|| format!("baseline `{label}` has no ratio"))?;
+        out.push(SpeedRatio { label: label.to_string(), ratio });
+    }
+    if out.is_empty() {
+        return Err("baseline has no gated entries".into());
+    }
+    Ok((slack, out))
+}
+
+/// Compare a fresh run's ratios against the baseline. Every baseline
+/// entry must be present in the run (a silently dropped bench row must
+/// fail the gate, not pass it); extra rows in the run are ignored so
+/// new benches can land before their baseline does.
+pub fn gate(current: &[SpeedRatio], baseline: &[SpeedRatio],
+            slack: f64) -> Result<Vec<GateOutcome>, String> {
+    let mut out = Vec::new();
+    for b in baseline {
+        let cur = current
+            .iter()
+            .find(|c| c.label == b.label)
+            .ok_or_else(|| {
+                format!("gated row `{}` missing from this run", b.label)
+            })?;
+        out.push(GateOutcome {
+            label: b.label.clone(),
+            baseline: b.ratio,
+            current: cur.ratio,
+            ok: cur.ratio <= b.ratio * (1.0 + slack),
+        });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -228,6 +377,94 @@ mod tests {
     #[test]
     fn iters_env_override() {
         assert_eq!(iters(7), 7);
+    }
+
+    fn bench_doc(rows: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("title", Json::str("t")),
+            (
+                "rows",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(l, m)| {
+                            Json::obj(vec![
+                                ("label", Json::str(l)),
+                                ("mean", Json::num(*m)),
+                                ("p50", Json::num(*m)),
+                                ("bytes", Json::Null),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn speed_ratios_normalize_by_the_same_n_reference() {
+        let doc = bench_doc(&[
+            ("reference-dense n512", 2.0),
+            ("tiled-dense n512", 0.9),       // multi-thread: not gated
+            ("tiled-factored-1t n512", 1.0),
+            ("reference-dense n2048", 10.0),
+            ("tiled-factored-1t n2048", 4.0),
+        ]);
+        let r = speed_ratios(&doc).expect("ratios");
+        assert_eq!(r.len(), 2);
+        assert_eq!(r[0].label, "tiled-factored-1t n512");
+        assert_eq!(r[0].ratio, 0.5);
+        assert_eq!(r[1].ratio, 0.4);
+        // a -1t row without its oracle is an error, not a silent skip
+        let orphan = bench_doc(&[("tiled-jit-1t n999", 1.0)]);
+        assert!(speed_ratios(&orphan).is_err());
+        // and a run with nothing to gate is an error too
+        let empty = bench_doc(&[("reference-dense n512", 1.0)]);
+        assert!(speed_ratios(&empty).is_err());
+    }
+
+    #[test]
+    fn gate_fails_only_beyond_slack_and_on_missing_rows() {
+        let base = vec![SpeedRatio { label: "a-1t n1".into(), ratio: 1.0 }];
+        let run = |r: f64| {
+            vec![SpeedRatio { label: "a-1t n1".into(), ratio: r }]
+        };
+        // 10% slower than baseline: inside the 15% slack
+        let out = gate(&run(1.10), &base, GATE_SLACK).expect("gate");
+        assert!(out[0].ok);
+        // 20% slower: regression
+        let out = gate(&run(1.20), &base, GATE_SLACK).expect("gate");
+        assert!(!out[0].ok);
+        // faster than baseline always passes
+        assert!(gate(&run(0.5), &base, GATE_SLACK).unwrap()[0].ok);
+        // a baseline row the run no longer produces must hard-fail
+        assert!(gate(&[], &base, GATE_SLACK).is_err());
+        // extra rows in the run are fine (bench landed before baseline)
+        let mut cur = run(1.0);
+        cur.push(SpeedRatio { label: "new-1t n2".into(), ratio: 9.0 });
+        assert_eq!(gate(&cur, &base, GATE_SLACK).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn baseline_document_round_trips() {
+        let ratios = vec![
+            SpeedRatio { label: "tiled-factored-1t n2048".into(),
+                         ratio: 0.55 },
+            SpeedRatio { label: "tiled-jit-1t n2048".into(),
+                         ratio: 0.6 },
+        ];
+        let doc = ratios_to_json("kernels", 0.15, &ratios);
+        let text = doc.dump();
+        let parsed = crate::jsonlite::Json::parse(&text).expect("parse");
+        let (slack, back) = ratios_from_json(&parsed).expect("decode");
+        assert_eq!(slack, 0.15);
+        assert_eq!(back, ratios);
+        // slack defaults when the field is absent
+        let bare = Json::obj(vec![(
+            "ratios",
+            doc.get("ratios").clone(),
+        )]);
+        let (slack, _) = ratios_from_json(&bare).expect("decode");
+        assert_eq!(slack, GATE_SLACK);
     }
 
     #[test]

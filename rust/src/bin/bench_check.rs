@@ -1,0 +1,124 @@
+//! CI perf-regression gate: compare a fresh `BENCH_kernels.json`
+//! (written by `cargo bench --bench fig3_efficiency`) against the
+//! checked-in `BENCH_kernels.baseline.json`.
+//!
+//! The gated quantity is machine-independent: each single-thread
+//! (`…-1t nN`) row's mean normalized by the same-n single-thread dense
+//! oracle (`reference-dense nN`). A ratio more than `slack` (default
+//! 15%) above its baseline fails the gate with exit code 1.
+//!
+//! ```text
+//! bench_check [--current F] [--baseline F] [--slack X]
+//!             [--write-baseline] [--report]
+//! ```
+//!
+//! * `--write-baseline` — re-record the baseline from the current run
+//!   (run on a quiet machine with full iterations, then commit it).
+//! * `--report` — print the comparison but always exit 0 (`make
+//!   bench-json` uses this for the delta print).
+
+use std::process::exit;
+
+use flashbias::benchkit::{
+    gate, ratios_from_json, ratios_to_json, speed_ratios, GATE_SLACK,
+};
+use flashbias::jsonlite::Json;
+
+struct Args {
+    current: String,
+    baseline: String,
+    slack: Option<f64>,
+    write_baseline: bool,
+    report_only: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        current: "BENCH_kernels.json".into(),
+        baseline: "BENCH_kernels.baseline.json".into(),
+        slack: None,
+        write_baseline: false,
+        report_only: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        let mut val = |name: &str| {
+            it.next().ok_or(format!("{name} needs a value"))
+        };
+        match a.as_str() {
+            "--current" => args.current = val("--current")?,
+            "--baseline" => args.baseline = val("--baseline")?,
+            "--slack" => {
+                let v = val("--slack")?;
+                args.slack = Some(
+                    v.parse()
+                        .map_err(|_| format!("bad --slack `{v}`"))?,
+                );
+            }
+            "--write-baseline" => args.write_baseline = true,
+            "--report" => args.report_only = true,
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("{path}: parse error {e:?}"))
+}
+
+fn run() -> Result<bool, String> {
+    let args = parse_args()?;
+    let current_doc = load(&args.current)?;
+    let current = speed_ratios(&current_doc)?;
+
+    if args.write_baseline {
+        let slack = args.slack.unwrap_or(GATE_SLACK);
+        let doc = ratios_to_json(
+            current_doc.get("title").as_str().unwrap_or("kernels"),
+            slack,
+            &current,
+        );
+        std::fs::write(&args.baseline, doc.dump())
+            .map_err(|e| format!("cannot write {}: {e}", args.baseline))?;
+        println!("wrote {} ({} gated rows, slack {:.0}%)",
+                 args.baseline, current.len(), slack * 100.0);
+        return Ok(true);
+    }
+
+    let (file_slack, baseline) = ratios_from_json(&load(&args.baseline)?)?;
+    let slack = args.slack.unwrap_or(file_slack);
+    let outcomes = gate(&current, &baseline, slack)?;
+
+    println!("perf gate: {} vs {} (slack {:.0}%)",
+             args.current, args.baseline, slack * 100.0);
+    println!("  {:34} {:>9} {:>9} {:>8}  status",
+             "row (mean / dense oracle)", "baseline", "current", "delta");
+    let mut ok = true;
+    for o in &outcomes {
+        let delta = (o.current / o.baseline - 1.0) * 100.0;
+        println!("  {:34} {:>9.3} {:>9.3} {:>+7.1}%  {}",
+                 o.label, o.baseline, o.current, delta,
+                 if o.ok { "ok" } else { "REGRESSION" });
+        ok &= o.ok;
+    }
+    if !ok {
+        println!("FAIL: ratio(s) above baseline by more than {:.0}%; \
+                  if intentional, re-record with --write-baseline",
+                 slack * 100.0);
+    }
+    Ok(ok || args.report_only)
+}
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => exit(1),
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            exit(2);
+        }
+    }
+}

@@ -20,7 +20,7 @@
 //! [`crate::factorstore`]; this module stays the pure math.
 
 use crate::linalg;
-use crate::tensor::Tensor;
+use crate::tensor::{Strip, StripDType, Tensor};
 use crate::util::Xoshiro256;
 
 pub mod neural;
@@ -50,26 +50,98 @@ pub enum Strategy {
 }
 
 /// The result of decomposing a bias: factor strips + bookkeeping.
+///
+/// The strips are stored as [`Strip`]s so they can carry a
+/// reduced-precision [`StripDType`] (bf16/f16/i8) end to end — through
+/// the `FactorStore`, jsonlite persistence, and the kernel's tile-local
+/// contraction — while every arithmetic consumer still sees f32.
 #[derive(Clone, Debug)]
 pub struct Factors {
-    pub phi_q: Tensor,
-    pub phi_k: Tensor,
-    /// Relative Frobenius reconstruction error against the dense bias.
+    pub phi_q: Strip,
+    pub phi_k: Strip,
+    /// Relative Frobenius reconstruction error against the dense bias
+    /// (for quantized strips: including the measured quantization
+    /// bound, see [`quantize_factors`]).
     pub rel_err: f32,
     /// Rank actually used.
     pub rank: usize,
 }
 
 impl Factors {
-    /// Storage in bytes of the factor pair (Thm 3.2: Θ((N+M)·R)).
+    /// Wrap exact f32 factor strips (the decomposition mechanisms all
+    /// produce f32; quantization is a separate, policy-gated step).
+    pub fn from_tensors(phi_q: Tensor, phi_k: Tensor, rel_err: f32,
+                        rank: usize) -> Self {
+        Self {
+            phi_q: Strip::from_f32(phi_q),
+            phi_k: Strip::from_f32(phi_k),
+            rel_err,
+            rank,
+        }
+    }
+
+    /// Stored dtype of the strips (both strips always share one).
+    pub fn dtype(&self) -> StripDType {
+        debug_assert_eq!(self.phi_q.dtype(), self.phi_k.dtype());
+        self.phi_q.dtype()
+    }
+
+    /// Storage in bytes of the factor pair (Thm 3.2: Θ((N+M)·R)), at
+    /// the strips' *stored* width — bf16 factors report half the f32
+    /// bytes, and this is what the `FactorStore` byte budget charges.
     pub fn size_bytes(&self) -> usize {
         self.phi_q.size_bytes() + self.phi_k.size_bytes()
     }
 
     /// Reconstruct the dense bias (test/inspection path only).
     pub fn reconstruct(&self) -> Tensor {
-        self.phi_q.matmul_t(&self.phi_k)
+        self.phi_q.to_tensor().matmul_t(&self.phi_k.to_tensor())
     }
+}
+
+/// Re-encode a decomposition's strips at `dtype`, returning the
+/// quantized factors and the *measured* relative error the quantization
+/// adds to the reconstructed bias:
+///
+/// `‖Δφ_q φ_kᵀ‖_F + ‖φ_q Δφ_kᵀ‖_F + ‖Δφ_q Δφ_kᵀ‖_F` over
+/// `‖φ_q φ_kᵀ‖_F` — an upper bound on `‖b̂_quant − b̂‖_F / ‖b̂‖_F` by
+/// the triangle inequality, computed exactly via Gram matrices
+/// ([`linalg::factored_frob_norm`]) in O((N+M)R² + R³) without ever
+/// materializing an N×M matrix.
+///
+/// The returned `rel_err` is the input's `rel_err` plus this bound, so
+/// downstream accuracy accounting (planner gates, property tests) sees
+/// the end-to-end figure. Quantizing to [`StripDType::F32`] is a no-op
+/// with a zero bound.
+pub fn quantize_factors(f: &Factors, dtype: StripDType)
+                        -> (Factors, f32) {
+    if dtype == StripDType::F32 && f.dtype() == StripDType::F32 {
+        return (f.clone(), 0.0);
+    }
+    let pq = f.phi_q.to_tensor();
+    let pk = f.phi_k.to_tensor();
+    let (sq, sk) = (Strip::quantize(&pq, dtype),
+                    Strip::quantize(&pk, dtype));
+    let dq = sq.to_tensor().sub(&pq);
+    let dk = sk.to_tensor().sub(&pk);
+    let den = linalg::factored_frob_norm(&pq, &pk);
+    let num = linalg::factored_frob_norm(&dq, &pk)
+        + linalg::factored_frob_norm(&pq, &dk)
+        + linalg::factored_frob_norm(&dq, &dk);
+    let bound = if den > 0.0 {
+        (num / den) as f32
+    } else if num > 0.0 {
+        f32::INFINITY
+    } else {
+        0.0
+    };
+    let out = Factors {
+        phi_q: sq,
+        phi_k: sk,
+        rel_err: f.rel_err + bound,
+        rank: f.rank,
+    };
+    (out, bound)
 }
 
 /// Typed failure from [`decompose`].
@@ -158,12 +230,7 @@ pub fn decompose(bias: &Tensor, strategy: &Strategy, rng: &mut Xoshiro256)
             // always equal the strips' column count (persistence
             // validates entries against it)
             let rank = pq.shape()[1];
-            Ok(Some(Factors {
-                phi_q: pq,
-                phi_k: pk,
-                rel_err,
-                rank,
-            }))
+            Ok(Some(Factors::from_tensors(pq, pk, rel_err, rank)))
         }
         Strategy::Neural(cfg) => {
             // Without token sources, use normalized row/col indices as the
@@ -176,12 +243,7 @@ pub fn decompose(bias: &Tensor, strategy: &Strategy, rng: &mut Xoshiro256)
             let pq = nd.phi_q(&xq);
             let pk = nd.phi_k(&xk);
             let rel_err = linalg::reconstruction_error(bias, &pq, &pk);
-            Ok(Some(Factors {
-                phi_q: pq,
-                phi_k: pk,
-                rel_err,
-                rank: cfg.rank,
-            }))
+            Ok(Some(Factors::from_tensors(pq, pk, rel_err, cfg.rank)))
         }
     }
 }
@@ -192,12 +254,7 @@ pub fn from_exact<B: crate::bias::ExactBias>(bias: &B) -> Factors {
     let (pq, pk) = bias.factors();
     let dense = bias.dense();
     let rel_err = linalg::reconstruction_error(&dense, &pq, &pk);
-    Factors {
-        rank: bias.rank(),
-        phi_q: pq,
-        phi_k: pk,
-        rel_err,
-    }
+    Factors::from_tensors(pq, pk, rel_err, bias.rank())
 }
 
 // ---------------------------------------------------------------------------
@@ -248,12 +305,9 @@ impl LowRankSparse {
             }
             entries.truncate(keep);
             sparse = entries;
-            factors = Some(Factors {
-                rel_err: linalg::reconstruction_error(bias, &pq, &pk),
-                rank: pq.shape()[1],
-                phi_q: pq,
-                phi_k: pk,
-            });
+            let rel_err = linalg::reconstruction_error(bias, &pq, &pk);
+            let rank = pq.shape()[1];
+            factors = Some(Factors::from_tensors(pq, pk, rel_err, rank));
         }
         // flashlint: allow(hot-path-panic) the loop above runs iters.max(1) >= 1 passes, so factors is always Some here
         let factors = factors.unwrap();
@@ -410,6 +464,43 @@ mod tests {
         let recon = split.reconstruct();
         assert!((recon.rel_err(&bias) - split.rel_err).abs() < 1e-5);
         assert!(split.size_bytes() > 0);
+    }
+
+    #[test]
+    fn quantize_factors_bound_is_a_real_upper_bound() {
+        let mut rng = Xoshiro256::new(31);
+        let a = Tensor::randn(&[40, 5], 1.0, &mut rng);
+        let b = Tensor::randn(&[36, 5], 1.0, &mut rng);
+        let bias = a.matmul_t(&b);
+        let f = decompose(&bias, &Strategy::Svd(RankSelect::Fixed(5)),
+                          &mut rng)
+            .unwrap()
+            .unwrap();
+        for dtype in [StripDType::Bf16, StripDType::F16, StripDType::I8] {
+            let (qf, bound) = quantize_factors(&f, dtype);
+            assert_eq!(qf.dtype(), dtype);
+            assert_eq!(qf.rank, f.rank);
+            // the Gram-matrix bound must dominate the true quantization
+            // error of the materialized bias
+            let actual =
+                qf.reconstruct().rel_err(&f.reconstruct()) as f64;
+            assert!(actual <= bound as f64 + 1e-6,
+                    "{dtype}: actual {actual} > bound {bound}");
+            assert!(bound > 0.0 && bound < 0.05, "{dtype}: {bound}");
+            assert!(qf.rel_err >= f.rel_err);
+            // bytes shrink by the dtype width
+            assert!(qf.size_bytes() < f.size_bytes());
+        }
+    }
+
+    #[test]
+    fn quantize_factors_f32_is_noop() {
+        let f = from_exact(&Alibi::new(16, 16, 0.5));
+        let (qf, bound) = quantize_factors(&f, StripDType::F32);
+        assert_eq!(bound, 0.0);
+        assert_eq!(qf.size_bytes(), f.size_bytes());
+        assert_eq!(qf.phi_q, f.phi_q);
+        assert_eq!(qf.rel_err, f.rel_err);
     }
 
     #[test]

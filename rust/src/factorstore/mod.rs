@@ -52,7 +52,7 @@ use crate::util::sync::{check_blocking, Mutex};
 
 use crate::decompose::Factors;
 use crate::jsonlite::Json;
-use crate::tensor::Tensor;
+use crate::tensor::{StripDType, Tensor};
 
 pub use remote::{FactorService, RemoteStore};
 
@@ -876,8 +876,8 @@ pub(crate) fn entry_is_finite(value: &Cached) -> bool {
     match value {
         Cached::Factors(f) => {
             f.rel_err.is_finite()
-                && f.phi_q.data().iter().all(|x| x.is_finite())
-                && f.phi_k.data().iter().all(|x| x.is_finite())
+                && f.phi_q.is_finite()
+                && f.phi_k.is_finite()
         }
         Cached::Rejected { .. } => true,
     }
@@ -899,22 +899,156 @@ fn json_to_f32s(j: &Json) -> Result<Vec<f32>> {
         .collect()
 }
 
+fn u16s_to_json(xs: &[u16]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn json_to_u16s(j: &Json) -> Result<Vec<u16>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected a bits array"))?
+        .iter()
+        .map(|v| match v.as_f64() {
+            Some(x) if x >= 0.0 && x <= 65535.0 && x.fract() == 0.0 => {
+                Ok(x as u16)
+            }
+            _ => Err(anyhow!("bits element out of u16 range")),
+        })
+        .collect()
+}
+
+fn i8s_to_json(xs: &[i8]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn json_to_i8s(j: &Json) -> Result<Vec<i8>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected an i8 array"))?
+        .iter()
+        .map(|v| match v.as_f64() {
+            Some(x) if (-128.0..=127.0).contains(&x)
+                && x.fract() == 0.0 => Ok(x as i8),
+            _ => Err(anyhow!("i8 element out of range")),
+        })
+        .collect()
+}
+
+/// Serialize one factor strip's payload into `fields`, prefixing each
+/// key with `tag` ("phi_q" / "phi_k"). The f32 layout keeps the legacy
+/// field names, so stores written before reduced-precision strips
+/// existed load unchanged (and vice versa for f32-only stores).
+fn strip_to_json(fields: &mut Vec<(&'static str, Json)>,
+                 tag: StripTag, s: &crate::tensor::Strip) {
+    match s.dtype() {
+        StripDType::F32 => fields.push((
+            tag.plain(),
+            f32s_to_json(s.as_f32().expect("f32 strip payload")),
+        )),
+        StripDType::Bf16 | StripDType::F16 => fields.push((
+            tag.bits(),
+            u16s_to_json(s.bits_u16().expect("16-bit strip payload")),
+        )),
+        StripDType::I8 => {
+            let (data, scales) = s.i8_parts().expect("i8 strip payload");
+            fields.push((tag.plain(), i8s_to_json(data)));
+            fields.push((tag.scales(), f32s_to_json(scales)));
+        }
+    }
+}
+
+/// Field-name triple for one strip ("phi_q" or "phi_k").
+#[derive(Clone, Copy)]
+enum StripTag {
+    Q,
+    K,
+}
+
+impl StripTag {
+    fn plain(self) -> &'static str {
+        match self {
+            StripTag::Q => "phi_q",
+            StripTag::K => "phi_k",
+        }
+    }
+    fn bits(self) -> &'static str {
+        match self {
+            StripTag::Q => "phi_q_bits",
+            StripTag::K => "phi_k_bits",
+        }
+    }
+    fn scales(self) -> &'static str {
+        match self {
+            StripTag::Q => "phi_q_scales",
+            StripTag::K => "phi_k_scales",
+        }
+    }
+}
+
+/// Deserialize one strip of `rows × cols` at `dtype` from an entry
+/// object.
+fn strip_from_json(j: &Json, tag: StripTag, dtype: StripDType,
+                   rows: usize, cols: usize)
+                   -> Result<crate::tensor::Strip> {
+    use crate::tensor::Strip;
+    let numel = rows * cols;
+    let strip = match dtype {
+        StripDType::F32 => {
+            let d = json_to_f32s(j.get(tag.plain()))?;
+            if d.len() != numel {
+                return Err(anyhow!(
+                    "{} payload {} != {rows}x{cols}", tag.plain(), d.len()
+                ));
+            }
+            Strip::from_f32(Tensor::new(&[rows, cols], d))
+        }
+        StripDType::Bf16 | StripDType::F16 => {
+            let bits = json_to_u16s(j.get(tag.bits()))?;
+            if bits.len() != numel {
+                return Err(anyhow!(
+                    "{} payload {} != {rows}x{cols}", tag.bits(),
+                    bits.len()
+                ));
+            }
+            if dtype == StripDType::Bf16 {
+                Strip::from_bf16_bits(rows, cols, bits)
+            } else {
+                Strip::from_f16_bits(rows, cols, bits)
+            }
+        }
+        StripDType::I8 => {
+            let data = json_to_i8s(j.get(tag.plain()))?;
+            let scales = json_to_f32s(j.get(tag.scales()))?;
+            if data.len() != numel || scales.len() != cols {
+                return Err(anyhow!(
+                    "{} i8 payload {}/{} != {rows}x{cols}", tag.plain(),
+                    data.len(), scales.len()
+                ));
+            }
+            Strip::from_i8(rows, cols, data, scales)
+        }
+    };
+    Ok(strip)
+}
+
 pub(crate) fn entry_to_json(key: u64, value: &Cached) -> Json {
     // Every caller filters through entry_is_finite first; this is the
     // last line of defense before floats reach a persisted file.
     debug_assert!(entry_is_finite(value), "non-finite factors at {key:#x}");
     let key_hex = format!("{:016x}", key);
     match value {
-        Cached::Factors(f) => Json::obj(vec![
-            ("key", Json::str(&key_hex)),
-            ("kind", Json::str("factors")),
-            ("n", Json::num(f.phi_q.shape()[0] as f64)),
-            ("m", Json::num(f.phi_k.shape()[0] as f64)),
-            ("rank", Json::num(f.rank as f64)),
-            ("rel_err", Json::num(f.rel_err as f64)),
-            ("phi_q", f32s_to_json(f.phi_q.data())),
-            ("phi_k", f32s_to_json(f.phi_k.data())),
-        ]),
+        Cached::Factors(f) => {
+            let mut fields = vec![
+                ("key", Json::str(&key_hex)),
+                ("kind", Json::str("factors")),
+                ("n", Json::num(f.phi_q.rows() as f64)),
+                ("m", Json::num(f.phi_k.rows() as f64)),
+                ("rank", Json::num(f.rank as f64)),
+                ("rel_err", Json::num(f.rel_err as f64)),
+                ("dtype", Json::str(f.dtype().name())),
+            ];
+            strip_to_json(&mut fields, StripTag::Q, &f.phi_q);
+            strip_to_json(&mut fields, StripTag::K, &f.phi_k);
+            Json::obj(fields)
+        }
         Cached::Rejected { measured_rank } => Json::obj(vec![
             ("key", Json::str(&key_hex)),
             ("kind", Json::str("rejected")),
@@ -949,19 +1083,19 @@ pub(crate) fn entry_from_json(j: &Json) -> Result<(Fingerprint, Cached)> {
                 .as_f64()
                 .ok_or_else(|| anyhow!("factors entry without rel_err"))?
                 as f32;
-            let pq = json_to_f32s(j.get("phi_q"))?;
-            let pk = json_to_f32s(j.get("phi_k"))?;
-            if pq.len() != n * rank || pk.len() != m * rank {
-                return Err(anyhow!(
-                    "factor payload sizes {}/{} disagree with \
-                     (n={n}, m={m}, rank={rank})",
-                    pq.len(),
-                    pk.len()
-                ));
-            }
+            // stores written before reduced-precision strips carry no
+            // "dtype" field: those are f32 by construction
+            let dtype = match j.get("dtype").as_str() {
+                None => StripDType::F32,
+                Some(name) => StripDType::parse(name).ok_or_else(|| {
+                    anyhow!("unknown strip dtype {name:?}")
+                })?,
+            };
+            let phi_q = strip_from_json(j, StripTag::Q, dtype, n, rank)?;
+            let phi_k = strip_from_json(j, StripTag::K, dtype, m, rank)?;
             Cached::Factors(Arc::new(Factors {
-                phi_q: Tensor::new(&[n, rank], pq),
-                phi_k: Tensor::new(&[m, rank], pk),
+                phi_q,
+                phi_k,
                 rel_err,
                 rank,
             }))
@@ -1095,9 +1229,9 @@ mod tests {
             original.factors().unwrap(),
             back.factors().unwrap(),
         );
-        assert_eq!(of.phi_q.data(), bf.phi_q.data(),
+        assert_eq!(of.phi_q, bf.phi_q,
                    "spill round trip must be exact");
-        assert_eq!(of.phi_k.data(), bf.phi_k.data());
+        assert_eq!(of.phi_k, bf.phi_k);
         // reloading key 1 displaced another entry into the spill
         assert_eq!(store.spilled(), 1);
         let _ = std::fs::remove_file(path);
@@ -1176,12 +1310,51 @@ mod tests {
         let back = loaded.get(Fingerprint(7)).unwrap();
         let (of, bf) = (orig.factors().unwrap(), back.factors().unwrap());
         assert_eq!(of.rank, bf.rank);
-        assert_eq!(of.phi_q.data(), bf.phi_q.data());
-        assert_eq!(of.phi_k.data(), bf.phi_k.data());
+        assert_eq!(of.phi_q, bf.phi_q);
+        assert_eq!(of.phi_k, bf.phi_k);
         assert!(matches!(
             loaded.get(Fingerprint(8)),
             Some(Cached::Rejected { measured_rank: 33 })
         ));
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn save_load_preserves_reduced_precision_dtypes() {
+        use crate::decompose::quantize_factors;
+        use crate::tensor::StripDType;
+        let store = FactorStore::unbounded();
+        let base = from_exact(&Alibi::new(10, 10, 0.25));
+        for (i, dtype) in [StripDType::F32, StripDType::Bf16,
+                           StripDType::F16, StripDType::I8]
+            .into_iter()
+            .enumerate()
+        {
+            let (qf, _) = quantize_factors(&base, dtype);
+            store.insert(Fingerprint(i as u64),
+                         Cached::Factors(Arc::new(qf)));
+        }
+        let path = std::env::temp_dir().join(format!(
+            "fb_store_dtype_{}.json",
+            std::process::id()
+        ));
+        store.save(&path).expect("save");
+        let loaded = FactorStore::load(&path, usize::MAX).expect("load");
+        for (i, dtype) in [StripDType::F32, StripDType::Bf16,
+                           StripDType::F16, StripDType::I8]
+            .into_iter()
+            .enumerate()
+        {
+            let orig = store.get(Fingerprint(i as u64)).unwrap();
+            let back = loaded.get(Fingerprint(i as u64)).unwrap();
+            let (of, bf) =
+                (orig.factors().unwrap(), back.factors().unwrap());
+            assert_eq!(bf.dtype(), dtype, "dtype survives persistence");
+            assert_eq!(of.phi_q, bf.phi_q,
+                       "{dtype:?} payload round trip must be bit-exact");
+            assert_eq!(of.phi_k, bf.phi_k);
+            assert_eq!(of.rel_err, bf.rel_err);
+        }
         let _ = std::fs::remove_file(path);
     }
 
@@ -1191,12 +1364,12 @@ mod tests {
         store.insert(Fingerprint(1), cached_alibi(8));
         store.insert(
             Fingerprint(2),
-            Cached::Factors(Arc::new(Factors {
-                phi_q: Tensor::new(&[2, 1], vec![f32::NAN, 1.0]),
-                phi_k: Tensor::new(&[2, 1], vec![0.5, 2.0]),
-                rel_err: 0.0,
-                rank: 1,
-            })),
+            Cached::Factors(Arc::new(Factors::from_tensors(
+                Tensor::new(&[2, 1], vec![f32::NAN, 1.0]),
+                Tensor::new(&[2, 1], vec![0.5, 2.0]),
+                0.0,
+                1,
+            ))),
         );
         let path = std::env::temp_dir().join(format!(
             "fb_store_nan_{}.json",

@@ -1,0 +1,351 @@
+//! Fixed-width microkernels for the tile engine's hot loops.
+//!
+//! Every inner loop of [`super::run_query_block`] and the
+//! [`super::BiasTile`] providers bottoms out here: register-tiled
+//! dot-product kernels (one query row × [`NR`] key rows per block,
+//! [`LANES`]-wide lane blocks inside each), fused multiply-add
+//! throughout, and bounds checks hoisted out of the loop body by
+//! re-slicing every operand to a common length up front.
+//!
+//! Two implementations share this file:
+//!
+//! * the **scalar fallback** (default, stable Rust) — `chunks_exact`
+//!   lane blocks accumulated into a `[f32; LANES]` register file with
+//!   `f32::mul_add`, written so LLVM can autovectorize it;
+//! * the **explicit SIMD path** (`--features simd`, nightly
+//!   `portable_simd`) — the same algorithm on `std::simd::f32x8`.
+//!
+//! **Bit-identity contract.** Both paths perform the identical
+//! per-lane operation sequence — lane `l` of the accumulator sees the
+//! same fused `a[i·LANES+l] * b[i·LANES+l] + acc[l]` chain, the tail is
+//! a scalar `mul_add` chain in both, and the final reduction is the
+//! shared [`reduce`] tree — so scalar and SIMD builds produce
+//! bit-identical results, and the engine's "same bits for any thread
+//! count" guarantee extends to "same bits for any build". The property
+//! tests in `tests/microkernel_props.rs` pin every kernel to a
+//! portable lane-model reference; running them with and without
+//! `--features simd` proves both paths agree with it bit-for-bit.
+
+/// Lane width of one register block (f32 lanes per SIMD vector).
+pub const LANES: usize = 8;
+
+/// Key rows processed per register-tiled dot block.
+pub const NR: usize = 4;
+
+/// The fixed reduction tree both paths share: pairwise over lane
+/// distance 4, then 2, then 1. Never `reduce_sum` (its order is
+/// implementation-defined); this tree is the contract.
+#[inline(always)]
+pub fn reduce(acc: [f32; LANES]) -> f32 {
+    let a = [
+        acc[0] + acc[4],
+        acc[1] + acc[5],
+        acc[2] + acc[6],
+        acc[3] + acc[7],
+    ];
+    (a[0] + a[2]) + (a[1] + a[3])
+}
+
+// ---------------------------------------------------------------------------
+// dot: one query row × one key row
+// ---------------------------------------------------------------------------
+
+/// Fused dot product `Σ a[i]·b[i]` over `min(|a|, |b|)` elements.
+///
+/// Lane-blocked: full [`LANES`]-wide blocks accumulate into a lane
+/// register file, the tail accumulates into a scalar chain, and the
+/// lane file collapses through [`reduce`].
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        for l in 0..LANES {
+            acc[l] = ca[l].mul_add(cb[l], acc[l]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail = x.mul_add(y, tail);
+    }
+    reduce(acc) + tail
+}
+
+/// Fused dot product (explicit `std::simd` path — same lane algorithm,
+/// bit-identical to the scalar fallback).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    use std::simd::{f32x8, StdFloat};
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let mut acc = f32x8::splat(0.0);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (ca, cb) in (&mut ac).zip(&mut bc) {
+        acc = f32x8::from_slice(ca).mul_add(f32x8::from_slice(cb), acc);
+    }
+    let mut tail = 0.0f32;
+    for (&x, &y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail = x.mul_add(y, tail);
+    }
+    reduce(acc.to_array()) + tail
+}
+
+// ---------------------------------------------------------------------------
+// dot4: one query row × NR key rows (the register tile)
+// ---------------------------------------------------------------------------
+
+/// Register-tiled dot block: `[dot(a, b0), dot(a, b1), dot(a, b2),
+/// dot(a, b3)]` with each `a` lane block loaded once and reused across
+/// all four key rows. Each output is bit-identical to the
+/// corresponding [`dot`] call.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32],
+            b3: &[f32]) -> [f32; NR] {
+    let n = a
+        .len()
+        .min(b0.len())
+        .min(b1.len())
+        .min(b2.len())
+        .min(b3.len());
+    let (a, b0, b1, b2, b3) =
+        (&a[..n], &b0[..n], &b1[..n], &b2[..n], &b3[..n]);
+    let mut acc = [[0.0f32; LANES]; NR];
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        let o = i * LANES;
+        let ca = &a[o..o + LANES];
+        let cb = [
+            &b0[o..o + LANES],
+            &b1[o..o + LANES],
+            &b2[o..o + LANES],
+            &b3[o..o + LANES],
+        ];
+        for r in 0..NR {
+            for l in 0..LANES {
+                acc[r][l] = ca[l].mul_add(cb[r][l], acc[r][l]);
+            }
+        }
+    }
+    let mut tails = [0.0f32; NR];
+    for i in blocks * LANES..n {
+        let x = a[i];
+        tails[0] = x.mul_add(b0[i], tails[0]);
+        tails[1] = x.mul_add(b1[i], tails[1]);
+        tails[2] = x.mul_add(b2[i], tails[2]);
+        tails[3] = x.mul_add(b3[i], tails[3]);
+    }
+    [
+        reduce(acc[0]) + tails[0],
+        reduce(acc[1]) + tails[1],
+        reduce(acc[2]) + tails[2],
+        reduce(acc[3]) + tails[3],
+    ]
+}
+
+/// Register-tiled dot block (explicit `std::simd` path — bit-identical
+/// to the scalar fallback and to four [`dot`] calls).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32],
+            b3: &[f32]) -> [f32; NR] {
+    use std::simd::{f32x8, StdFloat};
+    let n = a
+        .len()
+        .min(b0.len())
+        .min(b1.len())
+        .min(b2.len())
+        .min(b3.len());
+    let (a, b0, b1, b2, b3) =
+        (&a[..n], &b0[..n], &b1[..n], &b2[..n], &b3[..n]);
+    let mut acc = [f32x8::splat(0.0); NR];
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        let o = i * LANES;
+        let va = f32x8::from_slice(&a[o..o + LANES]);
+        acc[0] = va.mul_add(f32x8::from_slice(&b0[o..o + LANES]), acc[0]);
+        acc[1] = va.mul_add(f32x8::from_slice(&b1[o..o + LANES]), acc[1]);
+        acc[2] = va.mul_add(f32x8::from_slice(&b2[o..o + LANES]), acc[2]);
+        acc[3] = va.mul_add(f32x8::from_slice(&b3[o..o + LANES]), acc[3]);
+    }
+    let mut tails = [0.0f32; NR];
+    for i in blocks * LANES..n {
+        let x = a[i];
+        tails[0] = x.mul_add(b0[i], tails[0]);
+        tails[1] = x.mul_add(b1[i], tails[1]);
+        tails[2] = x.mul_add(b2[i], tails[2]);
+        tails[3] = x.mul_add(b3[i], tails[3]);
+    }
+    [
+        reduce(acc[0].to_array()) + tails[0],
+        reduce(acc[1].to_array()) + tails[1],
+        reduce(acc[2].to_array()) + tails[2],
+        reduce(acc[3].to_array()) + tails[3],
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels (trivially bit-identical across paths: no
+// cross-lane reduction, one fused op per element)
+// ---------------------------------------------------------------------------
+
+/// `y[i] += a · x[i]` over `min(|x|, |y|)` elements.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &mut y[..n]);
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o = a.mul_add(v, *o);
+    }
+}
+
+/// `y[i] += a · x[i]` (explicit `std::simd` path).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    use std::simd::{f32x8, StdFloat};
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &mut y[..n]);
+    let va = f32x8::splat(a);
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for (cx, cy) in (&mut xc).zip(&mut yc) {
+        let r = va.mul_add(f32x8::from_slice(cx), f32x8::from_slice(cy));
+        cy.copy_from_slice(&r.to_array());
+    }
+    for (o, &v) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o = a.mul_add(v, *o);
+    }
+}
+
+/// `y[i] *= a`.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn scale_in_place(a: f32, y: &mut [f32]) {
+    for o in y.iter_mut() {
+        *o *= a;
+    }
+}
+
+/// `y[i] *= a` (explicit `std::simd` path).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn scale_in_place(a: f32, y: &mut [f32]) {
+    use std::simd::f32x8;
+    let va = f32x8::splat(a);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for cy in &mut yc {
+        let r = f32x8::from_slice(cy) * va;
+        cy.copy_from_slice(&r.to_array());
+    }
+    for o in yc.into_remainder() {
+        *o *= a;
+    }
+}
+
+/// `y[i] += x[i]` over `min(|x|, |y|)` elements.
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn add_assign(x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &mut y[..n]);
+    for (o, &v) in y.iter_mut().zip(x) {
+        *o += v;
+    }
+}
+
+/// `y[i] += x[i]` (explicit `std::simd` path).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn add_assign(x: &[f32], y: &mut [f32]) {
+    use std::simd::f32x8;
+    let n = x.len().min(y.len());
+    let (x, y) = (&x[..n], &mut y[..n]);
+    let mut xc = x.chunks_exact(LANES);
+    let mut yc = y.chunks_exact_mut(LANES);
+    for (cx, cy) in (&mut xc).zip(&mut yc) {
+        let r = f32x8::from_slice(cx) + f32x8::from_slice(cy);
+        cy.copy_from_slice(&r.to_array());
+    }
+    for (o, &v) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += v;
+    }
+}
+
+/// Maximum of a slice (`-inf` when empty). Scalar in both builds:
+/// `max` is order-insensitive for the non-NaN inputs the engine feeds
+/// it, and it is nowhere near the dot-product bottleneck.
+#[inline]
+pub fn row_max(xs: &[f32]) -> f32 {
+    let mut m = f32::NEG_INFINITY;
+    for &x in xs {
+        m = m.max(x);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Row-level drivers: score-tile contraction shared by q·kᵀ and the
+// factored-bias Eq. (3) contraction
+// ---------------------------------------------------------------------------
+
+/// For one query row `a`, overwrite `out[j] = dot(a, rows.row(j0 + j))
+/// · scale` for `j ∈ [0, out.len())` — the register-tiled q·kᵀ inner
+/// loop of the score tile.
+#[inline]
+pub fn row_scores(a: &[f32], rows: crate::tensor::View2<'_>, j0: usize,
+                  scale: f32, out: &mut [f32]) {
+    let bk = out.len();
+    let mut jj = 0usize;
+    while jj + NR <= bk {
+        let d = dot4(
+            a,
+            rows.row(j0 + jj),
+            rows.row(j0 + jj + 1),
+            rows.row(j0 + jj + 2),
+            rows.row(j0 + jj + 3),
+        );
+        for r in 0..NR {
+            out[jj + r] = d[r] * scale;
+        }
+        jj += NR;
+    }
+    while jj < bk {
+        out[jj] = dot(a, rows.row(j0 + jj)) * scale;
+        jj += 1;
+    }
+}
+
+/// For one query row `a`, accumulate `out[j] += dot(a, rows.row(j0 +
+/// j))` — the register-tiled Eq. (3) factored-bias contraction for one
+/// score row (rows = φ_k, a = the query's φ_q row).
+#[inline]
+pub fn row_accum(a: &[f32], rows: crate::tensor::View2<'_>, j0: usize,
+                 out: &mut [f32]) {
+    let bk = out.len();
+    let mut jj = 0usize;
+    while jj + NR <= bk {
+        let d = dot4(
+            a,
+            rows.row(j0 + jj),
+            rows.row(j0 + jj + 1),
+            rows.row(j0 + jj + 2),
+            rows.row(j0 + jj + 3),
+        );
+        for r in 0..NR {
+            out[jj + r] += d[r];
+        }
+        jj += NR;
+    }
+    while jj < bk {
+        out[jj] += dot(a, rows.row(j0 + jj));
+        jj += 1;
+    }
+}

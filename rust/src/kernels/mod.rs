@@ -28,14 +28,25 @@
 //!   masked, e.g. decoder alignment with N > M) yields an exactly-zero
 //!   output row, not a uniform average over masked keys.
 //!
+//! * **Microkernels.** Every hot inner loop bottoms out in
+//!   [`microkernel`]: register-tiled fused-multiply-add dot blocks with
+//!   bounds checks hoisted, compiled either as an
+//!   autovectorization-friendly scalar fallback (default, stable) or as
+//!   an explicit `std::simd` path (`--features simd`, nightly) —
+//!   bit-identical by construction.
+//!
 //! Block sizes default to [`KernelConfig::for_geometry`], which derives
 //! them from [`crate::simulator::block_sizes`] — so the simulator's HBM
-//! accounting and the engine's numerics agree on what is loaded per tile.
+//! accounting and the engine's numerics agree on what is loaded per
+//! tile. Quantized factor strips get [`KernelConfig::for_geometry_dtype`],
+//! which fits tiles at the strips' stored width.
 
 use crate::attention::NEG_INF;
 use crate::iomodel::Geometry;
 use crate::simulator;
-use crate::tensor::{Tensor, View2};
+use crate::tensor::{Strip, StripDType, Tensor, View2};
+
+pub mod microkernel;
 
 /// Scores at or below this threshold count as masked when deciding
 /// whether a row saw any live key (½·|NEG_INF| head-room keeps genuine
@@ -62,6 +73,12 @@ pub trait BiasTile: Sync {
     /// storage column, used by benches for the bytes column.
     fn resident_elems(&self) -> usize {
         0
+    }
+
+    /// Bytes of HBM-resident bias state. Defaults to f32 elements;
+    /// quantized factor strips override with their stored width.
+    fn resident_bytes(&self) -> usize {
+        self.resident_elems() * 4
     }
 }
 
@@ -97,9 +114,7 @@ impl BiasTile for DenseTile<'_> {
         for ii in 0..bq {
             let brow = &self.bias.row(q0 + ii)[k0..k0 + bk];
             let srow = &mut scores[ii * bk..(ii + 1) * bk];
-            for (s, &b) in srow.iter_mut().zip(brow) {
-                *s += b;
-            }
+            microkernel::add_assign(brow, srow);
         }
     }
 
@@ -108,54 +123,163 @@ impl BiasTile for DenseTile<'_> {
     }
 }
 
+/// One factor strip as the tile contraction consumes it: a zero-copy
+/// f32 view (fast path) or a reduced-precision [`Strip`] dequantized
+/// tile-locally on the fly.
+#[derive(Clone, Copy, Debug)]
+enum StripSrc<'a> {
+    F32(View2<'a>),
+    Quant(&'a Strip),
+}
+
+impl<'a> StripSrc<'a> {
+    fn rows(&self) -> usize {
+        match self {
+            StripSrc::F32(v) => v.rows,
+            StripSrc::Quant(s) => s.rows(),
+        }
+    }
+
+    fn cols(&self) -> usize {
+        match self {
+            StripSrc::F32(v) => v.cols,
+            StripSrc::Quant(s) => s.cols(),
+        }
+    }
+
+    fn stored_bytes(&self) -> usize {
+        match self {
+            StripSrc::F32(v) => v.rows * v.cols * 4,
+            StripSrc::Quant(s) => s.size_bytes(),
+        }
+    }
+
+    /// Decode rows `[r0, r0 + n)` into `out[..n·cols]`.
+    fn decode_rows(&self, r0: usize, n: usize, out: &mut [f32]) {
+        let c = self.cols();
+        match self {
+            StripSrc::F32(v) => {
+                out[..n * c].copy_from_slice(
+                    v.rows_view(r0, r0 + n).data(),
+                );
+            }
+            StripSrc::Quant(s) => {
+                for (i, row) in
+                    out[..n * c].chunks_exact_mut(c).enumerate()
+                {
+                    s.row_into(r0 + i, row);
+                }
+            }
+        }
+    }
+}
+
+// Tile-local dequantization scratch: one (φ_q block, φ_k block) pair
+// per worker thread, grown on demand and reused across tiles, so the
+// quantized path stays allocation-free in steady state.
+thread_local! {
+    static DEQ_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>)> =
+        std::cell::RefCell::new((Vec::new(), Vec::new()));
+}
+
 /// Factored bias `φ_q φ_kᵀ` contracted tile-locally: the Eq. (3) concat
 /// trick, realized as the extra rank-R tile matmul of Corollary 3.7.
-/// Streams only the `(N + M)·R` strips.
+/// Streams only the `(N + M)·R` strips — at their stored width when the
+/// strips are quantized ([`StripDType`]): reduced-precision strips are
+/// decoded into a thread-local f32 tile right before the contraction,
+/// so the accumulator numerics stay f32.
 #[derive(Clone, Copy, Debug)]
 pub struct FactoredTile<'a> {
-    phi_q: View2<'a>,
-    phi_k: View2<'a>,
+    phi_q: StripSrc<'a>,
+    phi_k: StripSrc<'a>,
 }
 
 impl<'a> FactoredTile<'a> {
     pub fn new(phi_q: &'a Tensor, phi_k: &'a Tensor) -> Self {
         assert_eq!(phi_q.shape()[1], phi_k.shape()[1],
                    "factor rank mismatch");
-        Self {
-            phi_q: phi_q.view2(),
-            phi_k: phi_k.view2(),
-        }
+        Self::from_views(phi_q.view2(), phi_k.view2())
     }
 
     pub fn from_views(phi_q: View2<'a>, phi_k: View2<'a>) -> Self {
         assert_eq!(phi_q.cols, phi_k.cols, "factor rank mismatch");
-        Self { phi_q, phi_k }
+        Self {
+            phi_q: StripSrc::F32(phi_q),
+            phi_k: StripSrc::F32(phi_k),
+        }
+    }
+
+    /// Contract stored strips directly — f32 strips take the zero-copy
+    /// view path, reduced-precision strips the tile-local dequantize
+    /// path.
+    pub fn from_strips(phi_q: &'a Strip, phi_k: &'a Strip) -> Self {
+        assert_eq!(phi_q.cols(), phi_k.cols(), "factor rank mismatch");
+        let src = |s: &'a Strip| match s.as_view2() {
+            Some(v) => StripSrc::F32(v),
+            None => StripSrc::Quant(s),
+        };
+        Self {
+            phi_q: src(phi_q),
+            phi_k: src(phi_k),
+        }
+    }
+
+    /// Contract a decomposition result's strips.
+    pub fn from_factors(f: &'a crate::decompose::Factors) -> Self {
+        Self::from_strips(&f.phi_q, &f.phi_k)
     }
 
     pub fn rank(&self) -> usize {
-        self.phi_q.cols
+        self.phi_q.cols()
+    }
+
+    /// The f32 register-tiled Eq. (3) contraction both paths bottom
+    /// out in.
+    fn contract(phi_q: View2<'_>, phi_k: View2<'_>, q0: usize,
+                k0: usize, bq: usize, bk: usize, scores: &mut [f32]) {
+        for ii in 0..bq {
+            let prow = phi_q.row(q0 + ii);
+            let srow = &mut scores[ii * bk..(ii + 1) * bk];
+            microkernel::row_accum(prow, phi_k, k0, srow);
+        }
     }
 }
 
 impl BiasTile for FactoredTile<'_> {
     fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
                 scores: &mut [f32]) {
-        for ii in 0..bq {
-            let prow = self.phi_q.row(q0 + ii);
-            let srow = &mut scores[ii * bk..(ii + 1) * bk];
-            for (jj, s) in srow.iter_mut().enumerate() {
-                let krow = self.phi_k.row(k0 + jj);
-                let mut acc = 0.0f32;
-                for (a, b) in prow.iter().zip(krow) {
-                    acc += a * b;
-                }
-                *s += acc;
-            }
+        if let (StripSrc::F32(pq), StripSrc::F32(pk)) =
+            (self.phi_q, self.phi_k)
+        {
+            Self::contract(pq, pk, q0, k0, bq, bk, scores);
+            return;
         }
+        let r = self.rank();
+        DEQ_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (qbuf, kbuf) = &mut *scratch;
+            qbuf.resize((bq * r).max(qbuf.len()), 0.0);
+            kbuf.resize((bk * r).max(kbuf.len()), 0.0);
+            self.phi_q.decode_rows(q0, bq, qbuf);
+            self.phi_k.decode_rows(k0, bk, kbuf);
+            Self::contract(
+                View2::new(bq, r, &qbuf[..bq * r]),
+                View2::new(bk, r, &kbuf[..bk * r]),
+                0,
+                0,
+                bq,
+                bk,
+                scores,
+            );
+        });
     }
 
     fn resident_elems(&self) -> usize {
-        (self.phi_q.rows + self.phi_k.rows) * self.phi_q.cols
+        (self.phi_q.rows() + self.phi_k.rows()) * self.phi_q.cols()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        self.phi_q.stored_bytes() + self.phi_k.stored_bytes()
     }
 }
 
@@ -169,11 +293,16 @@ pub struct AlibiTile {
 impl BiasTile for AlibiTile {
     fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
                 scores: &mut [f32]) {
+        // hoist the per-row invariants: the row's bias at jj = 0 is
+        // fixed, and each step right adds exactly `slope` — the k-inner
+        // loop does one fused multiply-add per element instead of
+        // recomputing slope · (base + jj) from scratch
+        let slope = self.slope;
         for ii in 0..bq {
-            let base = k0 as f32 - (q0 + ii) as f32;
+            let row_bias = slope * (k0 as f32 - (q0 + ii) as f32);
             let srow = &mut scores[ii * bk..(ii + 1) * bk];
             for (jj, s) in srow.iter_mut().enumerate() {
-                *s += self.slope * (base + jj as f32);
+                *s += slope.mul_add(jj as f32, row_bias);
             }
         }
     }
@@ -219,9 +348,22 @@ pub fn default_threads() -> usize {
 impl KernelConfig {
     /// Block sizes from the simulator's SRAM model (Appendix A Eq. 10),
     /// so `simulate_fwd`'s HBM accounting and the engine's schedule
-    /// agree on what is loaded per tile.
+    /// agree on what is loaded per tile. Assumes f32 factor strips; use
+    /// [`Self::for_geometry_dtype`] when the strips are quantized.
     pub fn for_geometry(g: &Geometry) -> Self {
-        let w = g.c + g.r; // channel width streamed per query token
+        Self::for_geometry_dtype(g, StripDType::F32)
+    }
+
+    /// Block sizes with the factor strips' *stored* element width
+    /// plumbed into the SRAM fit. q/k/v/o and the softmax accumulators
+    /// stay f32, but the rank-R φ columns stream at
+    /// `strip.size_bytes()` per element — bf16 strips let bigger tiles
+    /// fit the same SRAM (the old fit assumed 4 bytes for everything).
+    pub fn for_geometry_dtype(g: &Geometry, strip: StripDType) -> Self {
+        // strip contribution in f32-equivalent elements (ceil), since
+        // the SRAM model counts 4-byte elements
+        let r_eq = (g.r * strip.size_bytes() + 3) / 4;
+        let w = g.c + r_eq; // channel width streamed per query token
         let strip_w = w + g.c + 2; // q (+φ_q) + o accumulator + (m, l)
         let kv_w = w + g.c; // k (+φ_k) + v per key token
         let (bq, bk) =
@@ -338,36 +480,32 @@ fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
         let diag = prog.causal
             && (j0 + bk - 1) as isize > i0 as isize + off;
         let scores = &mut score_buf[..bq * bk];
-        // s = q kᵀ · scale for this tile
+        // s = q kᵀ · scale for this tile — register-tiled microkernel
+        // (one q row × NR key rows per block, LANES-wide fma inside)
         for ii in 0..bq {
             let qrow = prog.q.row(i0 + ii);
             let srow = &mut scores[ii * bk..(ii + 1) * bk];
-            for (jj, s) in srow.iter_mut().enumerate() {
-                let krow = prog.k.row(j0 + jj);
-                let mut acc = 0.0f32;
-                for (a, b) in qrow.iter().zip(krow) {
-                    acc += a * b;
-                }
-                *s = acc * prog.scale;
-            }
+            microkernel::row_scores(qrow, prog.k, j0, prog.scale, srow);
         }
         prog.bias.add_tile(i0, j0, bq, bk, scores);
         if diag {
+            // per-row mask boundary hoisted out of the inner loop: keys
+            // (j0 + jj) > limit are masked, i.e. the row suffix from
+            // `first` on — one clamp, then a branch-free fill
             for ii in 0..bq {
                 let limit = i0 as isize + ii as isize + off;
+                let first = (limit - j0 as isize + 1)
+                    .clamp(0, bk as isize) as usize;
                 let srow = &mut scores[ii * bk..(ii + 1) * bk];
-                for (jj, s) in srow.iter_mut().enumerate() {
-                    if (j0 + jj) as isize > limit {
-                        *s = NEG_INF;
-                    }
+                for s in &mut srow[first..] {
+                    *s = NEG_INF;
                 }
             }
         }
         // online-softmax accumulator update
         for ii in 0..bq {
             let srow = &scores[ii * bk..(ii + 1) * bk];
-            let blk_max =
-                srow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let blk_max = microkernel::row_max(srow);
             if blk_max <= MASKED {
                 // every key in this tile is masked for this row
                 continue;
@@ -377,9 +515,7 @@ fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
             let orow = &mut out[ii * cv..(ii + 1) * cv];
             if alpha != 1.0 {
                 l_acc[ii] *= alpha;
-                for o in orow.iter_mut() {
-                    *o *= alpha;
-                }
+                microkernel::scale_in_place(alpha, orow);
             }
             let mut l = l_acc[ii];
             for (jj, &sv) in srow.iter().enumerate() {
@@ -388,10 +524,7 @@ fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
                     continue;
                 }
                 l += p;
-                let vrow = prog.v.row(j0 + jj);
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += p * vv;
-                }
+                microkernel::axpy(p, prog.v.row(j0 + jj), orow);
             }
             m_acc[ii] = m_new;
             l_acc[ii] = l;
@@ -402,9 +535,8 @@ fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
     for ii in 0..bq {
         if l_acc[ii] > 0.0 {
             let inv = 1.0 / l_acc[ii];
-            for o in &mut out[ii * cv..(ii + 1) * cv] {
-                *o *= inv;
-            }
+            let orow = &mut out[ii * cv..(ii + 1) * cv];
+            microkernel::scale_in_place(inv, orow);
         }
     }
 }
@@ -701,6 +833,143 @@ mod tests {
         let cfg = KernelConfig::for_geometry(&g);
         assert!(cfg.block_q >= 1 && cfg.block_k >= 1);
         assert!(cfg.block_q <= g.n && cfg.block_k <= g.m);
+    }
+
+    #[test]
+    fn alibi_tile_exact_on_non_dividing_blocks() {
+        // the per-row hoist (row_bias + jj·slope as one fma) must stay
+        // exact for tail tiles whose origin/extent don't divide N, M —
+        // compare add_tile against the closed form at odd offsets
+        let slope = 0.3;
+        let tile = AlibiTile { slope };
+        for (q0, k0, bq, bk) in
+            [(0, 0, 3, 5), (7, 11, 4, 3), (13, 2, 1, 7), (5, 9, 6, 1)]
+        {
+            let mut scores = vec![0.0f32; bq * bk];
+            tile.add_tile(q0, k0, bq, bk, &mut scores);
+            for ii in 0..bq {
+                for jj in 0..bk {
+                    let want =
+                        slope * ((k0 + jj) as f32 - (q0 + ii) as f32);
+                    let got = scores[ii * bk + jj];
+                    assert!(
+                        (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+                        "q0={q0} k0={k0} ii={ii} jj={jj}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+        // and through the full schedule, with blocks that leave tails
+        let (q, k, v) = qkv(19, 21, 8, 20);
+        let alibi = Alibi::new(19, 21, 0.25);
+        let reference = attention(&q, &k, &v, Some(&alibi.dense()),
+                                  &AttnOpts::default());
+        let tiled = attention_tiled(&q, &k, &v,
+                                    &AlibiTile { slope: 0.25 }, false,
+                                    &cfg(7, 6));
+        assert!(tiled.allclose(&reference, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn quantized_factored_tile_tracks_f32_within_tolerance() {
+        use crate::tensor::Strip;
+        let (q, k, v) = qkv(18, 22, 8, 21);
+        let mut rng = Xoshiro256::new(22);
+        let pq = Tensor::randn(&[18, 4], 0.4, &mut rng);
+        let pk = Tensor::randn(&[22, 4], 0.4, &mut rng);
+        let exact = attention_tiled(&q, &k, &v,
+                                    &FactoredTile::new(&pq, &pk), false,
+                                    &cfg(5, 7));
+        // f32 strips take the zero-copy path: bit-identical to tensors
+        let (sq, sk) = (Strip::from_f32(pq.clone()),
+                        Strip::from_f32(pk.clone()));
+        let via_strip = attention_tiled(
+            &q, &k, &v, &FactoredTile::from_strips(&sq, &sk), false,
+            &cfg(5, 7),
+        );
+        assert!(via_strip.allclose(&exact, 0.0, 0.0));
+        // reduced precision dequantizes on the fly; the output error is
+        // bounded by the representation error of the strips
+        for (dtype, tol) in [(StripDType::Bf16, 2e-2),
+                             (StripDType::F16, 2e-3)] {
+            let (bq, bk) = (Strip::quantize(&pq, dtype),
+                            Strip::quantize(&pk, dtype));
+            let tile = FactoredTile::from_strips(&bq, &bk);
+            let out =
+                attention_tiled(&q, &k, &v, &tile, false, &cfg(5, 7));
+            assert!(out.allclose(&exact, tol, tol), "{dtype}");
+            // stored bytes halve; the bias-state accounting must see it
+            assert_eq!(tile.resident_bytes() * 2,
+                       FactoredTile::new(&pq, &pk).resident_bytes(),
+                       "{dtype}");
+        }
+    }
+
+    #[test]
+    fn quantized_tiles_are_tile_boundary_invariant() {
+        // tile-local dequantization must not depend on where tile
+        // boundaries fall: each strip row decodes to the same f32s in
+        // any block, so assembling the bias from small add_tile calls
+        // is bit-identical to one whole-matrix call
+        use crate::tensor::Strip;
+        let (n, m) = (15, 17);
+        let mut rng = Xoshiro256::new(24);
+        let pq = Tensor::randn(&[n, 3], 0.5, &mut rng);
+        let pk = Tensor::randn(&[m, 3], 0.5, &mut rng);
+        let (sq, sk) = (Strip::quantize(&pq, StripDType::Bf16),
+                        Strip::quantize(&pk, StripDType::Bf16));
+        let tile = FactoredTile::from_strips(&sq, &sk);
+        let mut whole = vec![0.0f32; n * m];
+        tile.add_tile(0, 0, n, m, &mut whole);
+        for (bq, bk) in [(1, 1), (4, 6), (7, 5)] {
+            let mut assembled = vec![0.0f32; n * m];
+            let mut q0 = 0;
+            while q0 < n {
+                let h = bq.min(n - q0);
+                let mut k0 = 0;
+                while k0 < m {
+                    let w = bk.min(m - k0);
+                    let mut block = vec![0.0f32; h * w];
+                    tile.add_tile(q0, k0, h, w, &mut block);
+                    for ii in 0..h {
+                        for jj in 0..w {
+                            assembled[(q0 + ii) * m + k0 + jj] =
+                                block[ii * w + jj];
+                        }
+                    }
+                    k0 += w;
+                }
+                q0 += h;
+            }
+            assert_eq!(whole, assembled, "bq={bq} bk={bk}");
+        }
+    }
+
+    #[test]
+    fn for_geometry_dtype_fits_more_rows_at_reduced_width() {
+        let g = Geometry {
+            n: 4096,
+            m: 4096,
+            c: 64,
+            r: 64,
+            sram: 100 * 1024 / 2,
+        };
+        let f32_cfg = KernelConfig::for_geometry_dtype(&g, StripDType::F32);
+        assert_eq!(f32_cfg.block_q,
+                   KernelConfig::for_geometry(&g).block_q,
+                   "f32 dtype fit must equal the legacy fit");
+        for dtype in [StripDType::Bf16, StripDType::F16, StripDType::I8] {
+            let c = KernelConfig::for_geometry_dtype(&g, dtype);
+            assert!(c.block_q >= f32_cfg.block_q,
+                    "{dtype}: narrower strips can't shrink tiles");
+            assert!(c.block_q <= g.n && c.block_k <= g.m);
+        }
+        // at rank 0 the dtype is irrelevant
+        let g0 = Geometry { r: 0, ..g };
+        assert_eq!(
+            KernelConfig::for_geometry_dtype(&g0, StripDType::I8).block_q,
+            KernelConfig::for_geometry(&g0).block_q
+        );
     }
 
     #[test]

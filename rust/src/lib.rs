@@ -2,6 +2,10 @@
 // for the PJRT handle types (documented at the impls). `deny` + local,
 // justified `#[allow(unsafe_code)]` keeps every other module unsafe-free.
 #![deny(unsafe_code)]
+// Explicit SIMD microkernels (kernels::microkernel) opt into nightly
+// portable_simd; the default build stays stable with a bit-identical
+// scalar fallback.
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 
 //! FlashBias: fast computation of attention with bias.
 //!
@@ -35,7 +39,10 @@
 //!
 //! * [`tensor`] / [`linalg`] — host-side numeric substrate (dense f32
 //!   tensors, zero-copy [`tensor::View2`] tile views, Jacobi SVD,
-//!   energy spectra).
+//!   energy spectra). [`tensor::Strip`] stores factor strips at
+//!   reduced precision ([`tensor::StripDType`]: f32 / bf16 / f16 /
+//!   experimental int8 with per-column scales) — the planner's
+//!   `strip_policy` gates quantization on a measured error bound.
 //! * [`bias`] — the paper's bias zoo: generators plus exact
 //!   factorizations (the raw material [`plan::BiasSpec`] wraps).
 //! * [`decompose`] — decomposition mechanisms (SVD / neural / low-rank +
@@ -55,9 +62,16 @@
 //! * [`kernels`] — **the compute spine**: the block-tiled,
 //!   multi-threaded streaming-softmax engine with per-tile
 //!   [`kernels::BiasTile`] providers (dense view / tile-local factor
-//!   contraction / JIT generation) and causal tile classification.
-//!   Host executor, simulator numerics, the `attention` wrappers and
-//!   the coordinator's batched serving path all drive this one engine.
+//!   contraction — dequantizing reduced-precision strips on the fly —
+//!   / JIT generation) and causal tile classification. The inner
+//!   loops are the fixed-width register microkernels of
+//!   [`kernels::microkernel`] (scalar by default; bit-identical
+//!   `std::simd` under the nightly `simd` feature), and
+//!   [`kernels::KernelConfig::for_geometry_dtype`] fits tile sizes to
+//!   SRAM at the strips' stored width. Host executor, simulator
+//!   numerics, the `attention` wrappers and the coordinator's batched
+//!   serving path all drive this one engine; `make bench-check` gates
+//!   its speed against a checked-in baseline.
 //! * [`attention`] — dense reference oracle ([`attention::attention`])
 //!   plus thin engine wrappers ([`attention::mha`],
 //!   [`attention::online_softmax_attention`]).

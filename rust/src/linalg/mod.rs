@@ -277,6 +277,46 @@ pub fn reconstruction_error(bias: &Tensor, pq: &Tensor, pk: &Tensor) -> f32 {
     pq.matmul_t(pk).rel_err(bias)
 }
 
+/// `‖A Bᵀ‖_F` for factor strips `A: (n, r)`, `B: (m, r)` — computed as
+/// `√trace((AᵀA)(BᵀB))` via the two r×r Gram matrices, O((n+m)·r² + r³)
+/// with f64 accumulation, never materializing the n×m product. This is
+/// the cheap exact norm the quantization error bound
+/// ([`crate::decompose::quantize_factors`]) and the planner's dtype
+/// policy are built on.
+pub fn factored_frob_norm(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape()[1], b.shape()[1], "factor rank mismatch");
+    let r = a.shape()[1];
+    let gram = |t: &Tensor| -> Vec<f64> {
+        let rows = t.shape()[0];
+        let mut g = vec![0.0f64; r * r];
+        for i in 0..rows {
+            let row = t.row(i);
+            for p in 0..r {
+                let xp = row[p] as f64;
+                for q in p..r {
+                    g[p * r + q] += xp * row[q] as f64;
+                }
+            }
+        }
+        // mirror the upper triangle
+        for p in 0..r {
+            for q in 0..p {
+                g[p * r + q] = g[q * r + p];
+            }
+        }
+        g
+    };
+    let (ga, gb) = (gram(a), gram(b));
+    // trace(Ga·Gb) = Σ_pq Ga[p,q]·Gb[q,p]; both are symmetric
+    let mut tr = 0.0f64;
+    for p in 0..r {
+        for q in 0..r {
+            tr += ga[p * r + q] * gb[p * r + q];
+        }
+    }
+    tr.max(0.0).sqrt()
+}
+
 /// Best rank-R approximation error predicted by the spectrum
 /// (Eckart–Young): sqrt(1 − energy(R)).
 pub fn eckart_young_error(a: &Tensor, rank: usize) -> f64 {
@@ -478,6 +518,20 @@ mod tests {
                 "rank {r}: randomized {rand_err} vs jacobi {jacobi_err}"
             );
         }
+    }
+
+    #[test]
+    fn factored_frob_norm_matches_materialized_product() {
+        let mut rng = Xoshiro256::new(21);
+        let a = Tensor::randn(&[23, 5], 1.3, &mut rng);
+        let b = Tensor::randn(&[17, 5], 0.7, &mut rng);
+        let dense = a.matmul_t(&b).norm() as f64;
+        let gram = factored_frob_norm(&a, &b);
+        assert!((gram - dense).abs() <= dense * 1e-4,
+                "gram {gram} vs dense {dense}");
+        // degenerate shapes stay exact and finite
+        assert_eq!(factored_frob_norm(&Tensor::zeros(&[4, 2]),
+                                      &Tensor::zeros(&[3, 2])), 0.0);
     }
 
     #[test]

@@ -71,7 +71,7 @@ pub fn plan_bias_tile(plan: &AttentionPlan) -> Box<dyn BiasTile + '_> {
         ExecMode::NoBias => Box::new(NoBias),
         ExecMode::Dense { bias } => Box::new(DenseTile::from_tensor(bias)),
         ExecMode::Factored { factors } => {
-            Box::new(FactoredTile::new(&factors.phi_q, &factors.phi_k))
+            Box::new(FactoredTile::from_factors(factors))
         }
         ExecMode::Jit { generator } => match *generator {
             JitBias::Alibi { slope } => Box::new(AlibiTile { slope }),
@@ -88,8 +88,13 @@ fn execute_multiplicative(plan: &AttentionPlan, q: &Tensor, k: &Tensor,
             Ok(attention::attention_multiplicative(q, k, v, bias))
         }
         ExecMode::Factored { factors } => {
+            // the reference math is dense f32; dequantize reduced-
+            // precision strips up front (multiplicative plans have no
+            // tile-local contraction to amortize the decode into)
+            let phi_q = factors.phi_q.to_tensor();
+            let phi_k = factors.phi_k.to_tensor();
             Ok(attention::attention_multiplicative_factored(
-                q, k, v, &factors.phi_q, &factors.phi_k,
+                q, k, v, &phi_q, &phi_k,
             ))
         }
         ExecMode::NoBias | ExecMode::Jit { .. } => bail!(
@@ -118,7 +123,8 @@ impl Executor for HostExecutor {
             return execute_multiplicative(plan, q, k, v);
         }
         let tile = plan_bias_tile(plan);
-        let cfg = KernelConfig::for_geometry(&plan.geometry);
+        let cfg = KernelConfig::for_geometry_dtype(&plan.geometry,
+                                                   plan.strip_dtype());
         Ok(kernels::attention_tiled(q, k, v, tile.as_ref(), plan.causal,
                                     &cfg))
     }
@@ -291,8 +297,9 @@ impl Executor for PjrtExecutor {
         match &plan.mode {
             ExecMode::Dense { bias } => payloads.push(bias.clone()),
             ExecMode::Factored { factors } => {
-                payloads.push(factors.phi_q.clone());
-                payloads.push(factors.phi_k.clone());
+                // PJRT artifacts take dense f32 strip inputs
+                payloads.push(factors.phi_q.to_tensor());
+                payloads.push(factors.phi_k.to_tensor());
             }
             ExecMode::NoBias | ExecMode::Jit { .. } => {}
         }

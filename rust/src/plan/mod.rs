@@ -52,6 +52,6 @@ pub use exec::{
 };
 pub use planner::{
     AttentionPlan, Decision, ExecMode, JitBias, PlanError, PlanOptions,
-    Planner, SelectorConfig,
+    Planner, SelectorConfig, StripPolicy, BF16_STRIP_TOL, F32_STRIP_TOL,
 };
 pub use spec::BiasSpec;

@@ -37,17 +37,52 @@ use std::sync::Arc;
 
 use crate::bias::ExactBias;
 use crate::decompose::{
-    decompose, uses_randomized_svd, DecomposeError, Factors, NeuralConfig,
-    NeuralDecomposition, RankSelect, Strategy,
+    decompose, quantize_factors, uses_randomized_svd, DecomposeError,
+    Factors, NeuralConfig, NeuralDecomposition, RankSelect, Strategy,
 };
 use crate::factorstore::{Cached, FactorStore, Fingerprint, Fnv64};
 use crate::iomodel::{self, Geometry};
 use crate::linalg;
 use crate::simulator::Algorithm;
-use crate::tensor::Tensor;
+use crate::tensor::{StripDType, Tensor};
 use crate::util::Xoshiro256;
 
 use super::spec::BiasSpec;
+
+/// End-to-end relative bias error the default f32 strips keep (the
+/// repo-wide "factored ≈ dense" property tolerance).
+pub const F32_STRIP_TOL: f32 = 1e-5;
+
+/// Documented end-to-end relative bias error budget for bf16 strips:
+/// truncation error + the measured quantization bound must stay below
+/// this for [`StripPolicy::Auto`] to engage reduced precision. bf16's
+/// half-ulp is 2⁻⁹ ≈ 2e-3, so the triangle-inequality bound of
+/// [`quantize_factors`] lands well inside 1e-2 for well-conditioned
+/// strips and the gate rejects the rest.
+pub const BF16_STRIP_TOL: f32 = 1e-2;
+
+/// How SVD/neural factor strips are stored (dtype policy).
+///
+/// Quantization is gated by the *measured* Eckart–Young-style bound of
+/// [`quantize_factors`] — reduced precision only engages when the
+/// singular-value truncation error plus the quantization bound stays
+/// within the advertised tolerance. Exact closed-form factors (ALiBi,
+/// spatial, cos) are never quantized: they are O((N+M)·R) to
+/// regenerate and exactness is their contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StripPolicy {
+    /// Always keep f32 strips — the exact legacy behavior
+    /// ([`F32_STRIP_TOL`] end to end). The default.
+    F32Only,
+    /// Quantize measured/neural strips to bf16 when the spectrum says
+    /// total error stays within [`BF16_STRIP_TOL`]; keep f32 otherwise.
+    /// Halves store/spill/remote bytes where it engages.
+    Auto,
+    /// Pin a dtype regardless of the spectrum (f16 and the experimental
+    /// i8 are only reachable this way). Non-finite quantizations still
+    /// fall back to f32.
+    Force(StripDType),
+}
 
 /// Policy knobs for the Table 1 decision procedure.
 #[derive(Clone, Copy, Debug)]
@@ -60,6 +95,8 @@ pub struct SelectorConfig {
     pub max_rank_fraction: f64,
     /// Neural decomposition defaults for dynamic biases.
     pub neural: crate::decompose::NeuralConfig,
+    /// Storage dtype policy for SVD/neural factor strips.
+    pub strip_policy: StripPolicy,
 }
 
 impl Default for SelectorConfig {
@@ -68,6 +105,7 @@ impl Default for SelectorConfig {
             energy_target: 0.99,
             max_rank_fraction: 0.35,
             neural: crate::decompose::NeuralConfig::default(),
+            strip_policy: StripPolicy::F32Only,
         }
     }
 }
@@ -230,6 +268,16 @@ impl AttentionPlan {
         }
     }
 
+    /// Stored dtype of the plan's factor strips (f32 for every other
+    /// mode) — what [`crate::kernels::KernelConfig::for_geometry_dtype`]
+    /// fits tiles against.
+    pub fn strip_dtype(&self) -> StripDType {
+        match &self.mode {
+            ExecMode::Factored { factors } => factors.dtype(),
+            _ => StripDType::F32,
+        }
+    }
+
     /// One-line report for CLIs and benches.
     pub fn summary(&self) -> String {
         format!(
@@ -376,12 +424,10 @@ impl Planner {
                 } else {
                     0.0
                 };
-                let factors = Arc::new(Factors {
-                    phi_q,
-                    phi_k,
-                    rel_err,
-                    rank,
-                });
+                // exact closed forms stay f32 — never quantized
+                let factors = Arc::new(Factors::from_tensors(
+                    phi_q, phi_k, rel_err, rank,
+                ));
                 self.emit(
                     ExecMode::Factored { factors },
                     Decision::Exact { rank },
@@ -413,16 +459,16 @@ impl Planner {
                     let phi_k = nd.phi_k(sources_k);
                     let rel_err =
                         linalg::reconstruction_error(bias, &phi_q, &phi_k);
-                    Arc::new(Factors {
-                        phi_q,
-                        phi_k,
-                        rel_err,
-                        rank: cfg.rank,
-                    })
+                    self.apply_strip_policy(Arc::new(
+                        Factors::from_tensors(phi_q, phi_k, rel_err,
+                                              cfg.rank),
+                    ))
                 };
                 let factors = match store {
                     Some(s) => {
-                        let key = neural_key(spec, &cfg);
+                        let key = neural_key(
+                            spec, &cfg, self.config.strip_policy,
+                        );
                         let cached = s.get_or_insert_with(key, || {
                             Cached::Factors(fit())
                         });
@@ -476,7 +522,9 @@ impl Planner {
                 // a pinned rank bypasses the fraction test, so skip the
                 // spectrum scan (itself a full SVD) entirely — and for
                 // large tables `decompose` takes the randomized path
-                Some(rank) => Cached::Factors(svd_at(rank)),
+                Some(rank) => Cached::Factors(
+                    self.apply_strip_policy(svd_at(rank)),
+                ),
                 None => {
                     // one Jacobi SVD serves both the spectrum scan and
                     // the truncation (the cold path used to pay it
@@ -492,12 +540,11 @@ impl Planner {
                         let rel_err = linalg::reconstruction_error(
                             table, &phi_q, &phi_k,
                         );
-                        Cached::Factors(Arc::new(Factors {
-                            phi_q,
-                            phi_k,
-                            rel_err,
-                            rank: measured,
-                        }))
+                        Cached::Factors(self.apply_strip_policy(
+                            Arc::new(Factors::from_tensors(
+                                phi_q, phi_k, rel_err, measured,
+                            )),
+                        ))
                     } else {
                         Cached::Rejected {
                             measured_rank: measured,
@@ -627,6 +674,44 @@ impl Planner {
         })
     }
 
+    /// Apply [`SelectorConfig::strip_policy`] to freshly decomposed
+    /// (always-f32) SVD/neural strips. The Eckart–Young-style gate:
+    /// quantization engages only when the truncation error plus the
+    /// measured quantization bound ([`quantize_factors`]) stays within
+    /// the advertised tolerance, and any non-finite quantization
+    /// (f16 overflow, degenerate scales) falls back to f32.
+    fn apply_strip_policy(&self, factors: Arc<Factors>) -> Arc<Factors> {
+        let quantized_ok = |f: &Factors, tol: f32| {
+            f.rel_err.is_finite()
+                && f.rel_err <= tol
+                && f.phi_q.is_finite()
+                && f.phi_k.is_finite()
+        };
+        match self.config.strip_policy {
+            StripPolicy::F32Only => factors,
+            StripPolicy::Auto => {
+                let (qf, _bound) =
+                    quantize_factors(&factors, StripDType::Bf16);
+                if quantized_ok(&qf, BF16_STRIP_TOL) {
+                    Arc::new(qf)
+                } else {
+                    factors
+                }
+            }
+            StripPolicy::Force(dtype) => {
+                if dtype == StripDType::F32 {
+                    return factors;
+                }
+                let (qf, _bound) = quantize_factors(&factors, dtype);
+                if quantized_ok(&qf, f32::INFINITY) {
+                    Arc::new(qf)
+                } else {
+                    factors
+                }
+            }
+        }
+    }
+
     /// Layer-policy helper (§4.3): given per-layer rank measurements,
     /// return the first layer index from which FlashBias applies — the
     /// paper's "last 8 layers of SwinV2" rule generalized.
@@ -647,15 +732,32 @@ impl Planner {
     }
 }
 
+/// Mix the strip dtype policy into a store key. [`StripPolicy::F32Only`]
+/// writes nothing — legacy (pre-dtype) store files stay addressable —
+/// while any quantizing policy gets its own key space, so strips
+/// quantized under one policy never alias a plan minted under another.
+fn write_strip_policy(h: &mut Fnv64, policy: StripPolicy) {
+    match policy {
+        StripPolicy::F32Only => {}
+        StripPolicy::Auto => h.write_str("strip:auto"),
+        StripPolicy::Force(dtype) => {
+            h.write_str("strip:force");
+            h.write_str(dtype.name());
+        }
+    }
+}
+
 /// Store key for the measured/SVD path: the spec's content fingerprint
 /// mixed with every policy knob that changes the outcome (energy target,
-/// rank fraction, rank override — and, when the randomized range finder
-/// can fire, the sketch seed). Distinct policies never alias.
+/// rank fraction, rank override, strip dtype policy — and, when the
+/// randomized range finder can fire, the sketch seed). Distinct
+/// policies never alias.
 fn svd_key(spec: &BiasSpec, config: &SelectorConfig,
            opts: &PlanOptions) -> Fingerprint {
     let mut h = Fnv64::new();
     h.write_str("svd");
     h.write_u64(spec.fingerprint().as_u64());
+    write_strip_policy(&mut h, config.strip_policy);
     match opts.rank_override {
         Some(r) => {
             // a pinned rank makes the energy/fraction knobs irrelevant
@@ -681,11 +783,14 @@ fn svd_key(spec: &BiasSpec, config: &SelectorConfig,
 }
 
 /// Store key for the neural path: content fingerprint + the full fit
-/// configuration (a different seed or step budget is a different fit).
-fn neural_key(spec: &BiasSpec, cfg: &NeuralConfig) -> Fingerprint {
+/// configuration (a different seed or step budget is a different fit)
+/// + the strip dtype policy.
+fn neural_key(spec: &BiasSpec, cfg: &NeuralConfig,
+              policy: StripPolicy) -> Fingerprint {
     let mut h = Fnv64::new();
     h.write_str("neural");
     h.write_u64(spec.fingerprint().as_u64());
+    write_strip_policy(&mut h, policy);
     h.write_u64(cfg.rank as u64);
     h.write_u64(cfg.hidden as u64);
     h.write_u64(cfg.steps as u64);
@@ -823,6 +928,68 @@ mod tests {
         }
         assert_eq!(store.misses(), 1, "the rank scan must be cached too");
         assert_eq!(store.hits(), 1);
+    }
+
+    #[test]
+    fn auto_policy_quantizes_within_documented_tolerance() {
+        let mut rng = Xoshiro256::new(7);
+        let a = Tensor::randn(&[48, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[48, 4], 1.0, &mut rng);
+        let table = a.matmul_t(&b);
+        let spec = BiasSpec::static_learned(table.clone());
+        let f32_planner = Planner::default();
+        let bf16_planner = Planner::new(SelectorConfig {
+            strip_policy: StripPolicy::Auto,
+            ..SelectorConfig::default()
+        });
+        let opts = PlanOptions::default();
+        let g = geo(48, 48);
+        let pf = f32_planner.plan(&spec, &g, &opts).unwrap();
+        let pb = bf16_planner.plan(&spec, &g, &opts).unwrap();
+        let (ff, fb) = match (&pf.mode, &pb.mode) {
+            (
+                ExecMode::Factored { factors: ff },
+                ExecMode::Factored { factors: fb },
+            ) => (ff, fb),
+            other => panic!("expected factored plans, got {other:?}"),
+        };
+        assert_eq!(pf.strip_dtype(), StripDType::F32);
+        assert_eq!(pb.strip_dtype(), StripDType::Bf16);
+        assert!(fb.rel_err <= BF16_STRIP_TOL,
+                "total error {} over budget", fb.rel_err);
+        // the end-to-end bias error really is within the advertised
+        // tolerance, measured against the dense table
+        let err = fb.reconstruct().rel_err(&table);
+        assert!(err <= BF16_STRIP_TOL, "measured {err}");
+        // and the storage bill halves
+        assert!(pb.bias_storage_bytes * 2 == pf.bias_storage_bytes,
+                "{} vs {}", pb.bias_storage_bytes, pf.bias_storage_bytes);
+    }
+
+    #[test]
+    fn strip_policies_never_alias_in_the_store() {
+        use crate::factorstore::FactorStore;
+        let mut rng = Xoshiro256::new(8);
+        let a = Tensor::randn(&[40, 4], 1.0, &mut rng);
+        let spec = BiasSpec::static_learned(a.matmul_t(&a));
+        let store = FactorStore::unbounded();
+        let opts = PlanOptions {
+            rank_override: Some(4),
+            ..PlanOptions::default()
+        };
+        let g = geo(40, 40);
+        let p1 = Planner::default()
+            .plan_with_store(&spec, &g, &opts, &store)
+            .unwrap();
+        let p2 = Planner::new(SelectorConfig {
+            strip_policy: StripPolicy::Force(StripDType::Bf16),
+            ..SelectorConfig::default()
+        })
+        .plan_with_store(&spec, &g, &opts, &store)
+        .unwrap();
+        assert_eq!(store.misses(), 2, "policies must not share a key");
+        assert_eq!(p1.strip_dtype(), StripDType::F32);
+        assert_eq!(p2.strip_dtype(), StripDType::Bf16);
     }
 
     #[test]

@@ -8,6 +8,12 @@
 
 use std::fmt;
 
+pub mod strip;
+
+pub use strip::{
+    bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Strip, StripDType,
+};
+
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
     shape: Vec<usize>,

@@ -1,0 +1,498 @@
+//! Reduced-precision factor-strip storage.
+//!
+//! Low-rank factor strips are the safest place in the system to
+//! quantize: the Eckart–Young machinery already bounds the bias error,
+//! and a strip element only ever enters the kernel through the f32
+//! accumulator of the Eq. (3) tile contraction. A [`Strip`] is a
+//! 2-D `(rows × cols)` factor matrix stored at a [`StripDType`]:
+//!
+//! * [`StripDType::F32`] — exact, the legacy representation (zero-copy
+//!   view into the kernel).
+//! * [`StripDType::Bf16`] — top 16 bits of the f32 (round to nearest
+//!   even); same dynamic range, ~3 decimal digits. Halves bytes.
+//! * [`StripDType::F16`] — IEEE binary16 (round to nearest even,
+//!   overflow → ±inf, |x| < 2⁻²⁵ flushes to ±0). Halves bytes with
+//!   more mantissa but less range than bf16.
+//! * [`StripDType::I8`] — experimental: symmetric per-column scales
+//!   (`scale[c] = max|col| / 127`). Quarter bytes.
+//!
+//! Quantization is *storage-only*: every consumer decodes back to f32
+//! before arithmetic ([`Strip::row_into`] / [`Strip::to_tensor`]), so
+//! the kernel numerics stay f32 and the error is exactly the
+//! representation error measured by
+//! [`crate::decompose::quantize_factors`].
+
+use super::{Tensor, View2};
+
+/// Element type of a stored factor strip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StripDType {
+    /// Exact f32 (legacy representation).
+    F32,
+    /// bfloat16: f32 with the low 16 mantissa bits dropped.
+    Bf16,
+    /// IEEE binary16.
+    F16,
+    /// Experimental: int8 with symmetric per-column f32 scales.
+    I8,
+}
+
+impl StripDType {
+    /// Stored bytes per element (I8 excludes the per-column scale
+    /// overhead, which [`Strip::size_bytes`] accounts separately).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            StripDType::F32 => 4,
+            StripDType::Bf16 | StripDType::F16 => 2,
+            StripDType::I8 => 1,
+        }
+    }
+
+    /// Canonical lowercase name (used by persistence and CLI flags).
+    pub fn name(self) -> &'static str {
+        match self {
+            StripDType::F32 => "f32",
+            StripDType::Bf16 => "bf16",
+            StripDType::F16 => "f16",
+            StripDType::I8 => "i8",
+        }
+    }
+
+    /// Parse a [`Self::name`] string.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" => Some(StripDType::F32),
+            "bf16" => Some(StripDType::Bf16),
+            "f16" => Some(StripDType::F16),
+            "i8" => Some(StripDType::I8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for StripDType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar conversions (pub: the property tests and persistence use them)
+// ---------------------------------------------------------------------------
+
+/// f32 → bf16 bits, round to nearest even. NaN stays NaN (quieted).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7FFF + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact).
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// f32 → IEEE binary16 bits, round to nearest even. Overflow → ±inf,
+/// |x| < 2⁻²⁵ flushes to ±0, NaN stays NaN (quieted).
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN: keep the top mantissa bits, force quiet on NaN
+        let payload = (man >> 13) as u16 & 0x03FF;
+        let quiet = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | quiet | payload;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if unbiased < -25 {
+        return sign; // underflow → signed zero
+    }
+    let mant = man | 0x0080_0000; // implicit leading 1
+    // normals shift 13; subnormals shift more as the exponent drops
+    let shift = if unbiased >= -14 {
+        13u32
+    } else {
+        (13 + (-14 - unbiased)) as u32
+    };
+    let halfway = 1u32 << (shift - 1);
+    let rem = mant & ((1u32 << shift) - 1);
+    let mut m = mant >> shift;
+    if rem > halfway || (rem == halfway && (m & 1) == 1) {
+        m += 1; // round up (carry may bump into the exponent — correct)
+    }
+    if unbiased >= -14 {
+        // m ∈ [2¹⁰, 2¹¹]; subtracting the implicit bit and adding the
+        // biased exponent lets a carry propagate into the exponent
+        let e = (unbiased + 15) as u32;
+        sign | ((e << 10) + (m - (1 << 10))) as u16
+    } else {
+        // subnormal; a carry to 2¹⁰ is exactly the smallest normal
+        sign | m as u16
+    }
+}
+
+/// IEEE binary16 bits → f32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign_bits = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    match exp {
+        0 => {
+            // ±0 and subnormals: value = man · 2⁻²⁴ (exact in f32)
+            let mag = man as f32 * f32::from_bits(0x3380_0000); // 2⁻²⁴
+            if sign_bits != 0 {
+                -mag
+            } else {
+                f32::from_bits(sign_bits | mag.to_bits())
+            }
+        }
+        0x1F => f32::from_bits(sign_bits | 0x7F80_0000 | (man << 13)),
+        _ => {
+            let e = exp as u32 + 112; // rebias 15 → 127
+            f32::from_bits(sign_bits | (e << 23) | (man << 13))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Strip
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+enum StripData {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    F16(Vec<u16>),
+    I8 {
+        data: Vec<i8>,
+        /// One symmetric scale per column (`cols` entries).
+        scales: Vec<f32>,
+    },
+}
+
+/// A `(rows × cols)` factor matrix at a reduced-precision storage
+/// dtype. Row-major; every accessor decodes to f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Strip {
+    rows: usize,
+    cols: usize,
+    data: StripData,
+}
+
+impl Strip {
+    /// Wrap an exact f32 matrix (no copy, no precision change).
+    pub fn from_f32(t: Tensor) -> Self {
+        assert_eq!(t.rank(), 2, "strips are 2-D");
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        Self {
+            rows,
+            cols,
+            data: StripData::F32(t.into_data()),
+        }
+    }
+
+    /// Quantize an f32 matrix to `dtype`.
+    pub fn quantize(t: &Tensor, dtype: StripDType) -> Self {
+        assert_eq!(t.rank(), 2, "strips are 2-D");
+        let (rows, cols) = (t.shape()[0], t.shape()[1]);
+        let data = match dtype {
+            StripDType::F32 => StripData::F32(t.data().to_vec()),
+            StripDType::Bf16 => StripData::Bf16(
+                t.data().iter().map(|&x| f32_to_bf16(x)).collect(),
+            ),
+            StripDType::F16 => StripData::F16(
+                t.data().iter().map(|&x| f32_to_f16(x)).collect(),
+            ),
+            StripDType::I8 => {
+                let mut scales = vec![0.0f32; cols];
+                for r in 0..rows {
+                    for (c, s) in scales.iter_mut().enumerate() {
+                        *s = s.max(t.data()[r * cols + c].abs());
+                    }
+                }
+                for s in scales.iter_mut() {
+                    *s /= 127.0;
+                }
+                let mut data = Vec::with_capacity(rows * cols);
+                for r in 0..rows {
+                    for (c, &s) in scales.iter().enumerate() {
+                        let x = t.data()[r * cols + c];
+                        let q = if s > 0.0 {
+                            (x / s).round().clamp(-127.0, 127.0) as i8
+                        } else {
+                            0
+                        };
+                        data.push(q);
+                    }
+                }
+                StripData::I8 { data, scales }
+            }
+        };
+        Self { rows, cols, data }
+    }
+
+    /// Rebuild a bf16 strip from raw bits (persistence).
+    pub fn from_bf16_bits(rows: usize, cols: usize,
+                          bits: Vec<u16>) -> Self {
+        assert_eq!(bits.len(), rows * cols, "bf16 strip length");
+        Self {
+            rows,
+            cols,
+            data: StripData::Bf16(bits),
+        }
+    }
+
+    /// Rebuild an f16 strip from raw bits (persistence).
+    pub fn from_f16_bits(rows: usize, cols: usize,
+                         bits: Vec<u16>) -> Self {
+        assert_eq!(bits.len(), rows * cols, "f16 strip length");
+        Self {
+            rows,
+            cols,
+            data: StripData::F16(bits),
+        }
+    }
+
+    /// Rebuild an i8 strip from raw data + per-column scales
+    /// (persistence).
+    pub fn from_i8(rows: usize, cols: usize, data: Vec<i8>,
+                   scales: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "i8 strip length");
+        assert_eq!(scales.len(), cols, "i8 scales length");
+        Self {
+            rows,
+            cols,
+            data: StripData::I8 { data, scales },
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `[rows, cols]` (mirrors `Tensor::shape()` for 2-D).
+    pub fn shape(&self) -> [usize; 2] {
+        [self.rows, self.cols]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn dtype(&self) -> StripDType {
+        match &self.data {
+            StripData::F32(_) => StripDType::F32,
+            StripData::Bf16(_) => StripDType::Bf16,
+            StripData::F16(_) => StripDType::F16,
+            StripData::I8 { .. } => StripDType::I8,
+        }
+    }
+
+    /// Stored payload bytes: `numel · dtype width`, plus the per-column
+    /// scale table for i8. This is what the `FactorStore` byte budget
+    /// and the Thm 3.2 storage accounting see.
+    pub fn size_bytes(&self) -> usize {
+        match &self.data {
+            StripData::F32(d) => d.len() * 4,
+            StripData::Bf16(d) | StripData::F16(d) => d.len() * 2,
+            StripData::I8 { data, scales } => {
+                data.len() + scales.len() * 4
+            }
+        }
+    }
+
+    /// Zero-copy f32 view — `Some` only for [`StripDType::F32`] (the
+    /// kernel's fast path).
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            StripData::F32(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Zero-copy 2-D view — `Some` only for [`StripDType::F32`].
+    pub fn as_view2(&self) -> Option<View2<'_>> {
+        self.as_f32()
+            .map(|d| View2::new(self.rows, self.cols, d))
+    }
+
+    /// Raw 16-bit payload — `Some` for bf16/f16 (persistence).
+    pub fn bits_u16(&self) -> Option<&[u16]> {
+        match &self.data {
+            StripData::Bf16(d) | StripData::F16(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Raw i8 payload + per-column scales (persistence).
+    pub fn i8_parts(&self) -> Option<(&[i8], &[f32])> {
+        match &self.data {
+            StripData::I8 { data, scales } => Some((data, scales)),
+            _ => None,
+        }
+    }
+
+    /// Decode row `i` into `out[..cols]`.
+    pub fn row_into(&self, i: usize, out: &mut [f32]) {
+        let (lo, hi) = (i * self.cols, (i + 1) * self.cols);
+        let out = &mut out[..self.cols];
+        match &self.data {
+            StripData::F32(d) => out.copy_from_slice(&d[lo..hi]),
+            StripData::Bf16(d) => {
+                for (o, &b) in out.iter_mut().zip(&d[lo..hi]) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+            StripData::F16(d) => {
+                for (o, &b) in out.iter_mut().zip(&d[lo..hi]) {
+                    *o = f16_to_f32(b);
+                }
+            }
+            StripData::I8 { data, scales } => {
+                for ((o, &q), &s) in
+                    out.iter_mut().zip(&data[lo..hi]).zip(scales)
+                {
+                    *o = q as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// Decode the whole strip to a dense f32 tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        let mut data = vec![0.0f32; self.numel()];
+        for i in 0..self.rows {
+            self.row_into(i, &mut data[i * self.cols..(i + 1) * self.cols]);
+        }
+        Tensor::new(&[self.rows, self.cols], data)
+    }
+
+    /// Whether every decoded element is finite (persistence guard —
+    /// f16 overflow and quantizing non-finite inputs can produce ±inf).
+    pub fn is_finite(&self) -> bool {
+        match &self.data {
+            StripData::F32(d) => d.iter().all(|x| x.is_finite()),
+            StripData::Bf16(d) => {
+                d.iter().all(|&b| bf16_to_f32(b).is_finite())
+            }
+            StripData::F16(d) => {
+                d.iter().all(|&b| f16_to_f32(b).is_finite())
+            }
+            StripData::I8 { scales, .. } => {
+                scales.iter().all(|s| s.is_finite())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256;
+
+    #[test]
+    fn bf16_round_trip_of_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.5, 0.5, 256.0, 3.0e38, -1.0e-30] {
+            let y = bf16_to_f32(f32_to_bf16(x));
+            let back = bf16_to_f32(f32_to_bf16(y));
+            assert_eq!(y.to_bits(), back.to_bits(), "x={x}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // low half exactly 0x8000 is halfway; ties-to-even keeps the
+        // even bf16 0x3F80
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8000)), 0x3F80);
+        // just above halfway rounds up
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // a tie sitting on an odd bf16 rounds up to the even one
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+    }
+
+    #[test]
+    fn f16_round_trip_of_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -2.0, 0.099975586, 65504.0,
+                  6.1035156e-5, 5.9604645e-8] {
+            let h = f32_to_f16(x);
+            let y = f16_to_f32(h);
+            assert_eq!(f32_to_f16(y), h, "x={x}");
+            let back = f16_to_f32(f32_to_f16(y));
+            assert_eq!(y.to_bits(), back.to_bits(), "x={x}");
+        }
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f16(1.0e6), 0x7C00, "overflow → +inf");
+        assert_eq!(f32_to_f16(-1.0e6), 0xFC00, "overflow → -inf");
+        assert_eq!(f32_to_f16(1.0e-9), 0x0000, "underflow → +0");
+    }
+
+    #[test]
+    fn f16_relative_error_within_half_ulp() {
+        let mut rng = Xoshiro256::new(11);
+        let t = Tensor::randn(&[64, 8], 1.0, &mut rng);
+        for &x in t.data() {
+            let y = f16_to_f32(f32_to_f16(x));
+            // binary16 has 11 significand bits → half-ulp 2⁻¹²
+            assert!((y - x).abs() <= x.abs() * (1.0 / 4096.0) + 1e-7,
+                    "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn strip_round_trip_and_bytes() {
+        let mut rng = Xoshiro256::new(12);
+        let t = Tensor::randn(&[10, 3], 1.0, &mut rng);
+        let f = Strip::from_f32(t.clone());
+        assert_eq!(f.dtype(), StripDType::F32);
+        assert_eq!(f.size_bytes(), 120);
+        assert_eq!(f.to_tensor().data(), t.data());
+        assert_eq!(f.as_f32().map(|d| d.len()), Some(30));
+
+        let b = Strip::quantize(&t, StripDType::Bf16);
+        assert_eq!(b.size_bytes(), 60);
+        assert!(b.as_f32().is_none());
+        assert!(b.to_tensor().allclose(&t, 1e-2, 1e-2));
+
+        let i = Strip::quantize(&t, StripDType::I8);
+        assert_eq!(i.size_bytes(), 30 + 12);
+        assert!(i.to_tensor().allclose(&t, 0.05, 0.05));
+    }
+
+    #[test]
+    fn strip_row_into_matches_to_tensor() {
+        let mut rng = Xoshiro256::new(13);
+        let t = Tensor::randn(&[7, 5], 2.0, &mut rng);
+        for dtype in [StripDType::F32, StripDType::Bf16, StripDType::F16,
+                      StripDType::I8] {
+            let s = Strip::quantize(&t, dtype);
+            let dense = s.to_tensor();
+            let mut row = vec![0.0f32; 5];
+            for r in 0..7 {
+                s.row_into(r, &mut row);
+                assert_eq!(&row[..], dense.row(r), "{dtype} row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn finiteness_guard_catches_f16_overflow() {
+        let t = Tensor::full(&[2, 2], 1.0e6);
+        assert!(!Strip::quantize(&t, StripDType::F16).is_finite());
+        assert!(Strip::quantize(&t, StripDType::Bf16).is_finite());
+        assert!(Strip::quantize(&t, StripDType::I8).is_finite());
+    }
+}

@@ -7,14 +7,15 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use flashbias::bias::swin_relative_bias;
+use flashbias::bias::{pangu_relative_bias, swin_relative_bias};
 use flashbias::decompose::NeuralConfig;
 use flashbias::factorstore::{Cached, FactorStore, Fingerprint};
 use flashbias::iomodel::Geometry;
 use flashbias::plan::{
     BiasSpec, Decision, ExecMode, PlanOptions, Planner, SelectorConfig,
+    StripPolicy,
 };
-use flashbias::tensor::Tensor;
+use flashbias::tensor::{StripDType, Tensor};
 use flashbias::util::Xoshiro256;
 
 const SRAM: usize = 100 * 1024 / 2;
@@ -98,12 +99,9 @@ fn concurrent_get_or_decompose_runs_exactly_once() {
                     let pq = Tensor::randn(&[16, 2], 1.0, &mut rng);
                     let pk = Tensor::randn(&[16, 2], 1.0, &mut rng);
                     Cached::Factors(Arc::new(
-                        flashbias::decompose::Factors {
-                            phi_q: pq,
-                            phi_k: pk,
-                            rel_err: 0.0,
-                            rank: 2,
-                        },
+                        flashbias::decompose::Factors::from_tensors(
+                            pq, pk, 0.0, 2,
+                        ),
                     ))
                 })
             })
@@ -131,12 +129,14 @@ fn lru_eviction_respects_byte_budget() {
     // rank-1 strips on an (n, n) bias cost (n + n)·1·4 bytes
     let entry = |n: usize| {
         let mut rng = Xoshiro256::new(n as u64);
-        Cached::Factors(Arc::new(flashbias::decompose::Factors {
-            phi_q: Tensor::randn(&[n, 1], 1.0, &mut rng),
-            phi_k: Tensor::randn(&[n, 1], 1.0, &mut rng),
-            rel_err: 0.0,
-            rank: 1,
-        }))
+        Cached::Factors(Arc::new(
+            flashbias::decompose::Factors::from_tensors(
+                Tensor::randn(&[n, 1], 1.0, &mut rng),
+                Tensor::randn(&[n, 1], 1.0, &mut rng),
+                0.0,
+                1,
+            ),
+        ))
     };
     // each entry: 32·4 = 128 bytes; budget holds two
     let store = FactorStore::new(300);
@@ -230,8 +230,8 @@ fn budgeted_store_under_pressure_spills_instead_of_redecomposing() {
                 ExecMode::Factored { factors: f0 },
                 ExecMode::Factored { factors: f1 },
             ) => {
-                assert_eq!(f0.phi_q.data(), f1.phi_q.data());
-                assert_eq!(f0.phi_k.data(), f1.phi_k.data());
+                assert_eq!(f0.phi_q, f1.phi_q);
+                assert_eq!(f0.phi_k, f1.phi_k);
             }
             other => panic!("expected factored plans, got {other:?}"),
         }
@@ -278,9 +278,9 @@ fn save_load_plan_roundtrips_identical_factors() {
     match &plan_warm.mode {
         ExecMode::Factored { factors } => {
             assert_eq!(factors.rank, cold.rank);
-            assert_eq!(factors.phi_q.data(), cold.phi_q.data(),
+            assert_eq!(factors.phi_q, cold.phi_q,
                        "φ_q must round-trip exactly");
-            assert_eq!(factors.phi_k.data(), cold.phi_k.data(),
+            assert_eq!(factors.phi_k, cold.phi_k,
                        "φ_k must round-trip exactly");
             assert_eq!(factors.rel_err, cold.rel_err);
         }
@@ -438,4 +438,63 @@ fn coordinator_plan_and_register_shares_the_store() {
     // the coordinator's metrics expose the store counters
     assert!(coord.metrics().summary().contains("store: hits=1"));
     coord.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Reduced-precision strips (ISSUE 7 acceptance)
+// ---------------------------------------------------------------------------
+
+/// ISSUE 7 acceptance: bf16 strips cut the warm-store resident bytes
+/// ≥ 1.9× on a swin + pangu zoo (every entry halves its strip payload,
+/// so the exact ratio is 2.0×).
+#[test]
+fn bf16_strips_shrink_the_warm_zoo_at_least_1_9x() {
+    // swin (8,8) windows → N = 64; pangu (2,4,4) windows → N = 32
+    let mut zoo: Vec<(BiasSpec, Geometry)> = Vec::new();
+    for t in swin_relative_bias((8, 8), 2, 11, 6, 0.02) {
+        zoo.push((BiasSpec::static_learned(t), geo(64, 64)));
+    }
+    for t in pangu_relative_bias((2, 4, 4), 2, 12, 5, 0.02) {
+        zoo.push((BiasSpec::static_learned(t), geo(32, 32)));
+    }
+    // Swin tables at the default energy cut can carry rel_err above the
+    // Auto gate (see plan_api.rs), so pin the dtype: Force(Bf16) with a
+    // fixed rank makes every entry deterministically quantized.
+    let opts = PlanOptions {
+        rank_override: Some(8),
+        ..PlanOptions::default()
+    };
+    let warm = |policy: StripPolicy| -> (FactorStore, StripDType) {
+        let store = FactorStore::unbounded();
+        let planner = Planner::new(SelectorConfig {
+            strip_policy: policy,
+            ..SelectorConfig::default()
+        });
+        let mut dtype = StripDType::F32;
+        for (spec, g) in &zoo {
+            let plan = planner
+                .plan_with_store(spec, g, &opts, &store)
+                .expect("plan");
+            assert!(matches!(plan.mode, ExecMode::Factored { .. }),
+                    "zoo entries must be factored for the bytes to count");
+            dtype = plan.strip_dtype();
+        }
+        assert_eq!(store.misses(), zoo.len() as u64,
+                   "every zoo entry decomposed exactly once");
+        (store, dtype)
+    };
+
+    let (f32_store, f32_dtype) = warm(StripPolicy::F32Only);
+    let (bf_store, bf_dtype) =
+        warm(StripPolicy::Force(StripDType::Bf16));
+    assert_eq!(f32_dtype, StripDType::F32);
+    assert_eq!(bf_dtype, StripDType::Bf16);
+
+    let (full, half) = (f32_store.total_bytes(), bf_store.total_bytes());
+    assert!(half > 0);
+    // ≥ 1.9× in integer math: 10·full ≥ 19·half
+    assert!(10 * full >= 19 * half,
+            "bf16 zoo must be ≥1.9x smaller: f32={full}B bf16={half}B");
+    assert_eq!(full, 2 * half,
+               "bf16 halves every strip payload exactly");
 }

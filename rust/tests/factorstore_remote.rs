@@ -33,12 +33,12 @@ fn loopback_service_smoke() {
     let leader_store = Arc::new(FactorStore::unbounded());
     let store = leader_store.clone();
     let mut rng = Xoshiro256::new(2);
-    let original = Arc::new(flashbias::decompose::Factors {
-        phi_q: Tensor::randn(&[12, 3], 1.0, &mut rng),
-        phi_k: Tensor::randn(&[12, 3], 1.0, &mut rng),
-        rel_err: 0.25,
-        rank: 3,
-    });
+    let original = Arc::new(flashbias::decompose::Factors::from_tensors(
+        Tensor::randn(&[12, 3], 1.0, &mut rng),
+        Tensor::randn(&[12, 3], 1.0, &mut rng),
+        0.25,
+        3,
+    ));
     store.insert(Fingerprint(0xBEEF), Cached::Factors(original.clone()));
     let service =
         FactorService::serve(store, "127.0.0.1:0").expect("serve");
@@ -50,9 +50,9 @@ fn loopback_service_smoke() {
         .expect("entry found");
     let f = fetched.factors().expect("factors entry");
     assert_eq!(f.rank, 3);
-    assert_eq!(f.phi_q.data(), original.phi_q.data(),
+    assert_eq!(f.phi_q, original.phi_q,
                "factors must round-trip the wire exactly");
-    assert_eq!(f.phi_k.data(), original.phi_k.data());
+    assert_eq!(f.phi_k, original.phi_k);
     assert_eq!(f.rel_err, original.rel_err);
 
     assert!(client
@@ -134,9 +134,9 @@ fn two_stores_share_one_factor_service() {
             ExecMode::Factored { factors: f1 },
         ) => {
             assert_eq!(f0.rank, f1.rank);
-            assert_eq!(f0.phi_q.data(), f1.phi_q.data(),
+            assert_eq!(f0.phi_q, f1.phi_q,
                        "shared strips must be bit-identical");
-            assert_eq!(f0.phi_k.data(), f1.phi_k.data());
+            assert_eq!(f0.phi_k, f1.phi_k);
         }
         other => panic!("expected factored plans, got {other:?}"),
     }

@@ -1,0 +1,310 @@
+//! Property tests pinning the microkernel layer to its bit-identity
+//! contract (see `rust/src/kernels/microkernel.rs`).
+//!
+//! Every kernel is compared bit-for-bit against a *portable lane-model
+//! reference* written here in plain scalar Rust: lane `l` of a
+//! [`LANES`]-wide register file accumulates `a[i·LANES+l] ·
+//! b[i·LANES+l]` with `f32::mul_add`, the tail accumulates into one
+//! scalar chain, and the file collapses through the shared
+//! [`microkernel::reduce`] tree. The scalar fallback and the
+//! `--features simd` build both implement exactly this model, so
+//! running this suite under either configuration proves the build
+//! agrees with the contract — and therefore that the two builds agree
+//! with each other.
+//!
+//! Shape edges covered: empty operands, single-lane tails, exact lane
+//! multiples, rank 1, rank larger than a lane block, tile widths off
+//! the [`NR`] register-tile grid, and empty tiles.
+
+use flashbias::kernels::microkernel::{
+    self, add_assign, axpy, dot, dot4, reduce, row_accum, row_max,
+    row_scores, scale_in_place, LANES, NR,
+};
+use flashbias::proplite::{forall, Config};
+use flashbias::tensor::{
+    f32_to_bf16, f32_to_f16, Strip, StripDType, Tensor, View2,
+};
+use flashbias::util::Xoshiro256;
+
+/// The portable lane model: the reference all builds must match
+/// bit-for-bit.
+fn ref_dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0.0f32; LANES];
+    let blocks = n / LANES;
+    for i in 0..blocks {
+        for l in 0..LANES {
+            let o = i * LANES + l;
+            acc[l] = a[o].mul_add(b[o], acc[l]);
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in blocks * LANES..n {
+        tail = a[i].mul_add(b[i], tail);
+    }
+    reduce(acc) + tail
+}
+
+fn randv(rng: &mut Xoshiro256, n: usize, scale: f32) -> Vec<f32> {
+    Tensor::randn(&[n.max(1)], scale, rng).into_data()[..n].to_vec()
+}
+
+/// Lengths that straddle every lane/tail boundary.
+fn edge_lengths() -> Vec<usize> {
+    vec![
+        0,
+        1,
+        2,
+        3,
+        NR,
+        LANES - 1,
+        LANES,
+        LANES + 1,
+        2 * LANES,
+        2 * LANES + 3,
+        67,
+        128,
+    ]
+}
+
+#[test]
+fn dot_matches_the_lane_model_bitwise() {
+    let mut rng = Xoshiro256::new(0xD07);
+    for n in edge_lengths() {
+        for scale in [1.0f32, 1e-4, 1e4] {
+            let a = randv(&mut rng, n, scale);
+            let b = randv(&mut rng, n, scale);
+            let got = dot(&a, &b);
+            let want = ref_dot(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(),
+                       "n={n} scale={scale}: {got} vs {want}");
+        }
+    }
+    // mismatched lengths clamp to the shorter operand
+    let a = randv(&mut rng, 20, 1.0);
+    let b = randv(&mut rng, 13, 1.0);
+    assert_eq!(dot(&a, &b).to_bits(), ref_dot(&a[..13], &b).to_bits());
+    assert_eq!(dot(&[], &b), 0.0);
+}
+
+#[test]
+fn dot4_outputs_are_bitwise_equal_to_four_dots() {
+    let mut rng = Xoshiro256::new(0xD04);
+    for n in edge_lengths() {
+        let a = randv(&mut rng, n, 1.0);
+        let bs: Vec<Vec<f32>> =
+            (0..NR).map(|_| randv(&mut rng, n, 1.0)).collect();
+        let d = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+        for r in 0..NR {
+            assert_eq!(d[r].to_bits(), dot(&a, &bs[r]).to_bits(),
+                       "n={n} r={r}");
+        }
+    }
+}
+
+#[test]
+fn dot4_property_sweep_random_shapes() {
+    forall(
+        Config::default().cases(300).seed(0x5EED),
+        |rng| {
+            let n = rng.next_below(40) as usize;
+            let a = randv(rng, n, 0.7);
+            let bs: Vec<Vec<f32>> =
+                (0..NR).map(|_| randv(rng, n, 0.7)).collect();
+            (a, bs)
+        },
+        |_| Vec::new(),
+        |(a, bs)| {
+            let d = dot4(a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            (0..NR).all(|r| {
+                d[r].to_bits() == ref_dot(a, &bs[r]).to_bits()
+            })
+        },
+    );
+}
+
+#[test]
+fn row_scores_matches_scaled_lane_model() {
+    let mut rng = Xoshiro256::new(0x5C0);
+    // ranks straddle the lane width; widths straddle the NR tile
+    for r in [0usize, 1, 3, LANES, LANES + 1, 19] {
+        for bk in [0usize, 1, NR - 1, NR, NR + 1, 2 * NR + 3] {
+            let rows_n = bk + 5; // j0 offset exercises the row indexing
+            let a = randv(&mut rng, r, 1.0);
+            let data = randv(&mut rng, rows_n * r.max(1), 1.0);
+            let rows = View2::new(rows_n, r, &data[..rows_n * r]);
+            let scale = 0.37f32;
+            let mut out = vec![f32::NAN; bk]; // overwrite semantics
+            row_scores(&a, rows, 5, scale, &mut out);
+            for (j, &got) in out.iter().enumerate() {
+                let want = ref_dot(&a, rows.row(5 + j)) * scale;
+                assert_eq!(got.to_bits(), want.to_bits(),
+                           "r={r} bk={bk} j={j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn row_accum_accumulates_on_the_lane_model() {
+    let mut rng = Xoshiro256::new(0xACC);
+    for r in [1usize, LANES, 19] {
+        for bk in [1usize, NR, 2 * NR + 1] {
+            let a = randv(&mut rng, r, 1.0);
+            let data = randv(&mut rng, bk * r, 1.0);
+            let rows = View2::new(bk, r, &data);
+            let pre = randv(&mut rng, bk, 1.0);
+            let mut out = pre.clone();
+            row_accum(&a, rows, 0, &mut out);
+            for j in 0..bk {
+                let want = pre[j] + ref_dot(&a, rows.row(j));
+                assert_eq!(out[j].to_bits(), want.to_bits(),
+                           "r={r} bk={bk} j={j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn elementwise_kernels_match_scalar_chains_bitwise() {
+    let mut rng = Xoshiro256::new(0xE1E);
+    for n in edge_lengths() {
+        let x = randv(&mut rng, n, 1.0);
+        let base = randv(&mut rng, n, 1.0);
+        let a = 0.731f32;
+
+        let mut y = base.clone();
+        axpy(a, &x, &mut y);
+        for i in 0..n {
+            let want = a.mul_add(x[i], base[i]);
+            assert_eq!(y[i].to_bits(), want.to_bits(), "axpy n={n} i={i}");
+        }
+
+        let mut y = base.clone();
+        scale_in_place(a, &mut y);
+        for i in 0..n {
+            assert_eq!(y[i].to_bits(), (base[i] * a).to_bits(),
+                       "scale n={n} i={i}");
+        }
+
+        let mut y = base.clone();
+        add_assign(&x, &mut y);
+        for i in 0..n {
+            assert_eq!(y[i].to_bits(), (base[i] + x[i]).to_bits(),
+                       "add n={n} i={i}");
+        }
+    }
+    // empty everything is a no-op, not a panic
+    axpy(2.0, &[], &mut []);
+    scale_in_place(2.0, &mut []);
+    add_assign(&[], &mut []);
+    assert_eq!(row_max(&[]), f32::NEG_INFINITY);
+    assert_eq!(row_max(&[3.0, -1.0, 7.5, 2.0]), 7.5);
+}
+
+#[test]
+fn empty_tiles_produce_no_output_and_no_panic() {
+    let a: Vec<f32> = Vec::new();
+    let rows = View2::new(0, 0, &[]);
+    let mut out: Vec<f32> = Vec::new();
+    row_scores(&a, rows, 0, 1.0, &mut out);
+    row_accum(&a, rows, 0, &mut out);
+    assert!(out.is_empty());
+    // rank-0 strips: every dot is the empty sum
+    let rows0 = View2::new(4, 0, &[]);
+    let mut out0 = vec![1.0f32; 4];
+    row_scores(&[], rows0, 0, 2.0, &mut out0);
+    assert_eq!(out0, vec![0.0; 4], "rank 0 scores are exactly zero");
+}
+
+#[test]
+fn microkernel_constants_are_the_documented_tile() {
+    // the register tile the speedup numbers in README were measured at
+    assert_eq!(LANES, 8);
+    assert_eq!(NR, 4);
+    assert_eq!(microkernel::reduce([1.0; LANES]), 8.0);
+}
+
+// ---------------------------------------------------------------------------
+// Quantization round-trip properties (the reduced-precision strips the
+// factored tile dequantizes through these kernels)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantization_is_idempotent_per_dtype() {
+    // decode → re-quantize must be exact: the representable set is
+    // closed under round-trip for every dtype
+    forall(
+        Config::default().cases(100).seed(0x1DE),
+        |rng| {
+            let rows = 1 + rng.next_below(12) as usize;
+            let cols = 1 + rng.next_below(6) as usize;
+            Tensor::randn(&[rows, cols], 1.5, rng)
+        },
+        |_| Vec::new(),
+        |t| {
+            [StripDType::Bf16, StripDType::F16].iter().all(|&d| {
+                let s = Strip::quantize(t, d);
+                let again = Strip::quantize(&s.to_tensor(), d);
+                s == again
+            })
+        },
+    );
+}
+
+#[test]
+fn bf16_and_f16_relative_error_is_half_ulp_bounded() {
+    forall(
+        Config::default().cases(500).seed(0xB16),
+        |rng| Tensor::randn(&[1], 3.0, rng).into_data()[0],
+        |_| Vec::new(),
+        |&x| {
+            let b = Strip::quantize(&Tensor::new(&[1, 1], vec![x]),
+                                    StripDType::Bf16)
+                .to_tensor()
+                .into_data()[0];
+            let h = Strip::quantize(&Tensor::new(&[1, 1], vec![x]),
+                                    StripDType::F16)
+                .to_tensor()
+                .into_data()[0];
+            // bf16: 8 significand bits → half-ulp 2⁻⁹; f16: 11 bits →
+            // half-ulp 2⁻¹² (plus an absolute floor for subnormals)
+            (b - x).abs() <= x.abs() / 512.0 + 1e-38
+                && (h - x).abs() <= x.abs() / 4096.0 + 6e-8
+        },
+    );
+}
+
+#[test]
+fn scalar_encoders_agree_with_strip_quantization() {
+    // the pub scalar conversions (used by persistence) and the bulk
+    // Strip path must be the same function
+    let mut rng = Xoshiro256::new(0xE2C);
+    let t = Tensor::randn(&[9, 4], 2.0, &mut rng);
+    let bf = Strip::quantize(&t, StripDType::Bf16);
+    let hf = Strip::quantize(&t, StripDType::F16);
+    let bf_bits = bf.bits_u16().unwrap();
+    let hf_bits = hf.bits_u16().unwrap();
+    for (i, &x) in t.data().iter().enumerate() {
+        assert_eq!(bf_bits[i], f32_to_bf16(x));
+        assert_eq!(hf_bits[i], f32_to_f16(x));
+    }
+}
+
+#[test]
+fn i8_error_is_bounded_by_half_a_scale_step() {
+    let mut rng = Xoshiro256::new(0x108);
+    let t = Tensor::randn(&[24, 5], 1.0, &mut rng);
+    let s = Strip::quantize(&t, StripDType::I8);
+    let back = s.to_tensor();
+    // per-column symmetric scale: |x − decode(x)| ≤ scale/2, where
+    // scale = max|col| / 127
+    let (_, scales) = s.i8_parts().unwrap();
+    for r in 0..24 {
+        for c in 0..5 {
+            let err = (t.at2(r, c) - back.at2(r, c)).abs();
+            assert!(err <= scales[c] * 0.5 + 1e-7,
+                    "r={r} c={c}: err {err} vs scale {}", scales[c]);
+        }
+    }
+}

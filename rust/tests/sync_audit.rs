@@ -25,12 +25,12 @@ static GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 fn small_factors(seed: u64) -> Cached {
     let mut rng = Xoshiro256::new(seed);
-    Cached::Factors(Arc::new(Factors {
-        phi_q: Tensor::randn(&[16, 2], 1.0, &mut rng),
-        phi_k: Tensor::randn(&[16, 2], 1.0, &mut rng),
-        rel_err: 0.1,
-        rank: 2,
-    }))
+    Cached::Factors(Arc::new(Factors::from_tensors(
+        Tensor::randn(&[16, 2], 1.0, &mut rng),
+        Tensor::randn(&[16, 2], 1.0, &mut rng),
+        0.1,
+        2,
+    )))
 }
 
 /// Every tier of the store plus metrics traffic, concurrently: resident
