@@ -30,6 +30,7 @@ bench:
 bench-json:
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench serving_overhead
+	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench decode_throughput
 	$(CARGO) run --release --bin bench_check -- --report
 
 # Perf-regression gate: re-run the kernel-engine bench and fail if any

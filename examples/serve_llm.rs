@@ -1,28 +1,211 @@
-//! End-to-end driver: a GPT-2-shaped causal + ALiBi LM served through the
-//! FULL system — router → dynamic batcher → worker pool → PJRT-compiled
-//! Pallas kernels — on a realistic mixed-length request stream.
+//! End-to-end serving driver, two acts:
 //!
-//! The plan API decides what is served: `BiasSpec::None` plans to the
-//! `pure` variant (the Δ baseline) and `BiasSpec::alibi` plans to
-//! `factored` (FlashBias); the `dense` variant is the baseline the paper
-//! compares against, executed for the same bias the planner *refused* to
-//! stream densely. The predicted IO gap between those plans is the
-//! quantity Table 3 measures as Δ wall-clock.
+//! 1. **Streaming sessions** (host kernel engine; no artifacts needed):
+//!    three concurrent LM sessions with ragged prefixes served through
+//!    the prefill/decode split — `open_session` → `prefill` (one
+//!    batched O(N·M) pass that fills the session's KV cache) →
+//!    interleaved `step` calls, each an exact 1×M pass over the cache
+//!    with the ALiBi bias generated as an O(1)-IO strip. Steps from
+//!    *different* sessions, prefills, and one-shot traffic share the
+//!    dynamic batcher, so a single worker flush carries a mixed batch
+//!    (`Batch::split_by_kind` → one `decode_steps` call). Session API
+//!    misuse comes back as typed `SessionApiError`s, never a worker
+//!    panic.
 //!
-//!     make artifacts && cargo run --release --example serve_llm
+//! 2. **One-shot variants over PJRT** (requires `make artifacts`;
+//!    skipped gracefully when absent): a GPT-2-shaped causal + ALiBi
+//!    LM on a mixed-length request stream, router → batcher → workers
+//!    → PJRT-compiled Pallas kernels. `BiasSpec::None` plans to `pure`
+//!    (the Δ baseline), `BiasSpec::alibi` to `factored` (FlashBias);
+//!    `dense` is the baseline the paper compares against. The
+//!    predicted IO gap is the quantity Table 3 measures as Δ
+//!    wall-clock.
+//!
+//!     cargo run --release --example serve_llm
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use flashbias::coordinator::{
     BatcherConfig, Coordinator, CoordinatorConfig, RouteKey, Router,
+    SessionApiError,
 };
 use flashbias::iomodel::Geometry;
-use flashbias::plan::{BiasSpec, PjrtExecutor, PlanOptions, Planner};
+use flashbias::plan::{
+    BiasSpec, PjrtExecutor, PlanOptions, Planner, SessionError,
+};
 use flashbias::runtime::{HostValue, Runtime};
+use flashbias::tensor::Tensor;
 use flashbias::util::{human_secs, Xoshiro256};
 
 const REQUESTS: usize = 48;
+
+// ---------------------------------------------------------------------------
+// act 1: streaming decode sessions on the host engine
+// ---------------------------------------------------------------------------
+
+/// Three sessions with ragged prefixes decoding in lockstep, plus a
+/// one-shot request injected mid-stream — all through one coordinator.
+fn streaming_sessions() -> anyhow::Result<()> {
+    const C: usize = 64;
+    const STEPS: usize = 24;
+    let prefixes = [12usize, 40, 96];
+    let geo = Geometry::square(256, C, 0, 100 * 1024 / 2);
+    let planner = Planner::default();
+    let opts = PlanOptions {
+        causal: true,
+        ..PlanOptions::default()
+    };
+
+    let mut coord = Coordinator::new(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: 6,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            queue_depth: 64,
+        },
+    );
+    coord.plan_and_register(
+        "llm",
+        &planner,
+        &BiasSpec::alibi(256, 256, 0.25),
+        &geo,
+        &opts,
+    )?;
+
+    // the session API refuses bad requests with typed errors instead of
+    // panicking a worker mid-stream
+    match coord.open_session("no_such_plan") {
+        Err(SessionApiError::UnknownPlan(name)) => {
+            println!("  refused: open_session({name:?}) — unknown plan")
+        }
+        other => anyhow::bail!("expected UnknownPlan, got {other:?}"),
+    }
+
+    // open + prefill: one batched O(N·M) pass each fills the KV cache
+    let mut rng = Xoshiro256::new(11);
+    let mut sids = Vec::new();
+    let mut prefill_ids = Vec::new();
+    for &p in &prefixes {
+        let sid = coord.open_session("llm")?;
+        let q = Tensor::randn(&[p, C], 1.0, &mut rng);
+        let k = Tensor::randn(&[p, C], 1.0, &mut rng);
+        let v = Tensor::randn(&[p, C], 1.0, &mut rng);
+        prefill_ids.push(coord.prefill(sid, q, k, v)?);
+        sids.push(sid);
+    }
+
+    // decode: round-robin steps, so every flush interleaves sessions;
+    // rid -> (session, step) recovers the stream each response feeds
+    let t0 = Instant::now();
+    let mut expect: HashMap<u64, (usize, usize)> = HashMap::new();
+    let mut want = prefill_ids.len();
+    for t in 0..STEPS {
+        for (s, &sid) in sids.iter().enumerate() {
+            let qr = rng.normal_vec(C, 1.0);
+            let kr = rng.normal_vec(C, 1.0);
+            let vr = rng.normal_vec(C, 1.0);
+            expect.insert(coord.step(sid, &qr, &kr, &vr)?, (s, t));
+            want += 1;
+        }
+        if t == STEPS / 2 {
+            // one-shot traffic rides the same batcher: "prefill with
+            // N > 1 and no session"
+            let q = Tensor::randn(&[32, C], 1.0, &mut rng);
+            let k = Tensor::randn(&[32, C], 1.0, &mut rng);
+            let v = Tensor::randn(&[32, C], 1.0, &mut rng);
+            let inputs = vec![
+                HostValue::F32(q),
+                HostValue::F32(k),
+                HostValue::F32(v),
+            ];
+            coord
+                .try_submit("llm", inputs)
+                .map_err(|e| anyhow::anyhow!("one-shot refused: {e}"))?;
+            want += 1;
+        }
+    }
+    coord.flush_all()?;
+
+    // drain; keep the last decoded "token" (output row) per session
+    let mut last: Vec<Vec<f32>> = vec![Vec::new(); sids.len()];
+    let mut got = 0usize;
+    while got < want {
+        let resp = coord
+            .recv_timeout(Duration::from_secs(30))
+            .ok_or_else(|| anyhow::anyhow!("decode stream stalled"))?;
+        let outputs = resp
+            .outputs
+            .map_err(|e| anyhow::anyhow!("request {} failed: {e}", resp.id))?;
+        if let Some(&(s, t)) = expect.get(&resp.id) {
+            if t == STEPS - 1 {
+                if let Some(tensor) = outputs[0].as_f32() {
+                    last[s] = tensor.data().to_vec();
+                }
+            }
+        }
+        got += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    for (s, &sid) in sids.iter().enumerate() {
+        let handle = coord
+            .session(sid)
+            .ok_or_else(|| anyhow::anyhow!("session {sid} vanished"))?;
+        let st = handle.read();
+        println!(
+            "  session {s}: prefix {:3} + {STEPS} steps -> pos {:3}, \
+             cache {:3} rows ({} B), carry l={:.3}, last out[..3] = \
+             [{:+.3} {:+.3} {:+.3}]",
+            prefixes[s],
+            st.pos(),
+            st.cache().len(),
+            st.cache().resident_bytes(),
+            st.carry().l,
+            last[s][0],
+            last[s][1],
+            last[s][2],
+        );
+    }
+
+    // a malformed step is a typed refusal — the cache is untouched
+    let stub = vec![0.0f32; C];
+    match coord.step(sids[0], &[1.0, 2.0, 3.0], &stub, &stub) {
+        Err(SessionApiError::State(SessionError::ShapeMismatch {
+            what,
+            got,
+            want,
+        })) => println!(
+            "  refused: step with a {got}-wide {what} (want {want}) — \
+             session state untouched"
+        ),
+        other => anyhow::bail!("expected ShapeMismatch, got {other:?}"),
+    }
+
+    let m = coord.metrics();
+    println!(
+        "  {want} responses in {:.2}s | exec p50 {} | batches {} \
+         (mean size {:.1}, mixed prefill+decode)",
+        wall,
+        human_secs(m.exec_stats().p50()),
+        m.batches(),
+        m.mean_batch_size(),
+    );
+    for sid in sids {
+        coord.close_session(sid);
+    }
+    assert_eq!(coord.open_sessions(), 0);
+    coord.shutdown();
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// act 2: one-shot variant serving over PJRT artifacts
+// ---------------------------------------------------------------------------
 
 fn serve_variant(rt: &Arc<Runtime>, variant: &str) -> anyhow::Result<()> {
     let router = Router::from_runtime(rt);
@@ -53,10 +236,18 @@ fn serve_variant(rt: &Arc<Runtime>, variant: &str) -> anyhow::Result<()> {
     let mut exec_total = Duration::ZERO;
     for _ in 0..REQUESTS {
         let want_n = 1 + rng.next_below(max_n as u64) as usize;
-        let (artifact, bucket) = router.route(&key, want_n).unwrap();
+        let (artifact, _bucket) =
+            router.route(&key, want_n).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "router has no gpt2/{variant} bucket for N={want_n} \
+                     (max bucket {max_n})"
+                )
+            })?;
         let mut inputs = rt.example_inputs(artifact)?;
         // randomize the token input (the activation); weights reused
-        let spec = rt.spec(artifact).unwrap();
+        let spec = rt.spec(artifact).ok_or_else(|| {
+            anyhow::anyhow!("routed artifact {artifact} has no spec")
+        })?;
         for &idx in &spec.activation_indices() {
             if let HostValue::I32(tokens, shape) = &inputs[idx] {
                 let fresh: Vec<i32> = (0..tokens.len())
@@ -65,7 +256,6 @@ fn serve_variant(rt: &Arc<Runtime>, variant: &str) -> anyhow::Result<()> {
                 inputs[idx] = HostValue::I32(fresh, shape.clone());
             }
         }
-        let _ = bucket;
         // bounded backpressure retry; responses drained while waiting
         // still count toward completion (and a non-retryable error —
         // unknown artifact, stopped pool — propagates instead of
@@ -141,14 +331,29 @@ fn main() -> anyhow::Result<()> {
         alibi.io_saving()
     );
 
-    let rt = Arc::new(Runtime::open_default()?);
     println!(
-        "serving GPT-2-shaped causal+ALiBi LM ({} requests/variant, \
+        "streaming sessions (host engine): prefill once, then exact \
+         1xM decode steps, continuously batched across sessions"
+    );
+    streaming_sessions()?;
+
+    // variants come from the plans: pure (Δ baseline) and the planner's
+    // pick for ALiBi; `dense` is the paper's comparison baseline
+    let rt = match Runtime::open_default() {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            println!(
+                "\none-shot PJRT serving skipped ({e}); run `make \
+                 artifacts` for the full Table 3 stream"
+            );
+            return Ok(());
+        }
+    };
+    println!(
+        "\nserving GPT-2-shaped causal+ALiBi LM ({} requests/variant, \
          mixed lengths) through router -> batcher -> workers -> PJRT\n",
         REQUESTS
     );
-    // variants come from the plans: pure (Δ baseline) and the planner's
-    // pick for ALiBi; `dense` is the paper's comparison baseline
     let variants = [
         PjrtExecutor::variant(&pure.mode),
         "dense",

@@ -111,7 +111,7 @@ fn main() -> anyhow::Result<()> {
         t.data()
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0
     };

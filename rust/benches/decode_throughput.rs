@@ -1,0 +1,195 @@
+//! Decode-path bench (ISSUE 8 prefill/decode split), two sections,
+//! both written to `BENCH_decode.json`:
+//!
+//! 1. **Per-step bias-strip cost**: one `run_decode_step` over a full
+//!    KV cache at M ∈ {512, 2048, 4096}, with the bias supplied three
+//!    ways — a dense table row (O(M) reads against an O(M²)-resident
+//!    table), factored strips at r = 8 (O(r·M) FMA against O(r·M)
+//!    storage), and JIT ALiBi (zero bias IO). The query position walks
+//!    the table sequentially like a real decode session, so the dense
+//!    path streams a fresh 4·M-byte row from the big table every step
+//!    while the factor strips stay cache-resident; at M ≥ 2048 (table
+//!    ≥ 16 MB) that working-set gap is what the strips win on.
+//!
+//! 2. **Multi-session coordinator throughput**: open S sessions,
+//!    prefill each, drive a round-robin decode schedule through
+//!    `Coordinator::step`, and report steps/sec as S grows — the
+//!    continuous-batching path (`run_batch_decode`) end to end.
+//!
+//! Honors `FLASHBIAS_BENCH_ITERS` (CI smoke runs a single iteration)
+//! and `FLASHBIAS_BENCH_JSON_DIR` for the JSON drop location.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::benchkit::{bench_fn, iters, Table};
+use flashbias::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use flashbias::iomodel::Geometry;
+use flashbias::kernels::{
+    run_decode_step, AlibiTile, BiasTile, DenseTile, FactoredTile,
+    KernelConfig,
+};
+use flashbias::plan::{BiasSpec, PlanOptions, Planner};
+use flashbias::runtime::Runtime;
+use flashbias::tensor::Tensor;
+use flashbias::util::{human_secs, Xoshiro256};
+
+const C: usize = 64;
+const RANK: usize = 8;
+const SRAM: usize = 100 * 1024 / 2;
+
+/// One decode step against a full cache of M keys, with the query
+/// position advancing each call so the dense table is streamed row by
+/// row (a stationary row would sit in L1 and hide the IO).
+fn bench_step_at(out: &mut Table, m: usize, it: usize) {
+    let mut rng = Xoshiro256::new(42 + m as u64);
+    let q = Tensor::randn(&[C], 1.0, &mut rng);
+    let k = Tensor::randn(&[m, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[m, C], 1.0, &mut rng);
+    let cfg = KernelConfig::for_geometry(&Geometry::square(m, C, 0, SRAM));
+    let scale = 1.0 / (C as f32).sqrt();
+
+    // the three ways to supply the same-shaped bias strip
+    let table = Tensor::randn(&[m, m], 0.02, &mut rng);
+    let dense = DenseTile::new(table.view2());
+    let phi_q = Tensor::randn(&[m, RANK], 0.1, &mut rng);
+    let phi_k = Tensor::randn(&[m, RANK], 0.1, &mut rng);
+    let factored = FactoredTile::new(&phi_q, &phi_k);
+    let jit = AlibiTile { slope: 0.0625 };
+
+    let run = |label: &str, tile: &dyn BiasTile| {
+        let mut outbuf = vec![0.0f32; C];
+        let mut i = 0usize;
+        bench_fn(label, 2, it, || {
+            let carry = run_decode_step(
+                q.data(),
+                k.view2(),
+                v.view2(),
+                tile,
+                i,
+                m,
+                false,
+                scale,
+                &cfg,
+                &mut outbuf,
+            );
+            assert!(carry.l > 0.0);
+            i = (i + 1) % m;
+        })
+    };
+    let rows = [
+        run(&format!("M={m} dense row (O(M) over M\u{b2} table)"), &dense),
+        run(&format!("M={m} factored strips r={RANK} (O(r\u{b7}M))"),
+            &factored),
+        run(&format!("M={m} jit alibi (zero bias IO)"), &jit),
+    ];
+    let (d, f, j) = (
+        rows[0].stats.mean(),
+        rows[1].stats.mean(),
+        rows[2].stats.mean(),
+    );
+    println!(
+        "  M={m}: dense {} | factored {} ({:.2}x) | jit {} ({:.2}x)",
+        human_secs(d),
+        human_secs(f),
+        d / f.max(1e-12),
+        human_secs(j),
+        d / j.max(1e-12)
+    );
+    for row in rows {
+        out.row(row);
+    }
+}
+
+/// Multi-session decode throughput through the coordinator: prefill S
+/// sessions, round-robin STEPS decode steps each, drain, close.
+fn bench_sessions(out: &mut Table, sessions: usize, it: usize) {
+    const PREFILL: usize = 16;
+    const STEPS: usize = 32;
+    let n = 256usize;
+    let geo = Geometry::square(n, C, 0, SRAM);
+    let planner = Planner::default();
+    let spec = BiasSpec::alibi(n, n, 0.0625);
+    let opts = PlanOptions { causal: true, ..PlanOptions::default() };
+
+    let mut coord = Coordinator::new(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: sessions.max(4),
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            queue_depth: 256,
+        },
+    );
+    coord
+        .plan_and_register("decode_bench", &planner, &spec, &geo, &opts)
+        .expect("register host plan");
+
+    let mut rng = Xoshiro256::new(7);
+    let qp = Tensor::randn(&[PREFILL, C], 1.0, &mut rng);
+    let kp = Tensor::randn(&[PREFILL, C], 1.0, &mut rng);
+    let vp = Tensor::randn(&[PREFILL, C], 1.0, &mut rng);
+    let row: Vec<f32> = (0..C).map(|j| (j as f32 * 0.01).sin()).collect();
+
+    let total_steps = sessions * STEPS;
+    let label = format!("coordinator decode ({sessions} sessions \u{d7} \
+                         {STEPS} steps)");
+    let bench_row = bench_fn(&label, 1, (it / 4).max(2), || {
+        let ids: Vec<u64> = (0..sessions)
+            .map(|_| {
+                let id = coord.open_session("decode_bench").expect("open");
+                coord
+                    .prefill(id, qp.clone(), kp.clone(), vp.clone())
+                    .expect("prefill");
+                id
+            })
+            .collect();
+        let mut want = sessions; // the prefill responses
+        for _ in 0..STEPS {
+            for &id in &ids {
+                coord.step(id, &row, &row, &row).expect("step");
+                want += 1;
+            }
+        }
+        coord.flush_all().expect("flush");
+        let mut got = 0usize;
+        while got < want {
+            let resp = coord
+                .recv_timeout(Duration::from_secs(30))
+                .expect("response");
+            resp.outputs.expect("decode ok");
+            got += 1;
+        }
+        for id in ids {
+            coord.close_session(id);
+        }
+    });
+    let per_step = bench_row.stats.mean() / total_steps as f64;
+    println!(
+        "  {sessions} session(s): {} per step -> {:.0} steps/sec",
+        human_secs(per_step),
+        1.0 / per_step.max(1e-12)
+    );
+    out.row(bench_row);
+    coord.shutdown();
+}
+
+fn main() {
+    let it = iters(30);
+    let mut out = Table::new(
+        "decode: per-step bias-strip cost + session throughput",
+    );
+    println!("DECODE STEP: bias-strip cost per step (C={C}, r={RANK})");
+    for m in [512usize, 2048, 4096] {
+        bench_step_at(&mut out, m, it);
+    }
+    println!("\nDECODE THROUGHPUT: continuous-batched sessions");
+    for s in [1usize, 4, 8] {
+        bench_sessions(&mut out, s, it);
+    }
+    out.write_json("decode").expect("write BENCH_decode.json");
+}

@@ -2,11 +2,17 @@
 //! batch is full or the oldest request's deadline expires — the standard
 //! latency/throughput knob of serving systems (vLLM-style), applied here
 //! to amortize PJRT dispatch and queue overhead.
+//!
+//! Buckets are keyed by artifact only, not by [`RequestKind`]: one-shot
+//! requests, session prefills and decode steps for the same plan share
+//! a bucket, so a single flush carries a **mixed** batch (continuous
+//! batching). The worker splits it with [`Batch::split_by_kind`] and
+//! runs each side as one batched engine call.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use super::Request;
+use super::{Request, RequestKind};
 
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
@@ -40,6 +46,15 @@ impl Batch {
 
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
+    }
+
+    /// Split a mixed flush into `(prefills, decode_steps)`, preserving
+    /// submission order within each side. The batch's `formed` instant
+    /// applies to both.
+    pub fn split_by_kind(self) -> (Vec<Request>, Vec<Request>) {
+        self.requests
+            .into_iter()
+            .partition(|r| matches!(r.kind, RequestKind::Prefill))
     }
 }
 
@@ -144,6 +159,7 @@ mod tests {
             artifact: artifact.to_string(),
             inputs: vec![],
             enqueued: Instant::now(),
+            kind: RequestKind::Prefill,
         }
     }
 
@@ -153,6 +169,42 @@ mod tests {
             artifact: artifact.to_string(),
             inputs: vec![],
             enqueued,
+            kind: RequestKind::Prefill,
+        }
+    }
+
+    /// A decode-kind request against a real (tiny) session handle.
+    fn decode_req(id: u64, artifact: &str) -> Request {
+        use crate::coordinator::session::SessionHandle;
+        use crate::coordinator::DecodeTicket;
+        use crate::iomodel::Geometry;
+        use crate::plan::{BiasSpec, PlanOptions, Planner, SessionState};
+        use std::sync::Arc;
+
+        let opts = PlanOptions {
+            causal: true,
+            ..PlanOptions::default()
+        };
+        let plan = Planner::default()
+            .plan(&BiasSpec::alibi(8, 8, 0.25),
+                  &Geometry::square(8, 4, 0, 100 * 1024 / 2), &opts)
+            .expect("plan");
+        let state = SessionState::new(Arc::new(plan)).expect("session");
+        let handle = Arc::new(SessionHandle::new(
+            id,
+            artifact.to_string(),
+            state,
+        ));
+        Request {
+            id,
+            artifact: artifact.to_string(),
+            inputs: vec![],
+            enqueued: Instant::now(),
+            kind: RequestKind::Decode(DecodeTicket {
+                session: handle,
+                i: 0,
+                m: 1,
+            }),
         }
     }
 
@@ -217,6 +269,28 @@ mod tests {
             batch.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
             vec![0, 1, 2]
         );
+    }
+
+    #[test]
+    fn mixed_kinds_share_a_bucket_and_split_in_order() {
+        let mut b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+        });
+        assert!(b.push(req(0, "a")).is_none());
+        assert!(b.push(decode_req(1, "a")).is_none());
+        assert!(b.push(decode_req(2, "a")).is_none());
+        let batch = b.push(req(3, "a")).expect("mixed bucket flushes");
+        assert_eq!(batch.len(), 4);
+        let (prefills, decodes) = batch.split_by_kind();
+        assert_eq!(prefills.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![0, 3]);
+        assert_eq!(decodes.iter().map(|r| r.id).collect::<Vec<_>>(),
+                   vec![1, 2]);
+        assert!(decodes.iter().all(|r| matches!(
+            r.kind,
+            RequestKind::Decode(_)
+        )));
     }
 
     #[test]

@@ -15,6 +15,15 @@
 //! * [`metrics`] — latency/throughput counters for every stage,
 //!   including the shared factor store's tier counters (hits, misses,
 //!   evictions, spill hits, remote hits).
+//! * [`session`] — the prefill/decode split: [`Coordinator::open_session`]
+//!   registers a [`SessionHandle`] (KV cache + softmax carry behind a
+//!   named lock); [`Coordinator::prefill`] seeds it through the ordinary
+//!   batched engine path, and each [`Coordinator::step`] appends the new
+//!   K/V row at submit and enqueues a 1×M decode request. Decode steps
+//!   and prefills for the same plan share a batcher bucket, so one flush
+//!   carries a **mixed** batch (continuous batching); the workers run
+//!   all decode steps of a flush as a single
+//!   [`crate::kernels::decode_steps`] call.
 //!
 //! Decomposition-strategy selection is the [`crate::plan::Planner`]
 //! (re-exported here as [`StrategySelector`] for the serving layer);
@@ -28,6 +37,7 @@
 pub mod batcher;
 pub mod metrics;
 pub mod router;
+pub mod session;
 pub mod worker;
 
 use std::collections::HashMap;
@@ -40,13 +50,18 @@ use anyhow::{anyhow, Result};
 
 use crate::factorstore::{FactorService, FactorStore};
 use crate::iomodel::Geometry;
-use crate::plan::{AttentionPlan, BiasSpec, PlanOptions, Planner};
+use crate::plan::{
+    AttentionPlan, BiasSpec, PlanOptions, Planner, SessionError,
+    SessionState,
+};
 use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Tensor;
 use crate::util::sync::RwLock;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
 pub use metrics::Metrics;
 pub use router::{RouteKey, Router};
+pub use session::SessionHandle;
 pub use worker::DispatchError;
 // the serving-layer aliases for the Table 1 policy object (the old
 // `selector` module shim, folded in here)
@@ -131,6 +146,80 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Why a session-API call ([`Coordinator::open_session`] /
+/// [`Coordinator::prefill`] / [`Coordinator::step`]) was refused.
+#[derive(Debug)]
+pub enum SessionApiError {
+    /// `open_session` names no registered host plan (sessions decode on
+    /// the kernel engine; PJRT artifacts have no cache-aware path).
+    UnknownPlan(String),
+    /// No open session with this id.
+    UnknownSession(u64),
+    /// The session state machine refused (wrong shape, exhausted
+    /// context, double prefill, decode-incapable plan…).
+    State(SessionError),
+    /// The worker pool has stopped.
+    Stopped,
+}
+
+impl From<SessionError> for SessionApiError {
+    fn from(e: SessionError) -> Self {
+        SessionApiError::State(e)
+    }
+}
+
+impl std::fmt::Display for SessionApiError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionApiError::UnknownPlan(name) => {
+                write!(f, "no host plan named {name}")
+            }
+            SessionApiError::UnknownSession(id) => {
+                write!(f, "no open session {id}")
+            }
+            SessionApiError::State(e) => write!(f, "session state: {e}"),
+            SessionApiError::Stopped => write!(f, "worker pool stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SessionApiError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            SessionApiError::State(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+/// How a request's payload executes on the worker pool.
+#[derive(Debug)]
+pub enum RequestKind {
+    /// One-shot attention or a session prefill: inputs are `[q, k, v]`
+    /// tensors, stacked into one batched engine call per flush.
+    Prefill,
+    /// One decode position of a live session: inputs are `[q_row]`
+    /// (shape `(C,)`); the cached K/V, bias provider and softmax carry
+    /// live behind the ticket's session handle. All decode steps in a
+    /// flushed batch run as **one** [`crate::kernels::decode_steps`]
+    /// call.
+    Decode(DecodeTicket),
+}
+
+/// Admission snapshot for one decode step, minted at submit time by
+/// [`SessionState::begin_step`] under the session's write lock: by
+/// construction cache rows `[0, m)` are already appended and immutable,
+/// so a worker can execute the step from a read lock at any later time,
+/// in any batch, and produce bit-identical output.
+#[derive(Debug)]
+pub struct DecodeTicket {
+    pub session: Arc<SessionHandle>,
+    /// Absolute query position of this step.
+    pub i: usize,
+    /// Cache length this step attends (keys `[0, m)`).
+    pub m: usize,
+}
+
 /// A unit of work: run `artifact` on `inputs`.
 #[derive(Debug)]
 pub struct Request {
@@ -138,6 +227,7 @@ pub struct Request {
     pub artifact: String,
     pub inputs: Vec<HostValue>,
     pub enqueued: Instant,
+    pub kind: RequestKind,
 }
 
 /// Execution result for one request.
@@ -181,6 +271,10 @@ pub struct Coordinator {
     responses: Receiver<Response>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Open decode sessions; in-flight requests hold their own `Arc`,
+    /// so closing a session never invalidates queued work.
+    sessions: HashMap<u64, Arc<SessionHandle>>,
+    next_session: u64,
 }
 
 impl Coordinator {
@@ -216,6 +310,8 @@ impl Coordinator {
             responses,
             metrics,
             next_id: AtomicU64::new(0),
+            sessions: HashMap::new(),
+            next_session: 0,
         }
     }
 
@@ -279,6 +375,136 @@ impl Coordinator {
         &self.host_plans
     }
 
+    // -----------------------------------------------------------------
+    // Decode sessions (prefill/decode split)
+    // -----------------------------------------------------------------
+
+    /// Open a decode session against a registered host plan. Fails for
+    /// unknown names and for plans without an additive 1×M strip form
+    /// (multiplicative bias — `decode_capable == false`). Returns the
+    /// session id used by [`Self::prefill`] / [`Self::step`] /
+    /// [`Self::close_session`].
+    pub fn open_session(&mut self, plan_name: &str)
+                        -> Result<u64, SessionApiError> {
+        let plan = self.host_plans.get(plan_name).ok_or_else(|| {
+            SessionApiError::UnknownPlan(plan_name.to_string())
+        })?;
+        let state = SessionState::new(plan)?;
+        let id = self.next_session;
+        self.next_session += 1;
+        self.sessions.insert(
+            id,
+            Arc::new(SessionHandle::new(id, plan_name.to_string(),
+                                        state)),
+        );
+        Ok(id)
+    }
+
+    /// Handle of an open session (positions, carry, cache size are
+    /// readable through it).
+    pub fn session(&self, id: u64) -> Option<&Arc<SessionHandle>> {
+        self.sessions.get(&id)
+    }
+
+    /// Number of currently open sessions.
+    pub fn open_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Close a session: new steps for it are refused. The handle rides
+    /// back (and any in-flight requests hold their own `Arc`), so
+    /// queued work still completes.
+    pub fn close_session(&mut self, id: u64)
+                         -> Option<Arc<SessionHandle>> {
+        self.sessions.remove(&id)
+    }
+
+    /// Seed a fresh session with its prompt. The K/V rows are appended
+    /// to the session cache *now* (append-at-submit); the attention
+    /// pass itself is enqueued as an ordinary `[q, k, v]` request that
+    /// batches — and stacks — with one-shot traffic and other prefills.
+    /// Returns the request id; the `(n_p, Cv)` output arrives as that
+    /// id's [`Response`].
+    pub fn prefill(&mut self, session: u64, q: Tensor, k: Tensor,
+                   v: Tensor) -> Result<u64, SessionApiError> {
+        let handle = Arc::clone(
+            self.sessions
+                .get(&session)
+                .ok_or(SessionApiError::UnknownSession(session))?,
+        );
+        handle.write().begin_prefill(&q, &k, &v)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            artifact: handle.artifact().to_string(),
+            inputs: vec![
+                HostValue::F32(q),
+                HostValue::F32(k),
+                HostValue::F32(v),
+            ],
+            enqueued: Instant::now(),
+            kind: RequestKind::Prefill,
+        };
+        self.enqueue_session_request(req)?;
+        Ok(id)
+    }
+
+    /// Submit one decode step: append the new K/V row under the session
+    /// write lock, snapshot the `(i, m)` ticket, and enqueue the query
+    /// row. Steps from many sessions (and prefills) accumulate in the
+    /// same per-plan bucket and flush as one mixed batch; the workers
+    /// execute every decode step of a flush as a single
+    /// [`crate::kernels::decode_steps`] call. Returns the request id;
+    /// the `(Cv,)` output row arrives as that id's [`Response`].
+    pub fn step(&mut self, session: u64, q_row: &[f32], k_row: &[f32],
+                v_row: &[f32]) -> Result<u64, SessionApiError> {
+        let handle = Arc::clone(
+            self.sessions
+                .get(&session)
+                .ok_or(SessionApiError::UnknownSession(session))?,
+        );
+        let c = handle.plan().geometry.c;
+        if q_row.len() != c {
+            return Err(SessionError::ShapeMismatch {
+                what: "q row",
+                got: q_row.len(),
+                want: c,
+            }
+            .into());
+        }
+        let ticket = handle.write().begin_step(k_row, v_row)?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request {
+            id,
+            artifact: handle.artifact().to_string(),
+            inputs: vec![HostValue::F32(Tensor::new(&[c],
+                                                    q_row.to_vec()))],
+            enqueued: Instant::now(),
+            kind: RequestKind::Decode(DecodeTicket {
+                session: handle,
+                i: ticket.i,
+                m: ticket.m,
+            }),
+        };
+        self.enqueue_session_request(req)?;
+        Ok(id)
+    }
+
+    /// Enqueue a request whose session state transition already
+    /// happened at submit. Unlike [`Self::try_submit`] there is no
+    /// backpressure refusal — the append cannot be handed back — so a
+    /// full dispatch queue blocks until the workers drain it.
+    fn enqueue_session_request(&mut self, req: Request)
+                               -> Result<(), SessionApiError> {
+        if let Some(batch) = self.batcher.push(req) {
+            self.pool
+                .dispatch_blocking(batch)
+                .map_err(|_| SessionApiError::Stopped)?;
+        }
+        self.metrics.on_submit();
+        Ok(())
+    }
+
     /// Submit one request; may flush a batch to the workers. Returns
     /// the request id. [`anyhow`]-typed wrapper around
     /// [`Self::try_submit`] (the `Display` of a backpressure refusal
@@ -309,6 +535,7 @@ impl Coordinator {
             artifact: artifact.to_string(),
             inputs,
             enqueued: Instant::now(),
+            kind: RequestKind::Prefill,
         };
         if let Some(batch) = self.batcher.push(req) {
             match self.pool.dispatch(batch) {

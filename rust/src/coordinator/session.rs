@@ -1,0 +1,88 @@
+//! Session registry entries for the continuous-batching decode path.
+//!
+//! A [`SessionHandle`] is one live decode stream as the coordinator
+//! sees it: a stable id, the host-plan artifact name it was opened
+//! against, an immutable copy of the plan (readable with **no** lock),
+//! and the mutable [`SessionState`] (KV cache + softmax carry) behind a
+//! named `util::sync` lock.
+//!
+//! ## Locking discipline
+//!
+//! Appends happen at submit time, under the coordinator's `&mut self`:
+//! [`Coordinator::step`](super::Coordinator::step) write-locks the
+//! session, appends the new K/V row, snapshots the `(i, m)` ticket and
+//! enqueues — so by the time a worker sees the request, rows `[0, m)`
+//! of the cache are immutable. Workers then only ever
+//!
+//! 1. **read-lock** sessions (one guard per distinct session) to view
+//!    cached K/V during the batched `decode_steps` call, and
+//! 2. after dropping *every* read guard, **write-lock** sessions one
+//!    at a time for the monotone carry write-back.
+//!
+//! Never holding a read guard while wanting a write guard is what makes
+//! two workers with overlapping session sets deadlock-free; the
+//! name-based lock audit cannot see this (all sessions share one lock
+//! name), so the discipline is load-bearing — keep it.
+
+use std::sync::Arc;
+
+use crate::plan::{AttentionPlan, SessionState};
+use crate::util::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// One registered decode session (see module docs for the locking
+/// discipline).
+pub struct SessionHandle {
+    id: u64,
+    artifact: String,
+    /// Immutable copy of the session's plan: workers build bias tiles
+    /// and kernel configs from it without touching the state lock.
+    plan: Arc<AttentionPlan>,
+    state: RwLock<SessionState>,
+}
+
+impl SessionHandle {
+    pub fn new(id: u64, artifact: String, state: SessionState) -> Self {
+        let plan = Arc::clone(state.plan());
+        Self {
+            id,
+            artifact,
+            plan,
+            state: RwLock::new("coordinator.session", state),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Host-plan artifact name this session batches under.
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    /// The session's plan — lock-free (it never changes after open).
+    pub fn plan(&self) -> &AttentionPlan {
+        &self.plan
+    }
+
+    /// Read-lock the state: cached K/V views, position, carry.
+    pub fn read(&self) -> RwLockReadGuard<'_, SessionState> {
+        self.state.read_recover()
+    }
+
+    /// Write-lock the state: appends and carry write-backs.
+    pub fn write(&self) -> RwLockWriteGuard<'_, SessionState> {
+        self.state.write_recover()
+    }
+}
+
+impl std::fmt::Debug for SessionHandle {
+    // deliberately does not touch the state lock: Debug-printing a
+    // Request mid-dispatch must never contend with workers
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SessionHandle")
+            .field("id", &self.id)
+            .field("artifact", &self.artifact)
+            .finish_non_exhaustive()
+    }
+}

@@ -12,7 +12,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{Batch, HostPlanRegistry, Metrics, Request, Response};
+use super::session::SessionHandle;
+use super::{
+    Batch, HostPlanRegistry, Metrics, Request, RequestKind, Response,
+};
 use crate::kernels::{self, KernelConfig};
 use crate::plan::{plan_bias_tile, AttentionPlan, Executor, HostExecutor};
 use crate::runtime::{HostValue, Runtime};
@@ -152,12 +155,16 @@ fn run_batch(
 // Host-plan batches: one kernel-engine call per flushed batch
 // ---------------------------------------------------------------------------
 
-/// Payload signature a request stacks under: `(heads, rank, cv)`.
-type StackSig = (usize, usize, usize);
+/// Payload signature a request stacks under:
+/// `(heads, rank, cv, n, m)`. Session prefills may be shorter than the
+/// plan geometry (`n ≤ g.n`, `m ≤ g.m` — the bias's leading rows and
+/// columns still line up with absolute positions `[0, n) × [0, m)`), so
+/// the actual lengths are part of the signature.
+type StackSig = (usize, usize, usize, usize, usize);
 
 /// Validate one host-plan request's payload (`[q, k, v]` f32 tensors of
-/// rank 2 `(N, C)` or rank 3 `(H, N, C)` matching the plan geometry)
-/// and return its stacking signature.
+/// rank 2 `(N, C)` or rank 3 `(H, N, C)`, with `N`/`M` at most the plan
+/// geometry's) and return its stacking signature.
 fn check_engine_req(plan: &AttentionPlan,
                     req: &Request) -> Result<StackSig> {
     let g = &plan.geometry;
@@ -182,16 +189,19 @@ fn check_engine_req(plan: &AttentionPlan,
     }
     let h = if rank == 3 { q.shape()[0] } else { 1 };
     let cv = v.shape()[rank - 1];
-    let q_ok = q.shape()[rank - 2] == g.n && q.shape()[rank - 1] == g.c;
-    let k_ok = k.shape()[rank - 2] == g.m
+    let n = q.shape()[rank - 2];
+    let m = k.shape()[rank - 2];
+    let q_ok =
+        (1..=g.n).contains(&n) && q.shape()[rank - 1] == g.c;
+    let k_ok = (1..=g.m).contains(&m)
         && k.shape()[rank - 1] == g.c
         && (rank == 2 || k.shape()[0] == h);
     let v_ok =
-        v.shape()[rank - 2] == g.m && (rank == 2 || v.shape()[0] == h);
+        v.shape()[rank - 2] == m && (rank == 2 || v.shape()[0] == h);
     if !q_ok || !k_ok || !v_ok {
         bail!(
-            "payload shapes q{:?} k{:?} v{:?} do not match plan \
-             (N={}, M={}, C={})",
+            "payload shapes q{:?} k{:?} v{:?} do not fit plan \
+             (N≤{}, M≤{}, C={})",
             q.shape(),
             k.shape(),
             v.shape(),
@@ -200,10 +210,12 @@ fn check_engine_req(plan: &AttentionPlan,
             g.c
         );
     }
-    Ok((h, rank, cv))
+    Ok((h, rank, cv, n, m))
 }
 
-/// Execute a flushed host-plan batch on the kernel engine: requests are
+/// Execute a flushed host-plan batch on the kernel engine. The batch
+/// may be **mixed** (continuous batching): decode steps split off and
+/// run as one [`kernels::decode_steps`] call; prefills/one-shots are
 /// grouped by stacking signature (almost always one group) and each
 /// group runs as **one** batched `(B, H, N, C)` engine call instead of
 /// request-by-request. The plan's bias is shared by every program
@@ -218,10 +230,19 @@ fn run_batch_engine(
 ) {
     metrics.on_batch(batch.len());
     let formed = batch.formed;
-    // group by signature so mixed rank-2/rank-3 (or mixed-head) traffic
-    // for the same plan still succeeds — each group stacks independently
+    let (prefills, decodes) = batch.split_by_kind();
+    if !decodes.is_empty() {
+        run_batch_decode(decodes, formed, resp_tx, metrics,
+                         engine_threads);
+    }
+    if prefills.is_empty() {
+        return;
+    }
+    // group by signature so mixed rank-2/rank-3 (or mixed-head, mixed-
+    // length) traffic for the same plan still succeeds — each group
+    // stacks independently
     let mut groups: Vec<(StackSig, Vec<Request>)> = Vec::new();
-    for req in batch.requests {
+    for req in prefills {
         match check_engine_req(plan, &req) {
             Ok(sig) => {
                 match groups.iter_mut().find(|(s, _)| *s == sig) {
@@ -263,7 +284,7 @@ fn run_batch_engine(
 /// a single engine call.
 fn run_engine_group(
     plan: &AttentionPlan,
-    (h, rank, cv): StackSig,
+    (h, rank, cv, n, m): StackSig,
     good: Vec<Request>,
     formed: Instant,
     resp_tx: &Sender<Response>,
@@ -273,17 +294,17 @@ fn run_engine_group(
     // flashlint: allow-fn(hot-path-panic) every request in `good` passed check_engine_req, which proved the three inputs exist and are f32
     let g = &plan.geometry;
     let b = good.len();
-    let mut qd = Vec::with_capacity(b * h * g.n * g.c);
-    let mut kd = Vec::with_capacity(b * h * g.m * g.c);
-    let mut vd = Vec::with_capacity(b * h * g.m * cv);
+    let mut qd = Vec::with_capacity(b * h * n * g.c);
+    let mut kd = Vec::with_capacity(b * h * m * g.c);
+    let mut vd = Vec::with_capacity(b * h * m * cv);
     for req in &good {
         qd.extend_from_slice(req.inputs[0].as_f32().expect("f32 q").data());
         kd.extend_from_slice(req.inputs[1].as_f32().expect("f32 k").data());
         vd.extend_from_slice(req.inputs[2].as_f32().expect("f32 v").data());
     }
-    let qt = Tensor::new(&[b, h, g.n, g.c], qd);
-    let kt = Tensor::new(&[b, h, g.m, g.c], kd);
-    let vt = Tensor::new(&[b, h, g.m, cv], vd);
+    let qt = Tensor::new(&[b, h, n, g.c], qd);
+    let kt = Tensor::new(&[b, h, m, g.c], kd);
+    let vt = Tensor::new(&[b, h, m, cv], vd);
     let t0 = Instant::now();
     let tile = plan_bias_tile(plan);
     let cfg = KernelConfig::for_geometry(g).with_threads(engine_threads);
@@ -299,6 +320,162 @@ fn run_engine_group(
             id: req.id,
             artifact: req.artifact,
             outputs: Ok(vec![HostValue::F32(result)]),
+            queue_time,
+            exec_time: per_req,
+        });
+    }
+}
+
+/// Execute every decode step of a flushed batch as **one**
+/// [`kernels::decode_steps`] call — the continuous-batching hot path.
+///
+/// Locking discipline (see `coordinator::session`): acquire one read
+/// guard per distinct session (cache rows `[0, m)` are immutable by
+/// append-at-submit), run the batched kernel, drop **every** read guard,
+/// and only then write-lock sessions one at a time for the monotone
+/// carry write-back. Interleaving reads and writes across workers with
+/// overlapping session sets would deadlock; this ordering cannot.
+fn run_batch_decode(
+    reqs: Vec<Request>,
+    formed: Instant,
+    resp_tx: &Sender<Response>,
+    metrics: &Metrics,
+    engine_threads: usize,
+) {
+    struct Item {
+        id: u64,
+        artifact: String,
+        enqueued: Instant,
+        session: Arc<SessionHandle>,
+        i: usize,
+        m: usize,
+        q: Tensor,
+    }
+    let reject = |id: u64, artifact: String, enqueued: Instant,
+                  err: anyhow::Error| {
+        let queue_time = formed.duration_since(enqueued);
+        metrics.on_complete(queue_time, Duration::ZERO, false);
+        let _ = resp_tx.send(Response {
+            id,
+            artifact,
+            outputs: Err(err),
+            queue_time,
+            exec_time: Duration::ZERO,
+        });
+    };
+    let mut items: Vec<Item> = Vec::with_capacity(reqs.len());
+    for req in reqs {
+        let Request { id, artifact, mut inputs, enqueued, kind } = req;
+        let RequestKind::Decode(ticket) = kind else {
+            // the caller splits by kind; surface a stray prefill as a
+            // failed response rather than a worker panic
+            reject(id, artifact, enqueued,
+                   anyhow!("non-decode request on the decode path"));
+            continue;
+        };
+        let c = ticket.session.plan().geometry.c;
+        let q = match (inputs.len(), inputs.pop()) {
+            (1, Some(HostValue::F32(t))) if t.data().len() == c => t,
+            _ => {
+                reject(id, artifact, enqueued,
+                       anyhow!("decode step wants one f32 q row of \
+                                width {c}"));
+                continue;
+            }
+        };
+        if ticket.m > ticket.session.read().cache().len() {
+            // impossible via Coordinator::step, which appends the K/V
+            // row before minting the ticket
+            reject(id, artifact, enqueued,
+                   anyhow!("decode ticket m={} beyond cached rows",
+                           ticket.m));
+            continue;
+        }
+        items.push(Item {
+            id,
+            artifact,
+            enqueued,
+            session: ticket.session,
+            i: ticket.i,
+            m: ticket.m,
+            q,
+        });
+    }
+    if items.is_empty() {
+        return;
+    }
+    // bias tiles and the kernel config come from the sessions' immutable
+    // plan copies — no state lock needed, and the config depends only on
+    // the plan, so a step's bits never depend on its batch's composition
+    let head = items[0].session.plan();
+    let cfg = KernelConfig::for_geometry_dtype(&head.geometry,
+                                               head.strip_dtype())
+        .with_threads(engine_threads);
+    let tiles: Vec<_> = items
+        .iter()
+        .map(|it| plan_bias_tile(it.session.plan()))
+        .collect();
+    // one read guard per distinct session: re-read-locking a session we
+    // already hold could deadlock std's RwLock if a writer is queued
+    let mut guards = Vec::new();
+    let mut guard_idx = Vec::with_capacity(items.len());
+    for it in &items {
+        let sid = it.session.id();
+        let gi = match guards.iter().position(|(g, _)| *g == sid) {
+            Some(gi) => gi,
+            None => {
+                guards.push((sid, it.session.read()));
+                guards.len() - 1
+            }
+        };
+        guard_idx.push(gi);
+    }
+    let mut outs: Vec<Vec<f32>> = items
+        .iter()
+        .map(|it| vec![0.0f32; it.session.plan().geometry.c])
+        .collect();
+    let mut progs = Vec::with_capacity(items.len());
+    for (((it, tile), gi), out) in items
+        .iter()
+        .zip(&tiles)
+        .zip(&guard_idx)
+        .zip(outs.iter_mut())
+    {
+        let cache = guards[*gi].1.cache();
+        let plan = it.session.plan();
+        progs.push((
+            kernels::DecodeProgram {
+                q: it.q.data(),
+                k: cache.k_prefix(it.m),
+                v: cache.v_prefix(it.m),
+                bias: tile.as_ref(),
+                i: it.i,
+                n: it.i + 1,
+                causal: plan.causal,
+                scale: 1.0 / (plan.geometry.c as f32).sqrt(),
+            },
+            out.as_mut_slice(),
+        ));
+    }
+    let t0 = Instant::now();
+    let carries = kernels::decode_steps(progs, &cfg);
+    let per_req = t0.elapsed() / items.len() as u32;
+    // every read guard must be gone before the first carry write-lock;
+    // the tiles borrow the sessions' plans, so they go too before
+    // `items` is consumed below
+    drop(guards);
+    drop(tiles);
+    for (it, carry) in items.iter().zip(&carries) {
+        it.session.write().record_carry(*carry, it.i + 1);
+    }
+    for (it, out) in items.into_iter().zip(outs) {
+        let queue_time = formed.duration_since(it.enqueued);
+        metrics.on_complete(queue_time, per_req, true);
+        let cv = out.len();
+        let _ = resp_tx.send(Response {
+            id: it.id,
+            artifact: it.artifact,
+            outputs: Ok(vec![HostValue::F32(Tensor::new(&[cv], out))]),
             queue_time,
             exec_time: per_req,
         });

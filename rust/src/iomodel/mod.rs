@@ -137,6 +137,40 @@ pub fn mult_factored_io(g: &Geometry) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// Per-decode-step costs (the prefill/decode split)
+// ---------------------------------------------------------------------------
+
+/// HBM accesses of one incremental-decode step *without* bias, in
+/// elements: the new query row streams the whole cached K/V slab once
+/// (2·M·C) plus reads its own row and writes the output row (2·C).
+/// The N×M framing collapses to 1×M — there is no C²/S tiling term
+/// because a single query row's accumulator state always fits SRAM.
+pub fn decode_step_io(g: &Geometry) -> f64 {
+    (2 * g.m * g.c + 2 * g.c) as f64
+}
+
+/// Decode step reading a dense bias table: adds the O(M) bias row,
+/// *every* step — table rows are distinct per position, so they never
+/// amortize across steps the way factor strips do.
+pub fn decode_step_dense_io(g: &Geometry) -> f64 {
+    decode_step_io(g) + g.m as f64
+}
+
+/// Decode step with the Eq.-3 factored strips: the 1×M bias row is an
+/// O(R·M) contraction of φ_q's row against φ_k. When the `(N + M)·R`
+/// strips fit SRAM they stay resident across steps and the step pays
+/// zero bias HBM traffic; otherwise it streams `R·(M + 1)` strip
+/// elements (φ_k block + φ_q row). JIT biases (ALiBi) are the R = 0
+/// degenerate case of the resident branch.
+pub fn decode_step_factored_io(g: &Geometry) -> f64 {
+    if factored_storage_elems(g.n, g.m, g.r) <= g.sram {
+        decode_step_io(g)
+    } else {
+        decode_step_io(g) + (g.r * (g.m + 1)) as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Memory footprint model (Figure 3 a-b)
 // ---------------------------------------------------------------------------
 
@@ -268,6 +302,44 @@ mod tests {
         let fact_t = training_memory_elems(&g, false);
         assert!(dense_t - dense >= g.n * g.m);
         assert!(fact_t - fact < g.n * g.m / 10);
+    }
+
+    #[test]
+    fn decode_step_costs_order_factored_below_dense() {
+        // low rank, long context: strips resident or cheap; dense table
+        // rows never amortize
+        for m in [2048usize, 8192, 65536] {
+            let g = Geometry {
+                n: m,
+                m,
+                c: 64,
+                r: 8,
+                sram: 100 * 1024 / 2,
+            };
+            assert!(decode_step_factored_io(&g) < decode_step_dense_io(&g));
+            assert!(decode_step_io(&g) <= decode_step_factored_io(&g));
+        }
+        // resident branch: strips within SRAM pay zero bias traffic
+        let small = Geometry {
+            n: 128,
+            m: 128,
+            c: 64,
+            r: 8,
+            sram: 100 * 1024 / 2,
+        };
+        assert_eq!(decode_step_factored_io(&small), decode_step_io(&small));
+        // spilled branch: huge strips stream R·(M+1)
+        let big = Geometry {
+            n: 65536,
+            m: 65536,
+            c: 64,
+            r: 64,
+            sram: 4 * 1024,
+        };
+        assert_eq!(
+            decode_step_factored_io(&big),
+            decode_step_io(&big) + (64 * 65537) as f64
+        );
     }
 
     #[test]

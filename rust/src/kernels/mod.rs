@@ -68,6 +68,26 @@ pub trait BiasTile: Sync {
     fn add_tile(&self, q0: usize, k0: usize, bq: usize, bk: usize,
                 scores: &mut [f32]);
 
+    /// Accumulate the 1×`bk` bias strip for the single query position
+    /// `qi` against keys `[k0, k0 + scores.len())` into `scores` — the
+    /// decode-step analogue of [`Self::add_tile`]. The default
+    /// delegates to `add_tile` with `bq = 1`; providers override it to
+    /// drop the row loop (dense: one row `add_assign`; factored: one
+    /// O(rank·bk) contraction; ALiBi: closed form). Overrides must
+    /// produce bit-identical values to the `bq = 1` tile path — the
+    /// decode/prefill exactness contract depends on it.
+    fn add_row(&self, qi: usize, k0: usize, scores: &mut [f32]) {
+        self.add_tile(qi, k0, 1, scores.len(), scores);
+    }
+
+    /// Overwrite `out` with the bias row for query position `qi`
+    /// against keys `[0, out.len())` — the materialized 1×M strip, for
+    /// callers that want the row itself rather than a score update.
+    fn bias_row_into(&self, qi: usize, out: &mut [f32]) {
+        out.fill(0.0);
+        self.add_row(qi, 0, out);
+    }
+
     /// Elements of HBM-resident bias state this provider streams
     /// (dense table or factor strips; 0 for JIT/no-bias) — the Thm 3.2
     /// storage column, used by benches for the bytes column.
@@ -116,6 +136,17 @@ impl BiasTile for DenseTile<'_> {
             let srow = &mut scores[ii * bk..(ii + 1) * bk];
             microkernel::add_assign(brow, srow);
         }
+    }
+
+    fn add_row(&self, qi: usize, k0: usize, scores: &mut [f32]) {
+        let bk = scores.len();
+        microkernel::add_assign(&self.bias.row(qi)[k0..k0 + bk], scores);
+    }
+
+    fn bias_row_into(&self, qi: usize, out: &mut [f32]) {
+        // the table may be wider than the current cache; copy the
+        // visible prefix of the row
+        out.copy_from_slice(&self.bias.row(qi)[..out.len()]);
     }
 
     fn resident_elems(&self) -> usize {
@@ -274,6 +305,33 @@ impl BiasTile for FactoredTile<'_> {
         });
     }
 
+    fn add_row(&self, qi: usize, k0: usize, scores: &mut [f32]) {
+        let bk = scores.len();
+        if let (StripSrc::F32(pq), StripSrc::F32(pk)) =
+            (self.phi_q, self.phi_k)
+        {
+            // the O(rank·bk) Eq. (3) strip contraction: one φ_q row
+            // against the φ_k block — no N×M row is ever materialized
+            microkernel::row_accum(pq.row(qi), pk, k0, scores);
+            return;
+        }
+        let r = self.rank();
+        DEQ_SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            let (qbuf, kbuf) = &mut *scratch;
+            qbuf.resize(r.max(qbuf.len()), 0.0);
+            kbuf.resize((bk * r).max(kbuf.len()), 0.0);
+            self.phi_q.decode_rows(qi, 1, qbuf);
+            self.phi_k.decode_rows(k0, bk, kbuf);
+            microkernel::row_accum(
+                &qbuf[..r],
+                View2::new(bk, r, &kbuf[..bk * r]),
+                0,
+                scores,
+            );
+        });
+    }
+
     fn resident_elems(&self) -> usize {
         (self.phi_q.rows() + self.phi_k.rows()) * self.phi_q.cols()
     }
@@ -304,6 +362,16 @@ impl BiasTile for AlibiTile {
             for (jj, s) in srow.iter_mut().enumerate() {
                 *s += slope.mul_add(jj as f32, row_bias);
             }
+        }
+    }
+
+    fn add_row(&self, qi: usize, k0: usize, scores: &mut [f32]) {
+        // same hoisted-fma form as the tile path, bq = 1: bit-identical
+        // values, zero bias IO per step
+        let slope = self.slope;
+        let row_bias = slope * (k0 as f32 - qi as f32);
+        for (jj, s) in scores.iter_mut().enumerate() {
+            *s += slope.mul_add(jj as f32, row_bias);
         }
     }
 }
@@ -539,6 +607,181 @@ fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
             microkernel::scale_in_place(inv, orow);
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Decode path: single-query attention against a cached K/V slab
+// ---------------------------------------------------------------------------
+
+/// Streaming-softmax state a decode step finishes with: the running
+/// max and denominator of the online recurrence over all visible keys.
+/// The step itself is *exact* — `(m, l)` ran to completion over the 1×M
+/// strip before the output was normalized — so the carry is a session
+/// diagnostic (and the fully-masked signal: `l == 0.0`), not an
+/// approximation to be corrected later.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecodeCarry {
+    /// Running max over all visible (bias-added, scaled) scores.
+    pub m: f32,
+    /// Softmax denominator; `0.0` iff every key was masked.
+    pub l: f32,
+}
+
+impl DecodeCarry {
+    /// Carry before any key has been seen.
+    pub fn fresh() -> Self {
+        Self {
+            m: NEG_INF,
+            l: 0.0,
+        }
+    }
+}
+
+impl Default for DecodeCarry {
+    fn default() -> Self {
+        Self::fresh()
+    }
+}
+
+// Per-thread 1×block_k score strip, reused across decode steps so the
+// per-step hot path is allocation-free in steady state.
+thread_local! {
+    static DECODE_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// One decode step: attend query row `q` (length C) at absolute
+/// position `i` of a logical `n`-query problem against cached keys
+/// `k: (M, C)` / values `v: (M, Cv)`, writing the normalized output
+/// row into `out` (length Cv).
+///
+/// This is `run_query_block` specialized to `bq = 1`: identical key
+/// tiling (`cfg.block_k`), identical microkernel calls
+/// (`row_scores` → [`BiasTile::add_row`] → mask → online update), and
+/// the same decoder alignment `off = M − n`, so at equal `block_k` a
+/// decode step is *bit-identical* to row `i` of the one-shot prefill —
+/// the one-shot path is simply "prefill with N > 1 and no session".
+/// For a live session the caller passes `n = i + 1` (the new position
+/// sees the whole cache, ragged cross-attention prefixes included).
+#[allow(clippy::too_many_arguments)]
+pub fn run_decode_step(q: &[f32], k: View2<'_>, v: View2<'_>,
+                       bias: &dyn BiasTile, i: usize, n: usize,
+                       causal: bool, scale: f32, cfg: &KernelConfig,
+                       out: &mut [f32]) -> DecodeCarry {
+    let m = k.rows;
+    let block_k = cfg.block_k.max(1);
+    // decoder alignment: key j is visible iff j ≤ i + (m − n)
+    let off = m as isize - n as isize;
+    let limit = i as isize + off;
+    let mut carry = DecodeCarry::fresh();
+    out.fill(0.0);
+    DECODE_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < block_k {
+            buf.resize(block_k, 0.0);
+        }
+        let mut j0 = 0usize;
+        while j0 < m {
+            let bk = block_k.min(m - j0);
+            if causal && j0 as isize > limit {
+                // this tile (and every later one) is masked future
+                break;
+            }
+            let diag = causal && (j0 + bk - 1) as isize > limit;
+            let scores = &mut buf[..bk];
+            microkernel::row_scores(q, k, j0, scale, scores);
+            bias.add_row(i, j0, scores);
+            if diag {
+                let first = (limit - j0 as isize + 1)
+                    .clamp(0, bk as isize) as usize;
+                for s in &mut scores[first..] {
+                    *s = NEG_INF;
+                }
+            }
+            let blk_max = microkernel::row_max(scores);
+            if blk_max > MASKED {
+                let m_new = carry.m.max(blk_max);
+                let alpha = (carry.m - m_new).exp();
+                if alpha != 1.0 {
+                    carry.l *= alpha;
+                    microkernel::scale_in_place(alpha, out);
+                }
+                let mut l = carry.l;
+                for (jj, &sv) in scores.iter().enumerate() {
+                    let p = (sv - m_new).exp();
+                    if p == 0.0 {
+                        continue;
+                    }
+                    l += p;
+                    microkernel::axpy(p, v.row(j0 + jj), out);
+                }
+                carry.m = m_new;
+                carry.l = l;
+            }
+            j0 += bk;
+        }
+    });
+    // normalize; a fully-masked step stays exactly zero
+    if carry.l > 0.0 {
+        microkernel::scale_in_place(1.0 / carry.l, out);
+    }
+    carry
+}
+
+/// One decode step in a batched flush: borrowed query row, cached K/V
+/// views, the session plan's bias provider, and the step's position
+/// snapshot. See [`run_decode_step`] for the semantics of `i`/`n`.
+pub struct DecodeProgram<'a> {
+    pub q: &'a [f32],
+    pub k: View2<'a>,
+    pub v: View2<'a>,
+    pub bias: &'a dyn BiasTile,
+    pub i: usize,
+    pub n: usize,
+    pub causal: bool,
+    pub scale: f32,
+}
+
+/// Execute a batch of decode steps data-parallel on a scoped thread
+/// pool — the continuous-batching engine call that advances many
+/// sessions at once. Each step owns a disjoint output slice and carry
+/// slot, so the results (and the returned carries, in input order) are
+/// independent of the thread count and of how the batcher interleaved
+/// the steps.
+pub fn decode_steps<'a>(progs: Vec<(DecodeProgram<'a>, &'a mut [f32])>,
+                        cfg: &KernelConfig) -> Vec<DecodeCarry> {
+    let mut carries = vec![DecodeCarry::fresh(); progs.len()];
+    let threads = cfg.threads.max(1).min(progs.len().max(1));
+    if threads <= 1 {
+        for ((prog, out), c) in progs.into_iter().zip(carries.iter_mut())
+        {
+            *c = run_decode_step(prog.q, prog.k, prog.v, prog.bias,
+                                 prog.i, prog.n, prog.causal,
+                                 prog.scale, cfg, out);
+        }
+        return carries;
+    }
+    let mut queues: Vec<
+        Vec<((DecodeProgram<'a>, &'a mut [f32]), &mut DecodeCarry)>,
+    > = (0..threads).map(|_| Vec::new()).collect();
+    for (idx, item) in
+        progs.into_iter().zip(carries.iter_mut()).enumerate()
+    {
+        queues[idx % threads].push(item);
+    }
+    std::thread::scope(|s| {
+        for queue in queues {
+            s.spawn(move || {
+                for ((prog, out), c) in queue {
+                    *c = run_decode_step(prog.q, prog.k, prog.v,
+                                         prog.bias, prog.i, prog.n,
+                                         prog.causal, prog.scale, cfg,
+                                         out);
+                }
+            });
+        }
+    });
+    carries
 }
 
 // ---------------------------------------------------------------------------
@@ -982,5 +1225,136 @@ mod tests {
         assert_eq!(FactoredTile::new(&pq, &pk).resident_elems(), 26);
         assert_eq!(AlibiTile { slope: 0.5 }.resident_elems(), 0);
         assert_eq!(NoBias.resident_elems(), 0);
+    }
+
+    /// Every provider's `add_row` override must agree bit-for-bit with
+    /// the default `bq = 1` `add_tile` path — the decode/prefill
+    /// exactness contract.
+    #[test]
+    fn add_row_matches_single_row_add_tile() {
+        let mut rng = Xoshiro256::new(13);
+        let n = 9;
+        let m = 21;
+        let bias = Tensor::randn(&[n, m], 1.0, &mut rng);
+        let pq = Tensor::randn(&[n, 3], 0.5, &mut rng);
+        let pk = Tensor::randn(&[m, 3], 0.5, &mut rng);
+        let (sq, sk) = (Strip::quantize(&pq, StripDType::Bf16),
+                        Strip::quantize(&pk, StripDType::Bf16));
+        let dense = DenseTile::from_tensor(&bias);
+        let fact = FactoredTile::new(&pq, &pk);
+        let quant = FactoredTile::from_strips(&sq, &sk);
+        let alibi = AlibiTile { slope: 0.3 };
+        let providers: [&dyn BiasTile; 5] =
+            [&NoBias, &dense, &fact, &quant, &alibi];
+        for tile in providers {
+            for qi in 0..n {
+                for (k0, bk) in [(0, m), (0, 5), (4, 7), (m - 1, 1)] {
+                    let mut via_row = vec![0.5f32; bk];
+                    let mut via_tile = via_row.clone();
+                    tile.add_row(qi, k0, &mut via_row);
+                    tile.add_tile(qi, k0, 1, bk, &mut via_tile);
+                    assert_eq!(via_row, via_tile,
+                               "qi={qi} k0={k0} bk={bk}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bias_row_into_overwrites_with_the_strip() {
+        let mut rng = Xoshiro256::new(14);
+        let bias = Tensor::randn(&[4, 12], 1.0, &mut rng);
+        let dense = DenseTile::from_tensor(&bias);
+        // shorter than the table: visible prefix only (growing cache)
+        let mut row = vec![7.0f32; 8];
+        dense.bias_row_into(2, &mut row);
+        assert_eq!(row, bias.view2().row(2)[..8].to_vec());
+        let mut none = vec![7.0f32; 8];
+        NoBias.bias_row_into(0, &mut none);
+        assert!(none.iter().all(|&x| x == 0.0));
+    }
+
+    /// A decode step at position i must be bit-identical to row i of
+    /// the one-shot tiled pass at the same block_k (single thread so
+    /// the prefill row is computed with the same tile partition).
+    #[test]
+    fn decode_step_is_bitwise_row_of_prefill() {
+        let (q, k, v) = qkv(12, 18, 8, 15);
+        let mut rng = Xoshiro256::new(16);
+        let bias = Tensor::randn(&[12, 18], 1.0, &mut rng);
+        let tile = DenseTile::from_tensor(&bias);
+        let scale = 1.0 / (8.0f32).sqrt();
+        for causal in [false, true] {
+            for bk in [1, 5, 18, 64] {
+                let c = cfg(4, bk).with_threads(1);
+                let full = attention_tiled(&q, &k, &v, &tile, causal, &c);
+                for i in 0..12 {
+                    let mut out = vec![0.0f32; 8];
+                    run_decode_step(q.view2().row(i), k.view2(),
+                                    v.view2(), &tile, i, 12, causal,
+                                    scale, &c, &mut out);
+                    assert_eq!(out.as_slice(), full.view2().row(i),
+                               "i={i} causal={causal} bk={bk}");
+                }
+            }
+        }
+    }
+
+    /// n > m with causal puts the new position entirely in the masked
+    /// future: the 1×M path must return exact zeros and a zero
+    /// denominator.
+    #[test]
+    fn fully_masked_decode_step_is_exact_zero() {
+        let (q, k, v) = qkv(6, 3, 4, 17);
+        let scale = 0.5;
+        let mut out = vec![1.0f32; 4];
+        // n = 6, m = 3 → off = −3; position 0 sees keys j ≤ −3: none
+        let carry = run_decode_step(q.view2().row(0), k.view2(),
+                                    v.view2(), &NoBias, 0, 6, true,
+                                    scale, &cfg(1, 2), &mut out);
+        assert_eq!(carry.l, 0.0);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    /// decode_steps must return the same outputs and carries for any
+    /// thread count (disjoint out slices + carry slots).
+    #[test]
+    fn decode_steps_thread_count_does_not_change_bits() {
+        let (q, k, v) = qkv(8, 26, 8, 18);
+        let pq = Tensor::randn(&[8, 3], 0.4, &mut Xoshiro256::new(19));
+        let pk = Tensor::randn(&[26, 3], 0.4, &mut Xoshiro256::new(20));
+        let tile = FactoredTile::new(&pq, &pk);
+        let scale = 1.0 / (8.0f32).sqrt();
+        let run = |threads: usize| {
+            let mut outs = vec![0.0f32; 8 * 8];
+            let progs = outs
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(i, block)| {
+                    (
+                        DecodeProgram {
+                            q: q.view2().row(i),
+                            k: k.view2(),
+                            v: v.view2(),
+                            bias: &tile,
+                            i,
+                            n: 8,
+                            causal: true,
+                            scale,
+                        },
+                        block,
+                    )
+                })
+                .collect();
+            let carries =
+                decode_steps(progs, &cfg(4, 7).with_threads(threads));
+            (outs, carries)
+        };
+        let (base_out, base_carry) = run(1);
+        for threads in [2, 3, 8] {
+            let (out, carry) = run(threads);
+            assert_eq!(out, base_out, "threads={threads}");
+            assert_eq!(carry, base_carry, "threads={threads}");
+        }
     }
 }

@@ -79,7 +79,13 @@
 //!   the planner's cost gate.
 //! * [`plan`] — **the API**: `BiasSpec` → `Planner` → `AttentionPlan` →
 //!   `Executor` (host / simulator / PJRT); [`plan::plan_bias_tile`]
-//!   maps a plan's mode onto an engine bias provider.
+//!   maps a plan's mode onto an engine bias provider. For
+//!   autoregressive serving, [`plan::SessionState`] is the prefill/
+//!   decode split in miniature: an append-only [`tensor::KvCache`],
+//!   the plan, and the last [`kernels::DecodeCarry`]; each `step` is
+//!   the engine's [`kernels::run_decode_step`] — a 1×M pass that is
+//!   bit-identical to the matching prefill row, with the bias row
+//!   supplied as an O(rank·M) strip instead of an O(M) table read.
 //! * [`simulator`] — tiled-execution HBM/SRAM simulator (Figures 3/4)
 //!   behind [`plan::SimExecutor`]; its block-size model also sizes the
 //!   engine's tiles, so accounting and numerics share one schedule.
@@ -87,7 +93,11 @@
 //!   the accelerator image, see [`xla_stub`]).
 //! * [`coordinator`] — serving layer: router, dynamic batcher, metrics,
 //!   worker pool; host-plan batches execute as one batched
-//!   `(B, H, N, C)` kernel-engine call.
+//!   `(B, H, N, C)` kernel-engine call. Decode sessions
+//!   ([`coordinator::SessionHandle`], `open_session` / `prefill` /
+//!   `step` / `close_session`) append K/V at submit time and ride the
+//!   same batcher, so one flush carries a mixed prefill+decode batch
+//!   and step outputs are bitwise stable across flush orderings.
 //! * [`server`] — CLI + config + run loop (including the `plan`
 //!   subcommand).
 //! * [`lint`] — flashlint, the in-repo static-analysis pass enforcing

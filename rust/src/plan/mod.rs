@@ -37,6 +37,11 @@
 //!   stored strips, with zero decomposition work.
 //! * [`Executor`] — one `execute(&plan, q, k, v)` call over three
 //!   backends: host reference, tiled simulator, PJRT runtime.
+//! * [`SessionState`] — the prefill/decode split: a long-lived session's
+//!   KV cache plus streaming-softmax carry, with `prefill` running the
+//!   one-shot engine path and `step` the exact 1×M decode path
+//!   ([`crate::kernels::run_decode_step`]). The coordinator wraps it in
+//!   a session registry and continuous-batches steps across sessions.
 //!
 //! Everything downstream (coordinator, server, examples, benches) goes
 //! through this module; no caller declares bias classes or decomposition
@@ -44,6 +49,7 @@
 
 mod exec;
 mod planner;
+mod session;
 mod spec;
 
 pub use exec::{
@@ -54,4 +60,5 @@ pub use planner::{
     AttentionPlan, Decision, ExecMode, JitBias, PlanError, PlanOptions,
     Planner, SelectorConfig, StripPolicy, BF16_STRIP_TOL, F32_STRIP_TOL,
 };
+pub use session::{SessionError, SessionState, StepTicket};
 pub use spec::BiasSpec;

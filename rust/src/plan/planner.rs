@@ -202,6 +202,17 @@ pub struct AttentionPlan {
     /// Bias-carrying HBM residency in bytes (factor strips, dense table,
     /// or zero for JIT/no-bias) — the Thm 3.2 storage column.
     pub bias_storage_bytes: usize,
+    /// Whether this plan can drive the incremental-decode path
+    /// (session KV cache + 1×M bias strips). False only for
+    /// multiplicative plans, whose Hadamard combine has no additive
+    /// strip form.
+    pub decode_capable: bool,
+    /// Predicted HBM accesses (elements) of *one* decode step under
+    /// this plan's mode: O(rank·M) factored strip vs O(M) dense row —
+    /// the per-step entry of the cost model.
+    pub predicted_step_io: f64,
+    /// Per-step cost of the dense-row baseline, for comparison.
+    pub dense_step_io: f64,
 }
 
 impl AttentionPlan {
@@ -227,6 +238,11 @@ impl AttentionPlan {
     /// Predicted IO saving over the dense-bias baseline.
     pub fn io_saving(&self) -> f64 {
         self.dense_io / self.predicted_io.max(1e-12)
+    }
+
+    /// Predicted per-decode-step IO saving over the dense-row baseline.
+    pub fn step_io_saving(&self) -> f64 {
+        self.dense_step_io / self.predicted_step_io.max(1e-12)
     }
 
     /// The tiled-simulator algorithm this plan maps to.
@@ -281,11 +297,14 @@ impl AttentionPlan {
     /// One-line report for CLIs and benches.
     pub fn summary(&self) -> String {
         format!(
-            "mode={} rank={} io={:.3e} ({}x vs dense) bias-bytes={} {:?}",
+            "mode={} rank={} io={:.3e} ({}x vs dense) step-io={:.3e} \
+             ({}x vs dense row) bias-bytes={} {:?}",
             self.mode_name(),
             self.rank(),
             self.predicted_io,
             (self.io_saving() * 10.0).round() / 10.0,
+            self.predicted_step_io,
+            (self.step_io_saving() * 10.0).round() / 10.0,
             self.bias_storage_bytes,
             self.decision
         )
@@ -386,6 +405,7 @@ impl Planner {
             BiasSpec::None => {
                 let geometry = Geometry { r: 0, ..*geo };
                 let io = iomodel::flash_attention_io(&geometry);
+                let step_io = iomodel::decode_step_io(&geometry);
                 Ok(AttentionPlan {
                     mode: ExecMode::NoBias,
                     geometry,
@@ -395,6 +415,9 @@ impl Planner {
                     predicted_io: io,
                     dense_io: io,
                     bias_storage_bytes: 0,
+                    decode_capable: true,
+                    predicted_step_io: step_io,
+                    dense_step_io: step_io,
                 })
             }
             BiasSpec::Alibi { slope, .. } if opts.prefer_jit => {
@@ -662,6 +685,19 @@ impl Planner {
             },
             ..geometry
         };
+        // per-step entry of the cost model: what one decode step of
+        // this plan streams (O(rank·M) strip contraction vs O(M) dense
+        // row; JIT pays zero bias traffic)
+        let dense_step_io = iomodel::decode_step_dense_io(&geometry);
+        let predicted_step_io = match &mode {
+            ExecMode::NoBias | ExecMode::Jit { .. } => {
+                iomodel::decode_step_io(&geometry)
+            }
+            ExecMode::Dense { .. } => dense_step_io,
+            ExecMode::Factored { .. } => {
+                iomodel::decode_step_factored_io(&geometry)
+            }
+        };
         Ok(AttentionPlan {
             mode,
             geometry,
@@ -671,6 +707,9 @@ impl Planner {
             predicted_io,
             dense_io,
             bias_storage_bytes,
+            decode_capable: !multiplicative,
+            predicted_step_io,
+            dense_step_io,
         })
     }
 
@@ -839,6 +878,42 @@ mod tests {
         assert!(matches!(plan.mode, ExecMode::Jit { .. }));
         assert_eq!(plan.bias_storage_bytes, 0);
         assert_eq!(plan.algorithm(), Algorithm::FlashBias(2));
+    }
+
+    #[test]
+    fn decode_fields_follow_mode() {
+        // factored plan: decode-capable, per-step IO beats the dense row
+        let fact = Planner::default()
+            .plan(&BiasSpec::alibi(4096, 4096, 0.25), &geo(4096, 4096),
+                  &PlanOptions::default())
+            .unwrap();
+        assert!(fact.decode_capable);
+        assert!(fact.predicted_step_io < fact.dense_step_io);
+        assert!(fact.step_io_saving() > 1.0);
+        // jit plan: zero bias traffic per step
+        let opts = PlanOptions {
+            prefer_jit: true,
+            ..PlanOptions::default()
+        };
+        let jit = Planner::default()
+            .plan(&BiasSpec::alibi(4096, 4096, 0.25), &geo(4096, 4096),
+                  &opts)
+            .unwrap();
+        assert!(jit.decode_capable);
+        assert!(jit.predicted_step_io < fact.dense_step_io);
+        // multiplicative plan: no additive strip form → not capable
+        let mult = Planner::default()
+            .plan(&BiasSpec::cos_multiplicative(16, 16), &geo(16, 16),
+                  &PlanOptions::default())
+            .unwrap();
+        assert!(!mult.decode_capable);
+        // no-bias plan: capable, both step costs equal
+        let none = Planner::default()
+            .plan(&BiasSpec::None, &geo(128, 128),
+                  &PlanOptions::default())
+            .unwrap();
+        assert!(none.decode_capable);
+        assert_eq!(none.predicted_step_io, none.dense_step_io);
     }
 
     #[test]

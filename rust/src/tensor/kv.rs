@@ -1,0 +1,210 @@
+//! Append-only K/V cache slabs for incremental decode.
+//!
+//! A [`KvCache`] owns two contiguous row-major slabs — keys of width `c`
+//! and values of width `cv` — that grow by capacity doubling as a
+//! session appends one row per decode step. The slabs are exposed as
+//! ordinary [`View2`]s over the *filled* prefix, so the kernel engine's
+//! tiled paths ([`crate::kernels::run_decode_step`], prefill) read the
+//! cache exactly like any other K/V tensor: no copy, no translation
+//! layer. Rows `[0, len)` are immutable once appended — a decode step
+//! that snapshotted `len = m` can safely read those rows concurrently
+//! with later appends, as long as the owner serializes the append
+//! itself (the coordinator does this under the session lock).
+
+use super::View2;
+
+/// Initial row capacity for a fresh cache (grows by doubling).
+const INITIAL_ROWS: usize = 64;
+
+/// Append-only K/V slabs with capacity doubling.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    c: usize,
+    cv: usize,
+    len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// New empty cache for keys of width `c` and values of width `cv`.
+    pub fn new(c: usize, cv: usize) -> Self {
+        assert!(c > 0 && cv > 0, "KvCache widths must be positive");
+        Self {
+            c,
+            cv,
+            len: 0,
+            k: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    /// Number of cached positions (rows).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Key width (head dim `c`).
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// Value width (`cv`).
+    pub fn cv(&self) -> usize {
+        self.cv
+    }
+
+    /// Row capacity currently reserved (before the next doubling).
+    pub fn capacity(&self) -> usize {
+        if self.c == 0 {
+            0
+        } else {
+            self.k.len() / self.c
+        }
+    }
+
+    /// Resident slab bytes (both slabs, reserved capacity).
+    pub fn resident_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    fn reserve_rows(&mut self, extra: usize) {
+        let need = self.len + extra;
+        let mut cap = self.capacity();
+        if need <= cap {
+            return;
+        }
+        cap = cap.max(INITIAL_ROWS / 2);
+        while cap < need {
+            cap *= 2;
+        }
+        self.k.resize(cap * self.c, 0.0);
+        self.v.resize(cap * self.cv, 0.0);
+    }
+
+    /// Append one position: a key row of width `c` and a value row of
+    /// width `cv`. Returns the new row's index.
+    pub fn append(&mut self, k_row: &[f32], v_row: &[f32]) -> usize {
+        assert_eq!(k_row.len(), self.c, "key row width mismatch");
+        assert_eq!(v_row.len(), self.cv, "value row width mismatch");
+        self.reserve_rows(1);
+        let i = self.len;
+        self.k[i * self.c..(i + 1) * self.c].copy_from_slice(k_row);
+        self.v[i * self.cv..(i + 1) * self.cv].copy_from_slice(v_row);
+        self.len += 1;
+        i
+    }
+
+    /// Append a block of positions (prefill). `k` must be `(rows, c)`,
+    /// `v` must be `(rows, cv)`.
+    pub fn append_rows(&mut self, k: View2<'_>, v: View2<'_>) {
+        assert_eq!(k.cols, self.c, "key block width mismatch");
+        assert_eq!(v.cols, self.cv, "value block width mismatch");
+        assert_eq!(k.rows, v.rows, "k/v row count mismatch");
+        self.reserve_rows(k.rows);
+        let kd = k.data();
+        let vd = v.data();
+        self.k[self.len * self.c..(self.len + k.rows) * self.c]
+            .copy_from_slice(kd);
+        self.v[self.len * self.cv..(self.len + v.rows) * self.cv]
+            .copy_from_slice(vd);
+        self.len += k.rows;
+    }
+
+    /// View of the filled key rows, `(len, c)`.
+    pub fn k_view(&self) -> View2<'_> {
+        View2::new(self.len, self.c, &self.k[..self.len * self.c])
+    }
+
+    /// View of the filled value rows, `(len, cv)`.
+    pub fn v_view(&self) -> View2<'_> {
+        View2::new(self.len, self.cv, &self.v[..self.len * self.cv])
+    }
+
+    /// View of the first `rows` key rows — the immutable snapshot a
+    /// decode step admitted at cache length `rows` attends, even if the
+    /// cache has grown since (append-at-submit never mutates `[0, rows)`).
+    pub fn k_prefix(&self, rows: usize) -> View2<'_> {
+        assert!(rows <= self.len, "prefix beyond filled rows");
+        View2::new(rows, self.c, &self.k[..rows * self.c])
+    }
+
+    /// View of the first `rows` value rows (see [`Self::k_prefix`]).
+    pub fn v_prefix(&self, rows: usize) -> View2<'_> {
+        assert!(rows <= self.len, "prefix beyond filled rows");
+        View2::new(rows, self.cv, &self.v[..rows * self.cv])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_view_roundtrip() {
+        let mut cache = KvCache::new(3, 2);
+        assert!(cache.is_empty());
+        for i in 0..5 {
+            let k = [i as f32, 1.0, 2.0];
+            let v = [10.0 + i as f32, -1.0];
+            assert_eq!(cache.append(&k, &v), i);
+        }
+        assert_eq!(cache.len(), 5);
+        let kv = cache.k_view();
+        let vv = cache.v_view();
+        assert_eq!((kv.rows, kv.cols), (5, 3));
+        assert_eq!((vv.rows, vv.cols), (5, 2));
+        for i in 0..5 {
+            assert_eq!(kv.row(i)[0], i as f32);
+            assert_eq!(vv.row(i)[0], 10.0 + i as f32);
+        }
+    }
+
+    #[test]
+    fn capacity_doubles_and_rows_survive_growth() {
+        let mut cache = KvCache::new(2, 2);
+        let mut caps = Vec::new();
+        for i in 0..200 {
+            cache.append(&[i as f32, 0.0], &[i as f32, 1.0]);
+            caps.push(cache.capacity());
+        }
+        // Capacity is monotone and each jump is a doubling.
+        for w in caps.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] * 2);
+        }
+        assert!(cache.capacity() >= 200);
+        for i in 0..200 {
+            assert_eq!(cache.k_view().at(i, 0), i as f32);
+            assert_eq!(cache.v_view().at(i, 0), i as f32);
+        }
+    }
+
+    #[test]
+    fn append_rows_matches_per_row_appends() {
+        let kd: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let vd: Vec<f32> = (0..8).map(|x| -(x as f32)).collect();
+        let k = View2::new(4, 3, &kd);
+        let v = View2::new(4, 2, &vd);
+
+        let mut a = KvCache::new(3, 2);
+        a.append_rows(k, v);
+        let mut b = KvCache::new(3, 2);
+        for i in 0..4 {
+            b.append(k.row(i), v.row(i));
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.k_view().data(), b.k_view().data());
+        assert_eq!(a.v_view().data(), b.v_view().data());
+    }
+
+    #[test]
+    #[should_panic(expected = "key row width mismatch")]
+    fn wrong_key_width_panics() {
+        let mut cache = KvCache::new(4, 4);
+        cache.append(&[0.0; 3], &[0.0; 4]);
+    }
+}

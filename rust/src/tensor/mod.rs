@@ -8,8 +8,10 @@
 
 use std::fmt;
 
+pub mod kv;
 pub mod strip;
 
+pub use kv::KvCache;
 pub use strip::{
     bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Strip, StripDType,
 };

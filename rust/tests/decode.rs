@@ -1,0 +1,470 @@
+//! Prefill/decode split, end to end.
+//!
+//! * Every decode step at position `t` must match row `t` of a full
+//!   prefill recompute over `[0..t]` within 1e-5 — across all four exec
+//!   modes (no-bias / dense / factored / JIT), causal and not, and
+//!   ragged cross-attention prefixes (`m_p > n_p`).
+//! * A fully-masked step's 1×M path must return exact zeros.
+//! * The coordinator's multi-session continuous-batched decode loop
+//!   must be **bitwise** stable across batcher flush orderings, and
+//!   bitwise equal to the inline (no coordinator) session path.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::coordinator::{
+    BatcherConfig, Coordinator, CoordinatorConfig, Response,
+    SessionApiError,
+};
+use flashbias::iomodel::Geometry;
+use flashbias::kernels::{self, KernelConfig, NoBias};
+use flashbias::plan::{
+    self, AttentionPlan, BiasSpec, PlanOptions, Planner, SessionError,
+    SessionState,
+};
+use flashbias::runtime::{HostValue, Runtime};
+use flashbias::tensor::Tensor;
+use flashbias::util::Xoshiro256;
+
+const C: usize = 8;
+const SRAM: usize = 100 * 1024 / 2;
+
+fn geo(n: usize, m: usize) -> Geometry {
+    Geometry { n, m, c: C, r: 0, sram: SRAM }
+}
+
+fn plan_spec(spec: &BiasSpec, n: usize, m: usize, causal: bool,
+             prefer_jit: bool) -> AttentionPlan {
+    Planner::default()
+        .plan(
+            spec,
+            &geo(n, m),
+            &PlanOptions { causal, prefer_jit,
+                           ..PlanOptions::default() },
+        )
+        .expect("plan")
+}
+
+// ---------------------------------------------------------------------------
+// Exactness: decode ≡ prefill recompute, all modes × causal × ragged
+// ---------------------------------------------------------------------------
+
+/// Drive one session to the end of its context: prefill `[0,
+/// prefill_to)`, then one step per remaining position, comparing every
+/// step against an independently planned full recompute over the
+/// prefix. `make_spec(n, m)` must yield the same bias values on
+/// `[0, n) × [0, m)` for every truncation.
+fn session_matches_recompute(
+    make_spec: &dyn Fn(usize, usize) -> BiasSpec,
+    causal: bool,
+    prefer_jit: bool,
+    n: usize,
+    prefill_to: usize,
+    expect_mode: &str,
+    seed: u64,
+) {
+    let plan = Arc::new(plan_spec(&make_spec(n, n), n, n, causal,
+                                  prefer_jit));
+    assert_eq!(plan.mode_name(), expect_mode, "wrong exec mode");
+    let mut sess = SessionState::new(Arc::clone(&plan)).expect("open");
+    let mut rng = Xoshiro256::new(seed);
+    let q = Tensor::randn(&[n, C], 1.0, &mut rng);
+    let k = Tensor::randn(&[n, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, C], 1.0, &mut rng);
+    if prefill_to > 0 {
+        let out = sess
+            .prefill(&q.slice_rows(0, prefill_to),
+                     &k.slice_rows(0, prefill_to),
+                     &v.slice_rows(0, prefill_to))
+            .expect("prefill");
+        assert_eq!(out.shape(), &[prefill_to, C]);
+    }
+    for t in prefill_to..n {
+        let out = sess
+            .step(q.view2().row(t), k.view2().row(t), v.view2().row(t))
+            .expect("step");
+        let tp = plan_spec(&make_spec(t + 1, t + 1), t + 1, t + 1,
+                           causal, prefer_jit);
+        let full = plan::execute(
+            &tp,
+            &q.slice_rows(0, t + 1),
+            &k.slice_rows(0, t + 1),
+            &v.slice_rows(0, t + 1),
+        )
+        .expect("recompute");
+        for (j, (a, b)) in
+            out.iter().zip(full.view2().row(t)).enumerate()
+        {
+            assert!((a - b).abs() < 1e-5,
+                    "{expect_mode} causal={causal} t={t} j={j}: \
+                     {a} vs {b}");
+        }
+    }
+    assert_eq!(sess.remaining(), 0);
+}
+
+#[test]
+fn nobias_decode_matches_recompute() {
+    for (causal, seed) in [(false, 10), (true, 11)] {
+        session_matches_recompute(&|_, _| BiasSpec::None, causal, false,
+                                  19, 5, "no-bias", seed);
+    }
+}
+
+#[test]
+fn factored_decode_matches_recompute() {
+    for (causal, seed) in [(false, 12), (true, 13)] {
+        session_matches_recompute(&|n, m| BiasSpec::alibi(n, m, 0.25),
+                                  causal, false, 19, 5, "factored",
+                                  seed);
+    }
+}
+
+#[test]
+fn jit_decode_matches_recompute() {
+    for (causal, seed) in [(false, 14), (true, 15)] {
+        session_matches_recompute(&|n, m| BiasSpec::alibi(n, m, 0.25),
+                                  causal, true, 19, 5, "jit", seed);
+    }
+}
+
+#[test]
+fn dense_decode_matches_recompute() {
+    // a full-rank random table defeats every factorization tolerance,
+    // forcing the dense-fallback mode (table-row strips per step)
+    let table =
+        Tensor::randn(&[19, 19], 1.0, &mut Xoshiro256::new(99));
+    let make = |n: usize, m: usize| {
+        BiasSpec::dense(table.slice_rows(0, n).slice_cols(0, m))
+    };
+    for (causal, seed) in [(false, 16), (true, 17)] {
+        session_matches_recompute(&make, causal, false, 19, 5, "dense",
+                                  seed);
+    }
+}
+
+#[test]
+fn ragged_prefix_decode_matches_recompute() {
+    // cross-attention-style session: the prompt has more K/V rows than
+    // query rows (m0 > n0), so every later step sees a shifted cache
+    let (n, n0, m0) = (20usize, 4usize, 9usize);
+    let plan = Arc::new(plan_spec(&BiasSpec::alibi(n, n, 0.25), n, n,
+                                  true, false));
+    let mut sess = SessionState::new(Arc::clone(&plan)).expect("open");
+    let mut rng = Xoshiro256::new(77);
+    let q = Tensor::randn(&[n, C], 1.0, &mut rng);
+    let k = Tensor::randn(&[n, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, C], 1.0, &mut rng);
+    sess.prefill(&q.slice_rows(0, n0), &k.slice_rows(0, m0),
+                 &v.slice_rows(0, m0))
+        .expect("ragged prefill");
+    // the cache runs out at g.m = n rows: n − m0 steps fit
+    for s in 0..(n - m0) {
+        let t = n0 + s; // query position
+        let mt = m0 + s + 1; // cache rows the step attends
+        let out = sess
+            .step(q.view2().row(t), k.view2().row(t), v.view2().row(t))
+            .expect("step");
+        let tp = plan_spec(&BiasSpec::alibi(t + 1, mt, 0.25), t + 1, mt,
+                           true, false);
+        let full = plan::execute(
+            &tp,
+            &q.slice_rows(0, t + 1),
+            &k.slice_rows(0, mt),
+            &v.slice_rows(0, mt),
+        )
+        .expect("recompute");
+        for (j, (a, b)) in
+            out.iter().zip(full.view2().row(t)).enumerate()
+        {
+            assert!((a - b).abs() < 1e-5, "ragged t={t} j={j}: {a} vs {b}");
+        }
+    }
+    assert!(matches!(
+        sess.step(q.view2().row(0), k.view2().row(0), v.view2().row(0)),
+        Err(SessionError::ContextExhausted { .. })
+    ));
+}
+
+#[test]
+fn fully_masked_step_is_exact_zero_on_the_1xm_path() {
+    // i = 0 of a logical n = 6 problem with only m = 3 cached keys:
+    // limit = 0 + (3 − 6) < 0, every key is future, l must stay 0.0
+    let mut rng = Xoshiro256::new(5);
+    let q = Tensor::randn(&[1, C], 1.0, &mut rng);
+    let k = Tensor::randn(&[3, C], 1.0, &mut rng);
+    let v = Tensor::randn(&[3, C], 1.0, &mut rng);
+    let cfg = KernelConfig::for_geometry(&geo(6, 3));
+    let mut out = vec![1.0f32; C]; // poisoned on purpose
+    let carry = kernels::run_decode_step(
+        q.view2().row(0), k.view2(), v.view2(), &NoBias, 0, 6, true,
+        1.0, &cfg, &mut out,
+    );
+    assert_eq!(carry.l, 0.0);
+    assert!(out.iter().all(|&x| x == 0.0), "masked row must be zero");
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator: continuous batching, flush-ordering bitwise stability
+// ---------------------------------------------------------------------------
+
+const N: usize = 24;
+const PREFILLS: [usize; 3] = [4, 6, 9];
+const STEPS: usize = 8;
+
+fn serving_plan() -> AttentionPlan {
+    plan_spec(&BiasSpec::alibi(N, N, 0.25), N, N, true, false)
+}
+
+fn coordinator(max_batch: usize) -> Coordinator {
+    Coordinator::new(
+        Arc::new(Runtime::empty()),
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(1),
+            },
+            workers: 2,
+            queue_depth: 64,
+        },
+    )
+}
+
+/// Deterministic per-session payloads shared by every run.
+fn session_data(s: usize) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Xoshiro256::new(1000 + s as u64);
+    (
+        Tensor::randn(&[N, C], 1.0, &mut rng),
+        Tensor::randn(&[N, C], 1.0, &mut rng),
+        Tensor::randn(&[N, C], 1.0, &mut rng),
+    )
+}
+
+fn oneshot_data() -> (Tensor, Tensor, Tensor) {
+    let mut rng = Xoshiro256::new(2000);
+    (
+        Tensor::randn(&[N, C], 1.0, &mut rng),
+        Tensor::randn(&[N, C], 1.0, &mut rng),
+        Tensor::randn(&[N, C], 1.0, &mut rng),
+    )
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+enum Work {
+    Prefill(usize),
+    Step(usize, usize),
+    OneShot,
+}
+
+fn drain(coord: &mut Coordinator, want: usize) -> Vec<Response> {
+    coord.flush_all().expect("flush");
+    let mut out = Vec::new();
+    while out.len() < want {
+        match coord.recv_timeout(Duration::from_secs(30)) {
+            Some(r) => out.push(r),
+            None => panic!("lost responses: {}/{want}", out.len()),
+        }
+    }
+    out
+}
+
+/// Run the same logical workload — 3 session prefills, 8 decode steps
+/// per session, one full-length one-shot — under a given batch size,
+/// step interleaving, and flush cadence. Returns every output keyed by
+/// its logical work item.
+fn run_script(max_batch: usize, round_robin: bool,
+              flush_every: Option<usize>) -> HashMap<Work, Vec<f32>> {
+    let mut coord = coordinator(max_batch);
+    coord.register_plan("ab", serving_plan()).expect("register");
+    let mut ids: HashMap<u64, Work> = HashMap::new();
+    let mut submitted = 0usize;
+
+    let mut sessions = Vec::new();
+    for (s, &p) in PREFILLS.iter().enumerate() {
+        let sid = coord.open_session("ab").expect("open");
+        let (q, k, v) = session_data(s);
+        let rid = coord
+            .prefill(sid, q.slice_rows(0, p), k.slice_rows(0, p),
+                     v.slice_rows(0, p))
+            .expect("prefill");
+        ids.insert(rid, Work::Prefill(s));
+        submitted += 1;
+        sessions.push(sid);
+    }
+
+    // the step schedule: round-robin interleaves sessions per position;
+    // the alternative runs each session to completion before the next
+    let mut schedule = Vec::new();
+    if round_robin {
+        for t in 0..STEPS {
+            for s in 0..sessions.len() {
+                schedule.push((s, t));
+            }
+        }
+    } else {
+        for s in 0..sessions.len() {
+            for t in 0..STEPS {
+                schedule.push((s, t));
+            }
+        }
+    }
+    // a one-shot rides along mid-stream in one run, at the end in the
+    // other — it must land in a mixed batch either way
+    let oneshot_at = if round_robin { schedule.len() / 2 }
+                     else { schedule.len() };
+    for (idx, &(s, t)) in schedule.iter().enumerate() {
+        if idx == oneshot_at {
+            let (q, k, v) = oneshot_data();
+            let rid = coord
+                .submit("ab", vec![
+                    HostValue::F32(q),
+                    HostValue::F32(k),
+                    HostValue::F32(v),
+                ])
+                .expect("one-shot");
+            ids.insert(rid, Work::OneShot);
+            submitted += 1;
+        }
+        let (q, k, v) = session_data(s);
+        let pos = PREFILLS[s] + t;
+        let rid = coord
+            .step(sessions[s], q.view2().row(pos), k.view2().row(pos),
+                  v.view2().row(pos))
+            .expect("step");
+        ids.insert(rid, Work::Step(s, t));
+        submitted += 1;
+        if let Some(every) = flush_every {
+            if (idx + 1) % every == 0 {
+                coord.flush_all().expect("flush");
+            }
+        }
+    }
+    if oneshot_at == schedule.len() {
+        let (q, k, v) = oneshot_data();
+        let rid = coord
+            .submit("ab", vec![
+                HostValue::F32(q),
+                HostValue::F32(k),
+                HostValue::F32(v),
+            ])
+            .expect("one-shot");
+        ids.insert(rid, Work::OneShot);
+        submitted += 1;
+    }
+
+    let responses = drain(&mut coord, submitted);
+    let mut out = HashMap::new();
+    for resp in responses {
+        let work = ids[&resp.id];
+        let t = resp.outputs.expect("response ok");
+        let data = t[0].as_f32().expect("f32").data().to_vec();
+        out.insert(work, data);
+    }
+    for (s, &sid) in sessions.iter().enumerate() {
+        let handle = coord.session(sid).expect("still open");
+        assert_eq!(handle.read().pos(), PREFILLS[s] + STEPS);
+        assert!(coord.close_session(sid).is_some());
+    }
+    assert_eq!(coord.open_sessions(), 0);
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn decode_loop_is_bitwise_stable_across_flush_orderings() {
+    // same logical workload, three very different batching regimes
+    let a = run_script(3, true, Some(5));
+    let b = run_script(16, false, None);
+    let c = run_script(1, true, None);
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), c.len());
+    for (work, va) in &a {
+        let vb = &b[work];
+        let vc = &c[work];
+        let bits = |v: &[f32]| {
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(va), bits(vb), "{work:?}: A vs B");
+        assert_eq!(bits(va), bits(vc), "{work:?}: A vs C");
+    }
+
+    // and the coordinator path is bitwise the inline-session path
+    let plan = Arc::new(serving_plan());
+    for s in 0..PREFILLS.len() {
+        let mut sess =
+            SessionState::new(Arc::clone(&plan)).expect("open");
+        let (q, k, v) = session_data(s);
+        let p = PREFILLS[s];
+        sess.prefill(&q.slice_rows(0, p), &k.slice_rows(0, p),
+                     &v.slice_rows(0, p))
+            .expect("prefill");
+        for t in 0..STEPS {
+            let pos = p + t;
+            let inline = sess
+                .step(q.view2().row(pos), k.view2().row(pos),
+                      v.view2().row(pos))
+                .expect("step");
+            let served = &a[&Work::Step(s, t)];
+            assert_eq!(
+                inline.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                served.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "session {s} step {t}: inline vs coordinator"
+            );
+        }
+    }
+
+    // the one-shot that rode along in the mixed batches is correct
+    let (q, k, v) = oneshot_data();
+    let full = plan::execute(&plan, &q, &k, &v).expect("reference");
+    let served = &a[&Work::OneShot];
+    for (j, (a, b)) in served.iter().zip(full.data()).enumerate() {
+        assert!((a - b).abs() < 1e-4, "one-shot j={j}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn session_api_errors_are_typed() {
+    let mut coord = coordinator(4);
+    coord.register_plan("ab", serving_plan()).expect("register");
+    let mul = plan_spec(&BiasSpec::cos_multiplicative(16, 16), 16, 16,
+                        false, false);
+    coord.register_plan("mul", mul).expect("register");
+
+    assert!(matches!(coord.open_session("nope"),
+                     Err(SessionApiError::UnknownPlan(_))));
+    assert!(matches!(
+        coord.open_session("mul"),
+        Err(SessionApiError::State(
+            SessionError::DecodeUnsupported { .. }
+        ))
+    ));
+    let row = [0.0f32; C];
+    assert!(matches!(coord.step(404, &row, &row, &row),
+                     Err(SessionApiError::UnknownSession(404))));
+
+    let sid = coord.open_session("ab").expect("open");
+    let short = [0.0f32; C - 1];
+    assert!(matches!(
+        coord.step(sid, &short, &row, &row),
+        Err(SessionApiError::State(SessionError::ShapeMismatch {
+            what: "q row",
+            ..
+        }))
+    ));
+    // a failed step must not have touched the cache
+    assert_eq!(coord.session(sid).expect("open").read().pos(), 0);
+
+    let (q, k, v) = session_data(0);
+    coord
+        .prefill(sid, q.slice_rows(0, 4), k.slice_rows(0, 4),
+                 v.slice_rows(0, 4))
+        .expect("prefill");
+    assert!(matches!(
+        coord.prefill(sid, q.clone(), k.clone(), v.clone()),
+        Err(SessionApiError::State(SessionError::NotFresh { pos: 4 }))
+    ));
+    let want = drain(&mut coord, 1);
+    assert!(want[0].outputs.is_ok());
+    coord.shutdown();
+}

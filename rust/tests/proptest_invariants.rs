@@ -7,7 +7,7 @@ use flashbias::attention::{self, AttnOpts};
 use flashbias::bias::{Alibi, ExactBias, SpatialDistance};
 use flashbias::coordinator::batcher::{BatcherConfig, DynamicBatcher};
 use flashbias::coordinator::router::{RouteKey, Router};
-use flashbias::coordinator::Request;
+use flashbias::coordinator::{Request, RequestKind};
 use flashbias::linalg;
 use flashbias::proplite::{forall, gen_dim, shrink_usize, Config};
 use flashbias::tensor::Tensor;
@@ -62,6 +62,7 @@ fn prop_batcher_conserves_requests() {
                     artifact: format!("a{art}"),
                     inputs: vec![],
                     enqueued: std::time::Instant::now(),
+                    kind: RequestKind::Prefill,
                 };
                 if let Some(batch) = b.push(req) {
                     flushed_ids
