@@ -26,11 +26,14 @@ bench:
 # factorstore benches (cold-vs-warm plan latency, plus plan latency by
 # store tier: resident vs spill vs remote vs cold SVD), dropping
 # BENCH_kernels.json, BENCH_factorstore.json and BENCH_store_tiers.json
-# at the workspace root.
+# at the workspace root. serving_load drives a live loopback NetServer
+# at three offered-load levels and records BENCH_serving_load.json
+# (p50/p99 latency, throughput, continuous-vs-batch1 ratio).
 bench-json:
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench fig3_efficiency
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench serving_overhead
 	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench decode_throughput
+	FLASHBIAS_BENCH_JSON_DIR=$(CURDIR) $(CARGO) bench --bench serving_load
 	$(CARGO) run --release --bin bench_check -- --report
 
 # Perf-regression gate: re-run the kernel-engine bench and fail if any

@@ -1,0 +1,156 @@
+//! Serving-load bench (ISSUE 9 network router), written to
+//! `BENCH_serving_load.json`:
+//!
+//! Spawns a real [`NetServer`] on loopback (empty runtime, demo ALiBi
+//! host plan) and drives mixed session workloads — `open` → 32-row
+//! `prefill` → 4 × `step` → `close` — through real TCP connections at
+//! three offered-load levels (16 / 64 / 96 concurrent connections).
+//! Per level it records:
+//!
+//! * `latency conns=N` — per-operation round-trip stats (mean/p50/p99
+//!   seconds), the client-observed queueing + batching + execution.
+//! * `throughput conns=N (op/s)` — completed operations per wall
+//!   second, with the error tally in the note.
+//!
+//! Then the continuous-batching payoff: the 64-connection level is
+//! re-run against a `ServeConfig::batch1()` server (every flush serves
+//! exactly one request — the no-batching strawman) and the throughput
+//! ratio is reported. Outside single-iteration CI smoke runs, the
+//! continuous server must win.
+//!
+//! Server-side admission/flush counters (queue wait, queue depth,
+//! flush reasons, batch occupancy) are fetched over the wire via the
+//! `stats` op and printed for the log.
+//!
+//! Honors `FLASHBIAS_BENCH_ITERS` (CI smoke runs a single iteration)
+//! and `FLASHBIAS_BENCH_JSON_DIR` for the JSON drop location.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::benchkit::{iters, Row, Table};
+use flashbias::coordinator::Coordinator;
+use flashbias::runtime::Runtime;
+use flashbias::server::{
+    demo_plan_name, fetch_stats, register_demo_plan, run_wave,
+    wait_ready, NetServer, ServeConfig, WaveConfig, WaveOutcome,
+};
+use flashbias::util::Stats;
+
+const PLAN_N: usize = 256;
+const PREFILL_ROWS: usize = 32;
+const DECODE_STEPS: usize = 4;
+
+fn spawn_server(cfg: ServeConfig) -> NetServer {
+    let coord = Coordinator::new(
+        Arc::new(Runtime::empty()),
+        cfg.coordinator_config(),
+    );
+    register_demo_plan(&coord, PLAN_N).expect("register demo plan");
+    let srv = NetServer::serve(coord, cfg, "127.0.0.1:0")
+        .expect("bind netserver");
+    assert!(
+        wait_ready(&srv.addr().to_string(), Duration::from_secs(10)),
+        "server did not come up"
+    );
+    srv
+}
+
+fn wave_at(addr: &str, connections: usize,
+           requests: usize) -> WaveOutcome {
+    let out = run_wave(&WaveConfig {
+        addr: addr.to_string(),
+        plan: demo_plan_name(PLAN_N),
+        connections,
+        requests_per_conn: requests,
+        prefill_rows: PREFILL_ROWS,
+        decode_steps: DECODE_STEPS,
+        seed: 0x5e2f,
+    });
+    assert_eq!(out.protocol_errors, 0, "protocol errors under load");
+    assert_eq!(out.errors, 0, "typed error frames under load");
+    assert!(out.completed > 0, "no requests completed");
+    out
+}
+
+/// Record one level as two rows: the latency distribution and the
+/// throughput scalar.
+fn record(out: &mut Table, level: &str, wave: &WaveOutcome) {
+    out.row(Row {
+        label: format!("latency {level}"),
+        stats: wave.latency.clone(),
+        bytes: None,
+        note: format!(
+            "completed={} overloaded={}",
+            wave.completed, wave.overloaded
+        ),
+    });
+    let mut tp = Stats::new();
+    tp.push(wave.throughput());
+    out.row(Row {
+        label: format!("throughput {level} (op/s)"),
+        stats: tp,
+        bytes: None,
+        note: format!("wall={:.2}s", wave.wall_secs),
+    });
+}
+
+fn main() {
+    let it = iters(8);
+    // enough interactions per connection that batching has material to
+    // work with, scaled down for CI smoke
+    let requests = it.clamp(2, 16);
+    let mut out = Table::new(
+        "serving load: latency/throughput vs offered connections",
+    );
+
+    let server = spawn_server(ServeConfig::default());
+    let addr = server.addr().to_string();
+    let mut continuous_64 = 0.0f64;
+    for conns in [16usize, 64, 96] {
+        let wave = wave_at(&addr, conns, requests);
+        println!(
+            "  conns={conns}: {:.1} op/s p50={:.1}ms p99={:.1}ms \
+             (completed={}, overloaded={})",
+            wave.throughput(),
+            wave.latency.p50() * 1e3,
+            wave.latency.p99() * 1e3,
+            wave.completed,
+            wave.overloaded,
+        );
+        if conns == 64 {
+            continuous_64 = wave.throughput();
+        }
+        record(&mut out, &format!("conns={conns}"), &wave);
+    }
+    match fetch_stats(&addr) {
+        Ok(stats) => println!("  server stats: {}", stats.dump()),
+        Err(e) => println!("  server stats unavailable: {e}"),
+    }
+    server.shutdown();
+
+    // the no-batching strawman: identical offered load, but every
+    // flush serves exactly one request
+    let baseline = spawn_server(ServeConfig::batch1());
+    let addr = baseline.addr().to_string();
+    let wave = wave_at(&addr, 64, requests);
+    let batch1_64 = wave.throughput();
+    record(&mut out, "conns=64 batch1-baseline", &wave);
+    baseline.shutdown();
+
+    let speedup = continuous_64 / batch1_64.max(1e-9);
+    println!(
+        "  continuous batching at 64 conns: {continuous_64:.1} op/s \
+         vs batch1 {batch1_64:.1} op/s ({speedup:.2}x)"
+    );
+    if it > 1 {
+        assert!(
+            continuous_64 > batch1_64,
+            "continuous batching ({continuous_64:.1} op/s) did not \
+             beat the batch-size-1 baseline ({batch1_64:.1} op/s)"
+        );
+    }
+
+    out.write_json("serving_load")
+        .expect("write BENCH_serving_load.json");
+}

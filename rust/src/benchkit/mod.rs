@@ -72,7 +72,9 @@ impl Table {
     }
 
     /// Machine-readable rows as JSON: `{title, rows: [{label, mean,
-    /// p50, bytes}]}` (bytes is `null` when a row has none).
+    /// p50, p99, bytes, note}]}` (bytes is `null` when a row has
+    /// none). Consumers key on `label`/`mean`; the tail percentile and
+    /// note ride along for serving benches.
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .rows
@@ -82,12 +84,14 @@ impl Table {
                     ("label", Json::str(&r.label)),
                     ("mean", Json::num(r.stats.mean())),
                     ("p50", Json::num(r.stats.p50())),
+                    ("p99", Json::num(r.stats.p99())),
                     (
                         "bytes",
                         r.bytes
                             .map(|b| Json::num(b as f64))
                             .unwrap_or(Json::Null),
                     ),
+                    ("note", Json::str(&r.note)),
                 ])
             })
             .collect();

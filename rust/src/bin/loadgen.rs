@@ -1,0 +1,173 @@
+//! `loadgen` — drive load waves against a flashbias network server.
+//!
+//! Point it at a live `flashbias serve --listen ADDR` with `--addr`,
+//! or let it spawn a private in-process server on an ephemeral
+//! loopback port with `--spawn` (no PJRT artifacts needed — the spawn
+//! path serves the synthetic demo plan from an empty runtime, which is
+//! what the CI smoke gate runs). `--check` turns the run into a gate:
+//! nonzero completions, zero protocol errors, zero non-overload
+//! errors.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use flashbias::coordinator::Coordinator;
+use flashbias::jsonlite::Json;
+use flashbias::runtime::Runtime;
+use flashbias::server::{
+    demo_plan_name, fetch_stats, register_demo_plan, run_wave,
+    wait_ready, Cli, NetServer, ServeConfig, WaveConfig,
+};
+
+const USAGE: &str = "\
+loadgen — load generator for the flashbias network server
+
+USAGE: loadgen (--addr HOST:PORT | --spawn) [OPTIONS]
+
+OPTIONS:
+  --addr HOST:PORT    target a running `flashbias serve --listen`
+  --spawn             serve an in-process demo server instead
+  --connections N     concurrent client connections   (default 8)
+  --requests N        interactions per connection     (default 4)
+  --rows N            prefill rows per interaction    (default 32)
+  --steps N           decode steps per interaction    (default 4;
+                      0 = one-shot mode, no sessions)
+  --n N               demo plan context length        (default 256;
+                      must match the server's --n)
+  --plan NAME         serve against NAME instead of the demo plan
+  --seed S            base RNG seed                   (default 4269)
+  --json              print the outcome as one JSON line
+  --check             exit nonzero unless completed > 0 and
+                      protocol_errors == errors == 0
+";
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if cli.command == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    match run(&cli) {
+        Ok(out) => print!("{out}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(cli: &Cli) -> Result<String> {
+    let connections = cli.flag_usize("connections", 8)?;
+    let requests = cli.flag_usize("requests", 4)?;
+    let rows = cli.flag_usize("rows", 32)?;
+    let steps = cli.flag_usize("steps", 4)?;
+    let seed = cli.flag_usize("seed", 4269)? as u64;
+    let n = cli.flag_usize("n", 256)?;
+    if rows == 0 || rows + steps > n {
+        bail!("rows={rows} + steps={steps} must fit the plan's \
+               context n={n} (and rows > 0)");
+    }
+
+    let mut server = None;
+    let addr = if cli.flag_bool("spawn") {
+        let scfg = ServeConfig::default();
+        let coord = Coordinator::new(
+            Arc::new(Runtime::empty()),
+            scfg.coordinator_config(),
+        );
+        register_demo_plan(&coord, n)?;
+        let srv = NetServer::serve(coord, scfg, "127.0.0.1:0")?;
+        let addr = srv.addr().to_string();
+        server = Some(srv);
+        addr
+    } else {
+        cli.flag("addr")
+            .ok_or_else(|| {
+                anyhow!("loadgen needs --addr HOST:PORT or --spawn\n\
+                         {USAGE}")
+            })?
+            .to_string()
+    };
+    if !wait_ready(&addr, Duration::from_secs(10)) {
+        bail!("server at {addr} did not answer ping");
+    }
+
+    let plan = match cli.flag("plan") {
+        Some(p) => p.to_string(),
+        None => demo_plan_name(n),
+    };
+    let wave = WaveConfig {
+        addr: addr.clone(),
+        plan,
+        connections,
+        requests_per_conn: requests,
+        prefill_rows: rows,
+        decode_steps: steps,
+        seed,
+    };
+    let out = run_wave(&wave);
+    // server-side counters (flush reasons, queue depth, batch sizes)
+    let stats = fetch_stats(&addr).ok();
+    if let Some(srv) = server {
+        srv.shutdown();
+    }
+
+    let mut text = format!(
+        "wave: {connections} conns x {requests} reqs \
+         (rows={rows}, steps={steps}) against {addr}\n\
+         completed={} overloaded={} errors={} protocol_errors={}\n\
+         throughput={:.1} op/s p50={:.1}ms p99={:.1}ms wall={:.2}s\n",
+        out.completed,
+        out.overloaded,
+        out.errors,
+        out.protocol_errors,
+        out.throughput(),
+        out.latency.p50() * 1e3,
+        out.latency.p99() * 1e3,
+        out.wall_secs,
+    );
+    if let Some(s) = &stats {
+        text.push_str(&format!("server stats: {}\n", s.dump()));
+    }
+    if cli.flag_bool("json") {
+        let doc = Json::obj(vec![
+            ("connections", Json::num(connections as f64)),
+            ("requests_per_conn", Json::num(requests as f64)),
+            ("completed", Json::num(out.completed as f64)),
+            ("overloaded", Json::num(out.overloaded as f64)),
+            ("errors", Json::num(out.errors as f64)),
+            (
+                "protocol_errors",
+                Json::num(out.protocol_errors as f64),
+            ),
+            ("throughput", Json::num(out.throughput())),
+            ("p50_s", Json::num(out.latency.p50())),
+            ("p99_s", Json::num(out.latency.p99())),
+            ("wall_secs", Json::num(out.wall_secs)),
+            ("server", stats.unwrap_or(Json::Null)),
+        ]);
+        text.push_str(&doc.dump());
+        text.push('\n');
+    }
+    if cli.flag_bool("check") {
+        if out.completed == 0 {
+            bail!("check failed: no requests completed\n{text}");
+        }
+        if out.protocol_errors > 0 || out.errors > 0 {
+            bail!(
+                "check failed: {} protocol errors, {} errors\n{text}",
+                out.protocol_errors,
+                out.errors
+            );
+        }
+    }
+    Ok(text)
+}

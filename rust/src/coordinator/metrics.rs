@@ -14,6 +14,41 @@ use crate::factorstore::FactorStore;
 use crate::util::sync::Mutex;
 use crate::util::Stats;
 
+/// Why the serving front-end's batching thread flushed the batcher —
+/// the policy observable the load harness tunes against. Lives here
+/// (not in `server`) because `Metrics` owns the per-reason counters
+/// and `server` depends on `coordinator`, never the reverse.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushReason {
+    /// Pending work hit the `max_batch_total_tokens` budget.
+    Tokens = 0,
+    /// Waiting/served ratio crossed — enough queued work relative to
+    /// in-flight work to justify interrupting the served batch cadence.
+    Ratio = 1,
+    /// Oldest waiting request aged past the deadline.
+    Deadline = 2,
+    /// Shutdown/idle drain of whatever was pending.
+    Drain = 3,
+}
+
+impl FlushReason {
+    pub const ALL: [FlushReason; 4] = [
+        FlushReason::Tokens,
+        FlushReason::Ratio,
+        FlushReason::Deadline,
+        FlushReason::Drain,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FlushReason::Tokens => "tokens",
+            FlushReason::Ratio => "ratio",
+            FlushReason::Deadline => "deadline",
+            FlushReason::Drain => "drain",
+        }
+    }
+}
+
 #[derive(Debug)]
 pub struct Metrics {
     submitted: AtomicU64,
@@ -24,6 +59,12 @@ pub struct Metrics {
     queue_secs: Mutex<Stats>,
     exec_secs: Mutex<Stats>,
     store: Mutex<Option<Arc<FactorStore>>>,
+    // network front-end admission + flush-policy observables; zero
+    // everywhere until a netserver records into them
+    net_wait_secs: Mutex<Stats>,
+    net_depth: Mutex<Stats>,
+    net_rejected: AtomicU64,
+    flush_reasons: [AtomicU64; 4],
 }
 
 impl Default for Metrics {
@@ -37,6 +78,16 @@ impl Default for Metrics {
             queue_secs: Mutex::new("metrics.queue_secs", Stats::default()),
             exec_secs: Mutex::new("metrics.exec_secs", Stats::default()),
             store: Mutex::new("metrics.store", None),
+            net_wait_secs: Mutex::new("metrics.net_wait_secs",
+                                      Stats::default()),
+            net_depth: Mutex::new("metrics.net_depth", Stats::default()),
+            net_rejected: AtomicU64::new(0),
+            flush_reasons: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
         }
     }
 }
@@ -76,6 +127,42 @@ impl Metrics {
         }
         self.queue_secs.lock_recover().push(queue.as_secs_f64());
         self.exec_secs.lock_recover().push(exec.as_secs_f64());
+    }
+
+    /// A network request cleared admission and reached the dispatch
+    /// thread after `wait` in the admission queue, which then held
+    /// `depth` requests (a queue-depth sample at dequeue time).
+    pub fn on_net_admit(&self, wait: Duration, depth: usize) {
+        self.net_wait_secs.lock_recover().push(wait.as_secs_f64());
+        self.net_depth.lock_recover().push(depth as f64);
+    }
+
+    /// A network request was refused at admission (queue full or
+    /// session cap).
+    pub fn on_net_rejected(&self) {
+        self.net_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The batching thread flushed pending work for `reason`.
+    pub fn on_flush(&self, reason: FlushReason) {
+        self.flush_reasons[reason as usize]
+            .fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn net_wait_stats(&self) -> Stats {
+        self.net_wait_secs.lock_recover().clone()
+    }
+
+    pub fn net_depth_stats(&self) -> Stats {
+        self.net_depth.lock_recover().clone()
+    }
+
+    pub fn net_rejected(&self) -> u64 {
+        self.net_rejected.load(Ordering::Relaxed)
+    }
+
+    pub fn flush_count(&self, reason: FlushReason) -> u64 {
+        self.flush_reasons[reason as usize].load(Ordering::Relaxed)
     }
 
     pub fn submitted(&self) -> u64 {
@@ -126,6 +213,25 @@ impl Metrics {
             out.push('\n');
             out.push_str(&s.summary());
         }
+        let w = self.net_wait_stats();
+        if !w.is_empty() || self.net_rejected() > 0 {
+            let d = self.net_depth_stats();
+            out.push('\n');
+            out.push_str(&format!(
+                "net: admitted={} rejected={} wait_p50={} wait_p99={} \
+                 depth_mean={:.1}",
+                w.len(),
+                self.net_rejected(),
+                crate::util::human_secs(w.p50()),
+                crate::util::human_secs(w.p99()),
+                d.mean(),
+            ));
+            for r in FlushReason::ALL {
+                out.push_str(&format!(" flush_{}={}",
+                                      r.name(),
+                                      self.flush_count(r)));
+            }
+        }
         out
     }
 
@@ -149,6 +255,35 @@ impl Metrics {
                 self.store_stats()
                     .map(|s| s.to_json())
                     .unwrap_or(Json::Null),
+            ),
+            ("net", self.net_json()),
+        ])
+    }
+
+    /// Network-admission and flush-policy counters as JSON (the "net"
+    /// section of [`Self::to_json`]).
+    fn net_json(&self) -> crate::jsonlite::Json {
+        use crate::jsonlite::Json;
+        let w = self.net_wait_stats();
+        let d = self.net_depth_stats();
+        Json::obj(vec![
+            ("admitted", Json::num(w.len() as f64)),
+            ("rejected", Json::num(self.net_rejected() as f64)),
+            ("wait_p50_s", Json::num(w.p50())),
+            ("wait_p99_s", Json::num(w.p99())),
+            ("depth_mean", Json::num(d.mean())),
+            ("depth_max", Json::num(d.max())),
+            (
+                "flush_reasons",
+                Json::obj(
+                    FlushReason::ALL
+                        .iter()
+                        .map(|&r| {
+                            (r.name(),
+                             Json::num(self.flush_count(r) as f64))
+                        })
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -214,6 +349,37 @@ mod tests {
         assert_eq!(j.get("store").get("remote_hits").as_usize(),
                    Some(0));
         assert_eq!(j.get("store").get("spilled").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn net_counters_surface_in_summary_and_json() {
+        let m = Metrics::new();
+        // quiet metrics carry an (all-zero) net section in JSON but no
+        // net line in the human summary
+        assert!(!m.summary().contains("net:"));
+        assert_eq!(m.to_json().get("net").get("admitted").as_usize(),
+                   Some(0));
+        m.on_net_admit(Duration::from_millis(5), 3);
+        m.on_net_admit(Duration::from_millis(15), 7);
+        m.on_net_rejected();
+        m.on_flush(FlushReason::Tokens);
+        m.on_flush(FlushReason::Deadline);
+        m.on_flush(FlushReason::Deadline);
+        assert_eq!(m.net_rejected(), 1);
+        assert_eq!(m.flush_count(FlushReason::Deadline), 2);
+        assert_eq!(m.flush_count(FlushReason::Ratio), 0);
+        let s = m.summary();
+        assert!(s.contains("net: admitted=2 rejected=1"), "{s}");
+        assert!(s.contains("flush_deadline=2"), "{s}");
+        let net = m.to_json().get("net").clone();
+        assert_eq!(net.get("admitted").as_usize(), Some(2));
+        assert_eq!(net.get("rejected").as_usize(), Some(1));
+        assert_eq!(net.get("depth_max").as_usize(), Some(7));
+        assert_eq!(
+            net.get("flush_reasons").get("deadline").as_usize(),
+            Some(2)
+        );
+        assert!(net.get("wait_p99_s").as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -59,7 +59,7 @@ use crate::tensor::Tensor;
 use crate::util::sync::RwLock;
 
 pub use batcher::{Batch, BatcherConfig, DynamicBatcher};
-pub use metrics::Metrics;
+pub use metrics::{FlushReason, Metrics};
 pub use router::{RouteKey, Router};
 pub use session::SessionHandle;
 pub use worker::DispatchError;
@@ -317,6 +317,22 @@ impl Coordinator {
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// Shared handle to the metrics sink. The network front-end hands
+    /// this to its accept/connection threads so admission events
+    /// (queue wait, rejections) are recorded off the dispatch thread —
+    /// the `Coordinator` itself is not `Sync` and never leaves its
+    /// thread.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Requests admitted to the batcher but not yet flushed to the
+    /// worker pool — the "waiting" half of a waiting/served flush
+    /// policy.
+    pub fn pending_len(&self) -> usize {
+        self.batcher.pending_len()
     }
 
     pub fn runtime(&self) -> &Arc<Runtime> {
@@ -669,4 +685,23 @@ impl Coordinator {
     pub fn shutdown(self) {
         self.pool.shutdown();
     }
+}
+
+/// Default per-retry drain window for [`submit_with_retry`]: long
+/// enough that a drained response usually frees a dispatch slot, short
+/// enough that a stalled pool surfaces within seconds.
+pub const DEFAULT_DRAIN: Duration = Duration::from_millis(50);
+
+/// The crate's one submit-with-backpressure policy with its default
+/// drain window applied — thin wrapper over
+/// [`Coordinator::submit_with_retry`], re-exported by `server` so the
+/// CLI loop, the network dispatch thread, and tests cannot drift onto
+/// different retry behavior.
+pub fn submit_with_retry(
+    coord: &mut Coordinator,
+    artifact: &str,
+    inputs: Vec<HostValue>,
+    drained: impl FnMut(Response),
+) -> Result<u64> {
+    coord.submit_with_retry(artifact, inputs, DEFAULT_DRAIN, drained)
 }

@@ -21,7 +21,6 @@
 //! degrades to a miss — the caller decomposes locally, never blocks on
 //! a dead peer (10 s IO timeouts).
 
-use std::io::{ErrorKind, Read, Write};
 use std::net::{
     IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream,
     ToSocketAddrs,
@@ -38,77 +37,13 @@ use super::{
     Fingerprint,
 };
 use crate::jsonlite::Json;
-
-/// Upper bound on one *response* frame — a (16k + 16k) · r=512 factor
-/// pair prints well under this; anything bigger is a protocol error,
-/// not a factor.
-const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
-
-/// Upper bound on one inbound *request* frame on the service side.
-/// Requests are ~60 bytes of JSON; honoring the response-sized cap for
-/// unauthenticated inbound traffic would let any peer make the server
-/// allocate 256 MiB per connection from a 4-byte length prefix.
-const MAX_REQUEST_BYTES: u32 = 64 * 1024;
-
-/// Per-connection read/write timeout: a dead peer costs one timeout,
-/// then the caller falls back to decomposing locally.
-const IO_TIMEOUT: Duration = Duration::from_secs(10);
-
-/// Bound on establishing a connection — a black-holed peer (firewalled
-/// host, dead route) must cost seconds, not the OS's multi-minute TCP
-/// connect timeout, before the caller decomposes locally.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
-
-// ---------------------------------------------------------------------------
-// Framing
-// ---------------------------------------------------------------------------
-
-/// Write one length-prefixed jsonlite frame.
-pub fn write_frame(w: &mut impl Write, json: &Json) -> Result<()> {
-    let payload = json.dump();
-    let bytes = payload.as_bytes();
-    if bytes.len() > MAX_FRAME_BYTES as usize {
-        bail!("frame of {} bytes exceeds the {MAX_FRAME_BYTES} limit",
-              bytes.len());
-    }
-    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
-    w.write_all(bytes)?;
-    w.flush()?;
-    Ok(())
-}
-
-/// Read one length-prefixed jsonlite frame (response-sized cap).
-/// `Ok(None)` is a clean EOF (the peer closed between requests); a
-/// torn frame is an error.
-pub fn read_frame(r: &mut impl Read) -> Result<Option<Json>> {
-    read_frame_limited(r, MAX_FRAME_BYTES)
-}
-
-/// [`read_frame`] with an explicit size cap — the service reads
-/// *requests* with the small [`MAX_REQUEST_BYTES`] cap so a hostile
-/// length prefix cannot force a huge allocation.
-pub fn read_frame_limited(r: &mut impl Read,
-                          max_bytes: u32) -> Result<Option<Json>> {
-    let mut len = [0u8; 4];
-    match r.read_exact(&mut len) {
-        Ok(()) => {}
-        Err(e) if e.kind() == ErrorKind::UnexpectedEof => {
-            return Ok(None);
-        }
-        Err(e) => return Err(e.into()),
-    }
-    let len = u32::from_le_bytes(len);
-    if len > max_bytes {
-        bail!("frame of {len} bytes exceeds the {max_bytes} limit");
-    }
-    let mut buf = vec![0u8; len as usize];
-    r.read_exact(&mut buf)?;
-    let text = std::str::from_utf8(&buf)
-        .map_err(|e| anyhow!("non-utf8 frame: {e}"))?;
-    Ok(Some(
-        Json::parse(text).map_err(|e| anyhow!("bad frame: {e}"))?,
-    ))
-}
+// The frame codec lives in util::frame (shared with the serving
+// front-end); re-exported here because this module introduced it and
+// existing callers import it from this path.
+pub use crate::util::frame::{
+    read_frame, read_frame_limited, set_io_timeouts, write_frame,
+    CONNECT_TIMEOUT, IO_TIMEOUT, MAX_FRAME_BYTES, MAX_REQUEST_BYTES,
+};
 
 // ---------------------------------------------------------------------------
 // Server
@@ -216,8 +151,7 @@ fn accept_loop(listener: TcpListener, store: Arc<FactorStore>,
 /// One connection: answer request frames until the peer closes.
 fn handle_conn(mut stream: TcpStream, store: &FactorStore,
                served: &AtomicU64) -> Result<()> {
-    stream.set_read_timeout(Some(IO_TIMEOUT))?;
-    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    set_io_timeouts(&stream, IO_TIMEOUT)?;
     while let Some(req) =
         read_frame_limited(&mut stream, MAX_REQUEST_BYTES)?
     {
@@ -305,8 +239,7 @@ impl RemoteStore {
         let mut stream = TcpStream::connect_timeout(&addr,
                                                     CONNECT_TIMEOUT)
             .map_err(|e| anyhow!("connect {}: {e}", self.addr))?;
-        stream.set_read_timeout(Some(IO_TIMEOUT))?;
-        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        set_io_timeouts(&stream, IO_TIMEOUT)?;
         let req = Json::obj(vec![
             ("op", Json::str("get")),
             ("key", Json::str(&format!("{key}"))),
@@ -333,51 +266,10 @@ impl RemoteStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Cursor;
 
-    #[test]
-    fn frame_roundtrip() {
-        let json = Json::obj(vec![
-            ("op", Json::str("get")),
-            ("key", Json::str("00000000000000ff")),
-        ]);
-        let mut buf = Vec::new();
-        write_frame(&mut buf, &json).unwrap();
-        assert_eq!(&buf[..4], &(buf.len() as u32 - 4).to_le_bytes()[..]);
-        let back = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
-        assert_eq!(back.get("op").as_str(), Some("get"));
-        assert_eq!(back.get("key").as_str(), Some("00000000000000ff"));
-    }
-
-    #[test]
-    fn read_frame_clean_eof_is_none() {
-        let empty: &[u8] = &[];
-        assert!(read_frame(&mut Cursor::new(empty)).unwrap().is_none());
-    }
-
-    #[test]
-    fn read_frame_rejects_oversized_prefix() {
-        let bytes = u32::MAX.to_le_bytes();
-        assert!(read_frame(&mut Cursor::new(&bytes)).is_err());
-    }
-
-    #[test]
-    fn service_request_cap_rejects_huge_prefix_without_allocating() {
-        // a response-sized (256 MiB) length prefix on the REQUEST path
-        // must be refused at the small request cap, not allocated
-        let bytes = MAX_FRAME_BYTES.to_le_bytes();
-        assert!(read_frame_limited(&mut Cursor::new(&bytes),
-                                   MAX_REQUEST_BYTES)
-            .is_err());
-    }
-
-    #[test]
-    fn torn_frame_is_an_error_not_eof() {
-        let mut buf = Vec::new();
-        buf.extend_from_slice(&100u32.to_le_bytes());
-        buf.extend_from_slice(b"short");
-        assert!(read_frame(&mut Cursor::new(&buf)).is_err());
-    }
+    // frame-codec robustness lives with the codec (util::frame unit
+    // tests + tests/jsonlite_robustness.rs); this module only tests
+    // the factor-service request semantics on top of it
 
     #[test]
     fn answer_handles_malformed_requests() {

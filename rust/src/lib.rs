@@ -99,7 +99,13 @@
 //!   same batcher, so one flush carries a mixed prefill+decode batch
 //!   and step outputs are bitwise stable across flush orderings.
 //! * [`server`] — CLI + config + run loop (including the `plan`
-//!   subcommand).
+//!   subcommand), and the network front-end: a TGI-style TCP router
+//!   ([`server::NetServer`]) with bounded admission
+//!   ([`server::queue`]), a single dispatch thread owning the
+//!   coordinator with a waiting/served flush policy, typed error
+//!   frames over the shared [`util::frame`] codec, and the
+//!   [`server::loadgen`] wave driver behind the `loadgen` binary and
+//!   the `serving_load` bench.
 //! * [`lint`] — flashlint, the in-repo static-analysis pass enforcing
 //!   the serving core's concurrency and panic-safety invariants
 //!   (tokenizer, rules R1–R5, hot-path call-graph); paired with the

@@ -1,0 +1,368 @@
+//! Load generation against a live [`super::netserver::NetServer`].
+//!
+//! [`run_wave`] opens `connections` concurrent TCP clients and drives
+//! `requests_per_conn` interactions down each: one-shot prefills when
+//! `decode_steps == 0`, otherwise the full session lifecycle (`open` →
+//! `prefill` → `decode_steps` × `step` → `close`). All payloads use
+//! the wire's *seed form* — a few dozen bytes per frame, expanded to
+//! tensors server-side — so the generator measures serving behavior
+//! (admission, batching, flush policy), not JSON float printing.
+//!
+//! The merged [`WaveOutcome`] separates the three ways a request can
+//! not complete: `overloaded` (the server's admission control said no
+//! — the load test working as designed), `errors` (any other typed
+//! error frame), and `protocol_errors` (transport/framing damage —
+//! always a bug somewhere). The CI smoke gate asserts the last bucket
+//! is zero while throughput is nonzero.
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::jsonlite::Json;
+use crate::util::frame::{
+    read_frame, set_io_timeouts, write_frame, CONNECT_TIMEOUT,
+};
+use crate::util::Stats;
+
+/// Client-side IO timeout. Matches the server's reply timeout: an
+/// admitted request may legitimately wait out a deep queue before its
+/// batch runs.
+const CLIENT_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// One load wave: `connections` clients, `requests_per_conn`
+/// interactions each.
+#[derive(Clone, Debug)]
+pub struct WaveConfig {
+    /// Server address, e.g. `"127.0.0.1:4891"`.
+    pub addr: String,
+    /// Host plan to serve against (see
+    /// [`super::netserver::register_demo_plan`]).
+    pub plan: String,
+    pub connections: usize,
+    pub requests_per_conn: usize,
+    /// Rows per prefill/one-shot (seed-form `n`).
+    pub prefill_rows: usize,
+    /// Decode steps per interaction; `0` switches to one-shot mode.
+    pub decode_steps: usize,
+    /// Base seed; each connection and request derives its own.
+    pub seed: u64,
+}
+
+impl Default for WaveConfig {
+    fn default() -> Self {
+        Self {
+            addr: String::new(),
+            plan: String::new(),
+            connections: 8,
+            requests_per_conn: 4,
+            prefill_rows: 32,
+            decode_steps: 4,
+            seed: 0x10ad,
+        }
+    }
+}
+
+/// Merged result of one wave.
+#[derive(Debug)]
+pub struct WaveOutcome {
+    /// Per-operation round-trip latency (seconds): prefill, step and
+    /// one-shot exchanges; open/close bookkeeping is excluded.
+    pub latency: Stats,
+    /// Ok-frames for prefill/step/one-shot operations.
+    pub completed: u64,
+    /// Typed error frames other than `overloaded`.
+    pub errors: u64,
+    /// `overloaded` refusals (admission control at work).
+    pub overloaded: u64,
+    /// Transport or framing failures — protocol bugs.
+    pub protocol_errors: u64,
+    /// Wall-clock for the whole wave.
+    pub wall_secs: f64,
+}
+
+impl WaveOutcome {
+    /// Completed operations per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.completed as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Tallies one connection thread reports back for merging.
+struct ConnTally {
+    latency: Vec<f64>,
+    completed: u64,
+    errors: u64,
+    overloaded: u64,
+    protocol_errors: u64,
+}
+
+impl ConnTally {
+    fn new() -> Self {
+        Self {
+            latency: Vec::new(),
+            completed: 0,
+            errors: 0,
+            overloaded: 0,
+            protocol_errors: 0,
+        }
+    }
+
+    /// Classify one response frame (`None` = transport failure).
+    fn observe(&mut self, resp: Option<&Json>, rtt: f64) {
+        match resp {
+            None => self.protocol_errors += 1,
+            Some(r) if r.get("ok").as_bool() == Some(true) => {
+                self.completed += 1;
+                self.latency.push(rtt);
+            }
+            Some(r) if r.get("kind").as_str() == Some("overloaded") => {
+                self.overloaded += 1;
+            }
+            Some(_) => self.errors += 1,
+        }
+    }
+}
+
+/// Run one wave and merge the per-connection tallies.
+pub fn run_wave(cfg: &WaveConfig) -> WaveOutcome {
+    let started = Instant::now();
+    let (tx, rx) = mpsc::channel::<ConnTally>();
+    let mut spawned = 0usize;
+    for ci in 0..cfg.connections {
+        let cfg = cfg.clone();
+        let tx = tx.clone();
+        // seeds stay below 2^53 so the wire's f64 numbers carry them
+        // exactly
+        let seed = cfg.seed ^ ((ci as u64) << 32);
+        if std::thread::Builder::new()
+            .spawn(move || {
+                let _ = tx.send(conn_worker(&cfg, seed));
+            })
+            .is_ok()
+        {
+            spawned += 1;
+        }
+    }
+    drop(tx);
+    let mut out = WaveOutcome {
+        latency: Stats::new(),
+        completed: 0,
+        errors: 0,
+        overloaded: 0,
+        protocol_errors: 0,
+        wall_secs: 0.0,
+    };
+    if spawned < cfg.connections {
+        // thread exhaustion: count the connections that never ran
+        out.protocol_errors += (cfg.connections - spawned) as u64;
+    }
+    for tally in rx {
+        for l in tally.latency {
+            out.latency.push(l);
+        }
+        out.completed += tally.completed;
+        out.errors += tally.errors;
+        out.overloaded += tally.overloaded;
+        out.protocol_errors += tally.protocol_errors;
+    }
+    out.wall_secs = started.elapsed().as_secs_f64();
+    out
+}
+
+/// One client connection's work for the wave.
+fn conn_worker(cfg: &WaveConfig, seed: u64) -> ConnTally {
+    let mut tally = ConnTally::new();
+    let Some(mut stream) = connect(&cfg.addr) else {
+        // the whole connection's worth of requests failed transport
+        tally.protocol_errors += cfg.requests_per_conn.max(1) as u64;
+        return tally;
+    };
+    for ri in 0..cfg.requests_per_conn {
+        let seed = seed ^ (ri as u64);
+        let ok = if cfg.decode_steps == 0 {
+            run_oneshot(&mut stream, cfg, seed, &mut tally)
+        } else {
+            run_session(&mut stream, cfg, seed, &mut tally)
+        };
+        if !ok {
+            break; // transport gone; observe() already counted it
+        }
+    }
+    tally
+}
+
+/// One one-shot interaction. Returns `false` when the transport died.
+fn run_oneshot(stream: &mut TcpStream, cfg: &WaveConfig, seed: u64,
+               tally: &mut ConnTally) -> bool {
+    let req = Json::obj(vec![
+        ("op", Json::str("oneshot")),
+        ("artifact", Json::str(&cfg.plan)),
+        ("n", Json::num(cfg.prefill_rows as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("echo", Json::Bool(false)),
+    ]);
+    let at = Instant::now();
+    let resp = exchange(stream, &req);
+    tally.observe(resp.as_ref(), at.elapsed().as_secs_f64());
+    resp.is_some()
+}
+
+/// One full session lifecycle. Returns `false` when the transport
+/// died.
+fn run_session(stream: &mut TcpStream, cfg: &WaveConfig, seed: u64,
+               tally: &mut ConnTally) -> bool {
+    let open = Json::obj(vec![
+        ("op", Json::str("open")),
+        ("plan", Json::str(&cfg.plan)),
+    ]);
+    let Some(resp) = exchange(stream, &open) else {
+        tally.protocol_errors += 1;
+        return false;
+    };
+    let Some(session) = resp.get("session").as_usize() else {
+        // open refused (session cap, unknown plan): classify the
+        // refusal and move on to the next interaction
+        if resp.get("kind").as_str() == Some("overloaded") {
+            tally.overloaded += 1;
+        } else {
+            tally.errors += 1;
+        }
+        return true;
+    };
+    let sid = Json::num(session as f64);
+
+    let prefill = Json::obj(vec![
+        ("op", Json::str("prefill")),
+        ("session", sid.clone()),
+        ("n", Json::num(cfg.prefill_rows as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("echo", Json::Bool(false)),
+    ]);
+    let at = Instant::now();
+    let resp = exchange(stream, &prefill);
+    tally.observe(resp.as_ref(), at.elapsed().as_secs_f64());
+    if resp.is_none() {
+        return false;
+    }
+
+    for t in 0..cfg.decode_steps {
+        let step = Json::obj(vec![
+            ("op", Json::str("step")),
+            ("session", sid.clone()),
+            ("t", Json::num((cfg.prefill_rows + t) as f64)),
+            ("seed", Json::num(seed as f64)),
+            ("echo", Json::Bool(false)),
+        ]);
+        let at = Instant::now();
+        let resp = exchange(stream, &step);
+        tally.observe(resp.as_ref(), at.elapsed().as_secs_f64());
+        if resp.is_none() {
+            return false;
+        }
+    }
+
+    let close = Json::obj(vec![
+        ("op", Json::str("close")),
+        ("session", sid),
+    ]);
+    if exchange(stream, &close).is_none() {
+        tally.protocol_errors += 1;
+        return false;
+    }
+    true
+}
+
+/// One request/response round trip. `None` only on transport failure —
+/// typed error frames come back as `Some`.
+fn exchange(stream: &mut TcpStream, req: &Json) -> Option<Json> {
+    if write_frame(stream, req).is_err() {
+        return None;
+    }
+    match read_frame(stream) {
+        Ok(Some(resp)) => Some(resp),
+        _ => None,
+    }
+}
+
+fn connect(addr: &str) -> Option<TcpStream> {
+    let resolved = addr.to_socket_addrs().ok()?.next()?;
+    let stream =
+        TcpStream::connect_timeout(&resolved, CONNECT_TIMEOUT).ok()?;
+    set_io_timeouts(&stream, CLIENT_IO_TIMEOUT).ok()?;
+    Some(stream)
+}
+
+/// Poll `ping` until the server answers or `deadline` passes. Spawning
+/// callers (CI smoke, tests) use this instead of sleeping.
+pub fn wait_ready(addr: &str, deadline: Duration) -> bool {
+    let until = Instant::now() + deadline;
+    while Instant::now() < until {
+        if let Some(mut stream) = connect(addr) {
+            let ping = Json::obj(vec![("op", Json::str("ping"))]);
+            if let Some(resp) = exchange(&mut stream, &ping) {
+                if resp.get("pong").as_bool() == Some(true) {
+                    return true;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+/// Fetch the server's `stats` frame (queue depth + full metrics JSON).
+pub fn fetch_stats(addr: &str) -> Result<Json> {
+    let mut stream = connect(addr)
+        .ok_or_else(|| anyhow!("connect {addr} for stats"))?;
+    let req = Json::obj(vec![("op", Json::str("stats"))]);
+    exchange(&mut stream, &req)
+        .ok_or_else(|| anyhow!("stats exchange with {addr} failed"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_classifies_frames() {
+        let mut t = ConnTally::new();
+        t.observe(None, 0.0);
+        let ok = Json::obj(vec![("ok", Json::Bool(true))]);
+        t.observe(Some(&ok), 0.01);
+        let busy = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("kind", Json::str("overloaded")),
+        ]);
+        t.observe(Some(&busy), 0.0);
+        let bad = Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("kind", Json::str("validation")),
+        ]);
+        t.observe(Some(&bad), 0.0);
+        assert_eq!(t.protocol_errors, 1);
+        assert_eq!(t.completed, 1);
+        assert_eq!(t.overloaded, 1);
+        assert_eq!(t.errors, 1);
+        assert_eq!(t.latency.len(), 1);
+    }
+
+    #[test]
+    fn throughput_is_zero_without_wall_time() {
+        let out = WaveOutcome {
+            latency: Stats::new(),
+            completed: 10,
+            errors: 0,
+            overloaded: 0,
+            protocol_errors: 0,
+            wall_secs: 0.0,
+        };
+        assert_eq!(out.throughput(), 0.0);
+    }
+}

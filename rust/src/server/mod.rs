@@ -8,6 +8,9 @@
 //! * `run <artifact> [-n ITERS]` — execute one artifact, print timing.
 //! * `serve [--requests N] [--workers W]` — synthetic serving loop through
 //!   the full coordinator (router → batcher → workers), print metrics.
+//! * `serve --listen ADDR` — the TCP serving front-end instead: a
+//!   [`netserver::NetServer`] on a synthetic demo plan (no artifacts
+//!   needed), driven by the `loadgen` binary.
 //! * `plan --bias KIND [...]` — run the Table 1 planner on a synthetic
 //!   bias and print the emitted plan (no artifacts needed).
 //! * `warm --store PATH`    — pre-decompose a bias zoo into an on-disk
@@ -24,6 +27,19 @@
 //! [`crate::factorstore::FactorService`] (started by `serve
 //! --store-serve ADDR`) before decomposing locally.
 
+pub mod loadgen;
+pub mod netserver;
+pub mod queue;
+
+pub use loadgen::{
+    fetch_stats, run_wave, wait_ready, WaveConfig, WaveOutcome,
+};
+pub use netserver::{
+    demo_plan_name, register_demo_plan, synthetic_qkv, synthetic_rows,
+    NetServer,
+};
+pub use queue::{FlushPolicy, ServeConfig};
+
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -33,7 +49,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::bias;
 use crate::coordinator::{
-    Coordinator, CoordinatorConfig, Response, RouteKey, Router,
+    Coordinator, CoordinatorConfig, RouteKey, Router,
 };
 use crate::factorstore::{FactorStore, RemoteStore};
 use crate::iomodel::Geometry;
@@ -53,7 +69,8 @@ pub struct Cli {
 /// Flags that never take a value: `--verbose x` must not swallow the
 /// positional `x` (a boolean flag used to eat the following artifact
 /// name). `--flag=value` remains available to force any value.
-const BOOL_FLAGS: &[&str] = &["causal", "jit", "verbose"];
+const BOOL_FLAGS: &[&str] =
+    &["causal", "jit", "verbose", "spawn", "check", "json"];
 
 impl Cli {
     /// Hand-rolled parser: `cmd pos1 --flag value --flag=value
@@ -107,6 +124,15 @@ impl Cli {
                 .map_err(|_| anyhow!("--{name} expects an integer, got {v}")),
         }
     }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v}")),
+        }
+    }
 }
 
 /// Config file: `key = value` lines, `#` comments (mini-TOML subset).
@@ -146,6 +172,16 @@ COMMANDS:
                                warmed file plans with zero SVD work;
                                --store-serve exports the store to the
                                fleet over TCP)
+  serve --listen ADDR [--n N] [--for SECS] [--workers W] [--max-batch B]
+        [--queue-depth Q] [--max-batch-total-tokens T]
+        [--waiting-served-ratio R] [--max-sessions S]
+                               TCP serving front-end instead: admission
+                               queue + continuous-batching dispatch over
+                               length-prefixed JSON frames, serving a
+                               synthetic causal-ALiBi demo plan at
+                               context N (no artifacts needed); --for 0
+                               (the default) serves until killed; drive
+                               it with the `loadgen` binary
   plan --bias KIND [--n N] [--m M] [--c C] [--sram ELEMS] [--rank R]
        [--causal] [--jit] [--store PATH] [--store-budget BYTES]
        [--store-remote ADDR]
@@ -526,22 +562,10 @@ fn cmd_warm(cli: &Cli) -> Result<String> {
     ))
 }
 
-/// Submit with bounded backpressure retries — the CLI's spelling of
-/// [`Coordinator::submit_with_retry`] (50 ms drain rounds, so 1000
-/// retries bound the wait at ~50 s against a fully wedged worker
-/// pool). A refused submit drains one response (handed to `drained` —
-/// the caller must account for it) and retries; any non-backpressure
-/// error propagates immediately instead of spinning forever (an
-/// unknown artifact used to wedge the serving loop here).
-pub fn submit_with_retry(
-    coord: &mut Coordinator,
-    artifact: &str,
-    inputs: Vec<HostValue>,
-    drained: impl FnMut(Response),
-) -> Result<u64> {
-    coord.submit_with_retry(artifact, inputs,
-                            Duration::from_millis(50), drained)
-}
+// The one submit-with-backpressure policy, re-exported so the CLI
+// loop, the network dispatch thread, and tests share it (this module
+// used to carry its own copy, which had already drifted once).
+pub use crate::coordinator::submit_with_retry;
 
 /// What [`serve_loop`] observed; failures are reported after cleanup.
 struct ServeOutcome {
@@ -609,9 +633,59 @@ fn serve_loop(
     })
 }
 
+/// `serve --listen ADDR`: the TCP serving front-end. Serves the
+/// synthetic demo plan from an empty runtime — admission control,
+/// continuous batching and the session protocol all run without any
+/// PJRT artifacts, so this is also what CI's load smoke drives.
+fn cmd_serve_net(cli: &Cli, addr: &str) -> Result<String> {
+    let n = cli.flag_usize("n", 256)?;
+    let secs = cli.flag_usize("for", 0)?;
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        workers: cli.flag_usize("workers", d.workers)?,
+        max_batch: cli.flag_usize("max-batch", d.max_batch)?,
+        queue_depth: cli.flag_usize("queue-depth", d.queue_depth)?,
+        max_batch_total_tokens: cli.flag_usize(
+            "max-batch-total-tokens",
+            d.max_batch_total_tokens,
+        )?,
+        waiting_served_ratio: cli.flag_f64(
+            "waiting-served-ratio",
+            d.waiting_served_ratio,
+        )?,
+        max_sessions: cli.flag_usize("max-sessions", d.max_sessions)?,
+        ..d
+    };
+    let coord = Coordinator::new(
+        Arc::new(Runtime::empty()),
+        cfg.coordinator_config(),
+    );
+    netserver::register_demo_plan(&coord, n)?;
+    let server = NetServer::serve(coord, cfg, addr)?;
+    // stdout, flushed: a spawning harness (CI's load smoke) waits for
+    // this line to learn the bound port
+    println!(
+        "flashbias netserver listening on {} (plan {})",
+        server.addr(),
+        demo_plan_name(n)
+    );
+    if secs == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(secs as u64));
+    let summary = server.metrics().summary();
+    server.shutdown();
+    Ok(format!("{summary}\n"))
+}
+
 /// Synthetic serving workload: route random-length attention requests
 /// through the full stack; the planner picks the artifact variant.
 fn cmd_serve(cli: &Cli) -> Result<String> {
+    if let Some(addr) = cli.flag("listen") {
+        return cmd_serve_net(cli, addr);
+    }
     let n_requests = cli.flag_usize("requests", 64)?;
     let workers = cli.flag_usize("workers", 2)?;
     let max_batch = cli.flag_usize("max-batch", 8)?;

@@ -1,0 +1,1096 @@
+//! TCP serving front-end: the network router in front of the
+//! [`Coordinator`].
+//!
+//! The shape is the TGI/vLLM router split, sized down to this crate:
+//!
+//! * **Connection threads** (one per accepted socket) parse and
+//!   validate request frames, then *admit* them into a bounded
+//!   [`super::queue::AdmissionQueue`]. A full queue is an immediate
+//!   `overloaded` error frame — admission control, not an invisible
+//!   parked connection. Validation failures never reach the
+//!   coordinator.
+//! * **One dispatch thread** owns the [`Coordinator`] (which is `Send`
+//!   but deliberately not `Sync`): it drains admitted work, submits
+//!   prefills/decode steps/one-shots, correlates [`Response`]s back to
+//!   per-request reply channels, and runs the waiting/served
+//!   [`super::queue::FlushPolicy`] every tick, counting each decision
+//!   per [`FlushReason`] in [`Metrics`].
+//!
+//! Wire protocol: the shared length-prefixed jsonlite framing from
+//! [`crate::util::frame`] (same codec as the factor service). One
+//! request frame yields exactly one response frame, in order, per
+//! connection. Ops:
+//!
+//! | op        | request fields                          | ok-response |
+//! |-----------|-----------------------------------------|-------------|
+//! | `ping`    | —                                       | `{"ok":true,"pong":true}` |
+//! | `stats`   | —                                       | `{"ok":true,"metrics":{...},"queue_depth":D}` |
+//! | `open`    | `plan`                                  | `{"ok":true,"session":ID}` |
+//! | `prefill` | `session`, payload, `echo?`             | `{"ok":true,"id":R,"shape":[n,Cv],"out":[...]?}` |
+//! | `step`    | `session`, row payload, `echo?`         | `{"ok":true,"id":R,"shape":[Cv],"out":[...]?}` |
+//! | `oneshot` | `artifact`, payload, `echo?`            | like `prefill` |
+//! | `close`   | `session`                               | `{"ok":true,"closed":ID}` |
+//!
+//! A payload is either explicit flat arrays `q`/`k`/`v` (row-major,
+//! lengths multiples of the plan's head width C) or the *seed form*
+//! `{"n":N,"seed":S}` (`{"t":T,"seed":S}` for steps): the server
+//! generates the tensors with [`synthetic_qkv`] / [`synthetic_rows`],
+//! so a load generator streams kilobyte frames instead of megabyte
+//! prompts and a test can replay the exact same inputs through an
+//! in-process [`crate::plan::SessionState`] for bitwise comparison.
+//! `"echo":false` suppresses the output array (latency benches don't
+//! pay for float printing).
+//!
+//! Errors are typed frames `{"ok":false,"kind":K,"error":MSG}` with
+//! `K` ∈ `validation` (malformed request, bad shapes, unknown plan),
+//! `session` (unknown/foreign session id, session state machine
+//! refusal), `overloaded` (admission queue full, session cap,
+//! coordinator backpressure), `unavailable` (server shutting down),
+//! `exec` (the batch ran and failed), `frame` (protocol damage; the
+//! connection closes after reporting). Sessions are connection-owned:
+//! a session opened on one connection is invisible to every other, and
+//! sessions still open when the peer disconnects are closed
+//! best-effort.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{
+    IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream,
+    ToSocketAddrs,
+};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{
+    Coordinator, FlushReason, HostPlanRegistry, Metrics, Response,
+    SessionApiError, SubmitError,
+};
+use crate::iomodel::Geometry;
+use crate::jsonlite::Json;
+use crate::plan::{AttentionPlan, BiasSpec, PlanOptions, Planner};
+use crate::runtime::HostValue;
+use crate::tensor::Tensor;
+use crate::util::frame::{
+    read_frame_limited, set_io_timeouts, write_frame, CONNECT_TIMEOUT,
+};
+use crate::util::Xoshiro256;
+
+use super::queue::{
+    admission_queue, AdmissionQueue, AdmissionReceiver, AdmitError,
+    ServeConfig,
+};
+
+/// How long a connection thread waits for the dispatch side to answer
+/// one admitted request before declaring the server gone. Generous:
+/// an admitted prefill legitimately waits out the whole queue ahead of
+/// it plus its batch's execution.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Dispatch-thread tick: the poll interval for admitted work, response
+/// draining, the flush policy, and the stop flag.
+const TICK: Duration = Duration::from_millis(1);
+
+// ---------------------------------------------------------------------------
+// Wire command (parsed, validated request)
+// ---------------------------------------------------------------------------
+
+/// A validated request, tensors already built — nothing in here can
+/// make the dispatch thread panic.
+enum WireCmd {
+    Open { plan: String },
+    Prefill { session: u64, q: Tensor, k: Tensor, v: Tensor, echo: bool },
+    Step { session: u64, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, echo: bool },
+    Oneshot { artifact: String, q: Tensor, k: Tensor, v: Tensor, echo: bool },
+    Close { session: u64 },
+}
+
+/// One admitted unit of work: the command plus the channel its single
+/// response frame must be sent on.
+struct Work {
+    cmd: WireCmd,
+    reply: Sender<Json>,
+}
+
+/// Per-session geometry a connection caches at `open` so later frames
+/// validate (and bound allocations) without a dispatch round trip.
+#[derive(Clone, Copy)]
+struct SessInfo {
+    /// Head width C — every row the wire carries must be a multiple.
+    c: usize,
+    /// Context limit (the plan's N): caps seed-form `n` before any
+    /// allocation happens.
+    n_max: usize,
+}
+
+/// A typed validation refusal: (wire error kind, message).
+type WireFault = (&'static str, String);
+
+fn err_json(kind: &str, msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("kind", Json::str(kind)),
+        ("error", Json::str(msg)),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic synthetic payloads (seed form)
+// ---------------------------------------------------------------------------
+
+/// The seed-form prefill/one-shot payload: `(q, k, v)`, each `(n, c)`
+/// standard normal, fully determined by `seed`. Server and test
+/// generate identical tensors from the same seed.
+pub fn synthetic_qkv(seed: u64, n: usize, c: usize) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Xoshiro256::new(seed);
+    let q = Tensor::randn(&[n, c], 1.0, &mut rng);
+    let k = Tensor::randn(&[n, c], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, c], 1.0, &mut rng);
+    (q, k, v)
+}
+
+/// The seed-form decode-step payload: `(q_row, k_row, v_row)` of width
+/// `c` for step position `t`, determined by `(seed, t)`.
+pub fn synthetic_rows(seed: u64, t: usize,
+                      c: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::new(
+        seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    );
+    let q = rng.normal_vec(c, 1.0);
+    let k = rng.normal_vec(c, 1.0);
+    let v = rng.normal_vec(c, 1.0);
+    (q, k, v)
+}
+
+/// Name of the demo plan [`register_demo_plan`] installs for context
+/// length `n`.
+pub fn demo_plan_name(n: usize) -> String {
+    format!("net_alibi_n{n}")
+}
+
+/// Register the synthetic serving plan the network tooling shares (CLI
+/// `serve --listen`, `loadgen --spawn`, the load bench, the loopback
+/// tests): causal ALiBi at context `n`, head width 64 — exact,
+/// factored, decode-capable, so both one-shots and sessions run
+/// against it. Returns the registered plan (callers replay it inline
+/// for bitwise comparisons).
+pub fn register_demo_plan(coord: &Coordinator,
+                          n: usize) -> Result<AttentionPlan> {
+    coord.plan_and_register(
+        &demo_plan_name(n),
+        &Planner::default(),
+        &BiasSpec::alibi(n, n, 0.25),
+        &Geometry::square(n, 64, 0, 100 * 1024 / 2),
+        &PlanOptions {
+            causal: true,
+            ..PlanOptions::default()
+        },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Request parsing / validation (connection side, pure)
+// ---------------------------------------------------------------------------
+
+/// Parse one request frame into a [`WireCmd`], validating everything
+/// that can be validated without the coordinator: op shape, session
+/// ownership, array widths against the plan's C, seed-form bounds
+/// against the plan's N. Array lengths are proven consistent *here*,
+/// before any [`Tensor::new`] runs — its shape assertion can never
+/// fire on wire data.
+fn parse_wire_op(
+    req: &Json,
+    my_sessions: &HashMap<u64, SessInfo>,
+    plans: &HostPlanRegistry,
+) -> Result<WireCmd, WireFault> {
+    let echo = req.get("echo").as_bool().unwrap_or(true);
+    match req.get("op").as_str() {
+        Some("open") => {
+            let plan = req.get("plan").as_str().ok_or_else(|| {
+                fault("validation", "open needs a \"plan\" name")
+            })?;
+            if plans.get(plan).is_none() {
+                return Err(fault(
+                    "validation",
+                    &format!("unknown plan {plan}"),
+                ));
+            }
+            Ok(WireCmd::Open {
+                plan: plan.to_string(),
+            })
+        }
+        Some("prefill") => {
+            let (session, info) = session_of(req, my_sessions)?;
+            let (q, k, v) = parse_qkv(req, info)?;
+            Ok(WireCmd::Prefill { session, q, k, v, echo })
+        }
+        Some("step") => {
+            let (session, info) = session_of(req, my_sessions)?;
+            let (q, k, v) = parse_rows(req, info.c)?;
+            Ok(WireCmd::Step { session, q, k, v, echo })
+        }
+        Some("oneshot") => {
+            let name = req.get("artifact").as_str().ok_or_else(|| {
+                fault("validation", "oneshot needs an \"artifact\" name")
+            })?;
+            let plan = plans.get(name).ok_or_else(|| {
+                fault(
+                    "validation",
+                    &format!(
+                        "unknown plan {name} (oneshot serves host plans)"
+                    ),
+                )
+            })?;
+            let info = SessInfo {
+                c: plan.geometry.c,
+                n_max: plan.geometry.n,
+            };
+            let (q, k, v) = parse_qkv(req, info)?;
+            Ok(WireCmd::Oneshot {
+                artifact: name.to_string(),
+                q,
+                k,
+                v,
+                echo,
+            })
+        }
+        Some("close") => {
+            let (session, _) = session_of(req, my_sessions)?;
+            Ok(WireCmd::Close { session })
+        }
+        Some(other) => {
+            Err(fault("validation", &format!("unknown op {other:?}")))
+        }
+        None => Err(fault("validation", "missing \"op\" string")),
+    }
+}
+
+fn fault(kind: &'static str, msg: &str) -> WireFault {
+    (kind, msg.to_string())
+}
+
+/// Resolve the frame's `session` id against this connection's own
+/// sessions — ids from other connections are indistinguishable from
+/// unknown ones (connection-owned sessions).
+fn session_of(
+    req: &Json,
+    my_sessions: &HashMap<u64, SessInfo>,
+) -> Result<(u64, SessInfo), WireFault> {
+    let id = req.get("session").as_usize().ok_or_else(|| {
+        fault("validation", "this op needs a \"session\" id")
+    })? as u64;
+    match my_sessions.get(&id) {
+        Some(info) => Ok((id, *info)),
+        None => Err((
+            "session",
+            format!("session {id} is not open on this connection"),
+        )),
+    }
+}
+
+/// Prefill/one-shot payload: seed form or explicit arrays, validated
+/// against `info` so the tensors below are shape-consistent by
+/// construction.
+fn parse_qkv(
+    req: &Json,
+    info: SessInfo,
+) -> Result<(Tensor, Tensor, Tensor), WireFault> {
+    let c = info.c;
+    if !req.get("seed").is_null() {
+        let seed = seed_of(req)?;
+        let n = req.get("n").as_usize().ok_or_else(|| {
+            fault("validation", "seed-form payload needs \"n\" rows")
+        })?;
+        if n == 0 || n > info.n_max {
+            return Err(fault(
+                "validation",
+                &format!("n={n} outside [1, {}]", info.n_max),
+            ));
+        }
+        return Ok(synthetic_qkv(seed, n, c));
+    }
+    let q = f32_field(req, "q")?;
+    let k = f32_field(req, "k")?;
+    let v = f32_field(req, "v")?;
+    let n = rows_of(q.len(), c, "q", info.n_max)?;
+    let m = rows_of(k.len(), c, "k", info.n_max)?;
+    if v.len() != k.len() {
+        return Err(fault(
+            "validation",
+            &format!("v has {} values, want {} (same as k)",
+                     v.len(), k.len()),
+        ));
+    }
+    Ok((
+        Tensor::new(&[n, c], q),
+        Tensor::new(&[m, c], k),
+        Tensor::new(&[m, c], v),
+    ))
+}
+
+/// Decode-step payload: seed form (`seed` + `t`) or explicit arrays of
+/// exactly `c` values each.
+fn parse_rows(
+    req: &Json,
+    c: usize,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>), WireFault> {
+    if !req.get("seed").is_null() {
+        let seed = seed_of(req)?;
+        let t = req.get("t").as_usize().ok_or_else(|| {
+            fault("validation", "seed-form step needs \"t\" (position)")
+        })?;
+        return Ok(synthetic_rows(seed, t, c));
+    }
+    let q = f32_field(req, "q")?;
+    let k = f32_field(req, "k")?;
+    let v = f32_field(req, "v")?;
+    for (name, row) in [("q", &q), ("k", &k), ("v", &v)] {
+        if row.len() != c {
+            return Err(fault(
+                "validation",
+                &format!("step {name} row has {} values, want {c}",
+                         row.len()),
+            ));
+        }
+    }
+    Ok((q, k, v))
+}
+
+fn seed_of(req: &Json) -> Result<u64, WireFault> {
+    req.get("seed")
+        .as_usize()
+        .map(|s| s as u64)
+        .ok_or_else(|| {
+            fault("validation",
+                  "\"seed\" must be a non-negative integer")
+        })
+}
+
+/// `len` must be a positive multiple of `c`, at most `n_max` rows.
+fn rows_of(
+    len: usize,
+    c: usize,
+    what: &str,
+    n_max: usize,
+) -> Result<usize, WireFault> {
+    if len == 0 || len % c != 0 {
+        return Err(fault(
+            "validation",
+            &format!("{what} has {len} values, want a positive \
+                      multiple of C={c}"),
+        ));
+    }
+    let rows = len / c;
+    if rows > n_max {
+        return Err(fault(
+            "validation",
+            &format!("{what} has {rows} rows, plan limit is {n_max}"),
+        ));
+    }
+    Ok(rows)
+}
+
+/// Extract a flat f32 array field. Non-numeric elements (including
+/// `null`, JSON's only spelling of non-finite) are validation errors.
+fn f32_field(req: &Json, key: &str) -> Result<Vec<f32>, WireFault> {
+    let arr = req.get(key).as_arr().ok_or_else(|| {
+        fault(
+            "validation",
+            &format!("payload needs \"{key}\" as a number array \
+                      (or the seed form)"),
+        )
+    })?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, x) in arr.iter().enumerate() {
+        match x.as_f64() {
+            Some(f) => out.push(f as f32),
+            None => {
+                return Err(fault(
+                    "validation",
+                    &format!("{key}[{i}] is not a number"),
+                ));
+            }
+        }
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Server lifecycle
+// ---------------------------------------------------------------------------
+
+/// The TCP serving front-end. [`Self::serve`] binds, spawns the accept
+/// and dispatch threads, and returns; dropping (or [`Self::shutdown`])
+/// stops both, drains admitted work, and shuts the coordinator down.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    accept: Option<JoinHandle<()>>,
+    dispatch: Option<JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (use `"127.0.0.1:0"` for an ephemeral port) and
+    /// serve `coord` under `cfg`. The coordinator moves into the
+    /// dispatch thread — register host plans before calling.
+    pub fn serve(coord: Coordinator, cfg: ServeConfig,
+                 addr: impl ToSocketAddrs) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow!("netserver bind: {e}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let metrics = coord.metrics_handle();
+        let plans = Arc::clone(coord.host_plans());
+        let (queue, admitted) = admission_queue::<Work>(cfg.queue_depth);
+        let dispatch = {
+            let (cfg, stop, metrics) =
+                (cfg.clone(), stop.clone(), metrics.clone());
+            std::thread::spawn(move || {
+                net_dispatch_loop(coord, &admitted, &cfg, &stop,
+                                  &metrics)
+            })
+        };
+        let accept = {
+            let (stop, metrics) = (stop.clone(), metrics.clone());
+            std::thread::spawn(move || {
+                net_accept_loop(listener, queue, plans, cfg, stop,
+                                metrics)
+            })
+        };
+        Ok(Self {
+            addr,
+            stop,
+            metrics,
+            accept: Some(accept),
+            dispatch: Some(dispatch),
+        })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The coordinator's metrics sink (admission + flush counters
+    /// included).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Stop accepting, drain admitted work, shut the coordinator down.
+    pub fn shutdown(self) {
+        // Drop does the work
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept with a throwaway connection; an
+        // unspecified bind address (0.0.0.0 / ::) is not connectable
+        // everywhere, so aim the wake at loopback on the same port
+        let mut wake = self.addr;
+        if wake.ip().is_unspecified() {
+            wake.set_ip(match wake.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let woke =
+            TcpStream::connect_timeout(&wake, CONNECT_TIMEOUT).is_ok();
+        if let Some(h) = self.accept.take() {
+            if woke {
+                let _ = h.join();
+            }
+            // wake failed: the accept thread stays parked in accept()
+            // with the stop flag set — it exits on the next connection
+            // or with the process; joining would hang forever
+        }
+        // the dispatch thread polls the stop flag every TICK, drains
+        // what was admitted, and shuts the coordinator down; joining
+        // it also drops the admission receiver, so any remaining
+        // connection threads fail fast with `unavailable`
+        if let Some(h) = self.dispatch.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accept + connection threads
+// ---------------------------------------------------------------------------
+
+fn net_accept_loop(
+    listener: TcpListener,
+    queue: AdmissionQueue<Work>,
+    plans: Arc<HostPlanRegistry>,
+    cfg: ServeConfig,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                // a persistent accept error (fd exhaustion, EMFILE)
+                // fails instantly — back off instead of busy-spinning
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let queue = queue.clone();
+        let plans = plans.clone();
+        let metrics = metrics.clone();
+        let cfg = cfg.clone();
+        std::thread::spawn(move || {
+            net_handle_conn(stream, &queue, &plans, &metrics, &cfg);
+        });
+    }
+}
+
+/// One connection: read a frame, answer it, repeat until the peer
+/// closes or the protocol breaks. Exactly one response frame per
+/// request frame, in order.
+fn net_handle_conn(
+    mut stream: TcpStream,
+    queue: &AdmissionQueue<Work>,
+    plans: &HostPlanRegistry,
+    metrics: &Metrics,
+    cfg: &ServeConfig,
+) {
+    if set_io_timeouts(&stream, cfg.io_timeout).is_err() {
+        return;
+    }
+    let mut my_sessions: HashMap<u64, SessInfo> = HashMap::new();
+    loop {
+        let req = match read_frame_limited(&mut stream,
+                                           cfg.max_request_bytes) {
+            Ok(Some(r)) => r,
+            Ok(None) => break, // clean close
+            Err(e) => {
+                // protocol damage is not recoverable mid-stream:
+                // report once (best effort) and drop the connection
+                let _ = write_frame(
+                    &mut stream,
+                    &err_json("frame", &e.to_string()),
+                );
+                break;
+            }
+        };
+        // ops answerable without the dispatch thread: never queued,
+        // never rejected
+        match req.get("op").as_str() {
+            Some("ping") => {
+                let pong = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("pong", Json::Bool(true)),
+                ]);
+                if write_frame(&mut stream, &pong).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Some("stats") => {
+                let resp = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("queue_depth", Json::num(queue.depth() as f64)),
+                    ("metrics", metrics.to_json()),
+                ]);
+                if write_frame(&mut stream, &resp).is_err() {
+                    break;
+                }
+                continue;
+            }
+            _ => {}
+        }
+        let cmd = match parse_wire_op(&req, &my_sessions, plans) {
+            Ok(c) => c,
+            Err((kind, msg)) => {
+                if write_frame(&mut stream, &err_json(kind, &msg))
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
+        // session bookkeeping material, captured before `cmd` moves
+        let opened = match &cmd {
+            WireCmd::Open { plan } => plans.get(plan).map(|p| SessInfo {
+                c: p.geometry.c,
+                n_max: p.geometry.n,
+            }),
+            _ => None,
+        };
+        let closing = match &cmd {
+            WireCmd::Close { session } => Some(*session),
+            _ => None,
+        };
+        let (tx, rx) = mpsc::channel();
+        match queue.try_admit(Work { cmd, reply: tx }) {
+            Ok(()) => {}
+            Err(AdmitError::Full(_)) => {
+                metrics.on_net_rejected();
+                let refusal =
+                    err_json("overloaded", "admission queue full");
+                if write_frame(&mut stream, &refusal).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Err(AdmitError::Closed(_)) => {
+                let _ = write_frame(
+                    &mut stream,
+                    &err_json("unavailable", "server shutting down"),
+                );
+                break;
+            }
+        }
+        let resp = match rx.recv_timeout(REPLY_TIMEOUT) {
+            Ok(r) => r,
+            Err(_) => {
+                // dispatch gone (shutdown) or wedged: either way this
+                // connection can't be answered in order anymore
+                let _ = write_frame(
+                    &mut stream,
+                    &err_json("unavailable",
+                              "server dropped the request"),
+                );
+                break;
+            }
+        };
+        if resp.get("ok").as_bool() == Some(true) {
+            if let (Some(info), Some(id)) =
+                (opened, resp.get("session").as_usize())
+            {
+                my_sessions.insert(id as u64, info);
+            }
+            if let Some(id) = closing {
+                my_sessions.remove(&id);
+            }
+        }
+        if write_frame(&mut stream, &resp).is_err() {
+            break;
+        }
+    }
+    // close any sessions the peer abandoned, best-effort: the reply
+    // channel is dropped immediately, and a full queue just leaks the
+    // session until shutdown
+    for &id in my_sessions.keys() {
+        let (tx, _rx) = mpsc::channel();
+        let _ = queue.try_admit(Work {
+            cmd: WireCmd::Close { session: id },
+            reply: tx,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch thread (owns the Coordinator)
+// ---------------------------------------------------------------------------
+
+/// In-flight request bookkeeping: where its response frame goes, and
+/// whether to carry the output array.
+struct PendingReply {
+    reply: Sender<Json>,
+    echo: bool,
+}
+
+fn net_dispatch_loop(
+    mut coord: Coordinator,
+    admitted: &AdmissionReceiver<Work>,
+    cfg: &ServeConfig,
+    stop: &AtomicBool,
+    metrics: &Metrics,
+) {
+    let policy = cfg.flush_policy();
+    let mut pending: HashMap<u64, PendingReply> = HashMap::new();
+    // (tokens, submitted-at) of requests believed still in the
+    // batcher's pending bucket, oldest first; reconciled against
+    // `coord.pending_len()` each tick because the batcher also
+    // self-flushes at max_batch
+    let mut waiting: VecDeque<(usize, Instant)> = VecDeque::new();
+    'outer: loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // drain a bounded burst of admitted work per tick: the first
+        // recv waits, the rest are opportunistic
+        let mut budget = 64usize;
+        let mut next = admitted.recv_admitted(TICK);
+        while let Some(dq) = next {
+            metrics.on_net_admit(dq.wait, dq.depth);
+            if !cfg.dispatch_delay.is_zero() {
+                std::thread::sleep(cfg.dispatch_delay);
+            }
+            if !handle_work(&mut coord, cfg, metrics, dq.item,
+                            &mut pending, &mut waiting) {
+                break 'outer; // worker pool stopped
+            }
+            budget -= 1;
+            next = if budget > 0 {
+                admitted.recv_admitted(Duration::ZERO)
+            } else {
+                None
+            };
+        }
+        while let Some(resp) = coord.recv_timeout(Duration::ZERO) {
+            finish(resp, &mut pending);
+        }
+        // waiting/served flush policy over this tick's observables
+        let waiting_n = coord.pending_len();
+        while waiting.len() > waiting_n {
+            waiting.pop_front(); // batcher self-flushed these
+        }
+        if waiting_n > 0 {
+            let in_flight =
+                pending.len().saturating_sub(waiting.len());
+            let tokens: usize = waiting.iter().map(|(t, _)| *t).sum();
+            let oldest = waiting
+                .front()
+                .map(|(_, at)| at.elapsed())
+                .unwrap_or(Duration::ZERO);
+            if let Some(reason) =
+                policy.decide(waiting_n, in_flight, tokens, oldest)
+            {
+                if coord.flush_all().is_err() {
+                    break; // worker pool stopped
+                }
+                metrics.on_flush(reason);
+                waiting.clear();
+            }
+        }
+    }
+    // shutdown: flush and drain what was admitted so no connection is
+    // left waiting on a reply that will never come
+    if !pending.is_empty() {
+        if coord.flush_all().is_ok() {
+            metrics.on_flush(FlushReason::Drain);
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !pending.is_empty() && Instant::now() < deadline {
+            if let Some(resp) =
+                coord.recv_timeout(Duration::from_millis(100))
+            {
+                finish(resp, &mut pending);
+            }
+        }
+    }
+    for (_, p) in pending.drain() {
+        let _ = p
+            .reply
+            .send(err_json("unavailable", "server shutting down"));
+    }
+    coord.shutdown();
+}
+
+/// Apply one admitted command to the coordinator. Immediate ops reply
+/// in place; submitted ops register in `pending` and reply when their
+/// [`Response`] drains. Returns `false` only when the worker pool is
+/// gone and the loop must wind down.
+fn handle_work(
+    coord: &mut Coordinator,
+    cfg: &ServeConfig,
+    metrics: &Metrics,
+    work: Work,
+    pending: &mut HashMap<u64, PendingReply>,
+    waiting: &mut VecDeque<(usize, Instant)>,
+) -> bool {
+    let Work { cmd, reply } = work;
+    match cmd {
+        WireCmd::Open { plan } => {
+            let resp = if coord.open_sessions() >= cfg.max_sessions {
+                metrics.on_net_rejected();
+                err_json(
+                    "overloaded",
+                    &format!("session cap {} reached",
+                             cfg.max_sessions),
+                )
+            } else {
+                match coord.open_session(&plan) {
+                    Ok(id) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("session", Json::num(id as f64)),
+                    ]),
+                    Err(e) => session_err_json(&e),
+                }
+            };
+            let _ = reply.send(resp);
+        }
+        WireCmd::Close { session } => {
+            let resp = match coord.close_session(session) {
+                Some(_) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("closed", Json::num(session as f64)),
+                ]),
+                None => err_json(
+                    "session",
+                    &format!("no open session {session}"),
+                ),
+            };
+            let _ = reply.send(resp);
+        }
+        WireCmd::Prefill { session, q, k, v, echo } => {
+            let tokens = q.shape().first().copied().unwrap_or(1);
+            match coord.prefill(session, q, k, v) {
+                Ok(rid) => {
+                    pending.insert(rid, PendingReply { reply, echo });
+                    waiting.push_back((tokens, Instant::now()));
+                }
+                Err(SessionApiError::Stopped) => {
+                    let _ = reply.send(session_err_json(
+                        &SessionApiError::Stopped,
+                    ));
+                    return false;
+                }
+                Err(e) => {
+                    let _ = reply.send(session_err_json(&e));
+                }
+            }
+        }
+        WireCmd::Step { session, q, k, v, echo } => {
+            match coord.step(session, &q, &k, &v) {
+                Ok(rid) => {
+                    pending.insert(rid, PendingReply { reply, echo });
+                    waiting.push_back((1, Instant::now()));
+                }
+                Err(SessionApiError::Stopped) => {
+                    let _ = reply.send(session_err_json(
+                        &SessionApiError::Stopped,
+                    ));
+                    return false;
+                }
+                Err(e) => {
+                    let _ = reply.send(session_err_json(&e));
+                }
+            }
+        }
+        WireCmd::Oneshot { artifact, q, k, v, echo } => {
+            let tokens = q.shape().first().copied().unwrap_or(1);
+            let inputs = vec![
+                HostValue::F32(q),
+                HostValue::F32(k),
+                HostValue::F32(v),
+            ];
+            match coord.try_submit(&artifact, inputs) {
+                Ok(rid) => {
+                    pending.insert(rid, PendingReply { reply, echo });
+                    waiting.push_back((tokens, Instant::now()));
+                }
+                Err(SubmitError::Backpressure { .. }) => {
+                    metrics.on_net_rejected();
+                    let _ = reply.send(err_json(
+                        "overloaded",
+                        "dispatch queue full",
+                    ));
+                }
+                Err(e @ SubmitError::UnknownArtifact(_)) => {
+                    let _ = reply.send(err_json(
+                        "validation",
+                        &e.to_string(),
+                    ));
+                }
+                Err(SubmitError::Stopped) => {
+                    let _ = reply.send(err_json(
+                        "unavailable",
+                        "worker pool stopped",
+                    ));
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+/// Map a session-API refusal to its wire error kind.
+fn session_err_json(e: &SessionApiError) -> Json {
+    let kind = match e {
+        SessionApiError::UnknownPlan(_) => "validation",
+        SessionApiError::UnknownSession(_) => "session",
+        SessionApiError::State(_) => "session",
+        SessionApiError::Stopped => "unavailable",
+    };
+    err_json(kind, &e.to_string())
+}
+
+/// Correlate one coordinator [`Response`] back to its connection.
+fn finish(resp: Response, pending: &mut HashMap<u64, PendingReply>) {
+    let Some(p) = pending.remove(&resp.id) else {
+        // a best-effort close for an abandoned connection, or a reply
+        // channel whose connection died: nothing to do
+        return;
+    };
+    let msg = match &resp.outputs {
+        Ok(outs) => output_json(&resp, outs, p.echo),
+        Err(e) => err_json("exec", &format!("{e:#}")),
+    };
+    let _ = p.reply.send(msg);
+}
+
+/// The ok-response frame for a completed prefill/step/one-shot.
+fn output_json(resp: &Response, outs: &[HostValue],
+               echo: bool) -> Json {
+    let mut fields = vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::num(resp.id as f64)),
+        ("queue_s", Json::num(resp.queue_time.as_secs_f64())),
+        ("exec_s", Json::num(resp.exec_time.as_secs_f64())),
+    ];
+    if let Some(t) = outs.first().and_then(|h| h.as_f32()) {
+        fields.push((
+            "shape",
+            Json::Arr(
+                t.shape().iter().map(|&d| Json::num(d as f64)).collect(),
+            ),
+        ));
+        if echo {
+            fields.push((
+                "out",
+                Json::Arr(
+                    t.data()
+                        .iter()
+                        .map(|&x| Json::num(x as f64))
+                        .collect(),
+                ),
+            ));
+        }
+    }
+    Json::obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_plans() -> (Arc<HostPlanRegistry>, String) {
+        let plans = Arc::new(HostPlanRegistry::new());
+        let plan = Planner::default()
+            .plan(
+                &BiasSpec::alibi(64, 64, 0.25),
+                &Geometry::square(64, 16, 0, 100 * 1024 / 2),
+                &PlanOptions {
+                    causal: true,
+                    ..PlanOptions::default()
+                },
+            )
+            .expect("plan");
+        plans.register("p", plan);
+        (plans, "p".to_string())
+    }
+
+    #[test]
+    fn synthetic_payloads_are_deterministic() {
+        let (q1, k1, v1) = synthetic_qkv(7, 4, 16);
+        let (q2, k2, v2) = synthetic_qkv(7, 4, 16);
+        assert_eq!(q1.data(), q2.data());
+        assert_eq!(k1.data(), k2.data());
+        assert_eq!(v1.data(), v2.data());
+        let (a, _, _) = synthetic_rows(7, 3, 16);
+        let (b, _, _) = synthetic_rows(7, 3, 16);
+        assert_eq!(a, b);
+        let (c, _, _) = synthetic_rows(7, 4, 16);
+        assert_ne!(a, c, "position must vary the row");
+    }
+
+    #[test]
+    fn parse_validates_ops_and_shapes() {
+        let (plans, name) = demo_plans();
+        let mut sessions = HashMap::new();
+        let parse = |req: &Json, s: &HashMap<u64, SessInfo>| {
+            parse_wire_op(req, s, &plans)
+        };
+
+        // unknown op and missing op are validation faults
+        let bad = Json::obj(vec![("op", Json::str("put"))]);
+        assert_eq!(parse(&bad, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+        let none = Json::obj(vec![]);
+        assert_eq!(parse(&none, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+
+        // open: unknown plan refused, known plan parses
+        let open_bad = Json::obj(vec![
+            ("op", Json::str("open")),
+            ("plan", Json::str("nope")),
+        ]);
+        assert_eq!(parse(&open_bad, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+        let open = Json::obj(vec![
+            ("op", Json::str("open")),
+            ("plan", Json::str(&name)),
+        ]);
+        assert!(parse(&open, &sessions).is_ok());
+
+        // prefill against a session this connection never opened
+        let foreign = Json::obj(vec![
+            ("op", Json::str("prefill")),
+            ("session", Json::num(9.0)),
+            ("n", Json::num(2.0)),
+            ("seed", Json::num(1.0)),
+        ]);
+        assert_eq!(parse(&foreign, &sessions).err().map(|f| f.0),
+                   Some("session"));
+
+        sessions.insert(9, SessInfo { c: 16, n_max: 64 });
+        assert!(parse(&foreign, &sessions).is_ok());
+
+        // seed-form n beyond the plan's context cap
+        let huge = Json::obj(vec![
+            ("op", Json::str("prefill")),
+            ("session", Json::num(9.0)),
+            ("n", Json::num(65.0)),
+            ("seed", Json::num(1.0)),
+        ]);
+        assert_eq!(parse(&huge, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+
+        // explicit arrays must be multiples of C with matching k/v
+        let ragged = Json::obj(vec![
+            ("op", Json::str("prefill")),
+            ("session", Json::num(9.0)),
+            ("q", Json::Arr(vec![Json::num(1.0); 17])),
+            ("k", Json::Arr(vec![Json::num(1.0); 16])),
+            ("v", Json::Arr(vec![Json::num(1.0); 16])),
+        ]);
+        assert_eq!(parse(&ragged, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+
+        // a step row of the wrong width
+        let narrow = Json::obj(vec![
+            ("op", Json::str("step")),
+            ("session", Json::num(9.0)),
+            ("q", Json::Arr(vec![Json::num(1.0); 15])),
+            ("k", Json::Arr(vec![Json::num(1.0); 16])),
+            ("v", Json::Arr(vec![Json::num(1.0); 16])),
+        ]);
+        assert_eq!(parse(&narrow, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+
+        // non-numeric array elements are refused, not NaN-coerced
+        let poison = Json::obj(vec![
+            ("op", Json::str("step")),
+            ("session", Json::num(9.0)),
+            ("q", Json::Arr(vec![Json::Null; 16])),
+            ("k", Json::Arr(vec![Json::num(1.0); 16])),
+            ("v", Json::Arr(vec![Json::num(1.0); 16])),
+        ]);
+        assert_eq!(parse(&poison, &sessions).err().map(|f| f.0),
+                   Some("validation"));
+    }
+
+    #[test]
+    fn error_frames_are_typed() {
+        let e = err_json("overloaded", "queue full");
+        assert_eq!(e.get("ok").as_bool(), Some(false));
+        assert_eq!(e.get("kind").as_str(), Some("overloaded"));
+        assert_eq!(e.get("error").as_str(), Some("queue full"));
+    }
+}

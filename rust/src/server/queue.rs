@@ -1,0 +1,391 @@
+//! Serving-policy substrate for the TCP front-end: the [`ServeConfig`]
+//! knob set, a bounded [`AdmissionQueue`] with semaphore-style
+//! admission control, and the waiting/served [`FlushPolicy`].
+//!
+//! The shape follows the TGI/vLLM router split: connection threads do
+//! *admission* (cheap, rejecting, never blocking the socket on model
+//! work) and one dispatch thread does *scheduling* (when to flush the
+//! coordinator's pending bucket into the worker pool). The policy is a
+//! pure function over four observables — waiting requests, in-flight
+//! requests, pending token count, oldest waiting age — so it is
+//! unit-testable without a socket or a coordinator, and every decision
+//! it makes is counted per [`FlushReason`] in
+//! [`crate::coordinator::Metrics`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{BatcherConfig, CoordinatorConfig, FlushReason};
+use crate::util::frame::IO_TIMEOUT;
+
+/// Knobs for the network serving front-end. The defaults serve; the
+/// load bench sweeps the interesting ones.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Worker threads executing flushed batches.
+    pub workers: usize,
+    /// Coordinator bucket size: a bucket at `max_batch` flushes itself
+    /// regardless of policy (the upper bound on batch occupancy).
+    pub max_batch: usize,
+    /// Bounded depth of the coordinator's worker dispatch queue.
+    pub coord_queue_depth: usize,
+    /// Bounded depth of the network admission queue; a full queue
+    /// rejects with an `overloaded` wire error instead of parking the
+    /// connection (semaphore-style admission control).
+    pub queue_depth: usize,
+    /// Flush when the pending bucket holds at least this many "tokens"
+    /// (query rows: a prefill of n rows counts n, a decode step 1).
+    pub max_batch_total_tokens: usize,
+    /// Flush when `waiting >= ratio * in_flight` — enough queued work
+    /// relative to what the workers are chewing to justify a new batch
+    /// now instead of letting the pending bucket ripen further.
+    pub waiting_served_ratio: f64,
+    /// Flush when the oldest waiting request has aged past this (the
+    /// latency backstop at low offered load).
+    pub max_wait: Duration,
+    /// Refuse `open` frames beyond this many live sessions.
+    pub max_sessions: usize,
+    /// Per-frame inbound request cap (prefill payloads carry whole
+    /// prompts, so this is generous next to the factor-service cap).
+    pub max_request_bytes: u32,
+    /// Per-connection socket read/write timeout.
+    pub io_timeout: Duration,
+    /// Artificial pause per dispatched request, before it reaches the
+    /// coordinator. Zero in production; tests raise it to make
+    /// admission-queue overflow deterministic, and it doubles as a
+    /// slow-backend emulator for the load bench.
+    pub dispatch_delay: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            max_batch: 16,
+            coord_queue_depth: 64,
+            queue_depth: 256,
+            max_batch_total_tokens: 4096,
+            waiting_served_ratio: 1.2,
+            max_wait: Duration::from_millis(5),
+            max_sessions: 1024,
+            max_request_bytes: 8 * 1024 * 1024,
+            io_timeout: IO_TIMEOUT,
+            dispatch_delay: Duration::ZERO,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The no-batching baseline the load bench compares against: every
+    /// request flushes alone (`max_batch == 1`), so each one pays the
+    /// full dispatch + scoped-pool overhead the batcher exists to
+    /// amortize.
+    pub fn batch1() -> Self {
+        Self {
+            max_batch: 1,
+            ..Self::default()
+        }
+    }
+
+    /// The coordinator configuration this serving config implies.
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig {
+            batcher: BatcherConfig {
+                max_batch: self.max_batch,
+                max_wait: self.max_wait,
+            },
+            workers: self.workers,
+            queue_depth: self.coord_queue_depth,
+        }
+    }
+
+    /// The flush policy this config describes.
+    pub fn flush_policy(&self) -> FlushPolicy {
+        FlushPolicy {
+            max_batch_total_tokens: self.max_batch_total_tokens,
+            waiting_served_ratio: self.waiting_served_ratio,
+            max_wait: self.max_wait,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flush policy
+// ---------------------------------------------------------------------------
+
+/// The waiting/served flush decision, as a pure function. The dispatch
+/// thread evaluates it once per tick; `Some(reason)` means "flush the
+/// coordinator's pending bucket now, and count the decision under
+/// `reason`".
+#[derive(Clone, Copy, Debug)]
+pub struct FlushPolicy {
+    pub max_batch_total_tokens: usize,
+    pub waiting_served_ratio: f64,
+    pub max_wait: Duration,
+}
+
+impl FlushPolicy {
+    /// Decide whether to flush. `waiting` is the number of requests in
+    /// the coordinator's pending bucket, `in_flight` the number already
+    /// dispatched but not yet completed, `pending_tokens` the query-row
+    /// total of the waiting set, `oldest_age` how long the oldest
+    /// waiting request has been pending.
+    pub fn decide(
+        &self,
+        waiting: usize,
+        in_flight: usize,
+        pending_tokens: usize,
+        oldest_age: Duration,
+    ) -> Option<FlushReason> {
+        if waiting == 0 {
+            return None;
+        }
+        if pending_tokens >= self.max_batch_total_tokens {
+            return Some(FlushReason::Tokens);
+        }
+        if oldest_age >= self.max_wait {
+            return Some(FlushReason::Deadline);
+        }
+        // idle workers never wait on a ripening batch; with work in
+        // flight, flush once the queue outweighs it by the ratio
+        if in_flight == 0
+            || waiting as f64 >= self.waiting_served_ratio * in_flight as f64
+        {
+            return Some(FlushReason::Ratio);
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission queue
+// ---------------------------------------------------------------------------
+
+/// Why [`AdmissionQueue::try_admit`] refused; the item rides back so
+/// the connection thread can report without cloning request payloads.
+#[derive(Debug)]
+pub enum AdmitError<T> {
+    /// Queue at capacity — the overload signal.
+    Full(T),
+    /// The dispatch side is gone (server shutting down).
+    Closed(T),
+}
+
+/// Producer half of the bounded admission queue. Cloned into every
+/// connection thread; `try_admit` never blocks — a full queue is an
+/// immediate, reportable rejection, which is the whole point of
+/// admission control (a parked connection thread is an invisible,
+/// unbounded queue).
+pub struct AdmissionQueue<T> {
+    tx: SyncSender<Admitted<T>>,
+    depth: Arc<AtomicUsize>,
+}
+
+// derive(Clone) would demand T: Clone; the sender clones regardless
+impl<T> Clone for AdmissionQueue<T> {
+    fn clone(&self) -> Self {
+        Self {
+            tx: self.tx.clone(),
+            depth: Arc::clone(&self.depth),
+        }
+    }
+}
+
+struct Admitted<T> {
+    item: T,
+    enqueued: Instant,
+}
+
+/// Consumer half: owned by the single dispatch thread.
+pub struct AdmissionReceiver<T> {
+    rx: Receiver<Admitted<T>>,
+    depth: Arc<AtomicUsize>,
+}
+
+/// One dequeued item plus its admission observables.
+pub struct Dequeued<T> {
+    pub item: T,
+    /// Time spent in the admission queue.
+    pub wait: Duration,
+    /// Queue depth sampled at dequeue (items still behind this one).
+    pub depth: usize,
+}
+
+/// Build the bounded queue: up to `capacity` admitted-but-undispatched
+/// requests; the `capacity + 1`-th is refused.
+pub fn admission_queue<T>(
+    capacity: usize,
+) -> (AdmissionQueue<T>, AdmissionReceiver<T>) {
+    let (tx, rx) = sync_channel(capacity);
+    let depth = Arc::new(AtomicUsize::new(0));
+    (
+        AdmissionQueue {
+            tx,
+            depth: Arc::clone(&depth),
+        },
+        AdmissionReceiver { rx, depth },
+    )
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Admit `item` or refuse immediately (never blocks).
+    pub fn try_admit(&self, item: T) -> Result<(), AdmitError<T>> {
+        // count up BEFORE the send: the receiver decrements on recv,
+        // which can only follow a successful send, so the counter never
+        // underflows; on refusal the speculative increment is undone
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(Admitted {
+            item,
+            enqueued: Instant::now(),
+        }) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                match e {
+                    TrySendError::Full(a) => Err(AdmitError::Full(a.item)),
+                    TrySendError::Disconnected(a) => {
+                        Err(AdmitError::Closed(a.item))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Items admitted but not yet dequeued (approximate under
+    /// concurrency; exact once the dispatch thread quiesces).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+impl<T> AdmissionReceiver<T> {
+    /// Dequeue the next admitted item, waiting up to `timeout`. `None`
+    /// on timeout or when every producer is gone.
+    pub fn recv_admitted(&self, timeout: Duration) -> Option<Dequeued<T>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(a) => {
+                let depth = self
+                    .depth
+                    .fetch_sub(1, Ordering::Relaxed)
+                    .saturating_sub(1);
+                Some(Dequeued {
+                    item: a.item,
+                    wait: a.enqueued.elapsed(),
+                    depth,
+                })
+            }
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> FlushPolicy {
+        FlushPolicy {
+            max_batch_total_tokens: 100,
+            waiting_served_ratio: 1.5,
+            max_wait: Duration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn policy_never_flushes_an_empty_bucket() {
+        assert_eq!(
+            policy().decide(0, 0, 0, Duration::from_secs(9)),
+            None
+        );
+    }
+
+    #[test]
+    fn policy_token_budget_flushes_first() {
+        // over budget wins even when ratio/deadline would also fire
+        assert_eq!(
+            policy().decide(8, 0, 100, Duration::from_secs(1)),
+            Some(FlushReason::Tokens)
+        );
+        assert_eq!(
+            policy().decide(1, 99, 99, Duration::ZERO),
+            None,
+            "under budget, under ratio, under deadline: ripen"
+        );
+    }
+
+    #[test]
+    fn policy_deadline_is_the_latency_backstop() {
+        assert_eq!(
+            policy().decide(1, 99, 1, Duration::from_millis(10)),
+            Some(FlushReason::Deadline)
+        );
+    }
+
+    #[test]
+    fn policy_waiting_served_ratio() {
+        // idle workers: anything waiting flushes at once
+        assert_eq!(
+            policy().decide(1, 0, 1, Duration::ZERO),
+            Some(FlushReason::Ratio)
+        );
+        // 3 waiting vs 2 in flight = 1.5 ratio exactly: flush
+        assert_eq!(
+            policy().decide(3, 2, 3, Duration::ZERO),
+            Some(FlushReason::Ratio)
+        );
+        // 2 waiting vs 2 in flight: below the ratio, keep ripening
+        assert_eq!(policy().decide(2, 2, 2, Duration::ZERO), None);
+    }
+
+    #[test]
+    fn admission_queue_bounds_and_rejects() {
+        let (q, rx) = admission_queue::<u32>(2);
+        q.try_admit(1).expect("fits");
+        q.try_admit(2).expect("fits");
+        assert_eq!(q.depth(), 2);
+        match q.try_admit(3) {
+            Err(AdmitError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // draining one slot readmits
+        let got = rx.recv_admitted(Duration::from_secs(1)).expect("one");
+        assert_eq!(got.item, 1);
+        assert_eq!(got.depth, 1);
+        q.try_admit(3).expect("slot freed");
+    }
+
+    #[test]
+    fn admission_queue_reports_closed() {
+        let (q, rx) = admission_queue::<u32>(4);
+        drop(rx);
+        match q.try_admit(7) {
+            Err(AdmitError::Closed(item)) => assert_eq!(item, 7),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admission_wait_is_measured() {
+        let (q, rx) = admission_queue::<&str>(1);
+        q.try_admit("x").expect("fits");
+        std::thread::sleep(Duration::from_millis(5));
+        let got = rx.recv_admitted(Duration::from_secs(1)).expect("x");
+        assert!(got.wait >= Duration::from_millis(5));
+        assert_eq!(got.depth, 0);
+        // empty queue: timeout is a clean None
+        assert!(rx.recv_admitted(Duration::from_millis(1)).is_none());
+    }
+
+    #[test]
+    fn batch1_preset_disables_batching_only() {
+        let b1 = ServeConfig::batch1();
+        assert_eq!(b1.max_batch, 1);
+        assert_eq!(b1.workers, ServeConfig::default().workers);
+        assert_eq!(b1.coordinator_config().batcher.max_batch, 1);
+    }
+}

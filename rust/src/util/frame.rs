@@ -1,0 +1,256 @@
+//! Length-prefixed jsonlite frame codec — the one wire format every
+//! TCP surface in the crate speaks.
+//!
+//! A frame is a 4-byte little-endian payload length followed by one
+//! JSON document. Both network surfaces — the factor-sharing tier
+//! ([`crate::factorstore::remote`]) and the serving front-end
+//! ([`crate::server::netserver`]) — use exactly this codec, so there is
+//! one implementation and one hostile-input surface: length prefixes
+//! are checked against an explicit cap *before* any allocation, torn
+//! payloads are typed errors (a clean EOF between frames is `None`),
+//! and non-UTF-8 or unparseable payloads never panic.
+//!
+//! Size caps are the callee's choice per direction: a service reads
+//! unauthenticated *requests* under a small cap
+//! ([`MAX_REQUEST_BYTES`]-sized) so a hostile 4-byte prefix cannot
+//! force a huge allocation, while *responses* from a trusted peer may
+//! use the large [`MAX_FRAME_BYTES`] cap.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::jsonlite::{Json, ParseError};
+
+/// Upper bound on one trusted *response* frame — a (16k + 16k) · r=512
+/// factor pair prints well under this; anything bigger is a protocol
+/// error, not a payload.
+pub const MAX_FRAME_BYTES: u32 = 256 * 1024 * 1024;
+
+/// Upper bound on one inbound *request* frame for services whose
+/// requests are small (the factor service's are ~60 bytes of JSON).
+/// Honoring the response-sized cap for unauthenticated inbound traffic
+/// would let any peer make a server allocate 256 MiB per connection
+/// from a 4-byte length prefix.
+pub const MAX_REQUEST_BYTES: u32 = 64 * 1024;
+
+/// Per-connection read/write timeout: a dead peer costs one timeout,
+/// then the caller degrades (falls back, closes the connection).
+pub const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Bound on establishing a connection — a black-holed peer (firewalled
+/// host, dead route) must cost seconds, not the OS's multi-minute TCP
+/// connect timeout.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Typed frame-codec failure. Every variant is a protocol-level fact a
+/// server can report back (or log) without guessing at an `io::Error`
+/// string.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The announced (or outgoing) payload length exceeds the cap.
+    TooLarge { len: u64, cap: u32 },
+    /// EOF mid-payload: the length prefix promised more bytes than the
+    /// stream delivered.
+    Torn { wanted: usize },
+    /// The payload is not valid UTF-8.
+    NonUtf8(std::str::Utf8Error),
+    /// The payload is UTF-8 but not a JSON document.
+    Parse(ParseError),
+    /// Transport failure (including read/write timeouts).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::TooLarge { len, cap } => {
+                write!(f, "frame of {len} bytes exceeds the {cap} limit")
+            }
+            FrameError::Torn { wanted } => {
+                write!(f, "torn frame: EOF with {wanted} bytes missing")
+            }
+            FrameError::NonUtf8(e) => write!(f, "non-utf8 frame: {e}"),
+            FrameError::Parse(e) => write!(f, "bad frame: {e}"),
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::NonUtf8(e) => Some(e),
+            FrameError::Parse(e) => Some(e),
+            FrameError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one length-prefixed jsonlite frame (always bounded by
+/// [`MAX_FRAME_BYTES`] — nothing in this crate legitimately emits
+/// more).
+pub fn write_frame(w: &mut impl Write,
+                   json: &Json) -> Result<(), FrameError> {
+    let payload = json.dump();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES as usize {
+        return Err(FrameError::TooLarge {
+            len: bytes.len() as u64,
+            cap: MAX_FRAME_BYTES,
+        });
+    }
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed jsonlite frame under the trusted
+/// [`MAX_FRAME_BYTES`] cap. `Ok(None)` is a clean EOF (the peer closed
+/// between frames); a torn frame is an error.
+pub fn read_frame(r: &mut impl Read)
+                  -> Result<Option<Json>, FrameError> {
+    read_frame_limited(r, MAX_FRAME_BYTES)
+}
+
+/// [`read_frame`] with an explicit size cap — services read *requests*
+/// with a small cap ([`MAX_REQUEST_BYTES`]-sized) so a hostile length
+/// prefix cannot force a huge allocation. The cap check happens before
+/// the payload buffer exists.
+pub fn read_frame_limited(r: &mut impl Read,
+                          max_bytes: u32)
+                          -> Result<Option<Json>, FrameError> {
+    let mut len = [0u8; 4];
+    match r.read_exact(&mut len) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => {
+            // nothing-or-partial-prefix between frames is a clean close
+            return Ok(None);
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len);
+    if len > max_bytes {
+        return Err(FrameError::TooLarge {
+            len: len as u64,
+            cap: max_bytes,
+        });
+    }
+    let mut buf = vec![0u8; len as usize];
+    match r.read_exact(&mut buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == ErrorKind::UnexpectedEof => {
+            return Err(FrameError::Torn {
+                wanted: len as usize,
+            });
+        }
+        Err(e) => return Err(e.into()),
+    }
+    let text =
+        std::str::from_utf8(&buf).map_err(FrameError::NonUtf8)?;
+    Ok(Some(Json::parse(text).map_err(FrameError::Parse)?))
+}
+
+/// Apply the standard per-connection IO deadline to both directions of
+/// a stream — every TCP surface calls this right after accept/connect
+/// so a dead peer costs one bounded timeout, never a parked thread.
+pub fn set_io_timeouts(stream: &TcpStream,
+                       timeout: Duration) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip() {
+        let json = Json::obj(vec![
+            ("op", Json::str("get")),
+            ("key", Json::str("00000000000000ff")),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &json).unwrap();
+        assert_eq!(&buf[..4], &(buf.len() as u32 - 4).to_le_bytes()[..]);
+        let back = read_frame(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(back, json);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let empty: &[u8] = &[];
+        assert!(read_frame(&mut Cursor::new(empty)).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_prefix_is_typed() {
+        let bytes = u32::MAX.to_le_bytes();
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Err(FrameError::TooLarge { len, cap }) => {
+                assert_eq!(len, u32::MAX as u64);
+                assert_eq!(cap, MAX_FRAME_BYTES);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_cap_rejects_before_allocating() {
+        // a response-sized (256 MiB) length prefix under the small
+        // request cap must be refused at the cap check, not allocated
+        let bytes = MAX_FRAME_BYTES.to_le_bytes();
+        let err =
+            read_frame_limited(&mut Cursor::new(&bytes),
+                               MAX_REQUEST_BYTES)
+                .expect_err("over-cap");
+        assert!(err.to_string().contains("limit"), "{err}");
+    }
+
+    #[test]
+    fn torn_payload_is_typed() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&100u32.to_le_bytes());
+        buf.extend_from_slice(b"short");
+        match read_frame(&mut Cursor::new(&buf)) {
+            Err(FrameError::Torn { wanted }) => assert_eq!(wanted, 100),
+            other => panic!("expected Torn, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn non_utf8_and_bad_json_are_typed() {
+        let payload: &[u8] = &[0xFF, 0xFE, 0x80, 0x81];
+        let mut wire = (payload.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(payload);
+        let err = read_frame(&mut Cursor::new(&wire)).expect_err("utf8");
+        assert!(err.to_string().contains("utf8"), "{err}");
+
+        let mut wire = (3u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(b"{{{");
+        assert!(matches!(read_frame(&mut Cursor::new(&wire)),
+                         Err(FrameError::Parse(_))));
+    }
+
+    #[test]
+    fn outgoing_frames_are_capped() {
+        // a payload over the cap is refused client-side, before any
+        // bytes hit the wire
+        let huge = Json::str(&"x".repeat(MAX_FRAME_BYTES as usize + 8));
+        let mut sink = Vec::new();
+        match write_frame(&mut sink, &huge) {
+            Err(FrameError::TooLarge { .. }) => assert!(sink.is_empty()),
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+}

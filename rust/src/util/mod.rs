@@ -5,6 +5,7 @@
 //! The vendored-crate universe has no `rand`/`statrs`; everything the
 //! benches and the coordinator need is implemented here.
 
+pub mod frame;
 pub mod sync;
 
 use std::time::{Duration, Instant};

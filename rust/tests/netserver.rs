@@ -1,0 +1,419 @@
+//! Network serving front-end, end to end over real loopback TCP.
+//!
+//! * Protocol validation: every malformed request — unknown op, bad
+//!   shapes, foreign sessions, oversized/truncated/garbage frames —
+//!   comes back as a typed error frame (or a clean close for frame
+//!   damage) and never crashes the server.
+//! * Admission control: a full admission queue and the session cap
+//!   refuse with `overloaded` frames, and the refusals surface in the
+//!   server's `stats` counters.
+//! * Bitwise fidelity: a session driven over the wire (seed-form
+//!   `open` → `prefill` → `step`s → `close`) produces outputs bitwise
+//!   equal to an in-process [`SessionState`] replay of the same plan
+//!   and payloads — the network layer adds framing, not arithmetic.
+
+use std::io::Write as IoWrite;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flashbias::coordinator::Coordinator;
+use flashbias::jsonlite::Json;
+use flashbias::plan::{self, AttentionPlan, SessionState};
+use flashbias::runtime::Runtime;
+use flashbias::server::{
+    demo_plan_name, fetch_stats, register_demo_plan, run_wave,
+    synthetic_qkv, synthetic_rows, wait_ready, NetServer, ServeConfig,
+    WaveConfig,
+};
+use flashbias::util::frame::{read_frame, set_io_timeouts, write_frame};
+
+const PLAN_N: usize = 32;
+const C: usize = 64; // the demo plan's head width
+
+fn demo_server(cfg: ServeConfig) -> (NetServer, String, AttentionPlan) {
+    let coord = Coordinator::new(
+        Arc::new(Runtime::empty()),
+        cfg.coordinator_config(),
+    );
+    let plan = register_demo_plan(&coord, PLAN_N).expect("demo plan");
+    let srv =
+        NetServer::serve(coord, cfg, "127.0.0.1:0").expect("serve");
+    let addr = srv.addr().to_string();
+    assert!(wait_ready(&addr, Duration::from_secs(10)), "server up");
+    (srv, addr, plan)
+}
+
+fn connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    set_io_timeouts(&s, Duration::from_secs(30)).expect("timeouts");
+    s
+}
+
+/// One frame out, one frame back.
+fn rpc(stream: &mut TcpStream, req: Json) -> Json {
+    write_frame(stream, &req).expect("write frame");
+    read_frame(stream).expect("read frame").expect("response frame")
+}
+
+fn kind_of(resp: &Json) -> Option<&str> {
+    assert_eq!(resp.get("ok").as_bool(), Some(false),
+               "expected an error frame, got {}", resp.dump());
+    resp.get("kind").as_str()
+}
+
+fn out_bits(resp: &Json) -> Vec<u32> {
+    assert_eq!(resp.get("ok").as_bool(), Some(true),
+               "expected ok, got {}", resp.dump());
+    resp.get("out")
+        .as_arr()
+        .expect("out array")
+        .iter()
+        .map(|x| (x.as_f64().expect("number") as f32).to_bits())
+        .collect()
+}
+
+#[test]
+fn validation_and_session_errors_are_typed_frames() {
+    let (srv, addr, _plan) = demo_server(ServeConfig::default());
+    let mut s = connect(&addr);
+
+    // ping / stats fast paths
+    let pong = rpc(&mut s, Json::obj(vec![("op", Json::str("ping"))]));
+    assert_eq!(pong.get("pong").as_bool(), Some(true));
+    let stats =
+        rpc(&mut s, Json::obj(vec![("op", Json::str("stats"))]));
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    assert!(stats.get("queue_depth").as_f64().is_some());
+
+    // op-level validation
+    let bad = rpc(&mut s, Json::obj(vec![("op", Json::str("put"))]));
+    assert_eq!(kind_of(&bad), Some("validation"));
+    let none = rpc(&mut s, Json::obj(vec![("x", Json::num(1.0))]));
+    assert_eq!(kind_of(&none), Some("validation"));
+    let bad_plan = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("open")),
+        ("plan", Json::str("nope")),
+    ]));
+    assert_eq!(kind_of(&bad_plan), Some("validation"));
+
+    // sessions are connection-owned: ids you never opened are
+    // `session` errors even if another connection owns them
+    let foreign = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("step")),
+        ("session", Json::num(0.0)),
+        ("seed", Json::num(1.0)),
+        ("t", Json::num(0.0)),
+    ]));
+    assert_eq!(kind_of(&foreign), Some("session"));
+
+    // a real session, then shape-level validation against it
+    let opened = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("open")),
+        ("plan", Json::str(&demo_plan_name(PLAN_N))),
+    ]));
+    assert_eq!(opened.get("ok").as_bool(), Some(true));
+    let sid = opened.get("session").as_usize().expect("session id");
+
+    // seed-form n beyond the plan's context must be refused *before*
+    // any allocation happens server-side
+    let huge = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("prefill")),
+        ("session", Json::num(sid as f64)),
+        ("n", Json::num((PLAN_N + 1) as f64)),
+        ("seed", Json::num(1.0)),
+    ]));
+    assert_eq!(kind_of(&huge), Some("validation"));
+
+    // explicit arrays that are not a multiple of C
+    let ragged = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("prefill")),
+        ("session", Json::num(sid as f64)),
+        ("q", Json::Arr(vec![Json::num(1.0); 3])),
+        ("k", Json::Arr(vec![Json::num(1.0); 3])),
+        ("v", Json::Arr(vec![Json::num(1.0); 3])),
+    ]));
+    assert_eq!(kind_of(&ragged), Some("validation"));
+
+    // a step row of the wrong width
+    let narrow = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("step")),
+        ("session", Json::num(sid as f64)),
+        ("q", Json::Arr(vec![Json::num(1.0); C - 1])),
+        ("k", Json::Arr(vec![Json::num(1.0); C])),
+        ("v", Json::Arr(vec![Json::num(1.0); C])),
+    ]));
+    assert_eq!(kind_of(&narrow), Some("validation"));
+
+    // fill the whole context, then one step too many: a session-state
+    // refusal, caught synchronously and returned as a typed frame
+    let full = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("prefill")),
+        ("session", Json::num(sid as f64)),
+        ("n", Json::num(PLAN_N as f64)),
+        ("seed", Json::num(1.0)),
+        ("echo", Json::Bool(false)),
+    ]));
+    assert_eq!(full.get("ok").as_bool(), Some(true), "{}", full.dump());
+    let exhausted = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("step")),
+        ("session", Json::num(sid as f64)),
+        ("seed", Json::num(1.0)),
+        ("t", Json::num(PLAN_N as f64)),
+    ]));
+    assert_eq!(kind_of(&exhausted), Some("session"));
+
+    // close works once, then the id is gone
+    let closed = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("close")),
+        ("session", Json::num(sid as f64)),
+    ]));
+    assert_eq!(closed.get("closed").as_usize(), Some(sid));
+    let again = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("close")),
+        ("session", Json::num(sid as f64)),
+    ]));
+    assert_eq!(kind_of(&again), Some("session"));
+
+    srv.shutdown();
+}
+
+#[test]
+fn hostile_frames_get_reported_and_closed() {
+    let (srv, addr, _plan) = demo_server(ServeConfig::default());
+
+    // a length prefix beyond the request cap: typed `frame` error,
+    // then the server hangs up — it never allocates the claimed size
+    let mut s = connect(&addr);
+    let huge = (64 * 1024 * 1024u32).to_le_bytes();
+    s.write_all(&huge).expect("write prefix");
+    let resp = read_frame(&mut s).expect("error frame").expect("frame");
+    assert_eq!(kind_of(&resp), Some("frame"));
+    assert!(read_frame(&mut s).expect("clean close").is_none(),
+            "server must close after frame damage");
+
+    // a well-framed payload that is not JSON
+    let mut s = connect(&addr);
+    let garbage = b"not json at all";
+    s.write_all(&(garbage.len() as u32).to_le_bytes()).expect("len");
+    s.write_all(garbage).expect("payload");
+    let resp = read_frame(&mut s).expect("error frame").expect("frame");
+    assert_eq!(kind_of(&resp), Some("frame"));
+
+    // a truncated frame: the length prefix promises 100 bytes, the
+    // peer sends 10 and shuts down its write half
+    let mut s = connect(&addr);
+    s.write_all(&100u32.to_le_bytes()).expect("len");
+    s.write_all(&[b'{'; 10]).expect("partial payload");
+    s.shutdown(std::net::Shutdown::Write).expect("half close");
+    let resp = read_frame(&mut s).expect("error frame").expect("frame");
+    assert_eq!(kind_of(&resp), Some("frame"));
+
+    // the server survived all of that and still answers new peers
+    let mut s = connect(&addr);
+    let pong = rpc(&mut s, Json::obj(vec![("op", Json::str("ping"))]));
+    assert_eq!(pong.get("pong").as_bool(), Some(true));
+
+    srv.shutdown();
+}
+
+#[test]
+fn admission_control_refuses_when_the_queue_is_full() {
+    // one admission slot, and a dispatch thread that dawdles 300 ms
+    // per item: request 1 is in the dispatcher's sleep, request 2
+    // holds the only queue slot, request 3 must be refused at the door
+    let cfg = ServeConfig {
+        queue_depth: 1,
+        dispatch_delay: Duration::from_millis(300),
+        ..ServeConfig::default()
+    };
+    let (srv, addr, _plan) = demo_server(cfg);
+    let oneshot = |seed: f64| {
+        Json::obj(vec![
+            ("op", Json::str("oneshot")),
+            ("artifact", Json::str(&demo_plan_name(PLAN_N))),
+            ("n", Json::num(4.0)),
+            ("seed", Json::num(seed)),
+            ("echo", Json::Bool(false)),
+        ])
+    };
+    let mut s1 = connect(&addr);
+    let mut s2 = connect(&addr);
+    let mut s3 = connect(&addr);
+    write_frame(&mut s1, &oneshot(1.0)).expect("send 1");
+    std::thread::sleep(Duration::from_millis(80));
+    write_frame(&mut s2, &oneshot(2.0)).expect("send 2");
+    std::thread::sleep(Duration::from_millis(80));
+    write_frame(&mut s3, &oneshot(3.0)).expect("send 3");
+
+    let r3 = read_frame(&mut s3).expect("read 3").expect("frame 3");
+    assert_eq!(kind_of(&r3), Some("overloaded"),
+               "third request must be refused at admission");
+    let r1 = read_frame(&mut s1).expect("read 1").expect("frame 1");
+    assert_eq!(r1.get("ok").as_bool(), Some(true), "{}", r1.dump());
+    let r2 = read_frame(&mut s2).expect("read 2").expect("frame 2");
+    assert_eq!(r2.get("ok").as_bool(), Some(true), "{}", r2.dump());
+
+    // the refusal is on the books
+    let stats = fetch_stats(&addr).expect("stats");
+    let rejected = stats
+        .get("metrics")
+        .get("net")
+        .get("rejected")
+        .as_f64()
+        .expect("net.rejected");
+    assert!(rejected >= 1.0, "stats must count the refusal");
+
+    srv.shutdown();
+}
+
+#[test]
+fn session_cap_refuses_as_overloaded() {
+    let cfg = ServeConfig {
+        max_sessions: 1,
+        ..ServeConfig::default()
+    };
+    let (srv, addr, _plan) = demo_server(cfg);
+    let mut s = connect(&addr);
+    let open = Json::obj(vec![
+        ("op", Json::str("open")),
+        ("plan", Json::str(&demo_plan_name(PLAN_N))),
+    ]);
+    let first = rpc(&mut s, open.clone());
+    assert_eq!(first.get("ok").as_bool(), Some(true));
+    let second = rpc(&mut s, open);
+    assert_eq!(kind_of(&second), Some("overloaded"));
+    srv.shutdown();
+}
+
+#[test]
+fn wire_session_is_bitwise_equal_to_inline_replay() {
+    let (srv, addr, plan) = demo_server(ServeConfig::default());
+    let (seed, prefill_n, steps) = (42u64, 8usize, 4usize);
+
+    // over the wire, seed-form payloads, echo on
+    let mut s = connect(&addr);
+    let opened = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("open")),
+        ("plan", Json::str(&demo_plan_name(PLAN_N))),
+    ]));
+    let sid = opened.get("session").as_usize().expect("session id");
+    let pre = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("prefill")),
+        ("session", Json::num(sid as f64)),
+        ("n", Json::num(prefill_n as f64)),
+        ("seed", Json::num(seed as f64)),
+    ]));
+    assert!(pre.get("queue_s").as_f64().is_some());
+    assert!(pre.get("exec_s").as_f64().is_some());
+    let wire_prefill = out_bits(&pre);
+    let mut wire_steps = Vec::new();
+    for t in prefill_n..prefill_n + steps {
+        let resp = rpc(&mut s, Json::obj(vec![
+            ("op", Json::str("step")),
+            ("session", Json::num(sid as f64)),
+            ("t", Json::num(t as f64)),
+            ("seed", Json::num(seed as f64)),
+        ]));
+        wire_steps.push(out_bits(&resp));
+    }
+    rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("close")),
+        ("session", Json::num(sid as f64)),
+    ]));
+    srv.shutdown();
+
+    // inline replay: the exact same plan object and payload generators
+    let mut sess =
+        SessionState::new(Arc::new(plan)).expect("inline session");
+    let (q, k, v) = synthetic_qkv(seed, prefill_n, C);
+    let inline_prefill = sess.prefill(&q, &k, &v).expect("prefill");
+    let inline_bits: Vec<u32> = inline_prefill
+        .data()
+        .iter()
+        .map(|x| x.to_bits())
+        .collect();
+    assert_eq!(wire_prefill, inline_bits, "prefill bitwise");
+    for (i, t) in (prefill_n..prefill_n + steps).enumerate() {
+        let (qr, kr, vr) = synthetic_rows(seed, t, C);
+        let inline = sess.step(&qr, &kr, &vr).expect("step");
+        let inline_bits: Vec<u32> =
+            inline.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(wire_steps[i], inline_bits, "step t={t} bitwise");
+    }
+}
+
+#[test]
+fn oneshot_roundtrip_echo_and_suppression() {
+    let (srv, addr, plan) = demo_server(ServeConfig::default());
+    let (seed, n) = (7u64, 6usize);
+    let mut s = connect(&addr);
+
+    // echo off: shape comes back, the output array does not
+    let quiet = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("oneshot")),
+        ("artifact", Json::str(&demo_plan_name(PLAN_N))),
+        ("n", Json::num(n as f64)),
+        ("seed", Json::num(seed as f64)),
+        ("echo", Json::Bool(false)),
+    ]));
+    assert_eq!(quiet.get("ok").as_bool(), Some(true));
+    assert!(quiet.get("out").is_null(), "echo=false must drop `out`");
+    let shape: Vec<usize> = quiet
+        .get("shape")
+        .as_arr()
+        .expect("shape")
+        .iter()
+        .map(|x| x.as_usize().expect("dim"))
+        .collect();
+    assert_eq!(shape, vec![n, C]);
+
+    // echo on: the payload matches a direct plan execution
+    let loud = rpc(&mut s, Json::obj(vec![
+        ("op", Json::str("oneshot")),
+        ("artifact", Json::str(&demo_plan_name(PLAN_N))),
+        ("n", Json::num(n as f64)),
+        ("seed", Json::num(seed as f64)),
+    ]));
+    let bits = out_bits(&loud);
+    let (q, k, v) = synthetic_qkv(seed, n, C);
+    let reference = plan::execute(&plan, &q, &k, &v).expect("execute");
+    for (i, (got, want)) in
+        bits.iter().zip(reference.data()).enumerate()
+    {
+        let got = f32::from_bits(*got);
+        assert!((got - want).abs() < 1e-4,
+                "oneshot[{i}]: {got} vs {want}");
+    }
+    srv.shutdown();
+}
+
+#[test]
+fn loadgen_wave_against_a_live_server_is_clean() {
+    let (srv, addr, _plan) = demo_server(ServeConfig::default());
+    let out = run_wave(&WaveConfig {
+        addr: addr.clone(),
+        plan: demo_plan_name(PLAN_N),
+        connections: 4,
+        requests_per_conn: 2,
+        prefill_rows: 6,
+        decode_steps: 2,
+        seed: 9,
+    });
+    assert_eq!(out.protocol_errors, 0, "protocol errors");
+    assert_eq!(out.errors, 0, "typed errors");
+    // 4 conns × 2 interactions × (1 prefill + 2 steps)
+    assert_eq!(out.completed, 24);
+    assert!(out.latency.len() as u64 == out.completed);
+    assert!(out.throughput() > 0.0);
+
+    // the flush policy actually ran: reasons are on the books
+    let stats = fetch_stats(&addr).expect("stats");
+    let reasons = stats.get("metrics").get("net").get("flush_reasons");
+    let total: f64 = ["tokens", "deadline", "ratio", "drain"]
+        .into_iter()
+        .filter_map(|k| reasons.get(k).as_f64())
+        .sum();
+    assert!(total >= 1.0, "no flushes recorded: {}", stats.dump());
+    srv.shutdown();
+}
