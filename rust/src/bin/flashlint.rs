@@ -2,12 +2,18 @@
 //! tree and report violations of the serving-core invariants.
 //!
 //! ```text
-//! flashlint [--json] [--hotpath FILE] [--list-rules] [PATH...]
+//! flashlint [--json] [--hotpath FILE] [--baseline FILE]
+//!           [--write-baseline FILE] [--list-rules] [PATH...]
 //! ```
 //!
 //! PATH defaults to `rust/src` (falling back to `src` when run from
-//! inside `rust/`). Exit codes: 0 clean, 1 unsuppressed findings,
-//! 2 usage or I/O error.
+//! inside `rust/`). With `--baseline`, findings recorded in FILE are
+//! reported as known and do not affect the exit code — only new
+//! findings fail. `--write-baseline` regenerates FILE (sorted,
+//! deterministic) from the current findings and exits 0.
+//!
+//! Exit codes: 0 clean (or all findings known), 1 unsuppressed new
+//! findings, 2 usage or I/O error.
 
 use flashbias::lint;
 use std::path::PathBuf;
@@ -17,6 +23,8 @@ struct Args {
     json: bool,
     list_rules: bool,
     hotpath: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    write_baseline: Option<PathBuf>,
     paths: Vec<PathBuf>,
 }
 
@@ -25,6 +33,8 @@ fn parse_args() -> Result<Args, String> {
         json: false,
         list_rules: false,
         hotpath: None,
+        baseline: None,
+        write_baseline: None,
         paths: Vec::new(),
     };
     let mut it = std::env::args().skip(1);
@@ -36,9 +46,20 @@ fn parse_args() -> Result<Args, String> {
                 Some(p) => args.hotpath = Some(PathBuf::from(p)),
                 None => return Err("--hotpath requires a FILE".to_string()),
             },
+            "--baseline" => match it.next() {
+                Some(p) => args.baseline = Some(PathBuf::from(p)),
+                None => return Err("--baseline requires a FILE".to_string()),
+            },
+            "--write-baseline" => match it.next() {
+                Some(p) => args.write_baseline = Some(PathBuf::from(p)),
+                None => {
+                    return Err("--write-baseline requires a FILE".to_string())
+                }
+            },
             "-h" | "--help" => {
                 return Err(
                     "usage: flashlint [--json] [--hotpath FILE] \
+                     [--baseline FILE] [--write-baseline FILE] \
                      [--list-rules] [PATH...]"
                         .to_string(),
                 )
@@ -48,6 +69,12 @@ fn parse_args() -> Result<Args, String> {
             }
             other => args.paths.push(PathBuf::from(other)),
         }
+    }
+    if args.baseline.is_some() && args.write_baseline.is_some() {
+        return Err(
+            "--baseline and --write-baseline are mutually exclusive"
+                .to_string(),
+        );
     }
     Ok(args)
 }
@@ -72,7 +99,7 @@ fn main() -> ExitCode {
 
     if args.list_rules {
         for (name, summary, _) in lint::RULES {
-            println!("{name:18} {summary}");
+            println!("{name:20} {summary}");
         }
         return ExitCode::SUCCESS;
     }
@@ -80,9 +107,10 @@ fn main() -> ExitCode {
     let cfg = match &args.hotpath {
         None => lint::LintConfig::default(),
         Some(path) => match std::fs::read_to_string(path) {
-            Ok(text) => lint::LintConfig {
-                hotpath_roots: lint::parse_hotpath(&text),
-            },
+            Ok(text) => lint::LintConfig::from_manifests(
+                &text,
+                lint::default_dispatch_manifest(),
+            ),
             Err(e) => {
                 eprintln!("flashlint: cannot read {}: {e}", path.display());
                 return ExitCode::from(2);
@@ -125,7 +153,42 @@ fn main() -> ExitCode {
         return ExitCode::from(2);
     }
 
-    let report = lint::lint_sources(&sources, &cfg);
+    let mut report = lint::lint_sources(&sources, &cfg);
+
+    if let Some(path) = &args.write_baseline {
+        let text = lint::render_baseline(&report);
+        if let Err(e) = std::fs::write(path, text + "\n") {
+            eprintln!(
+                "flashlint: cannot write baseline {}: {e}",
+                path.display()
+            );
+            return ExitCode::from(2);
+        }
+        println!(
+            "flashlint: baseline {} written with {} finding(s)",
+            path.display(),
+            report.diagnostics.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    if let Some(path) = &args.baseline {
+        let entries = match std::fs::read_to_string(path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| lint::parse_baseline(&t))
+        {
+            Ok(entries) => entries,
+            Err(e) => {
+                eprintln!(
+                    "flashlint: cannot load baseline {}: {e}",
+                    path.display()
+                );
+                return ExitCode::from(2);
+            }
+        };
+        lint::apply_baseline(&mut report, &entries);
+    }
+
     if args.json {
         println!("{}", lint::render_json(&report));
     } else {

@@ -9,7 +9,7 @@
 //! batching). The worker splits it with [`Batch::split_by_kind`] and
 //! runs each side as one batched engine call.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use super::{Request, RequestKind};
@@ -58,18 +58,21 @@ impl Batch {
     }
 }
 
-/// Per-artifact accumulation queues.
+/// Per-artifact accumulation queues. Keyed with a `BTreeMap` so that
+/// timer flushes emit batches in artifact order — two runs that submit
+/// the same requests flush in the same order, independent of hasher
+/// seeds.
 #[derive(Debug)]
 pub struct DynamicBatcher {
     config: BatcherConfig,
-    pending: HashMap<String, Vec<Request>>,
+    pending: BTreeMap<String, Vec<Request>>,
 }
 
 impl DynamicBatcher {
     pub fn new(config: BatcherConfig) -> Self {
         Self {
             config,
-            pending: HashMap::new(),
+            pending: BTreeMap::new(),
         }
     }
 

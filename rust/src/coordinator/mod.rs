@@ -514,6 +514,7 @@ impl Coordinator {
                                -> Result<(), SessionApiError> {
         if let Some(batch) = self.batcher.push(req) {
             self.pool
+                // flashlint: allow(dispatch-blocking) append already happened, the request cannot be refused; blocking here IS the backpressure
                 .dispatch_blocking(batch)
                 .map_err(|_| SessionApiError::Stopped)?;
         }
@@ -599,6 +600,7 @@ impl Coordinator {
     pub fn flush_all(&mut self) -> Result<()> {
         for batch in self.batcher.flush_all() {
             self.pool
+                // flashlint: allow(dispatch-blocking) flushed batches were already accepted; they must reach the workers
                 .dispatch_blocking(batch)
                 .map_err(|_| anyhow!("worker pool stopped"))?;
         }

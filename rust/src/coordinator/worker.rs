@@ -119,6 +119,7 @@ impl WorkerPool {
             let _ = self.tx.send(Job::Stop);
         }
         for h in self.handles {
+            // flashlint: allow(dispatch-blocking) teardown only: runs after the dispatch loop has exited
             let _ = h.join();
         }
     }

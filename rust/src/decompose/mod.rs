@@ -309,7 +309,8 @@ impl LowRankSparse {
             let rank = pq.shape()[1];
             factors = Some(Factors::from_tensors(pq, pk, rel_err, rank));
         }
-        // flashlint: allow(hot-path-panic) the loop above runs iters.max(1) >= 1 passes, so factors is always Some here
+        // the loop above runs iters.max(1) >= 1 passes, so factors
+        // is always Some here
         let factors = factors.unwrap();
         let mut approx = factors.reconstruct();
         for &(i, j, v) in &sparse {

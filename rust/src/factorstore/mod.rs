@@ -40,7 +40,7 @@
 
 pub mod remote;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -52,7 +52,7 @@ use crate::util::sync::{check_blocking, Mutex};
 
 use crate::decompose::Factors;
 use crate::jsonlite::Json;
-use crate::tensor::{StripDType, Tensor};
+use crate::tensor::{StripDType, StripPayload, Tensor};
 
 pub use remote::{FactorService, RemoteStore};
 
@@ -185,22 +185,25 @@ struct Entry {
     stamp: u64,
 }
 
+/// All four tier maps are `BTreeMap`s: `save` walks them directly, so
+/// key order here is the record order of the persisted store file —
+/// two stores with the same contents serialize byte-identically.
 #[derive(Debug, Default)]
 struct Inner {
-    map: HashMap<u64, Entry>,
+    map: BTreeMap<u64, Entry>,
     /// In-flight decompositions: concurrent callers share one cell so
     /// the closure runs exactly once per key.
-    pending: HashMap<u64, Arc<OnceLock<Cached>>>,
+    pending: BTreeMap<u64, Arc<OnceLock<Cached>>>,
     /// Spill-tier index: key → (offset, byte length) of the entry's
     /// jsonlite record in the spill file.
-    spill_index: HashMap<u64, (u64, u64)>,
+    spill_index: BTreeMap<u64, (u64, u64)>,
     /// Entries displaced by the budget whose spill-file append has not
     /// completed yet (the write happens outside the lock). Staged here
     /// so that, at every instant, an entry is visible in at least one
     /// tier — lookups serve from it and `save` persists it; without
     /// this, a concurrent `save` in the eviction window would silently
     /// drop the entry from the persisted file.
-    spilling: HashMap<u64, Cached>,
+    spilling: BTreeMap<u64, Cached>,
     bytes: usize,
     tick: u64,
 }
@@ -938,17 +941,19 @@ fn json_to_i8s(j: &Json) -> Result<Vec<i8>> {
 /// existed load unchanged (and vice versa for f32-only stores).
 fn strip_to_json(fields: &mut Vec<(&'static str, Json)>,
                  tag: StripTag, s: &crate::tensor::Strip) {
-    match s.dtype() {
-        StripDType::F32 => fields.push((
-            tag.plain(),
-            f32s_to_json(s.as_f32().expect("f32 strip payload")),
-        )),
-        StripDType::Bf16 | StripDType::F16 => fields.push((
-            tag.bits(),
-            u16s_to_json(s.bits_u16().expect("16-bit strip payload")),
-        )),
-        StripDType::I8 => {
-            let (data, scales) = s.i8_parts().expect("i8 strip payload");
+    // Every caller filters through entry_is_finite (which checks each
+    // strip) before serializing — this path runs on live workers, so
+    // it must not be able to panic on a payload/dtype mismatch either:
+    // matching the payload directly keeps the dispatch total.
+    debug_assert!(s.is_finite(), "non-finite strip reached persist");
+    match s.payload() {
+        StripPayload::F32(xs) => {
+            fields.push((tag.plain(), f32s_to_json(xs)))
+        }
+        StripPayload::Bits16(bits) => {
+            fields.push((tag.bits(), u16s_to_json(bits)))
+        }
+        StripPayload::I8 { data, scales } => {
             fields.push((tag.plain(), i8s_to_json(data)));
             fields.push((tag.scales(), f32s_to_json(scales)));
         }

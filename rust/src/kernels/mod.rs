@@ -524,8 +524,28 @@ fn execute_programs<'a>(programs: Vec<(Program<'a>, &'a mut [f32])>,
     });
 }
 
+// Per-thread (m_acc, l_acc, score_buf) buffers, reused across query
+// blocks so the steady-state tile loop never touches the allocator:
+// one worker runs many blocks per flush, and a fresh vec! per block
+// multiplies by batch × blocks. Every buffer is resized and refilled
+// at block entry, so reuse cannot change a single output bit.
+thread_local! {
+    static QBLOCK_SCRATCH: std::cell::RefCell<(Vec<f32>, Vec<f32>, Vec<f32>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+}
+
 /// The streaming-softmax inner loop for one query block.
 fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
+    QBLOCK_SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        let (m_acc, l_acc, score_buf) = &mut *scratch;
+        run_query_block_in(job, cfg, m_acc, l_acc, score_buf);
+    });
+}
+
+fn run_query_block_in(job: Job<'_>, cfg: &KernelConfig,
+                      m_acc: &mut Vec<f32>, l_acc: &mut Vec<f32>,
+                      score_buf: &mut Vec<f32>) {
     let Job { prog, i0, out } = job;
     let (n, m) = (prog.q.rows, prog.k.rows);
     let cv = prog.v.cols;
@@ -533,10 +553,13 @@ fn run_query_block(job: Job<'_>, cfg: &KernelConfig) {
     let block_k = cfg.block_k.max(1);
     // decoder alignment: key j is visible to query i iff j − (m − n) ≤ i
     let off = m as isize - n as isize;
-    let mut m_acc = vec![NEG_INF; bq];
-    let mut l_acc = vec![0.0f32; bq];
+    m_acc.clear();
+    m_acc.resize(bq, NEG_INF);
+    l_acc.clear();
+    l_acc.resize(bq, 0.0f32);
     out.fill(0.0);
-    let mut score_buf = vec![0.0f32; bq * block_k];
+    score_buf.clear();
+    score_buf.resize(bq * block_k, 0.0f32);
     let mut j0 = 0usize;
     while j0 < m {
         let bk = block_k.min(m - j0);

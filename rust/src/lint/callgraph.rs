@@ -1,83 +1,680 @@
-//! R5: panic sites reachable from the serving hot path.
+//! Whole-crate call graph with module/impl-aware symbol resolution,
+//! plus the reachability rules built on it: R5 (hot-path-panic), R7
+//! (alloc-in-hotpath), R8 (unordered-iteration), and R10
+//! (dispatch-blocking).
 //!
-//! flashlint has no type information, so the call graph is name-level:
-//! an identifier followed by `(` inside a function body is an edge from
-//! that function's *name* to the callee's *name*. Reachability is then
-//! a BFS over names, seeded by the checked-in hot-path manifest
-//! (`src/lint/hotpath.txt`). This over-approximates — a call to
-//! `x.get(…)` reaches every repo function named `get` — which is the
-//! right bias for a safety net: everything the serving loop *could*
-//! reach must be panic-free or carry an annotated justification.
+//! flashlint has no type checker, so resolution is heuristic but
+//! receiver-aware: every `fn` carries its impl target (`FnSpan::owner`),
+//! and call sites resolve through a small type environment (params,
+//! `let` bindings, `self`) plus a crate-wide field-type map. The
+//! resolution discipline, in decreasing confidence:
+//!
+//! - **Typed receiver** (`b.go()` where `b` is known to be a `B`):
+//!   edges only to `B::go` (trait names expand to their impls). If the
+//!   resolved type has no such method, the call leaves the crate — no
+//!   edge, no fallback.
+//! - **Untyped ident receiver** (`sess.step()` with `sess` untypable):
+//!   edges to every crate *method* of that name (`.m()` can never be a
+//!   free fn) — except for [`UBIQUITOUS_METHODS`], std-prelude names
+//!   (`len`, `get`, `map`, …) whose std reading dominates so completely
+//!   that a crate edge would be noise.
+//! - **Expression receiver** (`(0..n).map(…)`, `queues[i].push(…)`):
+//!   no edge. These are iterator/slice/`Option` adaptors essentially
+//!   always, and name fallbacks here were the analyzer's main source
+//!   of phantom reachability.
+//! - **Qualified path** (`Q::m(…)`): uppercase `Q` resolves strictly
+//!   like a typed receiver; lowercase `q` in [`STD_MODULES`]
+//!   (`thread::spawn`, `mem::take`) leaves the crate; any other
+//!   lowercase module edges to crate free fns of that name only.
+//! - **Bare call** (`helper(…)`): crate free fns of that name only —
+//!   Rust's own resolution cannot make a bare call land on a method.
+//!
+//! Reachability is a BFS over resolved fn ids seeded by manifest root
+//! sets (`hotpath.txt` sections, `dispatch.txt`), with per-fn
+//! provenance chains for diagnostics.
 
-use super::rules::{calls_in_range, FileAnalysis, Finding};
-use super::tokenizer::{is_ident, is_punct, TokKind};
+use super::rules::{FileAnalysis, Finding, KEYWORDS};
+use super::tokenizer::{is_ident, is_punct, Tok, TokKind};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Macros that are always a panic at runtime.
 const PANIC_MACROS: &[&str] = &["panic", "todo", "unimplemented"];
 
-/// Compute R5 findings across all files. Returns `(file_index, finding)`
-/// pairs so the caller can route them through per-file suppression.
-pub fn hot_path_findings(
-    files: &[FileAnalysis],
-    roots: &[String],
-) -> Vec<(usize, Finding)> {
-    // name -> [(file idx, span idx)] over non-test fns.
-    let mut by_name: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
-    for (fi, fa) in files.iter().enumerate() {
-        for (si, span) in fa.fn_spans.iter().enumerate() {
-            if !span.is_test {
-                by_name.entry(span.name.as_str()).or_default().push((fi, si));
-            }
-        }
-    }
+/// Std module segments: `seg::f(…)` through one of these leaves the
+/// crate (`thread::spawn` must not edge to a crate fn named `spawn`).
+const STD_MODULES: &[&str] = &[
+    "std", "thread", "fs", "io", "mem", "env", "process", "time", "cmp",
+    "iter", "ptr", "slice", "str", "net", "fmt", "hash", "convert",
+    "borrow", "array", "char", "f32", "f64", "u8", "u16", "u32", "u64",
+    "usize", "i8", "i16", "i32", "i64", "isize",
+];
 
-    // BFS over fn names; remember which caller first reached each name.
-    let mut reached_via: BTreeMap<String, String> = BTreeMap::new();
-    let mut queue: VecDeque<String> = VecDeque::new();
-    for r in roots {
-        if by_name.contains_key(r.as_str())
-            && !reached_via.contains_key(r.as_str())
-        {
-            reached_via.insert(r.clone(), "<hot-path manifest>".to_string());
-            queue.push_back(r.clone());
-        }
+/// Method names so pervasive on std types (slices, iterators, `Option`,
+/// collections, `f32`) that an *untyped* receiver calling one is
+/// essentially never a crate call. Typed receivers still resolve these
+/// exactly — `batcher.push(…)` with `batcher: DynamicBatcher` edges to
+/// `DynamicBatcher::push` — only the name-level fallback is cut.
+const UBIQUITOUS_METHODS: &[&str] = &[
+    "all", "any", "append", "as_mut", "as_ref", "clear", "clone",
+    "collect", "contains", "contains_key", "count", "drain", "entry",
+    "enumerate", "expect", "extend", "fill", "filter", "find", "first",
+    "fold", "get", "get_mut", "insert", "into_iter", "is_empty",
+    "is_none", "is_some", "iter", "iter_mut", "join", "keys", "last",
+    "len", "map", "max", "min", "next", "parse", "pop", "position",
+    "push", "read", "remove", "replace", "resize", "retain", "rev",
+    "send", "sort", "split", "sum", "take", "to_owned", "to_string",
+    "to_vec", "unwrap", "unwrap_or", "values", "write", "zip",
+];
+
+/// Containers skipped when extracting the interesting type from a
+/// declaration (`Arc<FactorStore>` types its binding as `FactorStore`).
+fn resolve_type_name(
+    idents: &[String],
+    crate_known: &BTreeSet<String>,
+) -> Option<String> {
+    idents
+        .iter()
+        .find(|t| crate_known.contains(*t))
+        .or_else(|| idents.first())
+        .cloned()
+}
+
+/// One `fn` in the crate: `(file index, span index)`.
+#[derive(Clone, Copy, Debug)]
+struct FnInfo {
+    fi: usize,
+    si: usize,
+}
+
+/// Result of a reachability BFS: visited fn ids plus, for provenance,
+/// the fn each was first reached from (`None` = manifest root).
+pub struct Reach {
+    parent: BTreeMap<usize, Option<usize>>,
+}
+
+impl Reach {
+    pub fn visited(&self) -> impl Iterator<Item = usize> + '_ {
+        self.parent.keys().copied()
     }
-    let mut visited_spans: BTreeSet<(usize, usize)> = BTreeSet::new();
-    while let Some(name) = queue.pop_front() {
-        let Some(sites) = by_name.get(name.as_str()) else { continue };
-        for &(fi, si) in sites {
-            if !visited_spans.insert((fi, si)) {
-                continue;
-            }
-            let fa = &files[fi];
-            let span = &fa.fn_spans[si];
-            for callee in span_calls(fa, si) {
-                if by_name.contains_key(callee.as_str())
-                    && !reached_via.contains_key(&callee)
-                {
-                    reached_via.insert(callee.clone(), name.clone());
-                    queue.push_back(callee);
+    pub fn contains(&self, id: usize) -> bool {
+        self.parent.contains_key(&id)
+    }
+}
+
+pub struct Graph<'a> {
+    files: &'a [FileAnalysis],
+    fns: Vec<FnInfo>,
+    /// Bare fn name -> fn ids (methods and free fns alike).
+    by_name: BTreeMap<String, Vec<usize>>,
+    /// Free (non-impl) fn name -> fn ids.
+    free_by_name: BTreeMap<String, Vec<usize>>,
+    /// (impl target, method name) -> fn ids.
+    methods: BTreeMap<(String, String), Vec<usize>>,
+    /// Method name -> fn ids (impl fns only): the untyped-receiver
+    /// fallback pool.
+    methods_by_name: BTreeMap<String, Vec<usize>>,
+    /// Trait name -> implementing types (for `dyn Trait` receivers).
+    trait_impls: BTreeMap<String, BTreeSet<String>>,
+    /// Impl targets and trait names defined in the crate.
+    crate_known: BTreeSet<String>,
+    /// Per file: binding/field names declared with a HashMap/HashSet
+    /// type *in that file*. Kept per-file so a `pending` HashMap in one
+    /// module does not taint every other binding named `pending`.
+    hash_named: Vec<BTreeSet<String>>,
+    /// Crate-wide `name: Type` declarations (fields, params, lets).
+    field_types: BTreeMap<String, BTreeSet<String>>,
+    /// Per file: token index -> owning fn id (innermost non-test fn).
+    token_owner: Vec<Vec<Option<usize>>>,
+    /// Resolved call edges per fn id.
+    edges: Vec<Vec<usize>>,
+}
+
+impl<'a> Graph<'a> {
+    pub fn build(files: &'a [FileAnalysis]) -> Graph<'a> {
+        let mut fns = Vec::new();
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut free_by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        let mut methods: BTreeMap<(String, String), Vec<usize>> =
+            BTreeMap::new();
+        let mut methods_by_name: BTreeMap<String, Vec<usize>> =
+            BTreeMap::new();
+        let mut trait_impls: BTreeMap<String, BTreeSet<String>> =
+            BTreeMap::new();
+        let mut crate_known: BTreeSet<String> = BTreeSet::new();
+
+        for (fi, fa) in files.iter().enumerate() {
+            for (trait_name, ty) in &fa.impl_decls {
+                crate_known.insert(ty.clone());
+                if let Some(tr) = trait_name {
+                    crate_known.insert(tr.clone());
+                    trait_impls
+                        .entry(tr.clone())
+                        .or_default()
+                        .insert(ty.clone());
                 }
             }
-        }
-    }
-
-    // Scan every reached span for panic sites.
-    let mut out = Vec::new();
-    for &(fi, si) in &visited_spans {
-        let fa = &files[fi];
-        let span = &fa.fn_spans[si];
-        let t = &fa.toks;
-        for i in span.body_open..=span.body_close {
-            if fa.test_mask[i] || t[i].kind != TokKind::Ident {
-                continue;
-            }
-            // Only sites attributed to this span, not a nested fn.
-            if let Some(inner) = super::rules::innermost_fn(fa, i) {
-                if inner.kw != span.kw {
+            for (si, span) in fa.fn_spans.iter().enumerate() {
+                if span.is_test {
                     continue;
                 }
+                let id = fns.len();
+                fns.push(FnInfo { fi, si });
+                by_name.entry(span.name.clone()).or_default().push(id);
+                match &span.owner {
+                    Some(owner) => {
+                        methods
+                            .entry((owner.clone(), span.name.clone()))
+                            .or_default()
+                            .push(id);
+                        methods_by_name
+                            .entry(span.name.clone())
+                            .or_default()
+                            .push(id);
+                    }
+                    None => {
+                        free_by_name
+                            .entry(span.name.clone())
+                            .or_default()
+                            .push(id);
+                    }
+                }
+            }
+        }
+
+        // Innermost-fn ownership per token: assign wider spans first so
+        // nested fns overwrite their enclosing span.
+        let mut token_owner: Vec<Vec<Option<usize>>> =
+            files.iter().map(|fa| vec![None; fa.toks.len()]).collect();
+        let mut order: Vec<usize> = (0..fns.len()).collect();
+        order.sort_by_key(|&id| {
+            let f = fns[id];
+            let s = &files[f.fi].fn_spans[f.si];
+            std::cmp::Reverse(s.body_close - s.body_open)
+        });
+        for id in order {
+            let f = fns[id];
+            let s = &files[f.fi].fn_spans[f.si];
+            for slot in token_owner[f.fi]
+                .iter_mut()
+                .take(s.body_close + 1)
+                .skip(s.body_open)
+            {
+                *slot = Some(id);
+            }
+        }
+
+        // Crate-wide declaration scan: field/param/let types (for
+        // receiver resolution) and hash-typed binding names (for R8).
+        let mut field_types: BTreeMap<String, BTreeSet<String>> =
+            BTreeMap::new();
+        let mut hash_named: Vec<BTreeSet<String>> =
+            vec![BTreeSet::new(); files.len()];
+        for (fi, fa) in files.iter().enumerate() {
+            let t = &fa.toks;
+            for i in 0..t.len() {
+                if fa.test_mask[i] {
+                    continue;
+                }
+                if let Some((name, tys)) = decl_type(t, i) {
+                    if tys.iter().any(|x| x == "HashMap" || x == "HashSet") {
+                        hash_named[fi].insert(name.clone());
+                    }
+                    if let Some(ty) = resolve_type_name(&tys, &crate_known) {
+                        field_types.entry(name).or_default().insert(ty);
+                    }
+                }
+                // `let [mut] name = HashMap::new()` / `HashSet::…`.
+                if is_ident(&t[i], "let") {
+                    let mut j = i + 1;
+                    if j < t.len() && is_ident(&t[j], "mut") {
+                        j += 1;
+                    }
+                    if j + 2 < t.len()
+                        && t[j].kind == TokKind::Ident
+                        && is_punct(&t[j + 1], '=')
+                        && (is_ident(&t[j + 2], "HashMap")
+                            || is_ident(&t[j + 2], "HashSet"))
+                    {
+                        hash_named[fi].insert(t[j].text.clone());
+                    }
+                }
+            }
+        }
+
+        let mut g = Graph {
+            files,
+            fns,
+            by_name,
+            free_by_name,
+            methods,
+            methods_by_name,
+            trait_impls,
+            crate_known,
+            hash_named,
+            field_types,
+            token_owner,
+            edges: Vec::new(),
+        };
+        g.edges = (0..g.fns.len()).map(|id| g.resolve_edges(id)).collect();
+        g
+    }
+
+    fn span(&self, id: usize) -> &super::rules::FnSpan {
+        let f = self.fns[id];
+        &self.files[f.fi].fn_spans[f.si]
+    }
+
+    fn file_of(&self, id: usize) -> usize {
+        self.fns[id].fi
+    }
+
+    pub fn name_of(&self, id: usize) -> &str {
+        &self.span(id).name
+    }
+
+    /// Token indices of fn `id`'s own body (nested fns excluded).
+    fn own_tokens(&self, id: usize) -> Vec<usize> {
+        let f = self.fns[id];
+        let s = &self.files[f.fi].fn_spans[f.si];
+        (s.body_open + 1..s.body_close)
+            .filter(|&i| self.token_owner[f.fi][i] == Some(id))
+            .collect()
+    }
+
+    /// Method targets for a receiver type (or trait) name.
+    fn method_targets(&self, tys: &[String], m: &str) -> Vec<usize> {
+        let mut expanded: BTreeSet<String> = BTreeSet::new();
+        for ty in tys {
+            match self.trait_impls.get(ty) {
+                Some(impls) => expanded.extend(impls.iter().cloned()),
+                None => {
+                    expanded.insert(ty.clone());
+                }
+            }
+        }
+        let mut hit: Vec<usize> = Vec::new();
+        for ty in &expanded {
+            if let Some(ids) =
+                self.methods.get(&(ty.clone(), m.to_string()))
+            {
+                hit.extend(ids.iter().copied());
+            }
+        }
+        // Strict: no (type, method) hit means the call leaves the
+        // crate (`Vec::push`, `Instant::now`, `opt.map(…)`). A typed
+        // receiver never falls back to name-level matching.
+        hit.sort_unstable();
+        hit.dedup();
+        hit
+    }
+
+    /// Resolve the call edges out of fn `id`.
+    fn resolve_edges(&self, id: usize) -> Vec<usize> {
+        let f = self.fns[id];
+        let fa = &self.files[f.fi];
+        let t = &fa.toks;
+        let span = &fa.fn_spans[f.si];
+        let env = self.type_env(id);
+        let mut out: BTreeSet<usize> = BTreeSet::new();
+
+        for i in self.own_tokens(id) {
+            if t[i].kind != TokKind::Ident
+                || KEYWORDS.contains(&t[i].text.as_str())
+            {
+                continue;
+            }
+            if i + 1 >= t.len() || !is_punct(&t[i + 1], '(') {
+                continue;
+            }
+            if i > 0 && is_ident(&t[i - 1], "fn") {
+                continue;
+            }
+            let m = t[i].text.as_str();
+            let targets: Vec<usize> = if i > 0 && is_punct(&t[i - 1], '.') {
+                // Method call: type the receiver via env, then the
+                // crate-wide field map.
+                if !(i >= 2 && t[i - 2].kind == TokKind::Ident) {
+                    // Expression receiver (`)`, `]`, literal): an
+                    // iterator/slice/Option adaptor essentially always;
+                    // a name fallback here invents crate edges.
+                    continue;
+                }
+                let recv = t[i - 2].text.as_str();
+                let tys: Option<Vec<String>> = if recv == "self" {
+                    span.owner.clone().map(|o| vec![o])
+                } else {
+                    env.get(recv).map(|ty| vec![ty.clone()]).or_else(|| {
+                        self.field_types
+                            .get(recv)
+                            .map(|s| s.iter().cloned().collect())
+                    })
+                };
+                match tys {
+                    Some(tys) => self.method_targets(&tys, m),
+                    None if UBIQUITOUS_METHODS.contains(&m) => {
+                        // std-prelude name on an untyped receiver: the
+                        // std reading dominates; no crate edge.
+                        Vec::new()
+                    }
+                    None => {
+                        // Untyped receiver: over-approximate across
+                        // crate methods only (`.m()` is never a free fn).
+                        self.methods_by_name
+                            .get(m)
+                            .cloned()
+                            .unwrap_or_default()
+                    }
+                }
+            } else if i >= 3
+                && is_punct(&t[i - 1], ':')
+                && is_punct(&t[i - 2], ':')
+                && t[i - 3].kind == TokKind::Ident
+            {
+                let q = t[i - 3].text.as_str();
+                if q == "Self" {
+                    match &span.owner {
+                        Some(o) => {
+                            self.method_targets(&[o.clone()], m)
+                        }
+                        None => self
+                            .methods_by_name
+                            .get(m)
+                            .cloned()
+                            .unwrap_or_default(),
+                    }
+                } else if q.starts_with(|c: char| c.is_ascii_uppercase()) {
+                    self.method_targets(&[q.to_string()], m)
+                } else if STD_MODULES.contains(&q) {
+                    // `thread::spawn`, `mem::take`, …: leaves the crate.
+                    Vec::new()
+                } else {
+                    // Module-qualified path: a crate free fn elsewhere.
+                    self.free_by_name.get(m).cloned().unwrap_or_default()
+                }
+            } else {
+                // Bare call: crate free fns only — Rust's resolution
+                // cannot make a bare call land on a method.
+                self.free_by_name.get(m).cloned().unwrap_or_default()
+            };
+            out.extend(targets);
+        }
+        out.remove(&id);
+        out.into_iter().collect()
+    }
+
+    /// Local type environment for fn `id`: param and `let` bindings.
+    fn type_env(&self, id: usize) -> BTreeMap<String, String> {
+        let f = self.fns[id];
+        let fa = &self.files[f.fi];
+        let t = &fa.toks;
+        let span = &fa.fn_spans[f.si];
+        let mut env = BTreeMap::new();
+        // Params: `name: Type` between the fn name and the body `{`.
+        for i in span.kw..span.body_open {
+            if let Some((name, tys)) = decl_type(t, i) {
+                if let Some(ty) = resolve_type_name(&tys, &self.crate_known)
+                {
+                    env.insert(name, ty);
+                }
+            }
+        }
+        // Lets: `let [mut] name: Type` / `let [mut] name = Type::…`.
+        for i in self.own_tokens(id) {
+            if !is_ident(&t[i], "let") {
+                continue;
+            }
+            let mut j = i + 1;
+            if j < t.len() && is_ident(&t[j], "mut") {
+                j += 1;
+            }
+            if j >= t.len() || t[j].kind != TokKind::Ident {
+                continue;
+            }
+            let name = t[j].text.clone();
+            if j + 1 < t.len()
+                && is_punct(&t[j + 1], ':')
+                && !(j + 2 < t.len() && is_punct(&t[j + 2], ':'))
+            {
+                if let Some((n, tys)) = decl_type(t, j) {
+                    if let Some(ty) =
+                        resolve_type_name(&tys, &self.crate_known)
+                    {
+                        env.insert(n, ty);
+                    }
+                }
+            } else if j + 2 < t.len()
+                && is_punct(&t[j + 1], '=')
+                && t[j + 2].kind == TokKind::Ident
+                && t[j + 2]
+                    .text
+                    .starts_with(|c: char| c.is_ascii_uppercase())
+                && j + 3 < t.len()
+                && (is_punct(&t[j + 3], ':') || is_punct(&t[j + 3], '{'))
+            {
+                // `let x = Type::ctor(…)` or `let x = Type { … }`.
+                env.insert(name, t[j + 2].text.clone());
+            }
+        }
+        env
+    }
+
+    /// BFS from manifest roots. A root is a bare fn name (matches every
+    /// fn with that name) or `Type::method`.
+    pub fn reach(&self, roots: &[String]) -> Reach {
+        let mut parent: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for spec in roots {
+            let ids: Vec<usize> = match spec.split_once("::") {
+                Some((ty, m)) => self
+                    .methods
+                    .get(&(ty.to_string(), m.to_string()))
+                    .cloned()
+                    .unwrap_or_default(),
+                None => {
+                    self.by_name.get(spec).cloned().unwrap_or_default()
+                }
+            };
+            for id in ids {
+                if let std::collections::btree_map::Entry::Vacant(e) =
+                    parent.entry(id)
+                {
+                    e.insert(None);
+                    queue.push_back(id);
+                }
+            }
+        }
+        while let Some(id) = queue.pop_front() {
+            for &tgt in &self.edges[id] {
+                if let std::collections::btree_map::Entry::Vacant(e) =
+                    parent.entry(tgt)
+                {
+                    e.insert(Some(id));
+                    queue.push_back(tgt);
+                }
+            }
+        }
+        Reach { parent }
+    }
+
+    /// Fns that can reach (transitively call) any fn named in `sinks`.
+    fn reaches_any(&self, sinks: &[&str]) -> BTreeSet<usize> {
+        let mut rev: Vec<Vec<usize>> = vec![Vec::new(); self.fns.len()];
+        for (src, tgts) in self.edges.iter().enumerate() {
+            for &t in tgts {
+                rev[t].push(src);
+            }
+        }
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        let mut queue: VecDeque<usize> = VecDeque::new();
+        for s in sinks {
+            for &id in
+                self.by_name.get(*s).map(|v| v.as_slice()).unwrap_or(&[])
+            {
+                if seen.insert(id) {
+                    queue.push_back(id);
+                }
+            }
+        }
+        while let Some(id) = queue.pop_front() {
+            for &caller in &rev[id] {
+                if seen.insert(caller) {
+                    queue.push_back(caller);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Render a short `root -> … -> name` provenance chain.
+    fn chain(&self, reach: &Reach, id: usize) -> String {
+        let mut parts = vec![self.name_of(id).to_string()];
+        let mut cur = id;
+        for _ in 0..6 {
+            match reach.parent.get(&cur) {
+                Some(Some(p)) => {
+                    parts.push(self.name_of(*p).to_string());
+                    cur = *p;
+                }
+                _ => break,
+            }
+        }
+        parts.reverse();
+        if parts.len() == 1 {
+            format!("root `{}`", parts[0])
+        } else {
+            format!("via `{}`", parts.join(" -> "))
+        }
+    }
+}
+
+/// Parse a `name: Type` declaration at ident token `i` (field, param,
+/// or typed `let`). Returns the binding name and the type path's
+/// identifiers (generics included, `dyn`/`mut`/`impl`/`ref` skipped).
+fn decl_type(t: &[Tok], i: usize) -> Option<(String, Vec<String>)> {
+    if t[i].kind != TokKind::Ident
+        || KEYWORDS.contains(&t[i].text.as_str())
+    {
+        return None;
+    }
+    if i + 2 >= t.len()
+        || !is_punct(&t[i + 1], ':')
+        || is_punct(&t[i + 2], ':')
+        || (i > 0 && is_punct(&t[i - 1], ':'))
+    {
+        return None;
+    }
+    let mut tys = Vec::new();
+    let mut depth = 0i32;
+    let mut j = i + 2;
+    let limit = (i + 42).min(t.len());
+    while j < limit {
+        let tk = &t[j];
+        if is_punct(tk, '<') {
+            depth += 1;
+        } else if is_punct(tk, '>') {
+            if depth == 0 {
+                break;
+            }
+            depth -= 1;
+        } else if depth == 0
+            && (is_punct(tk, ',')
+                || is_punct(tk, ')')
+                || is_punct(tk, ';')
+                || is_punct(tk, '=')
+                || is_punct(tk, '{')
+                || is_punct(tk, '}')
+                || is_punct(tk, '('))
+        {
+            break;
+        } else if tk.kind == TokKind::Ident
+            && !matches!(tk.text.as_str(), "dyn" | "mut" | "impl" | "ref")
+        {
+            tys.push(tk.text.clone());
+        }
+        j += 1;
+    }
+    if tys.is_empty() {
+        None
+    } else {
+        Some((t[i].text.clone(), tys))
+    }
+}
+
+/// Receiver-chain identifiers for the method call whose `.` is at
+/// `dot`: `self.store.lookup(…)` yields `["store", "self"]`
+/// (nearest-first), skipping balanced `(...)`/`[...]` groups.
+fn chain_idents(t: &[Tok], dot: usize) -> Vec<String> {
+    let mut ids = Vec::new();
+    let mut k = dot;
+    loop {
+        if k == 0 {
+            break;
+        }
+        let p = k - 1;
+        match t[p].kind {
+            TokKind::Ident => {
+                ids.push(t[p].text.clone());
+                if p > 0 && is_punct(&t[p - 1], '.') {
+                    k = p - 1;
+                    continue;
+                }
+                break;
+            }
+            TokKind::Punct
+                if is_punct(&t[p], ')') || is_punct(&t[p], ']') =>
+            {
+                let close_ch = if is_punct(&t[p], ')') { ')' } else { ']' };
+                let open_ch = if close_ch == ')' { '(' } else { '[' };
+                let mut depth = 0i32;
+                let mut o = p;
+                loop {
+                    if is_punct(&t[o], close_ch) {
+                        depth += 1;
+                    } else if is_punct(&t[o], open_ch) {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    if o == 0 {
+                        break;
+                    }
+                    o -= 1;
+                }
+                if o > 0 && t[o - 1].kind == TokKind::Ident {
+                    ids.push(t[o - 1].text.clone());
+                    if o >= 2 && is_punct(&t[o - 2], '.') {
+                        k = o - 2;
+                        continue;
+                    }
+                }
+                break;
+            }
+            _ => break,
+        }
+    }
+    ids
+}
+
+// ---------------------------------------------------------------------------
+// R5: panic sites reachable from the serving hot path
+// ---------------------------------------------------------------------------
+
+/// Compute R5 findings. Returns `(file_index, finding)` pairs so the
+/// caller can route them through per-file suppression.
+pub fn hot_path_findings(
+    g: &Graph,
+    roots: &[String],
+) -> Vec<(usize, Finding)> {
+    let reach = g.reach(roots);
+    let mut out = Vec::new();
+    for id in reach.visited() {
+        let fa = &g.files[g.file_of(id)];
+        let t = &fa.toks;
+        let span_name = g.name_of(id).to_string();
+        for i in g.own_tokens(id) {
+            if fa.test_mask[i] || t[i].kind != TokKind::Ident {
+                continue;
             }
             let site = if (is_ident(&t[i], "unwrap")
                 || is_ident(&t[i], "expect"))
@@ -96,16 +693,15 @@ pub fn hot_path_findings(
                 None
             };
             if let Some(site) = site {
-                let via = chain(&reached_via, &span.name);
+                let via = g.chain(&reach, id);
                 out.push((
-                    fi,
+                    g.file_of(id),
                     Finding {
                         rule: "hot-path-panic",
                         line: t[i].line,
                         message: format!(
-                            "`{site}` in fn `{}`, reachable from the \
-                             serving hot path ({via})",
-                            span.name
+                            "`{site}` in fn `{span_name}`, reachable from \
+                             the serving hot path ({via})"
                         ),
                     },
                 ));
@@ -115,63 +711,325 @@ pub fn hot_path_findings(
     out
 }
 
-/// Call sites attributed to span `si` (excluding nested fn bodies).
-fn span_calls(fa: &FileAnalysis, si: usize) -> Vec<String> {
-    let span = &fa.fn_spans[si];
-    let mut calls =
-        calls_in_range(fa, span.body_open + 1, span.body_close);
-    // Remove calls that actually live in a nested fn defined inside us.
-    let nested: Vec<(usize, usize)> = fa
-        .fn_spans
-        .iter()
-        .filter(|s| s.kw != span.kw && s.kw > span.body_open && s.body_close < span.body_close)
-        .map(|s| (s.kw, s.body_close))
-        .collect();
-    if !nested.is_empty() {
-        calls = calls_outside_nested(fa, span, &nested);
-    }
-    calls.sort();
-    calls.dedup();
-    calls
-}
+// ---------------------------------------------------------------------------
+// R7: heap allocation reachable from decode/kernel inner-loop roots
+// ---------------------------------------------------------------------------
 
-fn calls_outside_nested(
-    fa: &FileAnalysis,
-    span: &super::rules::FnSpan,
-    nested: &[(usize, usize)],
-) -> Vec<String> {
+const ALLOC_CTOR_TYPES: &[&str] = &[
+    "Vec", "VecDeque", "String", "Box", "HashMap", "HashSet", "BTreeMap",
+    "BTreeSet",
+];
+const ALLOC_CTOR_FNS: &[&str] = &["new", "with_capacity", "from"];
+const ALLOC_METHODS: &[&str] =
+    &["clone", "to_vec", "to_owned", "to_string", "collect"];
+const ALLOC_MACROS: &[&str] = &["format", "vec"];
+
+pub fn alloc_findings(
+    g: &Graph,
+    inner_roots: &[String],
+    scratch_allow: &[String],
+) -> Vec<(usize, Finding)> {
+    let reach = g.reach(inner_roots);
     let mut out = Vec::new();
-    let mut i = span.body_open + 1;
-    while i < span.body_close {
-        if let Some(&(_, close)) =
-            nested.iter().find(|&&(kw, _)| kw == i)
-        {
-            i = close + 1;
+    for id in reach.visited() {
+        let span = g.span(id);
+        let exempt = scratch_allow.iter().any(|s| {
+            s == &span.name
+                || match (&span.owner, s.split_once("::")) {
+                    (Some(o), Some((ty, m))) => {
+                        o == ty && m == span.name
+                    }
+                    _ => false,
+                }
+        });
+        if exempt {
+            // Per-flush setup fns: their own allocations are amortized
+            // over the whole batch, but their callees stay in scope.
             continue;
         }
-        out.extend(calls_in_range(fa, i, i + 1));
-        i += 1;
+        let fa = &g.files[g.file_of(id)];
+        let t = &fa.toks;
+        let span_name = g.name_of(id).to_string();
+        for i in g.own_tokens(id) {
+            if fa.test_mask[i] || t[i].kind != TokKind::Ident {
+                continue;
+            }
+            let txt = t[i].text.as_str();
+            let next_open = i + 1 < t.len() && is_punct(&t[i + 1], '(');
+            let next_turbofish = i + 3 < t.len()
+                && is_punct(&t[i + 1], ':')
+                && is_punct(&t[i + 2], ':')
+                && is_punct(&t[i + 3], '<');
+            let what = if ALLOC_METHODS.contains(&txt)
+                && i > 0
+                && is_punct(&t[i - 1], '.')
+                && (next_open || next_turbofish)
+            {
+                Some(format!(".{txt}()"))
+            } else if ALLOC_CTOR_TYPES.contains(&txt)
+                && i + 3 < t.len()
+                && is_punct(&t[i + 1], ':')
+                && is_punct(&t[i + 2], ':')
+                && ALLOC_CTOR_FNS.contains(&t[i + 3].text.as_str())
+                && i + 4 < t.len()
+                && is_punct(&t[i + 4], '(')
+            {
+                Some(format!("{txt}::{}", t[i + 3].text))
+            } else if ALLOC_MACROS.contains(&txt)
+                && i + 1 < t.len()
+                && is_punct(&t[i + 1], '!')
+            {
+                Some(format!("{txt}!"))
+            } else {
+                None
+            };
+            if let Some(what) = what {
+                let via = g.chain(&reach, id);
+                out.push((
+                    g.file_of(id),
+                    Finding {
+                        rule: "alloc-in-hotpath",
+                        line: t[i].line,
+                        message: format!(
+                            "`{what}` heap-allocates in fn `{span_name}`, \
+                             on the decode/kernel inner loop ({via}) — \
+                             reuse a scratch buffer"
+                        ),
+                    },
+                ));
+            }
+        }
     }
     out
 }
 
-/// Render a short `root <- … <- name` provenance chain for diagnostics.
-fn chain(reached_via: &BTreeMap<String, String>, name: &str) -> String {
-    let mut parts = vec![name.to_string()];
-    let mut cur = name.to_string();
-    for _ in 0..6 {
-        match reached_via.get(&cur) {
-            Some(prev) if prev != "<hot-path manifest>" => {
-                parts.push(prev.clone());
-                cur = prev.clone();
+// ---------------------------------------------------------------------------
+// R8: HashMap/HashSet iteration feeding serving or persisted output
+// ---------------------------------------------------------------------------
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// Fns whose output must be deterministic: jsonlite dumps, wire
+/// frames, and store persistence.
+const ORDER_SINKS: &[&str] = &[
+    "dump",
+    "dumps",
+    "write_frame",
+    "entry_to_json",
+    "f32s_to_json",
+    "to_json",
+    "save",
+];
+
+pub fn unordered_findings(
+    g: &Graph,
+    serving_roots: &[String],
+) -> Vec<(usize, Finding)> {
+    let fwd = g.reach(serving_roots);
+    let to_sink = g.reaches_any(ORDER_SINKS);
+    let mut out = Vec::new();
+    for id in 0..g.fns.len() {
+        let on_serving = fwd.contains(id);
+        let feeds_sink = to_sink.contains(&id);
+        if !on_serving && !feeds_sink {
+            continue;
+        }
+        let scope = if on_serving {
+            "on the serving path"
+        } else {
+            "feeding persisted/wire output"
+        };
+        let fa = &g.files[g.file_of(id)];
+        let t = &fa.toks;
+        let span_name = g.name_of(id).to_string();
+        for i in g.own_tokens(id) {
+            if fa.test_mask[i] || t[i].kind != TokKind::Ident {
+                continue;
             }
-            _ => break,
+            // `.iter()`-family calls on a hash-typed receiver chain.
+            if ITER_METHODS.contains(&t[i].text.as_str())
+                && i > 0
+                && is_punct(&t[i - 1], '.')
+                && i + 1 < t.len()
+                && is_punct(&t[i + 1], '(')
+            {
+                let ids = chain_idents(t, i - 1);
+                if let Some(hit) = ids
+                    .iter()
+                    .find(|x| g.hash_named[g.file_of(id)].contains(*x))
+                {
+                    out.push((
+                        g.file_of(id),
+                        Finding {
+                            rule: "unordered-iteration",
+                            line: t[i].line,
+                            message: format!(
+                                "`.{}()` iterates hash-ordered `{hit}` in \
+                                 fn `{span_name}` ({scope}) — iteration \
+                                 order is nondeterministic across runs",
+                                t[i].text
+                            ),
+                        },
+                    ));
+                }
+                continue;
+            }
+            // `for pat in &hash_map { … }` without a method call.
+            if is_ident(&t[i], "in") {
+                let mut j = i + 1;
+                let mut names: Vec<String> = Vec::new();
+                let mut stopped_at_brace = false;
+                let limit = (i + 24).min(t.len());
+                while j < limit {
+                    if is_punct(&t[j], '{') {
+                        stopped_at_brace = true;
+                        break;
+                    }
+                    if is_punct(&t[j], '(')
+                        || is_punct(&t[j], ';')
+                        || is_ident(&t[j], "in")
+                    {
+                        break;
+                    }
+                    if t[j].kind == TokKind::Ident
+                        && !KEYWORDS.contains(&t[j].text.as_str())
+                    {
+                        names.push(t[j].text.clone());
+                    }
+                    j += 1;
+                }
+                if stopped_at_brace {
+                    if let Some(hit) = names
+                        .iter()
+                        .find(|x| g.hash_named[g.file_of(id)].contains(*x))
+                    {
+                        out.push((
+                            g.file_of(id),
+                            Finding {
+                                rule: "unordered-iteration",
+                                line: t[i].line,
+                                message: format!(
+                                    "`for … in` over hash-ordered `{hit}` \
+                                     in fn `{span_name}` ({scope}) — \
+                                     iteration order is nondeterministic \
+                                     across runs"
+                                ),
+                            },
+                        ));
+                    }
+                }
+            }
         }
     }
-    parts.reverse();
-    if parts.len() == 1 {
-        format!("root `{}`", parts[0])
-    } else {
-        format!("via `{}`", parts.join(" -> "))
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R10: blocking calls reachable from the netserver dispatch thread
+// ---------------------------------------------------------------------------
+
+/// Non-`try_` lock acquisitions (block until granted).
+const LOCK_NONTRY: &[&str] = &[
+    "lock",
+    "read",
+    "write",
+    "lock_recover",
+    "read_recover",
+    "write_recover",
+];
+
+pub fn dispatch_findings(
+    g: &Graph,
+    dispatch_roots: &[String],
+    blocking: &[String],
+    leaf_locks: &[String],
+) -> Vec<(usize, Finding)> {
+    let reach = g.reach(dispatch_roots);
+    let mut out = Vec::new();
+    for id in reach.visited() {
+        let fa = &g.files[g.file_of(id)];
+        if super::rules::norm(&fa.path).ends_with("util/sync.rs") {
+            // The audited sync shim: its recover wrappers *are* the
+            // sanctioned lock acquisitions, and its watchdog closures
+            // park deliberately.
+            continue;
+        }
+        let t = &fa.toks;
+        let span_name = g.name_of(id).to_string();
+        for i in g.own_tokens(id) {
+            if fa.test_mask[i] || t[i].kind != TokKind::Ident {
+                continue;
+            }
+            if i + 1 >= t.len() || !is_punct(&t[i + 1], '(') {
+                continue;
+            }
+            if i > 0 && is_ident(&t[i - 1], "fn") {
+                continue;
+            }
+            let txt = t[i].text.as_str();
+            // Known-blocking calls from the dispatch manifest.
+            if blocking.iter().any(|b| b == txt) {
+                let via = g.chain(&reach, id);
+                out.push((
+                    g.file_of(id),
+                    Finding {
+                        rule: "dispatch-blocking",
+                        line: t[i].line,
+                        message: format!(
+                            "`{txt}(…)` blocks the dispatch thread in fn \
+                             `{span_name}` ({via}) — a stalled call here \
+                             stops admission for every connection"
+                        ),
+                    },
+                ));
+                continue;
+            }
+            // Non-try lock acquisition outside the leaf-lock set.
+            // Lock acquisitions take no arguments — the `()` check
+            // keeps `v.write(out)`-style fmt/io writes out of scope.
+            if LOCK_NONTRY.contains(&txt)
+                && i > 0
+                && is_punct(&t[i - 1], '.')
+                && i + 2 < t.len()
+                && is_punct(&t[i + 2], ')')
+            {
+                let ids = chain_idents(t, i - 1);
+                let leaf = ids
+                    .iter()
+                    .any(|x| leaf_locks.iter().any(|l| l == x));
+                if !leaf {
+                    let recv = ids
+                        .first()
+                        .cloned()
+                        .unwrap_or_else(|| "<expr>".to_string());
+                    let via = g.chain(&reach, id);
+                    out.push((
+                        g.file_of(id),
+                        Finding {
+                            rule: "dispatch-blocking",
+                            line: t[i].line,
+                            message: format!(
+                                "non-try `.{txt}()` on `{recv}` in fn \
+                                 `{span_name}` ({via}) — only [leaf-locks] \
+                                 from dispatch.txt may be taken on the \
+                                 dispatch thread"
+                            ),
+                        },
+                    ));
+                }
+            }
+        }
     }
+    out
 }

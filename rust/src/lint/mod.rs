@@ -1,27 +1,51 @@
 //! flashlint: a dependency-free static-analysis pass for the serving
-//! core's concurrency and panic-safety invariants.
+//! core's concurrency, determinism, and performance invariants.
 //!
-//! The rules encode bug classes found by hand in past reviews:
+//! The rules encode bug classes found by hand in past reviews. R1–R4
+//! and R9 are lexical per-file checks; R5, R7, R8, and R10 run on a
+//! whole-crate call graph with impl-aware receiver resolution (see
+//! [`callgraph`]), seeded by the checked-in manifests
+//! `src/lint/hotpath.txt` (sections `[serving]`, `[inner]`,
+//! `[scratch]`) and `src/lint/dispatch.txt` (sections `[roots]`,
+//! `[blocking]`, `[leaf-locks]`).
 //!
 //! | rule | checks |
 //! |------|--------|
-//! | `lock-unwrap` | `.lock()/.read()/.write()` result unwrapped in `coordinator/`, `server/`, `factorstore/`, `runtime/` (poison cascade) |
-//! | `raw-sync` | raw `std::sync::{Mutex,RwLock}` use outside the `util::sync` shim, or a lock constructed without an audit name |
-//! | `io-under-lock` | file/socket I/O lexically inside a lock-guard live range in `factorstore/` |
-//! | `nonfinite-persist` | factor-serializing calls in `factorstore/` whose enclosing function never checks finiteness |
-//! | `hot-path-panic` | `panic!`/`unwrap`/`expect`/`todo!`/`unimplemented!` reachable from the hot-path manifest |
+//! | R1 `lock-unwrap` | `.lock()/.read()/.write()` result unwrapped in `coordinator/`, `server/`, `factorstore/`, `runtime/` (poison cascade) |
+//! | R2 `raw-sync` | raw `std::sync::{Mutex,RwLock}` use outside the `util::sync` shim, or a lock constructed without an audit name |
+//! | R3 `io-under-lock` | file/socket I/O lexically inside a lock-guard live range, anywhere in the crate |
+//! | R4 `nonfinite-persist` | factor-serializing calls in `factorstore/` whose enclosing function never checks finiteness |
+//! | R5 `hot-path-panic` | `panic!`/`unwrap`/`expect`/`todo!`/`unimplemented!` reachable from the `[serving]` roots |
+//! | R6 `bad-allow` | malformed, reasonless, or unknown-rule suppression annotations |
+//! | R7 `alloc-in-hotpath` | heap allocation (`Vec::new`, `clone`, `collect`, `format!`, …) reachable from the `[inner]` decode/kernel roots, minus the `[scratch]` allowlist |
+//! | R8 `unordered-iteration` | `HashMap`/`HashSet` iteration in code on the serving path or feeding jsonlite dumps / wire frames (bitwise-stability killer) |
+//! | R9 `uncapped-read` | socket/file reads on wire paths not bounded by `util::frame::read_frame_limited` / `set_io_timeouts` |
+//! | R10 `dispatch-blocking` | blocking calls (`connect`, `join`, `sleep`, non-`try_` locks off the `[leaf-locks]` list) reachable from the dispatch thread's `[roots]` |
+//! | `stale-allow` | a suppression annotation whose scope no longer contains any finding for its rule |
 //!
 //! Findings can be suppressed in place with an annotation comment that
 //! must carry a reason (see [`rules::AllowForm`]): `allow` covers the
 //! next line, `allow-fn` the enclosing function, `allow-file` the file.
-//! A malformed or reasonless annotation is itself reported (`bad-allow`)
-//! and cannot be suppressed.
+//! A malformed or reasonless annotation is itself reported
+//! (`bad-allow`), an annotation that no longer suppresses anything is
+//! reported (`stale-allow`), and neither can be suppressed.
 //!
-//! Run it via `make lint` or directly:
+//! ## Baseline workflow
+//!
+//! `make lint` runs in baseline mode: findings recorded in the
+//! checked-in `src/lint/baseline.json` are reported as *known* and do
+//! not fail the build, so only regressions block. `make lint-strict`
+//! fails on any finding; `make lint-baseline` regenerates the baseline
+//! (sorted, deterministic) after an intentional change. The swept tree
+//! keeps an empty baseline — new findings must be fixed or suppressed
+//! with a reasoned annotation, not baselined, unless a rule rollout
+//! needs staging.
 //!
 //! ```text
 //! cargo run --release --bin flashlint -- rust/src
 //! cargo run --release --bin flashlint -- --json rust/src
+//! cargo run --release --bin flashlint -- --baseline rust/src/lint/baseline.json rust/src
+//! cargo run --release --bin flashlint -- --write-baseline rust/src/lint/baseline.json rust/src
 //! ```
 //!
 //! Exit code 0 = clean, 1 = unsuppressed findings, 2 = usage/IO error.
@@ -31,6 +55,7 @@ pub mod rules;
 pub mod tokenizer;
 
 use crate::jsonlite::Json;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Rule registry: (name, one-line summary, fix hint).
@@ -65,6 +90,31 @@ pub const RULES: &[(&str, &str, &str)] = &[
         "malformed flashlint allow annotation",
         "use `// flashlint: allow(rule) reason`, allow-fn(...) or allow-file(...); the reason is mandatory",
     ),
+    (
+        "alloc-in-hotpath",
+        "heap allocation reachable from a decode/kernel inner-loop root",
+        "reuse a thread-local scratch buffer (see kernels::DECODE_SCRATCH) or hoist the allocation; per-flush setup fns belong in hotpath.txt [scratch]",
+    ),
+    (
+        "unordered-iteration",
+        "HashMap/HashSet iteration feeding serving or persisted output",
+        "switch the container to BTreeMap/BTreeSet (or collect and sort) so emission order is deterministic",
+    ),
+    (
+        "uncapped-read",
+        "socket/file read on a wire path without frame caps or timeouts",
+        "route peer input through util::frame::read_frame_limited and call set_io_timeouts (connect_timeout) on every stream",
+    ),
+    (
+        "dispatch-blocking",
+        "blocking call reachable from the netserver dispatch thread",
+        "use try_/timeout variants or move the work onto a worker; locks safe here must be listed in dispatch.txt [leaf-locks]",
+    ),
+    (
+        "stale-allow",
+        "flashlint allow annotation that no longer suppresses anything",
+        "delete the annotation — the finding it justified is gone (or its rule/scope no longer matches)",
+    ),
 ];
 
 #[derive(Clone, Debug)]
@@ -81,6 +131,8 @@ pub struct Report {
     pub diagnostics: Vec<Diagnostic>,
     pub files_scanned: usize,
     pub suppressed: usize,
+    /// Findings matched by the baseline (only set in baseline mode).
+    pub known: usize,
 }
 
 impl Report {
@@ -89,17 +141,84 @@ impl Report {
     }
 }
 
+/// A sectioned root manifest: `[section]` headers group one name per
+/// line; `#` starts a comment (whole-line or trailing); lines before
+/// the first header land in `default_section`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    sections: BTreeMap<String, Vec<String>>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, default_section: &str) -> Self {
+        let mut sections: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut cur = default_section.to_string();
+        for line in text.lines() {
+            let l = line.trim();
+            let l = match l.find('#') {
+                Some(0) => "",
+                Some(p) => l[..p].trim_end(),
+                None => l,
+            };
+            if l.is_empty() {
+                continue;
+            }
+            if l.starts_with('[') && l.ends_with(']') {
+                cur = l[1..l.len() - 1].trim().to_string();
+                sections.entry(cur.clone()).or_default();
+                continue;
+            }
+            sections.entry(cur.clone()).or_default().push(l.to_string());
+        }
+        Self { sections }
+    }
+
+    pub fn section(&self, name: &str) -> &[String] {
+        self.sections
+            .get(name)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct LintConfig {
-    /// Hot-path root function names for R5.
+    /// `[serving]` roots: R5 hot-path reachability, R8 serving scope.
     pub hotpath_roots: Vec<String>,
+    /// `[inner]` roots: R7 decode/kernel inner-loop reachability.
+    pub inner_roots: Vec<String>,
+    /// `[scratch]` allowlist: per-flush setup fns whose own bodies may
+    /// allocate (their callees stay in R7 scope).
+    pub scratch_allow: Vec<String>,
+    /// dispatch.txt `[roots]`: the dispatch thread's entry points.
+    pub dispatch_roots: Vec<String>,
+    /// dispatch.txt `[blocking]`: call names that block.
+    pub blocking_fns: Vec<String>,
+    /// dispatch.txt `[leaf-locks]`: receivers safe for non-try locking.
+    pub leaf_locks: Vec<String>,
+}
+
+impl LintConfig {
+    pub fn from_manifests(hotpath: &str, dispatch: &str) -> Self {
+        let hp = Manifest::parse(hotpath, "serving");
+        let dp = Manifest::parse(dispatch, "roots");
+        Self {
+            hotpath_roots: hp.section("serving").to_vec(),
+            inner_roots: hp.section("inner").to_vec(),
+            scratch_allow: hp.section("scratch").to_vec(),
+            dispatch_roots: dp.section("roots").to_vec(),
+            blocking_fns: dp.section("blocking").to_vec(),
+            leaf_locks: dp.section("leaf-locks").to_vec(),
+        }
+    }
 }
 
 impl Default for LintConfig {
     fn default() -> Self {
-        Self {
-            hotpath_roots: parse_hotpath(default_hotpath_manifest()),
-        }
+        Self::from_manifests(
+            default_hotpath_manifest(),
+            default_dispatch_manifest(),
+        )
     }
 }
 
@@ -108,13 +227,15 @@ pub fn default_hotpath_manifest() -> &'static str {
     include_str!("hotpath.txt")
 }
 
-/// Parse a manifest: one fn name per line, `#` comments, blanks ignored.
+/// The checked-in dispatch-thread manifest (`src/lint/dispatch.txt`).
+pub fn default_dispatch_manifest() -> &'static str {
+    include_str!("dispatch.txt")
+}
+
+/// Parse a hot-path manifest's `[serving]` roots (the pre-section
+/// default, for backward compatibility with flat name-per-line files).
 pub fn parse_hotpath(text: &str) -> Vec<String> {
-    text.lines()
-        .map(str::trim)
-        .filter(|l| !l.is_empty() && !l.starts_with('#'))
-        .map(str::to_string)
-        .collect()
+    Manifest::parse(text, "serving").section("serving").to_vec()
 }
 
 fn hint_for(rule: &str) -> &'static str {
@@ -125,13 +246,15 @@ fn hint_for(rule: &str) -> &'static str {
         .unwrap_or("")
 }
 
-/// Lint a set of `(path, contents)` pairs. R1–R4 run per file; R5 runs
-/// over the whole set so cross-file reachability works.
+/// Lint a set of `(path, contents)` pairs. R1–R4 and R9 run per file;
+/// R5/R7/R8/R10 run over the whole set on the resolved call graph.
 pub fn lint_sources(files: &[(String, String)], cfg: &LintConfig) -> Report {
     let analyses: Vec<rules::FileAnalysis> = files
         .iter()
         .map(|(path, src)| rules::analyze(path, src))
         .collect();
+
+    let graph = callgraph::Graph::build(&analyses);
 
     let mut raw: Vec<(usize, rules::Finding)> = Vec::new();
     for (fi, fa) in analyses.iter().enumerate() {
@@ -147,17 +270,41 @@ pub fn lint_sources(files: &[(String, String)], cfg: &LintConfig) -> Report {
         for f in rules::r4_nonfinite_persist(fa) {
             raw.push((fi, f));
         }
+        for f in rules::r9_uncapped_read(fa) {
+            raw.push((fi, f));
+        }
     }
-    raw.extend(callgraph::hot_path_findings(&analyses, &cfg.hotpath_roots));
+    raw.extend(callgraph::hot_path_findings(&graph, &cfg.hotpath_roots));
+    raw.extend(callgraph::alloc_findings(
+        &graph,
+        &cfg.inner_roots,
+        &cfg.scratch_allow,
+    ));
+    raw.extend(callgraph::unordered_findings(&graph, &cfg.hotpath_roots));
+    raw.extend(callgraph::dispatch_findings(
+        &graph,
+        &cfg.dispatch_roots,
+        &cfg.blocking_fns,
+        &cfg.leaf_locks,
+    ));
 
     let mut report = Report {
         files_scanned: files.len(),
         ..Report::default()
     };
+    // Which allows actually suppressed something (for stale-allow).
+    let mut used: Vec<std::collections::BTreeSet<usize>> =
+        analyses.iter().map(|_| Default::default()).collect();
     for (fi, f) in raw {
         let fa = &analyses[fi];
         // bad-allow is never suppressible; everything else honors allows.
-        if f.rule != "bad-allow" && rules::is_suppressed(fa, f.rule, f.line) {
+        let matches = if f.rule == "bad-allow" {
+            Vec::new()
+        } else {
+            rules::matching_allows(fa, f.rule, f.line)
+        };
+        if !matches.is_empty() {
+            used[fi].extend(matches);
             report.suppressed += 1;
             continue;
         }
@@ -168,6 +315,27 @@ pub fn lint_sources(files: &[(String, String)], cfg: &LintConfig) -> Report {
             message: f.message,
             hint: hint_for(f.rule),
         });
+    }
+    // Stale allows: annotations that suppressed nothing this run. Like
+    // bad-allow, these cannot themselves be suppressed. Annotations in
+    // test-masked regions are exempt (findings there are masked too).
+    for (fi, fa) in analyses.iter().enumerate() {
+        for (ai, a) in fa.allows.iter().enumerate() {
+            if used[fi].contains(&ai) || rules::line_in_test(fa, a.line) {
+                continue;
+            }
+            report.diagnostics.push(Diagnostic {
+                file: fa.path.clone(),
+                line: a.line,
+                rule: "stale-allow",
+                message: format!(
+                    "allow({}) suppresses nothing — its scope contains no \
+                     `{}` finding any more",
+                    a.rule, a.rule
+                ),
+                hint: hint_for("stale-allow"),
+            });
+        }
     }
     // Malformed annotations are diagnostics too.
     for fa in &analyses {
@@ -185,6 +353,81 @@ pub fn lint_sources(files: &[(String, String)], cfg: &LintConfig) -> Report {
         .diagnostics
         .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
     report
+}
+
+// ---------------------------------------------------------------------------
+// Baseline: a checked-in set of known findings (`make lint` fails only
+// on findings not in it; `make lint-strict` ignores it).
+// ---------------------------------------------------------------------------
+
+/// A known finding, keyed by (file, rule, message) — line numbers shift
+/// too easily to key on.
+pub type BaselineEntry = (String, String, String);
+
+/// Serialize the report's findings as a deterministic (sorted) baseline.
+pub fn render_baseline(report: &Report) -> String {
+    let mut entries: Vec<&Diagnostic> = report.diagnostics.iter().collect();
+    entries.sort_by(|a, b| {
+        (&a.file, a.rule, &a.message, a.line)
+            .cmp(&(&b.file, b.rule, &b.message, b.line))
+    });
+    let findings: Vec<Json> = entries
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("file", Json::str(&d.file)),
+                ("line", Json::num(d.line as f64)),
+                ("rule", Json::str(d.rule)),
+                ("message", Json::str(&d.message)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("findings", Json::Arr(findings))]).dump()
+}
+
+/// Parse a baseline file produced by [`render_baseline`].
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>, String> {
+    let j = Json::parse(text).map_err(|e| format!("invalid baseline: {e}"))?;
+    let arr = j
+        .get("findings")
+        .as_arr()
+        .ok_or_else(|| "baseline missing `findings` array".to_string())?;
+    let mut out = Vec::new();
+    for f in arr {
+        let file = f.get("file").as_str().unwrap_or_default().to_string();
+        let rule = f.get("rule").as_str().unwrap_or_default().to_string();
+        let msg = f.get("message").as_str().unwrap_or_default().to_string();
+        if file.is_empty() || rule.is_empty() {
+            return Err("baseline entry missing file/rule".to_string());
+        }
+        out.push((file, rule, msg));
+    }
+    Ok(out)
+}
+
+/// Remove diagnostics matched by the baseline (multiset semantics:
+/// each entry absorbs one finding). Returns how many were absorbed and
+/// records it in `report.known`.
+pub fn apply_baseline(report: &mut Report, base: &[BaselineEntry]) -> usize {
+    let mut budget: BTreeMap<&BaselineEntry, usize> = BTreeMap::new();
+    for e in base {
+        *budget.entry(e).or_insert(0) += 1;
+    }
+    let mut kept = Vec::with_capacity(report.diagnostics.len());
+    let mut absorbed = 0usize;
+    for d in report.diagnostics.drain(..) {
+        let key = (d.file.clone(), d.rule.to_string(), d.message.clone());
+        match budget.iter_mut().find(|(k, n)| ***k == key && **n > 0) {
+            Some((_, n)) => {
+                *n -= 1;
+                absorbed += 1;
+            }
+            None => kept.push(d),
+        }
+    }
+    report.diagnostics = kept;
+    report.known = absorbed;
+    absorbed
 }
 
 /// Recursively collect `.rs` files under `root` (or `root` itself if it
@@ -231,8 +474,10 @@ pub fn render_text(report: &Report) -> String {
         ));
     }
     out.push_str(&format!(
-        "flashlint: {} finding(s), {} suppressed, {} file(s) scanned\n",
+        "flashlint: {} finding(s), {} known from baseline, {} suppressed, \
+         {} file(s) scanned\n",
         report.diagnostics.len(),
+        report.known,
         report.suppressed,
         report.files_scanned
     ));
@@ -257,6 +502,7 @@ pub fn render_json(report: &Report) -> String {
     Json::obj(vec![
         ("files_scanned", Json::num(report.files_scanned as f64)),
         ("suppressed", Json::num(report.suppressed as f64)),
+        ("known_from_baseline", Json::num(report.known as f64)),
         ("violations", Json::num(report.diagnostics.len() as f64)),
         ("diagnostics", Json::Arr(diags)),
     ])
@@ -283,6 +529,31 @@ mod tests {
     }
 
     #[test]
+    fn manifest_sections_parse() {
+        let m = Manifest::parse(
+            "a\nb # trailing\n[two]\nc\n# comment\n[three]\n",
+            "one",
+        );
+        assert_eq!(m.section("one"), ["a", "b"]);
+        assert_eq!(m.section("two"), ["c"]);
+        assert!(m.section("three").is_empty());
+        assert!(m.section("missing").is_empty());
+    }
+
+    #[test]
+    fn default_config_has_all_sections() {
+        let cfg = LintConfig::default();
+        assert!(cfg.inner_roots.iter().any(|r| r == "run_query_block"));
+        assert!(cfg.scratch_allow.iter().any(|r| r == "decode_steps"));
+        assert!(cfg
+            .dispatch_roots
+            .iter()
+            .any(|r| r == "net_dispatch_loop"));
+        assert!(cfg.blocking_fns.iter().any(|r| r == "sleep"));
+        assert!(cfg.leaf_locks.iter().any(|r| r == "state"));
+    }
+
+    #[test]
     fn clean_file_is_clean() {
         let r = lint_one(
             "src/coordinator/mod.rs",
@@ -303,5 +574,35 @@ mod tests {
         assert_eq!(j.get("violations").as_usize(), Some(1));
         let d = &j.get("diagnostics").as_arr().expect("arr")[0];
         assert_eq!(d.get("rule").as_str(), Some("lock-unwrap"));
+    }
+
+    #[test]
+    fn baseline_roundtrip_absorbs_known_findings() {
+        let mut r = lint_one(
+            "src/factorstore/x.rs",
+            "fn f(m: &M) { m.lock().unwrap(); }",
+        );
+        assert_eq!(r.diagnostics.len(), 1);
+        let text = render_baseline(&r);
+        let base = parse_baseline(&text).expect("baseline parses");
+        assert_eq!(base.len(), 1);
+        let absorbed = apply_baseline(&mut r, &base);
+        assert_eq!(absorbed, 1);
+        assert!(r.clean());
+        assert_eq!(r.known, 1);
+        // A fresh (different) finding is NOT absorbed.
+        let mut r2 = lint_one(
+            "src/factorstore/y.rs",
+            "fn g(m: &M) { m.write().unwrap(); }",
+        );
+        let absorbed = apply_baseline(&mut r2, &base);
+        assert_eq!(absorbed, 0);
+        assert_eq!(r2.diagnostics.len(), 1);
+    }
+
+    #[test]
+    fn empty_baseline_parses() {
+        let base = parse_baseline("{\"findings\":[]}").expect("parses");
+        assert!(base.is_empty());
     }
 }

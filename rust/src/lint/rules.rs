@@ -37,6 +37,8 @@ pub struct Allow {
 #[derive(Clone, Debug)]
 pub struct FnSpan {
     pub name: String,
+    /// Impl target type the fn is a method of (`None` for free fns).
+    pub owner: Option<String>,
     /// Token index of the `fn` keyword.
     pub kw: usize,
     pub body_open: usize,
@@ -54,7 +56,11 @@ pub struct FileAnalysis {
     pub bad_allows: Vec<Finding>,
     /// Per-token: true if inside a `#[cfg(test)]` mod/fn or `#[test]` fn.
     pub test_mask: Vec<bool>,
+    /// Source line ranges covered by the test mask (for comment checks).
+    pub test_line_ranges: Vec<(u32, u32)>,
     pub fn_spans: Vec<FnSpan>,
+    /// `impl` headers in the file: `(trait name if any, target type)`.
+    pub impl_decls: Vec<(Option<String>, String)>,
     /// Per-token: index of the matching `}` of the innermost enclosing
     /// `{` (None at top level).
     pub enclosing_close: Vec<Option<usize>>,
@@ -108,7 +114,7 @@ const FS_FNS: &[&str] = &[
 /// Serializer entry points that persist factor floats (R4).
 const PERSIST_FNS: &[&str] = &["entry_to_json", "f32s_to_json"];
 
-const KEYWORDS: &[&str] = &[
+pub const KEYWORDS: &[&str] = &[
     "as", "box", "break", "const", "continue", "crate", "dyn", "else",
     "enum", "extern", "fn", "for", "if", "impl", "in", "let", "loop",
     "match", "mod", "move", "mut", "pub", "ref", "return", "self", "Self",
@@ -124,11 +130,15 @@ pub fn is_rule_name(name: &str) -> bool {
             | "io-under-lock"
             | "nonfinite-persist"
             | "hot-path-panic"
+            | "alloc-in-hotpath"
+            | "unordered-iteration"
+            | "uncapped-read"
+            | "dispatch-blocking"
     )
 }
 
 /// Normalize a path for scope checks (`\` → `/`).
-fn norm(path: &str) -> String {
+pub(crate) fn norm(path: &str) -> String {
     path.replace('\\', "/")
 }
 
@@ -167,6 +177,7 @@ pub fn analyze(path: &str, src: &str) -> FileAnalysis {
 
     // --- test regions -------------------------------------------------------
     let mut test_mask = vec![false; n];
+    let mut test_line_ranges: Vec<(u32, u32)> = Vec::new();
     let mut i = 0usize;
     while i + 2 < n {
         // #[cfg(test)] or #[test]
@@ -203,6 +214,8 @@ pub fn analyze(path: &str, src: &str) -> FileAnalysis {
                         for t in test_mask.iter_mut().take(close + 1).skip(i) {
                             *t = true;
                         }
+                        test_line_ranges
+                            .push((toks[i].line, toks[close].line));
                         i = close + 1;
                         continue;
                     }
@@ -210,6 +223,83 @@ pub fn analyze(path: &str, src: &str) -> FileAnalysis {
             }
         }
         i += 1;
+    }
+
+    // --- impl regions -------------------------------------------------------
+    // impl_owner[tok] = target type of the innermost enclosing `impl`
+    // block, so fn spans carry their receiver type and the callgraph can
+    // distinguish same-named methods on different impls.
+    let mut impl_owner: Vec<Option<String>> = vec![None; n];
+    let mut impl_decls: Vec<(Option<String>, String)> = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !is_ident(&toks[i], "impl") {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        // Skip the generic parameter list `impl<...>`.
+        if j < n && is_punct(&toks[j], '<') {
+            let mut depth = 0i32;
+            while j < n {
+                if is_punct(&toks[j], '<') {
+                    depth += 1;
+                } else if is_punct(&toks[j], '>') {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        // Read path segments up to `{`; in `impl Trait for Type` the
+        // segments before `for` name the trait, after it the target.
+        let mut ty: Option<String> = None;
+        let mut trait_name: Option<String> = None;
+        while j < n && !is_punct(&toks[j], '{') && !is_punct(&toks[j], ';') {
+            if is_ident(&toks[j], "where") {
+                while j < n && !is_punct(&toks[j], '{') {
+                    j += 1;
+                }
+                break;
+            }
+            if is_ident(&toks[j], "for") {
+                trait_name = ty.take();
+                j += 1;
+                continue;
+            }
+            if toks[j].kind == TokKind::Ident
+                && !matches!(toks[j].text.as_str(), "dyn" | "mut" | "const")
+            {
+                ty = Some(toks[j].text.clone());
+            }
+            if is_punct(&toks[j], '<') {
+                let mut depth = 0i32;
+                while j < n {
+                    if is_punct(&toks[j], '<') {
+                        depth += 1;
+                    } else if is_punct(&toks[j], '>') {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            j += 1;
+        }
+        if j < n && is_punct(&toks[j], '{') {
+            if let (Some(ty), Some(close)) = (ty, open_match[j]) {
+                for slot in impl_owner.iter_mut().take(close + 1).skip(j) {
+                    *slot = Some(ty.clone());
+                }
+                impl_decls.push((trait_name, ty));
+            }
+        }
+        i = j.max(i + 1);
     }
 
     // --- fn spans -----------------------------------------------------------
@@ -239,6 +329,7 @@ pub fn analyze(path: &str, src: &str) -> FileAnalysis {
         let Some(close) = open_match[open] else { continue };
         fn_spans.push(FnSpan {
             name: name_tok.text.clone(),
+            owner: impl_owner[i].clone(),
             kw: i,
             body_open: open,
             body_close: close,
@@ -262,9 +353,19 @@ pub fn analyze(path: &str, src: &str) -> FileAnalysis {
         allows,
         bad_allows,
         test_mask,
+        test_line_ranges,
         fn_spans,
+        impl_decls,
         enclosing_close,
     }
+}
+
+/// Is `line` inside a `#[cfg(test)]`/`#[test]` region? Used to exempt
+/// annotations that only cover test code from the stale-allow check.
+pub fn line_in_test(fa: &FileAnalysis, line: u32) -> bool {
+    fa.test_line_ranges
+        .iter()
+        .any(|&(lo, hi)| lo <= line && line <= hi)
 }
 
 /// Skip one `#[...]` attribute starting at the `#`; returns the index
@@ -361,23 +462,35 @@ fn parse_allow(c: &Comment, allows: &mut Vec<Allow>, bad: &mut Vec<Finding>) {
     });
 }
 
+/// Indices of the file's allows that suppress a finding of `rule` at
+/// `line`. Every matching allow is returned so stale-allow accounting
+/// can credit each one.
+pub fn matching_allows(fa: &FileAnalysis, rule: &str, line: u32) -> Vec<usize> {
+    fa.allows
+        .iter()
+        .enumerate()
+        .filter(|(_, a)| {
+            if a.rule != rule {
+                return false;
+            }
+            match a.form {
+                AllowForm::Line => a.line == line || a.line + 1 == line,
+                AllowForm::File => true,
+                AllowForm::Fn => fa.fn_spans.iter().any(|s| {
+                    s.start_line <= a.line
+                        && a.line <= s.end_line
+                        && s.start_line <= line
+                        && line <= s.end_line
+                }),
+            }
+        })
+        .map(|(i, _)| i)
+        .collect()
+}
+
 /// Is the finding at `line` suppressed by one of the file's allows?
 pub fn is_suppressed(fa: &FileAnalysis, rule: &str, line: u32) -> bool {
-    fa.allows.iter().any(|a| {
-        if a.rule != rule {
-            return false;
-        }
-        match a.form {
-            AllowForm::Line => a.line == line || a.line + 1 == line,
-            AllowForm::File => true,
-            AllowForm::Fn => fa.fn_spans.iter().any(|s| {
-                s.start_line <= a.line
-                    && a.line <= s.end_line
-                    && s.start_line <= line
-                    && line <= s.end_line
-            }),
-        }
-    })
+    !matching_allows(fa, rule, line).is_empty()
 }
 
 // ---------------------------------------------------------------------------
@@ -525,12 +638,13 @@ pub fn r2_raw_sync(fa: &FileAnalysis) -> Vec<Finding> {
 }
 
 // ---------------------------------------------------------------------------
-// R3: I/O lexically inside a lock-guard live range (factorstore/)
+// R3: I/O lexically inside a lock-guard live range (whole crate)
 // ---------------------------------------------------------------------------
 
 pub fn r3_io_under_lock(fa: &FileAnalysis) -> Vec<Finding> {
     let mut out = Vec::new();
-    if !in_scope(&fa.path, &["factorstore/"]) {
+    if norm(&fa.path).ends_with("util/sync.rs") {
+        // The shim itself wraps acquire calls; it performs no I/O.
         return out;
     }
     let t = &fa.toks;
@@ -686,6 +800,128 @@ pub fn r4_nonfinite_persist(fa: &FileAnalysis) -> Vec<Finding> {
                      function never checks finiteness — NaN/Inf factors \
                      must not reach the persisted store",
                     t[i].text
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// R9: socket/file reads on wire paths outside the frame codec's caps
+// ---------------------------------------------------------------------------
+
+/// Raw byte-read methods that bypass the frame codec's length cap.
+const RAW_READS: &[&str] = &["read_exact", "read_to_end", "read_to_string"];
+
+pub fn r9_uncapped_read(fa: &FileAnalysis) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let p = norm(&fa.path);
+    if p.ends_with("util/frame.rs") {
+        // The codec itself is the one place raw reads are allowed: it
+        // enforces MAX_FRAME_BYTES / read_frame_limited caps.
+        return out;
+    }
+    let t = &fa.toks;
+    let n = t.len();
+    // Only files on a wire path are in scope: anything touching the
+    // shared frame codec.
+    let wire = t.iter().enumerate().any(|(i, tk)| {
+        !fa.test_mask[i]
+            && tk.kind == TokKind::Ident
+            && matches!(
+                tk.text.as_str(),
+                "read_frame" | "read_frame_limited" | "write_frame"
+            )
+    });
+    if !wire {
+        return out;
+    }
+    for i in 0..n {
+        if fa.test_mask[i] || t[i].kind != TokKind::Ident {
+            continue;
+        }
+        // (a) raw byte reads on a wire path.
+        if RAW_READS.contains(&t[i].text.as_str())
+            && i > 0
+            && is_punct(&t[i - 1], '.')
+            && i + 1 < n
+            && is_punct(&t[i + 1], '(')
+        {
+            out.push(Finding {
+                rule: "uncapped-read",
+                line: t[i].line,
+                message: format!(
+                    "`.{}()` on a wire path reads without a length cap — \
+                     route peer input through util::frame::\
+                     read_frame_limited",
+                    t[i].text
+                ),
+            });
+        }
+        // (b) `TcpStream::connect` without a timeout.
+        if is_ident(&t[i], "TcpStream")
+            && i + 4 < n
+            && is_punct(&t[i + 1], ':')
+            && is_punct(&t[i + 2], ':')
+            && is_ident(&t[i + 3], "connect")
+            && is_punct(&t[i + 4], '(')
+        {
+            out.push(Finding {
+                rule: "uncapped-read",
+                line: t[i].line,
+                message: "`TcpStream::connect` on a wire path can hang \
+                          forever — use connect_timeout and then \
+                          set_io_timeouts"
+                    .to_string(),
+            });
+        }
+    }
+    // (c) a fn that obtains a stream and does frame/byte I/O on it must
+    // bound that I/O with set_io_timeouts.
+    for s in &fa.fn_spans {
+        if s.is_test {
+            continue;
+        }
+        let (mut obtains, mut io, mut timeouts) = (false, false, false);
+        for k in s.body_open..=s.body_close {
+            if fa.test_mask[k] || t[k].kind != TokKind::Ident {
+                continue;
+            }
+            let followed_by_call =
+                k + 1 < n && is_punct(&t[k + 1], '(');
+            match t[k].text.as_str() {
+                "accept" | "connect_timeout" | "incoming"
+                    if followed_by_call
+                        && k > 0
+                        && (is_punct(&t[k - 1], '.')
+                            || is_punct(&t[k - 1], ':')) =>
+                {
+                    obtains = true
+                }
+                "read_frame" | "read_frame_limited" | "write_frame"
+                    if followed_by_call =>
+                {
+                    io = true
+                }
+                "read_exact" | "read_to_end" | "write_all"
+                    if followed_by_call && k > 0 && is_punct(&t[k - 1], '.') =>
+                {
+                    io = true
+                }
+                "set_io_timeouts" => timeouts = true,
+                _ => {}
+            }
+        }
+        if obtains && io && !timeouts {
+            out.push(Finding {
+                rule: "uncapped-read",
+                line: s.start_line,
+                message: format!(
+                    "fn `{}` obtains a socket and does wire I/O on it \
+                     without `set_io_timeouts` — a stalled peer pins this \
+                     thread forever",
+                    s.name
                 ),
             });
         }

@@ -135,19 +135,25 @@ pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
                 i += 1;
             }
             let text = &src[start..i];
-            let is_raw_prefix = matches!(text, "r" | "b" | "br" | "rb")
+            // Raw strings (`r"…"`, `r#"…"#`, `br#"…"#`) have no escape
+            // processing; `b"…"` is an *escaped* byte string and is
+            // handled below; `r#ident` is a raw identifier, not a
+            // string. Only commit to the raw-string branch once the
+            // lookahead confirms hashes are followed by a quote.
+            let raw_candidate = matches!(text, "r" | "br")
                 && i < n
-                && (b[i] == b'"' || (text != "b" && b[i] == b'#'));
-            if is_raw_prefix {
-                // Raw / byte string: count hashes, then find `"` + hashes.
-                let start_line = line;
+                && (b[i] == b'"' || b[i] == b'#');
+            if raw_candidate {
+                let mut j = i;
                 let mut hashes = 0usize;
-                while i < n && b[i] == b'#' {
+                while j < n && b[j] == b'#' {
                     hashes += 1;
-                    i += 1;
+                    j += 1;
                 }
-                if i < n && b[i] == b'"' {
-                    i += 1;
+                if j < n && b[j] == b'"' {
+                    // Raw string: find `"` followed by `hashes` hashes.
+                    let start_line = line;
+                    i = j + 1;
                     'scan: while i < n {
                         if b[i] == b'\n' {
                             line += 1;
@@ -155,18 +161,76 @@ pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
                             continue;
                         }
                         if b[i] == b'"' {
-                            let mut j = i + 1;
+                            let mut k = i + 1;
                             let mut seen = 0usize;
-                            while j < n && b[j] == b'#' && seen < hashes {
+                            while k < n && b[k] == b'#' && seen < hashes {
                                 seen += 1;
-                                j += 1;
+                                k += 1;
                             }
                             if seen == hashes {
-                                i = j;
+                                i = k;
                                 break 'scan;
                             }
                         }
                         i += 1;
+                    }
+                    toks.push(Tok {
+                        line: start_line,
+                        kind: TokKind::Str,
+                        text: src[start..i.min(n)].to_string(),
+                    });
+                    continue;
+                }
+                if text == "r"
+                    && hashes == 1
+                    && j < n
+                    && (b[j].is_ascii_alphabetic()
+                        || b[j] == b'_'
+                        || b[j] >= 0x80)
+                {
+                    // Raw identifier `r#ident`: emit the bare ident so
+                    // rules see `r#match` and `match` identically.
+                    let id_start = j;
+                    i = j;
+                    while i < n
+                        && (b[i].is_ascii_alphanumeric()
+                            || b[i] == b'_'
+                            || b[i] >= 0x80)
+                    {
+                        i += 1;
+                    }
+                    toks.push(Tok {
+                        line,
+                        kind: TokKind::Ident,
+                        text: src[id_start..i].to_string(),
+                    });
+                    continue;
+                }
+                // Fall through: `r`/`br` used as a plain identifier
+                // followed by `#` punctuation.
+            }
+            if text == "b" && i < n && b[i] == b'"' {
+                // Byte string: escape-processed like a plain string,
+                // so `b"\""` does not terminate at the escaped quote.
+                let start_line = line;
+                i += 1;
+                while i < n {
+                    match b[i] {
+                        b'\\' => {
+                            if i + 1 < n && b[i + 1] == b'\n' {
+                                line += 1;
+                            }
+                            i += 2;
+                        }
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
                     }
                 }
                 toks.push(Tok {
@@ -174,13 +238,13 @@ pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
                     kind: TokKind::Str,
                     text: src[start..i.min(n)].to_string(),
                 });
-            } else {
-                toks.push(Tok {
-                    line,
-                    kind: TokKind::Ident,
-                    text: text.to_string(),
-                });
+                continue;
             }
+            toks.push(Tok {
+                line,
+                kind: TokKind::Ident,
+                text: text.to_string(),
+            });
             continue;
         }
         // Numeric literal (handles hex, floats, exponents, suffixes).
@@ -360,5 +424,40 @@ mod tests {
     fn escaped_quotes_in_strings() {
         let ids = idents("let s = \"a \\\" b\"; tail");
         assert!(ids.contains(&"tail".to_string()));
+    }
+
+    #[test]
+    fn byte_strings_process_escapes() {
+        // An escaped quote inside a byte string must not terminate the
+        // literal — otherwise its contents leak into the token stream
+        // and can spoof rule matches.
+        let ids = idents("let s = b\"\\\" m.lock().unwrap() \\\"\"; tail");
+        assert_eq!(ids, vec!["let", "s", "tail"]);
+    }
+
+    #[test]
+    fn raw_strings_hide_their_contents() {
+        let ids = idents("let s = r#\"m.lock().unwrap()\"#; tail");
+        assert_eq!(ids, vec!["let", "s", "tail"]);
+    }
+
+    #[test]
+    fn raw_identifiers_are_idents() {
+        let (toks, _) = tokenize("let r#type = 1; r#match(x);");
+        let ids: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(ids, vec!["let", "type", "match", "x"]);
+    }
+
+    #[test]
+    fn nested_block_comments_hide_violations() {
+        let (toks, comments) =
+            tokenize("/* outer /* m.lock().unwrap() */ still comment */ ok");
+        assert_eq!(toks.len(), 1);
+        assert!(is_ident(&toks[0], "ok"));
+        assert_eq!(comments.len(), 1);
     }
 }

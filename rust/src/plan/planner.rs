@@ -387,7 +387,9 @@ impl Planner {
     fn plan_impl(&self, spec: &BiasSpec, geo: &Geometry,
                  opts: &PlanOptions, store: Option<&FactorStore>)
                  -> Result<AttentionPlan, PlanError> {
-        // flashlint: allow-fn(hot-path-panic) the expects below sit in match arms for Alibi/Spatial/CosMultiplicative, which have closed-form factors and materialize by construction
+        // the expects below sit in match arms for closed-form biases
+        // (Alibi/Spatial/CosMultiplicative), which materialize by
+        // construction
         if let Some((n, m)) = spec.shape() {
             if (n, m) != (geo.n, geo.m) {
                 return Err(PlanError::ShapeMismatch {
@@ -529,7 +531,9 @@ impl Planner {
         let full_rank = geo.n.min(geo.m);
         let limit = (full_rank as f64 * self.config.max_rank_fraction)
             .ceil() as usize;
-        // flashlint: allow-fn(hot-path-panic) Strategy::Svd with a fixed rank is infallible (decompose returns Ok(Some(..)) for it by contract, covered by decompose unit tests)
+        // Strategy::Svd with a fixed rank is infallible (decompose
+        // returns Ok(Some(..)) for it by contract, covered by
+        // decompose unit tests)
         let decompose_now = || {
             let svd_at = |rank: usize| {
                 let mut rng = Xoshiro256::new(self.config.neural.seed);
@@ -620,7 +624,9 @@ impl Planner {
     fn emit(&self, mode: ExecMode, decision: Decision, spec: &BiasSpec,
             geo: &Geometry, opts: &PlanOptions, rank: usize)
             -> Result<AttentionPlan, PlanError> {
-        // flashlint: allow-fn(hot-path-panic) emit is only reached with biased specs (plan_impl handles BiasSpec::None before any emit call), and every biased spec materializes
+        // emit is only reached with biased specs (plan_impl handles
+        // BiasSpec::None before any emit call), and every biased spec
+        // materializes
         let geometry = Geometry { r: rank, ..*geo };
         let multiplicative = spec.is_multiplicative();
         let dense_io = iomodel::flash_dense_bias_io(&geometry);

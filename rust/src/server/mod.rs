@@ -297,7 +297,9 @@ fn cmd_run(cli: &Cli) -> Result<String> {
     let rt = Runtime::open_default()?;
     let exe = rt.load_warm(artifact)?;
     let inputs = rt.example_inputs(artifact)?;
-    // flashlint: allow-fn(hot-path-panic) load_warm already executed these exact inputs once; a repeat failing mid-bench is unrecoverable and aborting beats reporting fake timings
+    // load_warm already executed these exact inputs once; a repeat
+    // failing mid-bench is unrecoverable and aborting beats reporting
+    // fake timings
     let stats = bench_loop(1, iters, || {
         exe.run(&inputs).expect("execute");
     });

@@ -52,7 +52,7 @@
 //! sessions still open when the peer disconnects are closed
 //! best-effort.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::net::{
     IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream,
     ToSocketAddrs,
@@ -203,7 +203,7 @@ pub fn register_demo_plan(coord: &Coordinator,
 /// fire on wire data.
 fn parse_wire_op(
     req: &Json,
-    my_sessions: &HashMap<u64, SessInfo>,
+    my_sessions: &BTreeMap<u64, SessInfo>,
     plans: &HostPlanRegistry,
 ) -> Result<WireCmd, WireFault> {
     let echo = req.get("echo").as_bool().unwrap_or(true);
@@ -277,7 +277,7 @@ fn fault(kind: &'static str, msg: &str) -> WireFault {
 /// unknown ones (connection-owned sessions).
 fn session_of(
     req: &Json,
-    my_sessions: &HashMap<u64, SessInfo>,
+    my_sessions: &BTreeMap<u64, SessInfo>,
 ) -> Result<(u64, SessInfo), WireFault> {
     let id = req.get("session").as_usize().ok_or_else(|| {
         fault("validation", "this op needs a \"session\" id")
@@ -568,7 +568,7 @@ fn net_handle_conn(
     if set_io_timeouts(&stream, cfg.io_timeout).is_err() {
         return;
     }
-    let mut my_sessions: HashMap<u64, SessInfo> = HashMap::new();
+    let mut my_sessions: BTreeMap<u64, SessInfo> = BTreeMap::new();
     loop {
         let req = match read_frame_limited(&mut stream,
                                            cfg.max_request_bytes) {
@@ -711,7 +711,7 @@ fn net_dispatch_loop(
     metrics: &Metrics,
 ) {
     let policy = cfg.flush_policy();
-    let mut pending: HashMap<u64, PendingReply> = HashMap::new();
+    let mut pending: BTreeMap<u64, PendingReply> = BTreeMap::new();
     // (tokens, submitted-at) of requests believed still in the
     // batcher's pending bucket, oldest first; reconciled against
     // `coord.pending_len()` each tick because the batcher also
@@ -728,6 +728,7 @@ fn net_dispatch_loop(
         while let Some(dq) = next {
             metrics.on_net_admit(dq.wait, dq.depth);
             if !cfg.dispatch_delay.is_zero() {
+                // flashlint: allow(dispatch-blocking) load-test pacing hook, zero in every production config
                 std::thread::sleep(cfg.dispatch_delay);
             }
             if !handle_work(&mut coord, cfg, metrics, dq.item,
@@ -783,7 +784,7 @@ fn net_dispatch_loop(
             }
         }
     }
-    for (_, p) in pending.drain() {
+    for (_, p) in std::mem::take(&mut pending) {
         let _ = p
             .reply
             .send(err_json("unavailable", "server shutting down"));
@@ -800,7 +801,7 @@ fn handle_work(
     cfg: &ServeConfig,
     metrics: &Metrics,
     work: Work,
-    pending: &mut HashMap<u64, PendingReply>,
+    pending: &mut BTreeMap<u64, PendingReply>,
     waiting: &mut VecDeque<(usize, Instant)>,
 ) -> bool {
     let Work { cmd, reply } = work;
@@ -922,7 +923,7 @@ fn session_err_json(e: &SessionApiError) -> Json {
 }
 
 /// Correlate one coordinator [`Response`] back to its connection.
-fn finish(resp: Response, pending: &mut HashMap<u64, PendingReply>) {
+fn finish(resp: Response, pending: &mut BTreeMap<u64, PendingReply>) {
     let Some(p) = pending.remove(&resp.id) else {
         // a best-effort close for an abandoned connection, or a reply
         // channel whose connection died: nothing to do
@@ -1003,8 +1004,8 @@ mod tests {
     #[test]
     fn parse_validates_ops_and_shapes() {
         let (plans, name) = demo_plans();
-        let mut sessions = HashMap::new();
-        let parse = |req: &Json, s: &HashMap<u64, SessInfo>| {
+        let mut sessions = BTreeMap::new();
+        let parse = |req: &Json, s: &BTreeMap<u64, SessInfo>| {
             parse_wire_op(req, s, &plans)
         };
 

@@ -14,6 +14,7 @@ pub mod strip;
 pub use kv::KvCache;
 pub use strip::{
     bf16_to_f32, f16_to_f32, f32_to_bf16, f32_to_f16, Strip, StripDType,
+    StripPayload,
 };
 
 #[derive(Clone, PartialEq)]

@@ -178,6 +178,17 @@ enum StripData {
     },
 }
 
+/// Borrowed view of a strip's raw payload (see [`Strip::payload`]).
+/// bf16 and f16 share the `Bits16` variant: their wire form is the
+/// same `Vec<u16>`, and the field name the serializer needs is keyed
+/// off [`Strip::dtype`] anyway.
+#[derive(Clone, Copy, Debug)]
+pub enum StripPayload<'a> {
+    F32(&'a [f32]),
+    Bits16(&'a [u16]),
+    I8 { data: &'a [i8], scales: &'a [f32] },
+}
+
 /// A `(rows × cols)` factor matrix at a reduced-precision storage
 /// dtype. Row-major; every accessor decodes to f32.
 #[derive(Clone, Debug, PartialEq)]
@@ -341,6 +352,21 @@ impl Strip {
         match &self.data {
             StripData::I8 { data, scales } => Some((data, scales)),
             _ => None,
+        }
+    }
+
+    /// Borrowed raw payload, one variant per storage class — lets
+    /// persistence match exhaustively instead of re-deriving the
+    /// variant from [`Self::dtype`] and unwrapping `Option` accessors.
+    pub fn payload(&self) -> StripPayload<'_> {
+        match &self.data {
+            StripData::F32(d) => StripPayload::F32(d),
+            StripData::Bf16(d) | StripData::F16(d) => {
+                StripPayload::Bits16(d)
+            }
+            StripData::I8 { data, scales } => {
+                StripPayload::I8 { data, scales }
+            }
         }
     }
 

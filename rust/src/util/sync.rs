@@ -36,7 +36,6 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 // This module *is* the shim the raw-sync lint rule points everyone at,
 // so it is the one place allowed to touch std::sync lock types directly.
-// flashlint: allow-file(raw-sync) util::sync is the shim itself
 
 /// Named, poison-recovering `std::sync::Mutex` wrapper.
 pub struct Mutex<T> {

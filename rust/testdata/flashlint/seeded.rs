@@ -33,16 +33,84 @@ pub fn persist_unchecked(key: u64, value: &Cached) -> Json {
 
 // hot-path-panic: `serve_loop` is a root in the hot-path manifest, so
 // both the .expect() here and the panic! in the helper it calls are
-// reachable panic sites.
-pub fn serve_loop() {
+// reachable panic sites. It also pulls `emit_metrics` onto the serving
+// path for the unordered-iteration seed below.
+pub fn serve_loop(stats: &HashMap<String, u64>) {
     let spec = lookup_spec().expect("spec must exist");
     helper(spec);
+    let _ = emit_metrics(stats);
 }
 
 fn helper(x: u32) {
     if x == 0 {
         panic!("boom");
     }
+}
+
+// alloc-in-hotpath: `bias_row_into` is an [inner] root in the hot-path
+// manifest (and not on its [scratch] allowlist), so both the vec! and
+// the .to_vec() are per-row heap allocations — two findings.
+pub fn bias_row_into(row: &[f32], out: &mut [f32]) {
+    let tmp = vec![0.0f32; out.len()];
+    let copy = row.to_vec();
+    out.copy_from_slice(&copy[..out.len().min(tmp.len())]);
+}
+
+// unordered-iteration, serving scope: `serve_loop` (a [serving] root)
+// calls this, and `stats` is hash-keyed — emission order varies run to
+// run.
+fn emit_metrics(stats: &HashMap<String, u64>) -> u64 {
+    let mut total = 0;
+    for (_k, v) in stats.iter() {
+        total += *v;
+    }
+    total
+}
+
+// unordered-iteration, sink scope: not on the serving path at all, but
+// the iteration's output flows into `save` (an order sink), so the
+// persisted bytes depend on hasher seed.
+fn save(path: &str, blob: &str) {
+    let _ = (path, blob);
+}
+
+fn dump_registry(reg: &HashMap<u64, u32>) {
+    let mut s = String::new();
+    for (k, v) in reg.iter() {
+        s.push_str(&format_pair(*k, *v));
+    }
+    save("registry", &s);
+}
+
+// uncapped-read: the write_frame/read_frame mentions put this file in
+// wire scope. `relay` reads a peer-controlled length with .read_exact
+// (one finding); `serve_once` accepts a socket and does frame io
+// without ever calling set_io_timeouts (second finding).
+fn relay(sock: &mut TcpStream, buf: &mut [u8]) {
+    sock.read_exact(buf).ok();
+    let _ = write_frame(sock, buf);
+}
+
+fn serve_once(l: &TcpListener) {
+    if let Ok((mut s, _)) = l.accept() {
+        let _ = read_frame(&mut s);
+    }
+}
+
+// dispatch-blocking: `net_dispatch_loop` is the [roots] entry of
+// dispatch.txt. The blocking recv, the blocking enqueue, and a non-try
+// lock whose receiver is not in [leaf-locks] are three findings.
+pub fn net_dispatch_loop(rx: &Receiver<Work>, pool: &WorkerPool) {
+    let work = rx.recv();
+    let _ = pool.dispatch_blocking(work);
+    let _g = registry.lock();
+}
+
+// stale-allow: the allocation this annotation once excused is gone;
+// an allow that suppresses nothing is itself a finding.
+pub fn tidy_scratch(out: &mut [f32]) {
+    // flashlint: allow(alloc-in-hotpath) scratch reuse landed; nothing allocates here anymore
+    out.fill(0.0);
 }
 
 // Suppression proof: the same lock-unwrap pattern as `poison_prone`,

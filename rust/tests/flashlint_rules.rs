@@ -28,12 +28,17 @@ fn every_rule_fires_on_the_seeded_corpus() {
     // One entry per (rule, expected count); keep in sync with the
     // corpus comments in testdata/flashlint/seeded.rs.
     let expected: &[(&str, usize)] = &[
-        ("lock-unwrap", 1),      // poison_prone
-        ("raw-sync", 2),         // std::sync import + unnamed Mutex::new
-        ("io-under-lock", 1),    // write_all under the guard
-        ("nonfinite-persist", 1),// entry_to_json without a guard
-        ("hot-path-panic", 2),   // .expect in serve_loop, panic! in helper
-        ("bad-allow", 1),        // unknown rule name in an annotation
+        ("lock-unwrap", 1),        // poison_prone
+        ("raw-sync", 2),           // std::sync import + unnamed Mutex::new
+        ("io-under-lock", 1),      // write_all under the guard
+        ("nonfinite-persist", 1),  // entry_to_json without a guard
+        ("hot-path-panic", 2),     // .expect in serve_loop, panic! in helper
+        ("alloc-in-hotpath", 2),   // vec! + .to_vec() in bias_row_into
+        ("unordered-iteration", 2),// emit_metrics (serving), dump_registry (sink)
+        ("uncapped-read", 2),      // relay read_exact, serve_once w/o timeouts
+        ("dispatch-blocking", 3),  // recv, dispatch_blocking, non-try lock
+        ("stale-allow", 1),        // tidy_scratch's obsolete allow
+        ("bad-allow", 1),          // unknown rule name in an annotation
     ];
     for &(rule, n) in expected {
         assert_eq!(
@@ -72,6 +77,66 @@ fn hot_path_provenance_names_the_root() {
             "{panics:?}");
     assert!(panics.iter().any(|m| m.contains("serve_loop -> helper")),
             "{panics:?}");
+}
+
+/// The call graph must resolve a method call through the receiver's
+/// *type*, not its name: two impls defining `emit` are different nodes,
+/// and only the one the receiver is typed to contributes reachability.
+#[test]
+fn callgraph_distinguishes_same_named_methods_on_different_impls() {
+    let src_for = |ty: &str| {
+        format!(
+            "\
+pub struct Quiet;
+pub struct Loud;
+
+impl Quiet {{
+    pub fn emit(&self) -> u32 {{
+        1
+    }}
+}}
+
+impl Loud {{
+    pub fn emit(&self) -> u32 {{
+        panic!(\"boom\")
+    }}
+}}
+
+pub fn serve_loop() {{
+    let worker = {ty} {{}};
+    let _ = worker.emit();
+}}
+"
+        )
+    };
+    // Receiver typed to the panic-free impl: Loud::emit is a distinct,
+    // unreachable node, so the hot path is clean.
+    let quiet = lint_one("src/server/seeded_impls.rs", &src_for("Quiet"));
+    assert_eq!(count(&quiet, "hot-path-panic"), 0, "{:#?}", quiet.diagnostics);
+    // Same source, receiver typed to the panicking impl: one finding,
+    // with the call chain in the provenance.
+    let loud = lint_one("src/server/seeded_impls.rs", &src_for("Loud"));
+    assert_eq!(count(&loud, "hot-path-panic"), 1, "{:#?}", loud.diagnostics);
+    assert!(
+        loud.diagnostics[0].message.contains("serve_loop -> emit"),
+        "{:?}",
+        loud.diagnostics[0].message
+    );
+}
+
+/// Non-try locks on dispatch-thread paths are findings *except* for the
+/// receivers vouched for in dispatch.txt [leaf-locks]; try_ variants are
+/// always fine.
+#[test]
+fn leaf_locks_and_try_variants_pass_dispatch_rule() {
+    let src = "\
+pub fn net_dispatch_loop(h: &SessionHandle) {
+    let _g = state.lock();
+    let _p = plans.try_read();
+}
+";
+    let r = lint_one("src/server/x.rs", src);
+    assert_eq!(count(&r, "dispatch-blocking"), 0, "{:#?}", r.diagnostics);
 }
 
 #[test]
